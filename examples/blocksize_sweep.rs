@@ -1,0 +1,59 @@
+//! The paper's §3 open question: "the determination of the best pipeline
+//! block size" as a function of (m, p). This driver sweeps both axes,
+//! prints the empirically best block size next to the Pipelining-Lemma
+//! prediction, and shows how far the paper's fixed 16000-element choice is
+//! from optimal across the range.
+//!
+//! ```sh
+//! cargo run --release --example blocksize_sweep
+//! ```
+
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{lemma, AlgoKind, ComputeCost, CostModel, LinkCost};
+
+fn simulated_us(p: usize, m: usize, block_elems: usize, timing: Timing) -> f64 {
+    let spec = RunSpec::new(p, m).block_elems(block_elems).phantom(true);
+    run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+        .unwrap()
+        .max_vtime_us
+}
+
+fn main() {
+    let link = LinkCost::new(1.0e-6, 0.70e-9);
+    let timing = Timing::Virtual(CostModel::Uniform(link), ComputeCost::new(0.25e-9));
+
+    println!("best pipeline block size for the doubly-pipelined algorithm");
+    println!("p\tm\tbest_blk(sim)\tlemma_blk\tt_best_us\tt_16000_us\tpenalty_16k");
+    for p in [30usize, 126, 288] {
+        for m in [10_000usize, 100_000, 1_000_000, 8_388_608] {
+            // candidate block sizes (elements)
+            let mut best = (0usize, f64::INFINITY);
+            for blk in [250, 500, 1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000, 128_000] {
+                if blk > m {
+                    continue;
+                }
+                let t = simulated_us(p, m, blk, timing);
+                if t < best.1 {
+                    best = (blk, t);
+                }
+            }
+            let (a, c) = AlgoKind::Dpdr.step_structure(p).unwrap();
+            let (b_star, _) =
+                lemma::optimal_time(a, c, link.alpha, link.beta, (m * 4) as f64, m);
+            let lemma_blk = m.div_ceil(b_star);
+            let t16k = simulated_us(p, m, 16_000.min(m.max(1)), timing);
+            println!(
+                "{p}\t{m}\t{}\t{lemma_blk}\t{:.1}\t{t16k:.1}\t{:.2}x",
+                best.0,
+                best.1,
+                t16k / best.1
+            );
+        }
+    }
+    println!(
+        "\nanswer to the paper's open question: the best block size grows with sqrt(m) and\n\
+         shrinks with p (lemma: b* = sqrt((4h-6)betam/(3alpha)), block = m/b*); the fixed\n\
+         16000-element choice is near-optimal only in a band of counts."
+    );
+}

@@ -1,0 +1,59 @@
+//! Quickstart: run the doubly-pipelined, dual-root reduction-to-all on an
+//! in-process world, both for real (wall clock, real data) and as a
+//! virtual-time simulation of the paper's cluster.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::AlgoKind;
+
+fn main() -> Result<(), dpdr::error::Error> {
+    // 14 ranks (p + 2 = 2^4: both dual-root trees are perfect), 100k ints,
+    // the paper's 16000-element pipeline blocks.
+    let spec = RunSpec::new(14, 100_000);
+
+    // 1. Real execution: 14 threads, real vectors, real reductions.
+    let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real)?;
+    let expected = spec.expected_sum_i32();
+    assert!(report
+        .results
+        .iter()
+        .all(|buf| buf.as_slice().unwrap() == &expected[..]));
+    println!(
+        "real run: p={} m={} -> correct on all ranks in {:.1} ms wall",
+        spec.p,
+        spec.m,
+        report.wall_us / 1e3
+    );
+    let totals = report.total_metrics();
+    println!(
+        "  traffic: {} exchanges, {:.1} MB sent, {:.1} MB reduced",
+        totals.exchanges,
+        totals.bytes_sent as f64 / 1e6,
+        totals.reduce_bytes as f64 / 1e6
+    );
+
+    // 2. Virtual-time simulation under the calibrated Hydra (α-β-γ) model:
+    //    same protocol, clocks charged analytically.
+    let sim = run_allreduce_i32(AlgoKind::Dpdr, &spec.phantom(true), Timing::hydra())?;
+    println!(
+        "simulated Hydra: completion time {:.2} us (virtual)",
+        sim.max_vtime_us
+    );
+
+    // 3. Compare against the baselines the paper evaluates.
+    println!("\nalgorithm comparison (simulated, p=14, m=100k ints):");
+    for algo in [
+        AlgoKind::NativeSwitch,
+        AlgoKind::ReduceBcast,
+        AlgoKind::PipeTree,
+        AlgoKind::Dpdr,
+    ] {
+        let t = run_allreduce_i32(algo, &spec.phantom(true), Timing::hydra())?.max_vtime_us;
+        println!("  {:>22}: {:>10.2} us", algo.label(), t);
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""AOT export: lower the L2 functions (wrapping the L1 Pallas kernels) to
+HLO **text** artifacts the Rust runtime loads via PJRT.
+
+HLO text — NOT ``lowered.compile()`` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out ../artifacts] [--quick]
+Produces artifacts/<stem>.hlo.txt for every (arity, op, dtype, size)
+variant plus a MANIFEST.txt. Sizes must stay in sync with
+rust/src/runtime/engine.rs::COMPILED_SIZES.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.reduce_block import DTYPES, OPS
+
+#: Block sizes compiled (elements) — keep in sync with COMPILED_SIZES.
+SIZES = (1_024, 16_384, 131_072)
+
+
+def stem(arity, op, dtype, n):
+    """Artifact stem; must match rust runtime::artifact_name."""
+    return f"combine{arity}_{op}_{dtype}_{n}"
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(arity, op, dtype_name, n):
+    dtype = DTYPES[dtype_name]
+    fn = model.combine2_fn(op) if arity == 2 else model.combine3_fn(op)
+    args = model.example_args(arity, n, dtype)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the paper-relevant subset (sum/int32, all sizes+arities)",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    variants = []
+    for arity in (2, 3):
+        for op in OPS:
+            for dtype_name in DTYPES:
+                if ns.quick and (op != "sum" or dtype_name != "int32"):
+                    continue
+                for n in SIZES:
+                    variants.append((arity, op, dtype_name, n))
+
+    manifest = []
+    for arity, op, dtype_name, n in variants:
+        s = stem(arity, op, dtype_name, n)
+        path = os.path.join(ns.out, f"{s}.hlo.txt")
+        text = lower_variant(arity, op, dtype_name, n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(s)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(ns.out, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts -> {ns.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

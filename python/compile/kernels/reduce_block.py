@@ -1,0 +1,97 @@
+"""L1 — Pallas kernels for the block-wise reduction hot-spot.
+
+The algorithm's only compute is `MPI_Reduce_local`: an element-wise
+``y[j] <- t (.) y[j]`` over pipeline blocks of ~16000 elements, plus the
+fused inner-node form ``y[j] <- t1 (.) (t0 (.) y[j])`` (Algorithm 1 applies
+(.) once per child). These kernels implement both as tiled Pallas calls.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot loop
+is a CPU vector reduction driven by an MPI library. On TPU the same
+insight — stream fixed-size blocks through a cheap element-wise combine —
+maps to the VPU (8x128 vector lanes), not the MXU (no matmul here). We
+tile the 1-D block into TILE-element chunks via the Pallas grid +
+BlockSpec, which expresses the HBM->VMEM streaming schedule; TILE = 1024
+keeps 3 operands x 4 B x 1024 = 12 KiB in VMEM per step, far under the
+~16 MiB budget, and is a multiple of the 8x128 lane tile so the VPU is
+fully occupied. interpret=True everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls; correctness is validated through the interpret path
+and the same lowering serves the AOT HLO-text export.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-aligned tile granule: multiple of 8*128 lanes.
+TILE = 1024
+
+# Blocks whose operands fit VMEM comfortably run as a SINGLE grid step:
+# 3 operands x 4 B x 131072 = 1.5 MiB, far under the ~16 MiB VMEM budget.
+# Multi-step grids only pay off when a block exceeds VMEM (then the
+# BlockSpec pipeline double-buffers HBM<->VMEM); for the paper's 16000-
+# element pipeline blocks one tile is the right schedule — and it also
+# lowers to a single fused elementwise op instead of a sequential
+# grid loop in interpret mode (perf pass L1, EXPERIMENTS.md §Perf).
+MAX_SINGLE_TILE = 131_072
+
+#: Operators supported by the kernels (the paper evaluates MPI_SUM; the
+#: rest cover the MPI_Allreduce op set our Rust ops module mirrors).
+OPS = ("sum", "prod", "max", "min")
+
+#: dtypes compiled into artifacts (MPI_INT is the paper's element type).
+DTYPES = {"int32": jnp.int32, "float32": jnp.float32}
+
+
+def combine(op, a, b):
+    """The element-wise (.) for one operator name: a (.) b."""
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _combine2_kernel(op, t_ref, y_ref, o_ref):
+    """One VMEM tile of y <- t (.) y (incoming block on the left)."""
+    o_ref[...] = combine(op, t_ref[...], y_ref[...])
+
+
+def _combine3_kernel(op, t1_ref, t0_ref, y_ref, o_ref):
+    """One VMEM tile of the fused inner-node round: t1 (.) (t0 (.) y)."""
+    o_ref[...] = combine(op, t1_ref[...], combine(op, t0_ref[...], y_ref[...]))
+
+
+def _tiled_call(kernel, arity, n, dtype, tile):
+    if n % tile != 0:
+        raise ValueError(f"block length {n} must be a multiple of tile {tile}")
+    # one grid step when the whole block fits VMEM; else stream tile-wise
+    eff_tile = n if n <= MAX_SINGLE_TILE else tile
+    spec = pl.BlockSpec((eff_tile,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // eff_tile,),
+        in_specs=[spec] * arity,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )
+
+
+def combine2(t, y, *, op="sum", tile=TILE):
+    """Block reduction ``t (.) y`` (t = received block, left operand)."""
+    return _tiled_call(
+        functools.partial(_combine2_kernel, op), 2, t.shape[0], t.dtype, tile
+    )(t, y)
+
+
+def combine3(t1, t0, y, *, op="sum", tile=TILE):
+    """Fused inner-node round ``t1 (.) (t0 (.) y)`` in one pass."""
+    return _tiled_call(
+        functools.partial(_combine3_kernel, op), 3, y.shape[0], y.dtype, tile
+    )(t1, t0, y)

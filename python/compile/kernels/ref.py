@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+No Pallas, no tiling — just the mathematical definition. pytest asserts the
+kernels against these for every (op, dtype, shape) combination; this is the
+CORE correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+
+
+def combine_ref(op, a, b):
+    """Element-wise a (.) b."""
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def combine2_ref(t, y, *, op="sum"):
+    """Reference for ``combine2``: t (.) y."""
+    return combine_ref(op, t, y)
+
+
+def combine3_ref(t1, t0, y, *, op="sum"):
+    """Reference for ``combine3``: t1 (.) (t0 (.) y)."""
+    return combine_ref(op, t1, combine_ref(op, t0, y))
+
+
+def allreduce_ref(xs, *, op="sum"):
+    """Sequential oracle for a whole reduction-to-all: fold in rank order."""
+    acc = xs[0]
+    for x in xs[1:]:
+        acc = combine_ref(op, acc, x)
+    return acc

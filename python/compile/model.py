@@ -1,0 +1,68 @@
+"""L2 — the JAX compute graph of one tree node's round, calling the L1
+Pallas kernels, lowered once by aot.py and never imported at runtime.
+
+Algorithm 1's per-round local compute at an inner node is two applications
+of (.): ``Y[j] <- t0 (.) Y[j]`` then ``Y[j] <- t1 (.) Y[j]`` — i.e. the
+fused ``Y[j] <- t1 (.) (t0 (.) Y[j])`` (kernels.combine3); leaves and the
+dual-root exchange use the 2-ary form (kernels.combine2). These are the
+only compute on the Rust request path, loaded as HLO via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reduce_block as kernels
+
+
+def combine2_fn(op):
+    """The 2-ary block reduction as a lowered-to-HLO jax function.
+
+    Returns a 1-tuple (the AOT contract: return_tuple=True on the XLA side,
+    unwrapped with ``to_tuple1`` in Rust).
+    """
+
+    def fn(t, y):
+        return (kernels.combine2(t, y, op=op),)
+
+    return fn
+
+
+def combine3_fn(op):
+    """The fused inner-node round: t1 (.) (t0 (.) y)."""
+
+    def fn(t1, t0, y):
+        return (kernels.combine3(t1, t0, y, op=op),)
+
+    return fn
+
+
+def dual_root_fn(op):
+    """The dual-root step for the *lower* root: y (.) t (own partial on the
+    left — the paper's non-commutativity note on Algorithm 1 line 9)."""
+
+    def fn(y, t):
+        return (kernels.combine2(y, t, op=op),)
+
+    return fn
+
+
+def node_round_fn(op):
+    """A whole inner-node round at the L2 level: combine both children and
+    produce both the updated block and the copy to forward to the parent.
+
+    Demonstrates that L2 composition stays fused: XLA fuses the two kernel
+    calls into one elementwise loop (verified by test_model.py on the
+    lowered HLO).
+    """
+
+    def fn(t0, t1, y):
+        upd = kernels.combine3(t1, t0, y, op=op)
+        return (upd, upd * jnp.ones((), upd.dtype))
+
+    return fn
+
+
+def example_args(arity, n, dtype):
+    """ShapeDtypeStructs for lowering a given variant."""
+    spec = jax.ShapeDtypeStruct((n,), dtype)
+    return (spec,) * arity

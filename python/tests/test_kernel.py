@@ -1,0 +1,113 @@
+"""L1 correctness: the Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes (tile multiples), tiles, dtypes and operators;
+numpy assertions are exact for int32 and allclose for float32.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import reduce_block as k
+from compile.kernels import ref
+
+OPS = list(k.OPS)
+DTYPES = list(k.DTYPES)
+
+
+def make_operands(rng, n, dtype, count):
+    if dtype == "int32":
+        return [
+            jnp.asarray(rng.integers(-1000, 1000, size=n, dtype=np.int32))
+            for _ in range(count)
+        ]
+    return [
+        jnp.asarray(rng.standard_normal(n).astype(np.float32)) for _ in range(count)
+    ]
+
+
+def assert_matches(got, want, dtype):
+    if dtype == "int32":
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_combine2_matches_ref(op, dtype):
+    rng = np.random.default_rng(42)
+    t, y = make_operands(rng, 2048, dtype, 2)
+    got = k.combine2(t, y, op=op)
+    assert_matches(got, ref.combine2_ref(t, y, op=op), dtype)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_combine3_matches_ref(op, dtype):
+    rng = np.random.default_rng(43)
+    t1, t0, y = make_operands(rng, 2048, dtype, 3)
+    got = k.combine3(t1, t0, y, op=op)
+    assert_matches(got, ref.combine3_ref(t1, t0, y, op=op), dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    tile=st.sampled_from([128, 256, 1024]),
+    op=st.sampled_from(OPS),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_combine2_hypothesis_sweep(tiles, tile, op, dtype, seed):
+    n = tiles * tile
+    rng = np.random.default_rng(seed)
+    t, y = make_operands(rng, n, dtype, 2)
+    got = k.combine2(t, y, op=op, tile=tile)
+    assert_matches(got, ref.combine2_ref(t, y, op=op), dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    op=st.sampled_from(OPS),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_combine3_hypothesis_sweep(tiles, op, dtype, seed):
+    n = tiles * k.TILE
+    rng = np.random.default_rng(seed)
+    t1, t0, y = make_operands(rng, n, dtype, 3)
+    got = k.combine3(t1, t0, y, op=op)
+    assert_matches(got, ref.combine3_ref(t1, t0, y, op=op), dtype)
+
+
+def test_non_tile_multiple_rejected():
+    t = jnp.zeros(1000, jnp.int32)
+    with pytest.raises(ValueError, match="multiple of tile"):
+        k.combine2(t, t)
+
+
+def test_identity_padding_semantics():
+    # the Rust runtime pads with the op identity; padding must not change
+    # the live prefix
+    for op, ident in [("sum", 0), ("prod", 1), ("max", -(2**31)), ("min", 2**31 - 1)]:
+        t = jnp.full((1024,), 7, jnp.int32).at[512:].set(ident)
+        y = jnp.full((1024,), 3, jnp.int32).at[512:].set(ident)
+        got = np.asarray(k.combine2(t, y, op=op))
+        want = np.asarray(ref.combine2_ref(t, y, op=op))
+        np.testing.assert_array_equal(got[:512], want[:512])
+
+
+def test_combine_unknown_op_raises():
+    with pytest.raises(ValueError):
+        k.combine("xor", jnp.zeros(8), jnp.zeros(8))
+    with pytest.raises(ValueError):
+        ref.combine_ref("xor", jnp.zeros(8), jnp.zeros(8))
+
+
+def test_allreduce_ref_fold_order():
+    xs = [jnp.asarray([i], jnp.int32) for i in range(5)]
+    assert int(ref.allreduce_ref(xs, op="sum")[0]) == 10
+    assert int(ref.allreduce_ref(xs, op="max")[0]) == 4

@@ -1,0 +1,77 @@
+//! **A2/A3 — Pipelining-Lemma block-size ablation** (§1.2 and the §3 open
+//! question "determination of the best pipeline block size"): sweep the
+//! block count b for the doubly-pipelined algorithm at the paper's scale,
+//! compare the simulated time against the closed form
+//! `(4h−3+3(b−1))(α+βm/b)`, and check the Lemma optimum
+//! `b* = sqrt((4h−6)βm / (3α))` is the empirical sweet spot.
+//!
+//! Run: `cargo bench --bench blocksize_ablation [-- --p 288 --m 1000000]`
+
+use dpdr::cli::Args;
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{lemma, predicted_time_us, AlgoKind, ComputeCost, CostModel, LinkCost};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 288usize).unwrap();
+    let m = args.get("m", 1_000_000usize).unwrap();
+
+    let link = LinkCost::new(1.0e-6, 0.70e-9);
+    let timing = Timing::Virtual(CostModel::Uniform(link), ComputeCost::new(0.0));
+    let (a, c) = AlgoKind::Dpdr.step_structure(p).unwrap();
+    let (b_star, t_star) =
+        lemma::optimal_time(a, c, link.alpha, link.beta, (m * 4) as f64, m);
+    println!(
+        "# p={p} m={m}: Lemma optimum b*={b_star} (T*={:.2} us analytic)",
+        t_star * 1e6
+    );
+    println!("#blocks\tblock_elems\tsimulated_us\tanalytic_us\trel_err");
+
+    let mut best_measured = (0usize, f64::INFINITY);
+    let mut sweep: Vec<usize> = (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&b| b <= m.min(1 << 14))
+        .collect();
+    sweep.push(b_star);
+    sweep.sort_unstable();
+    sweep.dedup();
+    for b in sweep {
+        let block_elems = m.div_ceil(b);
+        let spec = RunSpec::new(p, m).block_elems(block_elems).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let analytic = predicted_time_us(AlgoKind::Dpdr, p, m * 4, b, link);
+        let rel = (t - analytic).abs() / analytic;
+        println!("{b}\t{block_elems}\t{t:.2}\t{analytic:.2}\t{rel:.3}");
+        if t < best_measured.1 {
+            best_measured = (b, t);
+        }
+    }
+    println!(
+        "# best simulated b = {} ({:.2} us); lemma b* = {b_star}",
+        best_measured.0, best_measured.1
+    );
+    // the lemma optimum must be within 20% of the best simulated point
+    let spec = RunSpec::new(p, m)
+        .block_elems(m.div_ceil(b_star))
+        .phantom(true);
+    let t_at_star = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+        .unwrap()
+        .max_vtime_us;
+    assert!(
+        t_at_star <= best_measured.1 * 1.20,
+        "lemma optimum {t_at_star} vs empirical best {}",
+        best_measured.1
+    );
+    println!("# A2 OK: lemma optimum within 20% of empirical best");
+
+    // the paper's fixed block size (16000 elements) for reference
+    let spec16k = RunSpec::new(p, m).block_elems(16_000).phantom(true);
+    let t16k = run_allreduce_i32(AlgoKind::Dpdr, &spec16k, timing)
+        .unwrap()
+        .max_vtime_us;
+    println!("# paper's fixed 16000-element blocks: {t16k:.2} us");
+}

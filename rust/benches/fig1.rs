@@ -1,0 +1,54 @@
+//! **F1 — reproduce the paper's Figure 1**: the same four implementations
+//! as Table 2, emitted as a gnuplot-ready TSV series for the log-log plot
+//! (count vs µs).
+//!
+//! Run: `cargo bench --bench fig1 [-- --tsv fig1.tsv]`
+//! Plot: `gnuplot> set logscale xy; plot for [i=2:5] "fig1.tsv" u 1:i w lp`
+
+use dpdr::cli::Args;
+use dpdr::collectives::RunSpec;
+use dpdr::comm::Timing;
+use dpdr::harness::{measure_series, render_tsv, TABLE2_COUNTS};
+use dpdr::model::AlgoKind;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 288usize).unwrap();
+    let block = args.get("block", 16_000usize).unwrap();
+
+    let algos = [
+        AlgoKind::NativeSwitch,
+        AlgoKind::ReduceBcast,
+        AlgoKind::PipeTree,
+        AlgoKind::Dpdr,
+    ];
+    // Figure 1 plots the non-zero counts (log axis)
+    let counts: Vec<usize> = TABLE2_COUNTS.iter().copied().filter(|&c| c > 0).collect();
+    let spec = RunSpec::new(p, 0).block_elems(block).phantom(true);
+    eprintln!("# fig1: p={p} block={block}");
+    let rows = measure_series(&algos, &counts, &spec, Timing::hydra(), 1).expect("fig1 series");
+    let tsv = render_tsv(&algos, &rows);
+    match args.raw("tsv") {
+        Some(path) => {
+            std::fs::write(path, &tsv).unwrap();
+            eprintln!("# wrote {path}; gnuplot> set logscale xy; plot for [i=2:5] '{path}' u 1:i w lp");
+        }
+        None => print!("{tsv}"),
+    }
+    // monotone sanity for the log-log shape: every series grows for counts
+    // beyond the latency-dominated regime
+    for (i, algo) in algos.iter().enumerate() {
+        let large: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.count >= 87_500)
+            .map(|r| r.times_us[i])
+            .collect();
+        assert!(
+            large.windows(2).all(|w| w[1] > w[0]),
+            "{} series not increasing at large counts",
+            algo.name()
+        );
+    }
+    eprintln!("# fig1 OK (series monotone at large counts)");
+}

@@ -1,0 +1,82 @@
+//! **A4 — hierarchy ablation** (§3 open question: "the role of the
+//! hierarchical structure (network and nodes) of a clustered
+//! high-performance system"): rerun the Table-2 comparison under a
+//! two-level cost model (fast intra-node links, OmniPath-like inter-node
+//! links, 8 ranks per node as in the paper's runs) and compare rank→node
+//! mappings.
+//!
+//! Run: `cargo bench --bench hierarchy_ablation [-- --p 288]`
+
+use dpdr::cli::Args;
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+use dpdr::topo::Mapping;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 288usize).unwrap();
+    let ppn = args.get("ppn", 8usize).unwrap();
+    let nodes = p / ppn;
+
+    let inter = LinkCost::new(1.0e-6, 0.70e-9);
+    let intra = LinkCost::new(0.3e-6, 0.08e-9);
+    let uniform = Timing::Virtual(CostModel::Uniform(inter), ComputeCost::new(0.25e-9));
+    let hier = |mapping: Mapping| {
+        Timing::Virtual(
+            CostModel::Hierarchical {
+                intra,
+                inter,
+                mapping,
+            },
+            ComputeCost::new(0.25e-9),
+        )
+    };
+
+    let algos = [
+        AlgoKind::Dpdr,
+        AlgoKind::PipeTree,
+        AlgoKind::ReduceBcast,
+        AlgoKind::Ring,
+    ];
+    println!("# p={p} ({nodes} nodes x {ppn}); times in us");
+    println!("#algo\tcount\tuniform\thier_block\thier_rr\tblock_speedup");
+    let mut block_wins = 0usize;
+    let mut cases = 0usize;
+    for algo in algos {
+        for m in [2_500usize, 250_000, 2_500_000] {
+            let spec = RunSpec::new(p, m).block_elems(16_000).phantom(true);
+            let t_uni = run_allreduce_i32(algo, &spec, uniform).unwrap().max_vtime_us;
+            let t_block = run_allreduce_i32(
+                algo,
+                &spec,
+                hier(Mapping::Block { ranks_per_node: ppn }),
+            )
+            .unwrap()
+            .max_vtime_us;
+            let t_rr = run_allreduce_i32(algo, &spec, hier(Mapping::RoundRobin { nodes }))
+                .unwrap()
+                .max_vtime_us;
+            println!(
+                "{}\t{m}\t{t_uni:.1}\t{t_block:.1}\t{t_rr:.1}\t{:.2}x",
+                algo.name(),
+                t_uni / t_block
+            );
+            assert!(
+                t_block <= t_uni + 1e-6,
+                "{} m={m}: hierarchical block mapping slower than uniform",
+                algo.name()
+            );
+            cases += 1;
+            if t_block <= t_rr {
+                block_wins += 1;
+            }
+        }
+    }
+    println!(
+        "# block mapping beats round-robin in {block_wins}/{cases} cases \
+         (tree algorithms are rank-local; answer to the paper's Sec. 3 question)"
+    );
+    assert!(block_wins * 2 >= cases, "block mapping should win mostly");
+}

@@ -1,0 +1,85 @@
+//! **A1 — §1.2 latency validation**: the number of critical-path
+//! communication steps for the doubly-pipelined dual-root algorithm at
+//! `p = 2^h − 2` (both trees perfect), measured with α = 1, β = 0, b = 1,
+//! against the structural formula `4·height + 1` and the paper's `4h − 3`.
+//!
+//! Finding (EXPERIMENTS.md §A1): the measured step count is `4h − 7 =
+//! 4·height + 1` with height = h − 2 — the paper's constant presumes tree
+//! height `h − 1`, one more than the edge-height of a `2^(h−1) − 1`-node
+//! perfect tree. The *structure* (2·height up + 1 dual + 2·height down,
+//! then 3 steps per extra block) reproduces exactly.
+
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+
+fn main() {
+    let timing = Timing::Virtual(
+        CostModel::Uniform(LinkCost::new(1e-6, 0.0)),
+        ComputeCost::new(0.0),
+    );
+    println!("#p\th\theight\tsteps_measured\t4*height+1\tpaper_4h-3");
+    let mut all_match = true;
+    for h in 2..=11usize {
+        let p = (1usize << h) - 2;
+        let spec = RunSpec::new(p, 1).block_elems(1).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let height = h.saturating_sub(2);
+        let structural = if p == 2 { 1 } else { 4 * height + 1 };
+        let paper = 4 * h as i64 - 3;
+        let measured = t.round() as usize;
+        if measured != structural {
+            all_match = false;
+        }
+        println!("{p}\t{h}\t{height}\t{measured}\t{structural}\t{paper}");
+    }
+    assert!(all_match, "structural latency formula violated");
+
+    // pipelining: each extra block adds exactly 3 steps (the paper's
+    // "three communication steps per round")
+    println!("\n#p=62: steps vs blocks (slope must be 3)");
+    println!("#b\tsteps");
+    let mut prev = None;
+    for b in [1usize, 2, 4, 8, 16] {
+        let m = 16 * b; // keep block size constant
+        let spec = RunSpec::new(62, m).block_elems(16).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+            .unwrap()
+            .max_vtime_us
+            .round() as i64;
+        println!("{b}\t{t}");
+        if let Some((pb, pt)) = prev {
+            let slope = (t - pt) as f64 / (b - pb) as f64;
+            assert!(
+                (slope - 3.0).abs() < 1e-9,
+                "per-block step slope {slope}, expected 3"
+            );
+        }
+        prev = Some((b, t));
+    }
+    println!("# A1 OK: latency 4*height+1, slope 3 steps/block");
+
+    // §1.2 remark: single doubly-pipelined tree — "latency … slightly
+    // higher (by a small constant term)" than the dual-root version
+    println!("\n#p\tdual_steps\tsingle_steps\tdelta");
+    for h in 3..=9usize {
+        let p = (1usize << h) - 2;
+        let spec = RunSpec::new(p, 1).block_elems(1).phantom(true);
+        let dual = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+            .unwrap()
+            .max_vtime_us
+            .round() as i64;
+        let single = run_allreduce_i32(AlgoKind::DpdrSingle, &spec, timing)
+            .unwrap()
+            .max_vtime_us
+            .round() as i64;
+        println!("{p}\t{dual}\t{single}\t{}", single - dual);
+        assert!(
+            single > dual && single - dual <= 4,
+            "single-tree latency should exceed dual-root by a small constant"
+        );
+    }
+    println!("# A6 OK: single-tree latency exceeds dual-root by a small constant (paper Sec. 1.2)");
+}

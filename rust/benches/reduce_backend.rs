@@ -1,0 +1,57 @@
+//! **P1 — reduce-backend hot path**: the block-wise ⊙ (`MPI_Reduce_local`)
+//! executed by (a) the native auto-vectorized Rust loop and (b) the
+//! AOT-compiled JAX/Pallas kernel via PJRT, over the paper's 16000-element
+//! blocks. Reports per-block latency and effective bandwidth; feeds the
+//! §Perf discussion of PJRT call overhead vs kernel quality.
+//!
+//! Run: `cargo bench --bench reduce_backend` (skips PJRT if artifacts are
+//! missing).
+
+use std::time::Instant;
+
+use dpdr::ops::{OpKind, ReduceOp, Side};
+use dpdr::runtime::{artifact_name, PjrtOp, ReduceBackend, ReduceEngine};
+use dpdr::util::XorShift64;
+
+fn bench_backend(op: &PjrtOp, n: usize, iters: usize) -> (f64, f64) {
+    let mut rng = XorShift64::new(99);
+    let inc = rng.small_i32_vec(n);
+    let mut acc = rng.small_i32_vec(n);
+    // warmup
+    op.reduce_into(&mut acc, &inc, Side::Left);
+    let start = Instant::now();
+    for _ in 0..iters {
+        op.reduce_into(&mut acc, &inc, Side::Left);
+    }
+    let total = start.elapsed().as_secs_f64();
+    let per_call_us = total * 1e6 / iters as f64;
+    // 2 reads + 1 write of n i32
+    let gbps = (3.0 * n as f64 * 4.0 * iters as f64) / total / 1e9;
+    (per_call_us, gbps)
+}
+
+fn main() {
+    println!("#backend\tblock_elems\tper_call_us\teff_GB/s");
+    for n in [1_024usize, 16_000, 131_072] {
+        let iters = (2_000_000 / n).max(10);
+        let native = PjrtOp::new(OpKind::Sum, ReduceBackend::Native);
+        let (us, gb) = bench_backend(&native, n, iters);
+        println!("native\t{n}\t{us:.2}\t{gb:.2}");
+    }
+    match ReduceEngine::with_default_dir() {
+        Ok(engine) if engine.has_artifact(&artifact_name(2, OpKind::Sum, "int32", 1024)) => {
+            let backend = ReduceBackend::Pjrt(std::sync::Arc::new(std::sync::Mutex::new(
+                dpdr::runtime::EngineCell(engine),
+            )));
+            for n in [1_024usize, 16_000, 131_072] {
+                let iters = (400_000 / n).max(5);
+                let pjrt = PjrtOp::new(OpKind::Sum, backend.clone());
+                let (us, gb) = bench_backend(&pjrt, n, iters);
+                println!("pjrt\t{n}\t{us:.2}\t{gb:.2}");
+            }
+            println!("# note: PJRT path pays literal-copy + dispatch overhead per call;");
+            println!("# the native loop is the production default (see EXPERIMENTS.md §Perf).");
+        }
+        _ => println!("# pjrt: SKIPPED (run `make artifacts` first)"),
+    }
+}

@@ -1,0 +1,69 @@
+//! **T2 — reproduce the paper's Table 2**: the four reduction-to-all
+//! implementations over the exact mpicroscope count series, at
+//! p = 36×8 = 288 ranks with 16000-element pipeline blocks (MPI_INT /
+//! MPI_SUM), on the simulated Hydra cluster.
+//!
+//! Run: `cargo bench --bench table2 [-- --p 288 --rounds 1 --tsv FILE]`
+//!
+//! Expected *shape* (the reproduction criterion — our substrate is the
+//! α-β-γ model, not the authors' OmniPath testbed):
+//! * native best at small and large counts, pathological plateau mid-range;
+//! * MPI_Reduce+MPI_Bcast worst for large counts;
+//! * doubly pipelined < pipelined for all but small counts, ratio drifting
+//!   toward 4/3 (the paper measured 1.14 at the top count).
+
+use dpdr::cli::Args;
+use dpdr::collectives::RunSpec;
+use dpdr::comm::Timing;
+use dpdr::harness::{measure_series, render_markdown, render_tsv, TABLE2_COUNTS};
+use dpdr::model::AlgoKind;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 288usize).unwrap();
+    let block = args.get("block", 16_000usize).unwrap();
+    let rounds = args.get("rounds", 1usize).unwrap();
+
+    let algos = [
+        AlgoKind::NativeSwitch,
+        AlgoKind::ReduceBcast,
+        AlgoKind::PipeTree,
+        AlgoKind::Dpdr,
+    ];
+    let spec = RunSpec::new(p, 0).block_elems(block).phantom(true);
+    eprintln!("# table2: p={p} block={block} rounds={rounds} (simulated Hydra, α-β-γ model)");
+    let start = std::time::Instant::now();
+    let rows = measure_series(&algos, &TABLE2_COUNTS, &spec, Timing::hydra(), rounds)
+        .expect("table2 series");
+    eprintln!(
+        "# {} experiments in {:.1}s wall",
+        algos.len() * TABLE2_COUNTS.len(),
+        start.elapsed().as_secs_f64()
+    );
+    println!("{}", render_markdown(&algos, &rows));
+
+    // shape assertions (soft: report, don't abort)
+    let col = |name: &str| algos.iter().position(|a| a.name() == name).unwrap();
+    let at = |count: usize| rows.iter().find(|r| r.count == count).unwrap();
+    let big = at(8_388_608);
+    let ratio = big.times_us[col("pipetree")] / big.times_us[col("dpdr")];
+    println!("\n# shape checks");
+    println!(
+        "# largest count pipelined/doubly-pipelined ratio: {ratio:.3} (paper: 1.14, model limit 4/3)"
+    );
+    let mid = at(8_750);
+    println!(
+        "# midrange (8750) native/redbcast ratio: {:.2} (paper: ~2.5x pathological)",
+        mid.times_us[col("native")] / mid.times_us[col("redbcast")]
+    );
+    println!(
+        "# largest count redbcast/native ratio: {:.2} (paper: ~3.6x)",
+        big.times_us[col("redbcast")] / big.times_us[col("native")]
+    );
+
+    if let Some(path) = args.raw("tsv") {
+        std::fs::write(path, render_tsv(&algos, &rows)).unwrap();
+        eprintln!("# wrote {path}");
+    }
+}

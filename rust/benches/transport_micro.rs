@@ -1,0 +1,68 @@
+//! Transport micro-benchmark: raw cost of the thread substrate's
+//! operations (sendrecv ping, barrier, virtual-clock overhead) — the L3
+//! numbers behind the §Perf simulator-overhead target (worlds of p = 288
+//! × 30 counts × 4 algorithms must complete in minutes).
+
+use std::time::Instant;
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::{run_world, Comm, Timing};
+use dpdr::model::AlgoKind;
+
+fn ping(timing: Timing, elems: usize, iters: usize) -> f64 {
+    let report = run_world::<i32, _, _>(2, timing, move |comm| {
+        let peer = 1 - comm.rank();
+        let payload = DataBuf::real(vec![0i32; elems]);
+        comm.barrier()?;
+        let start = Instant::now();
+        for _ in 0..iters {
+            let _ = comm.sendrecv(peer, payload.clone())?;
+        }
+        Ok(start.elapsed().as_secs_f64() * 1e6 / iters as f64)
+    })
+    .unwrap();
+    report.results.iter().copied().fold(0.0, f64::max)
+}
+
+fn main() {
+    println!("#metric\tvalue");
+    for (label, elems) in [("sendrecv_small_us", 4usize), ("sendrecv_16k_us", 16_000)] {
+        let t = ping(Timing::Real, elems, 5_000);
+        println!("{label}\t{t:.3}");
+    }
+    let t = ping(Timing::hydra(), 4, 5_000);
+    println!("sendrecv_vclock_overhead_us\t{t:.3}");
+
+    // barrier cost across world sizes
+    for p in [8usize, 64, 288] {
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            comm.barrier()?;
+            let start = Instant::now();
+            for _ in 0..200 {
+                comm.barrier()?;
+            }
+            Ok(start.elapsed().as_secs_f64() * 1e6 / 200.0)
+        })
+        .unwrap();
+        let worst = report.results.iter().copied().fold(0.0, f64::max);
+        println!("barrier_p{p}_us\t{worst:.2}");
+    }
+
+    // whole-world cost: one full Table-2 cell (p=288, largest count)
+    let start = Instant::now();
+    let spec = RunSpec::new(288, 8_388_608).block_elems(16_000).phantom(true);
+    let sim = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::hydra())
+        .unwrap()
+        .max_vtime_us;
+    let wall = start.elapsed().as_secs_f64();
+    println!("table2_largest_cell_wall_s\t{wall:.2}");
+    println!("table2_largest_cell_sim_us\t{sim:.1}");
+    let total = report_exchanges(&spec);
+    println!("exchanges_per_wall_s\t{:.0}", total as f64 / wall);
+}
+
+fn report_exchanges(spec: &RunSpec) -> u64 {
+    let report = run_allreduce_i32(AlgoKind::Dpdr, spec, Timing::hydra()).unwrap();
+    report.total_metrics().exchanges
+}

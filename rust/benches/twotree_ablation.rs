@@ -1,0 +1,75 @@
+//! **A5 — two-tree comparison** (§1.2: "the best-known pipelined binary
+//! tree-based algorithm … `O(log p + √(m log p)) + 2βm`"): measure the
+//! β-terms of all pipelined algorithms at pure bandwidth (α = 0) and the
+//! end-to-end times under the Hydra model, against the paper's hierarchy
+//! `two-tree (2βm) < dual-root (3βm) < single-tree (4βm)`.
+//!
+//! Run: `cargo bench --bench twotree_ablation [-- --p 128]`
+
+use dpdr::cli::Args;
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 128usize).unwrap();
+    let m = args.get("m", 1_000_000usize).unwrap();
+
+    // β-terms at pure bandwidth
+    let bw = Timing::Virtual(
+        CostModel::Uniform(LinkCost::new(0.0, 1e-9)),
+        ComputeCost::new(0.0),
+    );
+    let beta_m = (m * 4) as f64 * 1e-9 * 1e6;
+    println!("# p={p} m={m}; β-terms in units of βm (paper: twotree 2, dpdr 3, pipetree 4)");
+    println!("#algo\tbeta_term\tpaper");
+    let mut terms = std::collections::HashMap::new();
+    for (algo, paper) in [
+        (AlgoKind::TwoTree, 2.0),
+        (AlgoKind::Dpdr, 3.0),
+        (AlgoKind::DpdrSingle, 3.0),
+        (AlgoKind::PipeTree, 4.0),
+        (AlgoKind::Ring, 2.0),
+        (AlgoKind::Rabenseifner, 2.0),
+    ] {
+        let spec = RunSpec::new(p, m).block_elems(4_000).phantom(true);
+        let t = run_allreduce_i32(algo, &spec, bw).unwrap().max_vtime_us;
+        let term = t / beta_m;
+        println!("{}\t{term:.2}\t{paper}", algo.name());
+        terms.insert(algo.name(), term);
+    }
+    // ordering of the paper's three tree algorithms must hold
+    assert!(
+        terms["twotree"] < terms["dpdr"] && terms["dpdr"] < terms["pipetree"],
+        "β-term hierarchy violated: {terms:?}"
+    );
+    // and each within 25% of its analytic constant
+    for (name, paper) in [("twotree", 2.0f64), ("dpdr", 3.0), ("pipetree", 4.0)] {
+        let rel = (terms[name] - paper) / paper;
+        assert!(
+            rel < 0.25,
+            "{name}: measured {} vs paper {paper} (+{rel:.2})",
+            terms[name]
+        );
+    }
+
+    // end-to-end under the Hydra model across sizes: crossover report
+    println!("\n#count\ttwotree\tdpdr\tpipetree (us, Hydra model)");
+    for count in [1_000usize, 25_000, 250_000, 2_500_000] {
+        let spec = RunSpec::new(p, count).block_elems(16_000).phantom(true);
+        let t = |algo| {
+            run_allreduce_i32(algo, &spec, Timing::hydra())
+                .unwrap()
+                .max_vtime_us
+        };
+        println!(
+            "{count}\t{:.1}\t{:.1}\t{:.1}",
+            t(AlgoKind::TwoTree),
+            t(AlgoKind::Dpdr),
+            t(AlgoKind::PipeTree)
+        );
+    }
+    println!("# A5 OK: 2βm < 3βm < 4βm hierarchy reproduced");
+}

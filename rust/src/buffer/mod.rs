@@ -1,0 +1,273 @@
+//! Data buffers that can be *real* (carrying elements) or *phantom*
+//! (carrying only a length).
+//!
+//! Why: regenerating the paper's Table 2 means running p = 288 ranks on
+//! vectors of up to 8 388 608 `int` elements. With real data that is
+//! ~9.7 GB of live buffers *per algorithm run* — pointless, because the
+//! quantity being reproduced is *time in the α-β cost model*, not the sums
+//! themselves. Phantom buffers let the exact same algorithm code run the
+//! full protocol (every sendrecv, every round, every block boundary) while
+//! messages carry only sizes; reduction cost is still charged (γ·n) by the
+//! virtual clock. Correctness of the data path is established separately by
+//! the real-mode test battery at smaller (p, m).
+
+use crate::error::{Error, Result};
+use crate::ops::{Elem, ReduceOp, Side};
+
+/// A vector of `E` that either physically exists or is a counted phantom.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataBuf<E: Elem> {
+    /// Real data.
+    Real(Vec<E>),
+    /// Only a length; contents are never materialized.
+    Phantom(usize),
+}
+
+impl<E: Elem> DataBuf<E> {
+    /// A real buffer from a vector.
+    pub fn real(v: Vec<E>) -> Self {
+        DataBuf::Real(v)
+    }
+
+    /// A real zero-filled buffer of length `n`.
+    pub fn real_zeroed(n: usize) -> Self {
+        DataBuf::Real(vec![E::zero(); n])
+    }
+
+    /// A phantom buffer of length `n`.
+    pub fn phantom(n: usize) -> Self {
+        DataBuf::Phantom(n)
+    }
+
+    /// An empty buffer in the same mode as `self` (the "void block" of the
+    /// paper's implementation sketch).
+    pub fn empty_like(&self) -> Self {
+        match self {
+            DataBuf::Real(_) => DataBuf::Real(Vec::new()),
+            DataBuf::Phantom(_) => DataBuf::Phantom(0),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            DataBuf::Real(v) => v.len(),
+            DataBuf::Phantom(n) => *n,
+        }
+    }
+
+    /// True if the buffer holds zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True for the phantom variant.
+    pub fn is_phantom(&self) -> bool {
+        matches!(self, DataBuf::Phantom(_))
+    }
+
+    /// Wire size in bytes (drives the β term of the cost model).
+    pub fn bytes(&self) -> usize {
+        self.len() * E::BYTES
+    }
+
+    /// Borrow real contents; `None` for phantoms.
+    pub fn as_slice(&self) -> Option<&[E]> {
+        match self {
+            DataBuf::Real(v) => Some(v),
+            DataBuf::Phantom(_) => None,
+        }
+    }
+
+    /// Mutably borrow real contents; `None` for phantoms.
+    pub fn as_mut_slice(&mut self) -> Option<&mut [E]> {
+        match self {
+            DataBuf::Real(v) => Some(v),
+            DataBuf::Phantom(_) => None,
+        }
+    }
+
+    /// Consume into a vector; errors on phantoms.
+    pub fn into_vec(self) -> Result<Vec<E>> {
+        match self {
+            DataBuf::Real(v) => Ok(v),
+            DataBuf::Phantom(_) => Err(Error::BufferMode(
+                "into_vec on a phantom buffer".into(),
+            )),
+        }
+    }
+
+    /// Copy out the sub-range `[lo, hi)` as a new buffer of the same mode.
+    ///
+    /// This is the "send a block" primitive: blocks leave the pipelining
+    /// array as standalone messages.
+    pub fn extract(&self, lo: usize, hi: usize) -> Result<DataBuf<E>> {
+        if lo > hi || hi > self.len() {
+            return Err(Error::Config(format!(
+                "extract [{lo}, {hi}) out of bounds for len {}",
+                self.len()
+            )));
+        }
+        Ok(match self {
+            DataBuf::Real(v) => DataBuf::Real(v[lo..hi].to_vec()),
+            DataBuf::Phantom(_) => DataBuf::Phantom(hi - lo),
+        })
+    }
+
+    /// Overwrite the sub-range `[lo, lo+incoming.len())` with `incoming`
+    /// (the "receive a result block from the parent" primitive).
+    pub fn write_at(&mut self, lo: usize, incoming: &DataBuf<E>) -> Result<()> {
+        let n = incoming.len();
+        if lo + n > self.len() {
+            return Err(Error::Config(format!(
+                "write_at [{lo}, {}) out of bounds for len {}",
+                lo + n,
+                self.len()
+            )));
+        }
+        match (self, incoming) {
+            (DataBuf::Real(dst), DataBuf::Real(src)) => {
+                dst[lo..lo + n].copy_from_slice(src);
+                Ok(())
+            }
+            (DataBuf::Phantom(_), DataBuf::Phantom(_)) => Ok(()),
+            _ => Err(Error::BufferMode(
+                "write_at mixing real and phantom buffers".into(),
+            )),
+        }
+    }
+
+    /// Reduce `incoming` into the sub-range `[lo, lo+incoming.len())`:
+    /// `self[lo..] ← incoming ⊙ self[lo..]` (Side::Left) or the mirror.
+    ///
+    /// This is `MPI_Reduce_local` restricted to one pipeline block. For
+    /// phantom buffers it is a no-op (the virtual clock charges γ·n at the
+    /// call site).
+    pub fn reduce_at<O: ReduceOp<E> + ?Sized>(
+        &mut self,
+        lo: usize,
+        incoming: &DataBuf<E>,
+        op: &O,
+        side: Side,
+    ) -> Result<()> {
+        let n = incoming.len();
+        if lo + n > self.len() {
+            return Err(Error::Config(format!(
+                "reduce_at [{lo}, {}) out of bounds for len {}",
+                lo + n,
+                self.len()
+            )));
+        }
+        match (self, incoming) {
+            (DataBuf::Real(dst), DataBuf::Real(src)) => {
+                op.reduce_into(&mut dst[lo..lo + n], src, side);
+                Ok(())
+            }
+            (DataBuf::Phantom(_), DataBuf::Phantom(_)) => Ok(()),
+            _ => Err(Error::BufferMode(
+                "reduce_at mixing real and phantom buffers".into(),
+            )),
+        }
+    }
+
+    /// Whole-buffer in-place reduction (used by the non-pipelined baselines).
+    pub fn reduce_all<O: ReduceOp<E> + ?Sized>(
+        &mut self,
+        incoming: &DataBuf<E>,
+        op: &O,
+        side: Side,
+    ) -> Result<()> {
+        if incoming.len() != self.len() {
+            return Err(Error::Config(format!(
+                "reduce_all length mismatch {} vs {}",
+                self.len(),
+                incoming.len()
+            )));
+        }
+        self.reduce_at(0, incoming, op, side)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Mat2, Mat2Op, SumOp};
+
+    #[test]
+    fn real_roundtrip() {
+        let b = DataBuf::real(vec![1i32, 2, 3]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.bytes(), 12);
+        assert!(!b.is_phantom());
+        assert_eq!(b.as_slice().unwrap(), &[1, 2, 3]);
+        assert_eq!(b.into_vec().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn phantom_basics() {
+        let b: DataBuf<i32> = DataBuf::phantom(5);
+        assert_eq!(b.len(), 5);
+        assert!(b.is_phantom());
+        assert!(b.as_slice().is_none());
+        assert!(b.clone().into_vec().is_err());
+        assert_eq!(b.extract(1, 4).unwrap(), DataBuf::phantom(3));
+    }
+
+    #[test]
+    fn extract_and_write() {
+        let b = DataBuf::real(vec![10i32, 20, 30, 40]);
+        let blk = b.extract(1, 3).unwrap();
+        assert_eq!(blk.as_slice().unwrap(), &[20, 30]);
+        let mut dst = DataBuf::real(vec![0i32; 4]);
+        dst.write_at(2, &blk).unwrap();
+        assert_eq!(dst.as_slice().unwrap(), &[0, 0, 20, 30]);
+    }
+
+    #[test]
+    fn extract_bounds_checked() {
+        let b = DataBuf::real(vec![1i32]);
+        assert!(b.extract(0, 2).is_err());
+        assert!(b.extract(2, 2).is_err());
+        let mut d = DataBuf::real(vec![1i32]);
+        assert!(d.write_at(1, &DataBuf::real(vec![5])).is_err());
+    }
+
+    #[test]
+    fn reduce_at_left() {
+        let mut acc = DataBuf::real(vec![1i32, 2, 3, 4]);
+        let inc = DataBuf::real(vec![10i32, 20]);
+        acc.reduce_at(1, &inc, &SumOp, Side::Left).unwrap();
+        assert_eq!(acc.as_slice().unwrap(), &[1, 12, 23, 4]);
+    }
+
+    #[test]
+    fn reduce_side_matters() {
+        let a = Mat2([1, 2, 3, 4]);
+        let t = Mat2([0, 1, 1, 0]);
+        let mut left = DataBuf::real(vec![a]);
+        left.reduce_all(&DataBuf::real(vec![t]), &Mat2Op, Side::Left)
+            .unwrap();
+        assert_eq!(left.as_slice().unwrap()[0], t.mul(a));
+        let mut right = DataBuf::real(vec![a]);
+        right
+            .reduce_all(&DataBuf::real(vec![t]), &Mat2Op, Side::Right)
+            .unwrap();
+        assert_eq!(right.as_slice().unwrap()[0], a.mul(t));
+    }
+
+    #[test]
+    fn mode_mixing_rejected() {
+        let mut r = DataBuf::real(vec![1i32, 2]);
+        let p: DataBuf<i32> = DataBuf::phantom(2);
+        assert!(r.write_at(0, &p).is_err());
+        assert!(r.reduce_all(&p, &SumOp, Side::Left).is_err());
+    }
+
+    #[test]
+    fn empty_like_preserves_mode() {
+        let r = DataBuf::real(vec![1i32]);
+        assert!(matches!(r.empty_like(), DataBuf::Real(v) if v.is_empty()));
+        let p: DataBuf<i32> = DataBuf::phantom(3);
+        assert!(matches!(p.empty_like(), DataBuf::Phantom(0)));
+    }
+}

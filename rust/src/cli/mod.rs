@@ -1,0 +1,113 @@
+//! A small command-line argument parser (the offline registry has no
+//! `clap`): positional subcommand + `--key value` flags + `--switch`
+//! booleans, with typed getters.
+
+use crate::error::{Error, Result};
+use std::collections::{HashMap, HashSet};
+use std::str::FromStr;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Positional arguments (the first is usually a subcommand).
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `bool_flags` names the value-less switches;
+    /// everything else starting with `--` consumes the next token.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if bool_flags.contains(&name) {
+                    out.switches.insert(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Cli(format!("flag --{name} expects a value"))
+                    })?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// True if the boolean switch was given.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    /// Raw flag value.
+    pub fn raw(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed flag with a default.
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("flag --{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Typed mandatory flag.
+    pub fn require<T: FromStr>(&self, name: &str) -> Result<T> {
+        let v = self
+            .flags
+            .get(name)
+            .ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))?;
+        v.parse()
+            .map_err(|_| Error::Cli(format!("flag --{name}: cannot parse '{v}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(&argv("run --p 36 --phantom --m=100 extra"), &["phantom"]).unwrap();
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get::<usize>("p", 0).unwrap(), 36);
+        assert_eq!(a.get::<usize>("m", 0).unwrap(), 100);
+        assert!(a.switch("phantom"));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = Args::parse(&argv("bench"), &[]).unwrap();
+        assert_eq!(a.get::<usize>("p", 288).unwrap(), 288);
+        assert!(a.require::<usize>("p").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&argv("x --p"), &[]).is_err());
+        let a = Args::parse(&argv("x --p abc"), &[]).unwrap();
+        assert!(a.get::<usize>("p", 1).is_err());
+    }
+}

@@ -1,0 +1,284 @@
+//! **Algorithm 1** of the paper: the doubly-pipelined, dual-root
+//! reduction-to-all ("User-Allreduce2").
+//!
+//! Per processor `i` at depth `d_i` in its post-order binary tree, for
+//! rounds `j = 0, 1, …, b + d_i`:
+//!
+//! ```text
+//! Send(Y[j-(d_i+1)], child0) ‖ Recv(t, child0);   Y[j] ← t ⊙ Y[j]
+//! Send(Y[j-(d_i+1)], child1) ‖ Recv(t, child1);   Y[j] ← t ⊙ Y[j]
+//! if root:   Send(Y[j], dual) ‖ Recv(t, dual);    Y[j] ← Y[j] ⊙ t   (lower root)
+//!                                                 Y[j] ← t ⊙ Y[j]   (upper root)
+//! else:      Send(Y[j], parent) ‖ Recv(Y[j-d_i], parent)
+//! ```
+//!
+//! Blocks with index `< 0` or `≥ b` are *void* (zero elements). Following
+//! the paper's implementation sketch (§1.3), we skip an exchange entirely
+//! when **both** directions are void; the activity predicate depends only
+//! on `(j, b, depth)`, which both endpoints know (the parent knows its
+//! child's depth is its own + 1), so skipping is symmetric and the
+//! `MPI_Get_elements`-style dynamic termination of the paper's C code is
+//! replaced by an equivalent static rule:
+//!
+//! * edge (parent `d`, child `d+1`), round `j`: active iff
+//!   `j < b` (up-flowing partial block `j`) **or** `d+1 ≤ j < b + d + 1`
+//!   (down-flowing result block `j − (d+1)`);
+//! * dual edge, round `j`: active iff `j < b`.
+//!
+//! Every exchange is a single bidirectional [`Comm::sendrecv`] — this is
+//! exactly the "three communication steps per round" structure whose cost
+//! the paper bounds by `(4h − 3 + 3(b − 1))(α + β·m/b)`.
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+use crate::topo::DualRootForest;
+
+/// Extract block `k` of `y` if `0 ≤ k < b`, else a void block.
+/// (`k` arrives as `isize` because the algorithm indexes `j − (d+1)`.)
+fn block_or_void<E: Elem>(y: &DataBuf<E>, blocks: &Blocks, k: isize) -> Result<DataBuf<E>> {
+    if k < 0 || k as usize >= blocks.count() {
+        Ok(y.empty_like())
+    } else {
+        let (lo, hi) = blocks.range(k as usize);
+        y.extract(lo, hi)
+    }
+}
+
+/// The doubly-pipelined, dual-root reduction-to-all.
+///
+/// Consumes the local input vector `x` (the `Y` array of Algorithm 1) and
+/// returns the reduction `⊙_{k=0}^{p-1} x_k`, identical on every rank.
+/// Requires only associativity of `op`.
+pub fn allreduce_dpdr<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    if p == 1 || x.is_empty() {
+        return Ok(x);
+    }
+    let forest = DualRootForest::new(p)?;
+    let role = forest.role(comm.rank())?;
+    run_rounds(comm, x, op, blocks, role)
+}
+
+/// The §1.2 variant with a **single** doubly-pipelined tree: same round
+/// structure, no dual exchange (the root's block is final once both
+/// children are combined). The paper: *"all non-leaves, including the
+/// root, perform at most two applications of the ⊙ operator per round.
+/// On the other hand, … the latency … is slightly higher (by a small
+/// constant term)"* — the A6 ablation quantifies both effects.
+pub fn allreduce_dpdr_single<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    if p == 1 || x.is_empty() {
+        return Ok(x);
+    }
+    let tree = crate::topo::PostOrderTree::new(0, p - 1)?;
+    let rank = comm.rank();
+    let role = crate::topo::NodeRole {
+        tree: crate::topo::TreeId::A,
+        depth: tree.depth(rank),
+        children: tree.children(rank),
+        parent: tree.parent(rank),
+        dual: None, // no dual: the root finalizes blocks by itself
+        lower_root: false,
+    };
+    run_rounds(comm, x, op, blocks, role)
+}
+
+/// The per-processor round loop of Algorithm 1, parameterized by the
+/// rank's role (dual-root forest or single tree).
+fn run_rounds<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    role: crate::topo::NodeRole,
+) -> Result<DataBuf<E>> {
+    let mut y = x;
+    let d = role.depth;
+    let b = blocks.count();
+
+    // Loop bound from Algorithm 1: j = 0 … b + d_i. Rounds past a step's
+    // activity window are skipped by the per-edge predicates below.
+    for j in 0..=(b + d) {
+        // --- steps 1 & 2: the two children -------------------------------
+        for child in role.children.into_iter().flatten() {
+            let up_active = j < b; // child's partial block j flows up
+            let down_idx = j as isize - (d as isize + 1); // result block down
+            let down_active = down_idx >= 0 && (down_idx as usize) < b;
+            if !up_active && !down_active {
+                continue; // both directions void — skipped symmetrically
+            }
+            let send = block_or_void(&y, blocks, down_idx)?;
+            let t = comm.sendrecv(child, send)?;
+            if up_active {
+                // post-order reduction: Y[j] ← t ⊙ Y[j]
+                let (lo, _hi) = blocks.range(j);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, Side::Left)?;
+            }
+        }
+
+        // --- step 3: dual root, or parent ---------------------------------
+        if let Some(dual) = role.dual {
+            if j < b {
+                let (lo, hi) = blocks.range(j);
+                let send = y.extract(lo, hi)?;
+                let t = comm.sendrecv(dual, send)?;
+                // lower root holds the rank-prefix [0, q): its own partial
+                // stands on the left of the dual's.
+                let side = if role.lower_root { Side::Right } else { Side::Left };
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, side)?;
+            }
+        } else if let Some(parent) = role.parent {
+            let up_active = j < b; // own partial block j flows up
+            let down_idx = j as isize - d as isize; // result block j − d down
+            let down_active = down_idx >= 0 && (down_idx as usize) < b;
+            if up_active || down_active {
+                let send = block_or_void(&y, blocks, if up_active { j as isize } else { -1 })?;
+                let r = comm.sendrecv(parent, send)?;
+                if down_active {
+                    let (lo, _hi) = blocks.range(down_idx as usize);
+                    y.write_at(lo, &r)?;
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{Span, SeqCheckOp, SumOp};
+
+    fn check_sum(p: usize, m: usize, block_elems: usize) {
+        let spec = RunSpec::new(p, m).block_elems(block_elems);
+        let expected = spec.expected_sum_i32();
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            assert_eq!(
+                buf.as_slice().unwrap(),
+                &expected[..],
+                "p={p} m={m} block={block_elems} rank={rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn correct_small_worlds() {
+        for p in 1..=10 {
+            check_sum(p, 17, 5);
+        }
+    }
+
+    #[test]
+    fn correct_perfect_forest() {
+        // p + 2 = 2^h sweet spots
+        for p in [2usize, 6, 14, 30] {
+            check_sum(p, 64, 8);
+        }
+    }
+
+    #[test]
+    fn correct_single_block() {
+        check_sum(7, 9, 100); // b = 1
+    }
+
+    #[test]
+    fn correct_block_eq_element() {
+        check_sum(5, 6, 1); // b = m: maximal pipelining
+    }
+
+    #[test]
+    fn correct_deep_pipeline_b_less_than_depth() {
+        // b small, trees deep: rounds where startup (j < d+1) skips edges
+        check_sum(30, 4, 2);
+    }
+
+    #[test]
+    fn zero_elements_is_noop() {
+        let spec = RunSpec::new(6, 0);
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+        for buf in report.results {
+            assert_eq!(buf.len(), 0);
+        }
+    }
+
+    #[test]
+    fn order_witness_noncommutative() {
+        // SeqCheckOp poisons any out-of-rank-order combination; surviving
+        // with Span::of(0, p-1) proves the post-order/dual-root reduction
+        // order is exactly rank order.
+        for p in [2usize, 3, 5, 8, 14, 23, 30] {
+            let m = 10;
+            let blocks = Blocks::by_count(m, 3);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
+                allreduce_dpdr(comm, x, &SeqCheckOp, &blocks)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phantom_runs_full_protocol() {
+        let spec = RunSpec::new(14, 1000).block_elems(100).phantom(true);
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::hydra()).unwrap();
+        assert!(report.max_vtime_us > 0.0);
+        for buf in report.results {
+            assert_eq!(buf.len(), 1000);
+            assert!(buf.is_phantom());
+        }
+    }
+
+    #[test]
+    fn phantom_and_real_same_virtual_time() {
+        let real = RunSpec::new(10, 500).block_elems(64);
+        let phant = real.phantom(true);
+        let t_real = run_allreduce_i32(AlgoKind::Dpdr, &real, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        let t_phant = run_allreduce_i32(AlgoKind::Dpdr, &phant, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        assert!((t_real - t_phant).abs() < 1e-9, "{t_real} vs {t_phant}");
+    }
+
+    #[test]
+    fn sum_various_block_counts_match() {
+        for b in [1usize, 2, 3, 5, 10, 50] {
+            let m = 50;
+            let blocks = Blocks::by_count(m, b);
+            let report = run_world::<i32, _, _>(9, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![comm.rank() as i32 + 1; m]);
+                allreduce_dpdr(comm, x, &SumOp, &blocks)
+            })
+            .unwrap();
+            let expected = (1..=9).sum::<i32>();
+            for buf in report.results {
+                assert!(buf.as_slice().unwrap().iter().all(|&v| v == expected));
+            }
+        }
+    }
+}

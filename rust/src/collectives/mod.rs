@@ -1,0 +1,153 @@
+//! The reduction-to-all algorithms: the paper's contribution
+//! ([`allreduce_dpdr`]) and every baseline of its evaluation, plus the
+//! two-tree and scan extensions it cites.
+//!
+//! All algorithms are written against the [`Comm`] trait, so the same code
+//! runs under real wall-clock timing and under the virtual-clock cluster
+//! simulation, with real or phantom payloads.
+
+pub mod dpdr;
+pub mod native_switch;
+pub mod pipetree;
+pub mod rabenseifner;
+pub mod recursive_doubling;
+pub mod reduce_bcast;
+pub mod ring;
+pub mod scan_dp;
+pub mod twotree;
+
+pub use dpdr::{allreduce_dpdr, allreduce_dpdr_single};
+pub use native_switch::allreduce_native_switch;
+pub use pipetree::allreduce_pipetree;
+pub use rabenseifner::allreduce_rabenseifner;
+pub use recursive_doubling::allreduce_recursive_doubling;
+pub use reduce_bcast::{allreduce_reduce_bcast, bcast_binomial, reduce_binomial};
+pub use ring::allreduce_ring;
+pub use scan_dp::scan_pipelined;
+pub use twotree::allreduce_twotree;
+
+use crate::buffer::DataBuf;
+use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
+use crate::error::Result;
+use crate::model::AlgoKind;
+use crate::ops::{Elem, ReduceOp, SumOp};
+use crate::pipeline::Blocks;
+use crate::util::XorShift64;
+
+/// Dispatch an allreduce by [`AlgoKind`].
+pub fn allreduce<E: Elem, O: ReduceOp<E>>(
+    algo: AlgoKind,
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    match algo {
+        AlgoKind::Dpdr => allreduce_dpdr(comm, x, op, blocks),
+        AlgoKind::DpdrSingle => allreduce_dpdr_single(comm, x, op, blocks),
+        AlgoKind::PipeTree => allreduce_pipetree(comm, x, op, blocks),
+        AlgoKind::ReduceBcast => allreduce_reduce_bcast(comm, x, op),
+        AlgoKind::NativeSwitch => allreduce_native_switch(comm, x, op),
+        AlgoKind::TwoTree => allreduce_twotree(comm, x, op, blocks),
+        AlgoKind::Ring => allreduce_ring(comm, x, op),
+        AlgoKind::RecursiveDoubling => allreduce_recursive_doubling(comm, x, op),
+        AlgoKind::Rabenseifner => allreduce_rabenseifner(comm, x, op),
+    }
+}
+
+/// Parameters of one collective run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSpec {
+    /// Number of ranks.
+    pub p: usize,
+    /// Elements per rank vector.
+    pub m: usize,
+    /// Pipeline block size in elements (the paper's b = 16000 default).
+    pub block_elems: usize,
+    /// Use phantom (size-only) payloads — for large-scale simulation.
+    pub phantom: bool,
+    /// Seed for deterministic input generation (real payloads).
+    pub seed: u64,
+}
+
+impl RunSpec {
+    pub fn new(p: usize, m: usize) -> RunSpec {
+        RunSpec {
+            p,
+            m,
+            block_elems: crate::pipeline::PAPER_BLOCK_ELEMS,
+            phantom: false,
+            seed: 0xD7D2,
+        }
+    }
+
+    pub fn block_elems(mut self, block_elems: usize) -> RunSpec {
+        self.block_elems = block_elems;
+        self
+    }
+
+    pub fn phantom(mut self, phantom: bool) -> RunSpec {
+        self.phantom = phantom;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RunSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// The block partition this spec induces.
+    pub fn blocks(&self) -> Result<Blocks> {
+        Blocks::by_size(self.m, self.block_elems)
+    }
+
+    /// Deterministic input vector of rank `r` (real mode).
+    pub fn input_i32(&self, rank: usize) -> Vec<i32> {
+        XorShift64::new(self.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9))
+            .small_i32_vec(self.m)
+    }
+
+    /// The oracle: the element-wise sum over all rank inputs.
+    pub fn expected_sum_i32(&self) -> Vec<i32> {
+        let mut acc = vec![0i32; self.m];
+        for r in 0..self.p {
+            for (a, v) in acc.iter_mut().zip(self.input_i32(r)) {
+                *a = a.wrapping_add(v);
+            }
+        }
+        acc
+    }
+}
+
+/// Run an i32 `MPI_SUM` allreduce world (the paper's Table 2 setting) and
+/// return per-rank results plus timing.
+pub fn run_allreduce_i32(
+    algo: AlgoKind,
+    spec: &RunSpec,
+    timing: Timing,
+) -> Result<WorldReport<DataBuf<i32>>> {
+    let spec = *spec;
+    let blocks = spec.blocks()?;
+    run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
+        let x = if spec.phantom {
+            DataBuf::phantom(spec.m)
+        } else {
+            DataBuf::real(spec.input_i32(comm.rank()))
+        };
+        allreduce(algo, comm, x, &SumOp, &blocks)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runspec_oracle_is_rank_count_sensitive() {
+        let s2 = RunSpec::new(2, 8);
+        let s3 = RunSpec::new(3, 8);
+        assert_ne!(s2.expected_sum_i32(), s3.expected_sum_i32());
+        assert_eq!(s2.input_i32(0), s2.input_i32(0)); // deterministic
+        assert_ne!(s2.input_i32(0), s2.input_i32(1)); // distinct per rank
+    }
+}

@@ -1,0 +1,106 @@
+//! The emulated "native `MPI_Allreduce`" (evaluation item 1).
+//!
+//! Vendor MPI libraries select among several allreduce algorithms by
+//! message size (and communicator size). The paper observed that Open MPI
+//! 4.0.5 on Hydra is the best choice at small **and** large counts but
+//! "excessively poor in a midrange of counts, where it is the worst
+//! implementation by a sometimes large factor", attributing it to "a bad
+//! switch of algorithm" (§2). We reproduce the *mechanism* — a count-based
+//! switcher like Open MPI's tuned-collectives decision function — and its
+//! signature: recursive doubling below 8 KiB (latency-optimal, wins the
+//! small counts), the ring above it (β-term `2βm·(p−1)/p`, the best large-
+//! count β-term, hence native wins big counts over the `3βm` dual-root
+//! algorithm), with the pathology emerging exactly where the ring's
+//! `2(p−1)·α` latency dominates: at p = 288 that is the flat ~0.6 ms
+//! plateau across Table 2's mid-range (2 500 … 25 000 elements), just like
+//! the ~1.1 ms plateau the paper measured.
+//!
+//! (Rabenseifner would also give a `2βm` β-term, but at p = 288 its
+//! non-power-of-two pre/post fold moves full vectors for 64 ranks — an
+//! extra `2βm` on their critical path — which is precisely why real
+//! libraries prefer the ring there; see `benches/twotree_ablation.rs`.)
+
+use super::recursive_doubling::allreduce_recursive_doubling;
+use super::ring::allreduce_ring;
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp};
+
+/// Payload-size threshold (bytes) of the switcher.
+pub const SMALL_MAX_BYTES: usize = 8 * 1024;
+
+/// Which branch the switcher takes for a given payload.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NativeBranch {
+    RecursiveDoubling,
+    Ring,
+}
+
+/// The branch selected for `m_bytes` of payload.
+pub fn native_branch(m_bytes: usize) -> NativeBranch {
+    if m_bytes <= SMALL_MAX_BYTES {
+        NativeBranch::RecursiveDoubling
+    } else {
+        NativeBranch::Ring
+    }
+}
+
+/// Count-switching allreduce, emulating a vendor `MPI_Allreduce`.
+pub fn allreduce_native_switch<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+) -> Result<DataBuf<E>> {
+    match native_branch(x.bytes()) {
+        NativeBranch::RecursiveDoubling => allreduce_recursive_doubling(comm, x, op),
+        NativeBranch::Ring => allreduce_ring(comm, x, op),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::Timing;
+    use crate::model::AlgoKind;
+
+    #[test]
+    fn branch_thresholds() {
+        assert_eq!(native_branch(0), NativeBranch::RecursiveDoubling);
+        assert_eq!(native_branch(8 * 1024), NativeBranch::RecursiveDoubling);
+        assert_eq!(native_branch(8 * 1024 + 1), NativeBranch::Ring);
+        assert_eq!(native_branch(100 << 20), NativeBranch::Ring);
+    }
+
+    #[test]
+    fn correct_across_branches() {
+        // m values that hit all three branches (i32 = 4 bytes)
+        for m in [16usize, 1_000, 10_000, 100_000, 300_000] {
+            let spec = RunSpec::new(6, m);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::NativeSwitch, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn midrange_pathology_in_model() {
+        // at p = 126, 2 500 elements (10 kB → ring branch, 2(p−1)α latency),
+        // native is much worse than plain reduce+bcast — the Table 2
+        // signature at the paper's count 2 500.
+        let spec = RunSpec::new(126, 2_500).phantom(true);
+        let t_native = run_allreduce_i32(AlgoKind::NativeSwitch, &spec, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        let t_rb = run_allreduce_i32(AlgoKind::ReduceBcast, &spec, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        assert!(
+            t_native > 1.5 * t_rb,
+            "native {t_native} should be pathological vs redbcast {t_rb}"
+        );
+    }
+}

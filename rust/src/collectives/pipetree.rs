@@ -1,0 +1,185 @@
+//! **User-Allreduce1**: pipelined reduce followed by pipelined broadcast on
+//! a single post-order binary tree (evaluation item 3 of the paper).
+//!
+//! Per §1.2, with blocks of `m/b` elements the cost is
+//! `2(2h + 2(b−1))(α + β·m/b)` — two *phases*, each 2 steps per block:
+//! within a phase, the parent-bound (resp. child-bound) transfer of the
+//! previous block overlaps the child-bound (resp. parent-bound) receive of
+//! the current one via the full-duplex [`Comm::sendrecv_pair`]. The
+//! algorithm does *not* overlap the two phases — that is precisely what
+//! the doubly-pipelined dual-root algorithm adds, buying `3βm` vs `4βm`.
+//!
+//! Reduce phase, node at depth `d`, round `j = 0 … b`:
+//! ```text
+//! S1: Send(acc[j−1], parent) ‖ Recv(t, child0);  acc[j] ← t ⊙ acc[j]
+//! S2:                          Recv(t, child1);  acc[j] ← t ⊙ acc[j]
+//! ```
+//! Broadcast phase, round `j = 0 … b`:
+//! ```text
+//! S1: Send(y[j−1], child0) ‖ Recv(y[j], parent)
+//! S2: Send(y[j−1], child1)
+//! ```
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+use crate::topo::PostOrderTree;
+
+/// Pipelined single-tree reduce + broadcast allreduce.
+pub fn allreduce_pipetree<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x;
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    let tree = PostOrderTree::new(0, p - 1)?;
+    let rank = comm.rank();
+    let parent = tree.parent(rank);
+    let [c0, c1] = tree.children(rank);
+    let b = blocks.count();
+
+    // --- phase 1: pipelined reduction toward the root (rank p−1) ---------
+    for j in 0..=b {
+        let up_active = j >= 1; // acc block j−1 goes up
+        let dn_active = j < b; // children's partial block j comes in
+        // S1: parent-send ‖ child0-recv (full duplex)
+        match (parent.filter(|_| up_active), c0.filter(|_| dn_active)) {
+            (Some(par), Some(ch)) => {
+                let (lo, hi) = blocks.range(j - 1);
+                let send = y.extract(lo, hi)?;
+                let t = comm.sendrecv_pair(par, send, ch)?;
+                let (lo_j, _) = blocks.range(j);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo_j, &t, op, Side::Left)?;
+            }
+            (Some(par), None) => {
+                let (lo, hi) = blocks.range(j - 1);
+                comm.send(par, y.extract(lo, hi)?)?;
+            }
+            (None, Some(ch)) => {
+                let t = comm.recv(ch)?;
+                let (lo_j, _) = blocks.range(j);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo_j, &t, op, Side::Left)?;
+            }
+            (None, None) => {}
+        }
+        // S2: child1-recv
+        if let Some(ch) = c1.filter(|_| dn_active) {
+            let t = comm.recv(ch)?;
+            let (lo_j, _) = blocks.range(j);
+            comm.charge_compute(t.bytes());
+            y.reduce_at(lo_j, &t, op, Side::Left)?;
+        }
+    }
+
+    // --- phase 2: pipelined broadcast from the root -----------------------
+    for j in 0..=b {
+        let dn_active = j < b; // final block j arrives from parent
+        let up_active = j >= 1; // final block j−1 goes to the children
+        // S1: child0-send ‖ parent-recv
+        match (c0.filter(|_| up_active), parent.filter(|_| dn_active)) {
+            (Some(ch), Some(par)) => {
+                let (lo, hi) = blocks.range(j - 1);
+                let send = y.extract(lo, hi)?;
+                let r = comm.sendrecv_pair(ch, send, par)?;
+                let (lo_j, _) = blocks.range(j);
+                y.write_at(lo_j, &r)?;
+            }
+            (Some(ch), None) => {
+                let (lo, hi) = blocks.range(j - 1);
+                comm.send(ch, y.extract(lo, hi)?)?;
+            }
+            (None, Some(par)) => {
+                let r = comm.recv(par)?;
+                let (lo_j, _) = blocks.range(j);
+                y.write_at(lo_j, &r)?;
+            }
+            (None, None) => {}
+        }
+        // S2: child1-send
+        if let Some(ch) = c1.filter(|_| up_active) {
+            let (lo, hi) = blocks.range(j - 1);
+            comm.send(ch, y.extract(lo, hi)?)?;
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{SeqCheckOp, Span};
+
+    fn check_sum(p: usize, m: usize, block_elems: usize) {
+        let spec = RunSpec::new(p, m).block_elems(block_elems);
+        let expected = spec.expected_sum_i32();
+        let report = run_allreduce_i32(AlgoKind::PipeTree, &spec, Timing::Real).unwrap();
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            assert_eq!(
+                buf.as_slice().unwrap(),
+                &expected[..],
+                "p={p} m={m} block={block_elems} rank={rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn correct_small_worlds() {
+        for p in 1..=10 {
+            check_sum(p, 17, 5);
+        }
+    }
+
+    #[test]
+    fn correct_various_blockings() {
+        for blk in [1usize, 3, 7, 64] {
+            check_sum(13, 40, blk);
+        }
+    }
+
+    #[test]
+    fn order_witness_noncommutative() {
+        for p in [2usize, 3, 7, 15, 24] {
+            let m = 8;
+            let blocks = Blocks::by_count(m, 4);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
+                allreduce_pipetree(comm, x, &SeqCheckOp, &blocks)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dpdr_beats_pipetree_in_model_at_large_m() {
+        // The headline comparison (Table 2 large counts): with the same
+        // block size, doubly-pipelined < pipelined reduce+bcast.
+        let spec = RunSpec::new(30, 200_000).block_elems(16_000).phantom(true);
+        let t_pipe = run_allreduce_i32(AlgoKind::PipeTree, &spec, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        let t_dpdr = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::hydra())
+            .unwrap()
+            .max_vtime_us;
+        assert!(
+            t_dpdr < t_pipe,
+            "dpdr {t_dpdr} us should beat pipetree {t_pipe} us"
+        );
+    }
+}

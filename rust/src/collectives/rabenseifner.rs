@@ -1,0 +1,207 @@
+//! Rabenseifner's allreduce: reduce-scatter by recursive vector halving,
+//! then allgather by recursive doubling — `2·⌈log2 p⌉·α + 2·((p−1)/p)·βm`.
+//! This is what good MPI libraries use for large messages, and the
+//! large-count branch of our emulated "native" `MPI_Allreduce`: its
+//! `2βm` β-term is why the paper's native MPI beats even the
+//! doubly-pipelined algorithm (`3βm`) at the largest counts (Table 2).
+//!
+//! Non-power-of-two `p` uses the same pre/post fold as recursive doubling.
+//! Segment bookkeeping is aligned to [`Blocks`] boundaries, so arbitrary
+//! `m` (including `m < p`) works; order is preserved the same way as in
+//! recursive doubling (aligned complementary intervals + `Left`/`Right`
+//! by partner position).
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+
+fn carrier(e: usize, rem: usize) -> usize {
+    if e < rem {
+        2 * e
+    } else {
+        e + rem
+    }
+}
+
+/// Element range `[lo, hi)` covered by segment indices `[slo, shi)`.
+fn elem_range(segs: &Blocks, slo: usize, shi: usize) -> (usize, usize) {
+    debug_assert!(slo < shi);
+    (segs.range(slo).0, segs.range(shi - 1).1)
+}
+
+/// Rabenseifner (reduce-scatter + allgather) allreduce.
+pub fn allreduce_rabenseifner<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x;
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    let rank = comm.rank();
+    let k = crate::util::log2_floor(p) as usize;
+    let pow = 1usize << k;
+    let rem = p - pow;
+
+    // pre-fold (as recursive doubling)
+    let eff: Option<usize> = if rank < 2 * rem {
+        if rank % 2 == 0 {
+            let t = comm.recv(rank + 1)?;
+            comm.charge_compute(t.bytes());
+            y.reduce_all(&t, op, Side::Right)?;
+            Some(rank / 2)
+        } else {
+            comm.send(rank - 1, y.clone())?;
+            None
+        }
+    } else {
+        Some(rank - rem)
+    };
+
+    if let Some(e) = eff {
+        let segs = Blocks::segments(y.len(), pow);
+
+        // --- reduce-scatter: recursive halving, LSB → MSB -----------------
+        // Partnering by the *lowest* bit first pairs adjacent effective
+        // ranks, so at every step the accumulated contribution covers the
+        // aligned contiguous interval [e & !(2bit−1), …) — this is what
+        // makes the whole algorithm order-preserving (unlike the textbook
+        // MSB-first halving, which combines rank e with e + p/2 first).
+        let (mut slo, mut shi) = (0usize, pow);
+        let mut levels: Vec<(usize, usize, usize)> = Vec::new(); // (bit, parent_lo, parent_hi)
+        let mut bit = 1usize;
+        while bit < pow {
+            let partner_e = e ^ bit;
+            let partner = carrier(partner_e, rem);
+            levels.push((bit, slo, shi));
+            let smid = slo + (shi - slo) / 2;
+            let keep_low = e & bit == 0;
+            let (keep, give) = if keep_low {
+                ((slo, smid), (smid, shi))
+            } else {
+                ((smid, shi), (slo, smid))
+            };
+            let (glo, ghi) = elem_range(&segs, give.0, give.1);
+            let send = y.extract(glo, ghi)?;
+            let got = comm.sendrecv(partner, send)?;
+            let (klo, _khi) = elem_range(&segs, keep.0, keep.1);
+            let side = if partner_e < e { Side::Left } else { Side::Right };
+            comm.charge_compute(got.bytes());
+            y.reduce_at(klo, &got, op, side)?;
+            (slo, shi) = keep;
+            bit <<= 1;
+        }
+        debug_assert_eq!(shi - slo, 1); // rank e owns one (bit-reversed) segment
+
+        // --- allgather: replay the halving in reverse, merging back -------
+        while let Some((bit, plo, phi)) = levels.pop() {
+            let partner_e = e ^ bit;
+            let partner = carrier(partner_e, rem);
+            let (mlo, mhi) = elem_range(&segs, slo, shi);
+            let send = y.extract(mlo, mhi)?;
+            let got = comm.sendrecv(partner, send)?;
+            // the partner owns the other half of the parent range
+            let pmid = plo + (phi - plo) / 2;
+            let (sib_lo, sib_hi) = if slo == plo { (pmid, phi) } else { (plo, pmid) };
+            let (wlo, _whi) = elem_range(&segs, sib_lo, sib_hi);
+            y.write_at(wlo, &got)?;
+            (slo, shi) = (plo, phi);
+        }
+    }
+
+    // post-fold
+    if rank < 2 * rem {
+        if rank % 2 == 0 {
+            comm.send(rank + 1, y.clone())?;
+        } else {
+            y = comm.recv(rank - 1)?;
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{SeqCheckOp, Span};
+
+    #[test]
+    fn correct_powers_of_two() {
+        for p in [1usize, 2, 4, 8, 16] {
+            let spec = RunSpec::new(p, 53);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::Rabenseifner, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_non_powers() {
+        for p in [3usize, 5, 6, 7, 9, 12, 19, 24] {
+            let spec = RunSpec::new(p, 53);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::Rabenseifner, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_vectors() {
+        // m < p: empty segments must flow as void blocks
+        for (p, m) in [(8usize, 3usize), (16, 1), (6, 2)] {
+            let spec = RunSpec::new(p, m);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::Rabenseifner, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn order_witness() {
+        for p in [2usize, 4, 6, 8, 11, 16] {
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); 16]);
+                allreduce_rabenseifner(comm, x, &SeqCheckOp)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_beta_term_is_2m() {
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        // α = 0: T ≈ 2·βm·(p−1)/p
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(0.0, 1e-9)),
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(16, 160_000).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::Rabenseifner, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let m_bytes = 160_000.0 * 4.0;
+        let predicted = 2.0 * m_bytes * 1e-9 * (15.0 / 16.0) * 1e6;
+        assert!(
+            (t - predicted).abs() / predicted < 0.05,
+            "t={t} predicted={predicted}"
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Recursive-doubling allreduce — the latency-optimal algorithm vendor
+//! libraries use for small messages (`⌈log2 p⌉·(α + βm)`), and the
+//! small-count branch of our emulated "native" `MPI_Allreduce`.
+//!
+//! Non-power-of-two `p` is handled by the standard pre/post fold: the first
+//! `2·rem` ranks pair up (`rem = p − 2^⌊log2 p⌋`), odd partners fold their
+//! vector into the even ones, the folded group of `2^K` *effective* ranks
+//! runs the butterfly, and results are copied back out.
+//!
+//! Order preservation: effective rank `e` covers the original rank interval
+//! `[2e, 2e+1]` (folded pair) or `[e + rem]`; these intervals are ascending
+//! and contiguous, and at every butterfly step the partner's interval is
+//! the complementary half of an aligned power-of-two window, so combining
+//! with `Left`/`Right` chosen by comparison keeps exact rank order.
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+
+/// Map an effective rank back to the original rank that carries it.
+fn carrier(e: usize, rem: usize) -> usize {
+    if e < rem {
+        2 * e
+    } else {
+        e + rem
+    }
+}
+
+/// Recursive-doubling allreduce.
+pub fn allreduce_recursive_doubling<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x;
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    let rank = comm.rank();
+    let k = crate::util::log2_floor(p) as usize;
+    let pow = 1usize << k;
+    let rem = p - pow;
+
+    // pre-fold: ranks [0, 2·rem) pair (2i, 2i+1); odd folds into even
+    let eff: Option<usize> = if rank < 2 * rem {
+        if rank % 2 == 0 {
+            let t = comm.recv(rank + 1)?;
+            comm.charge_compute(t.bytes());
+            y.reduce_all(&t, op, Side::Right)?; // partner is the next rank up
+            Some(rank / 2)
+        } else {
+            comm.send(rank - 1, y.clone())?;
+            None
+        }
+    } else {
+        Some(rank - rem)
+    };
+
+    // butterfly over the 2^K effective ranks
+    if let Some(e) = eff {
+        for bit in 0..k {
+            let partner_e = e ^ (1usize << bit);
+            let partner = carrier(partner_e, rem);
+            let t = comm.sendrecv(partner, y.clone())?;
+            let side = if partner_e < e { Side::Left } else { Side::Right };
+            comm.charge_compute(t.bytes());
+            y.reduce_all(&t, op, side)?;
+        }
+    }
+
+    // post-fold: evens hand the finished vector back to their odd partner
+    if rank < 2 * rem {
+        if rank % 2 == 0 {
+            comm.send(rank + 1, y.clone())?;
+        } else {
+            y = comm.recv(rank - 1)?;
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{SeqCheckOp, Span};
+    use crate::pipeline::Blocks;
+
+    #[test]
+    fn correct_powers_of_two() {
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            let spec = RunSpec::new(p, 19);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::RecursiveDoubling, &spec, Timing::Real)
+                .unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_non_powers() {
+        for p in [3usize, 5, 6, 7, 9, 11, 13, 20, 25] {
+            let spec = RunSpec::new(p, 19);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::RecursiveDoubling, &spec, Timing::Real)
+                .unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn order_witness_including_fold() {
+        for p in [2usize, 3, 6, 8, 10, 16, 21] {
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); 4]);
+                let blocks = Blocks::by_count(4, 1);
+                let _ = &blocks;
+                allreduce_recursive_doubling(comm, x, &SeqCheckOp)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_cost_logp() {
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(1e-6, 0.0)),
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(16, 100).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::RecursiveDoubling, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        assert!((t - 4.0).abs() < 1e-6, "t={t}"); // log2(16) · α
+    }
+}

@@ -1,0 +1,166 @@
+//! Non-pipelined `MPI_Reduce` + `MPI_Bcast` on binomial trees (evaluation
+//! item 2 of the paper) — the way an MPI library implements the two calls
+//! for mid-sized messages, and, per the paper (§2), the worst way to do a
+//! reduction-to-all for large counts: `2·⌈log2 p⌉·(α + βm)`, i.e. a β-term
+//! of `2·log2(p)·βm` with no pipelining at all.
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::topo::BinomialTree;
+
+/// Binomial-tree reduction of `y` onto `root`; other ranks' buffers hold
+/// partial garbage afterwards (as with `MPI_Reduce`).
+///
+/// Children are drained in increasing subtree-size order; each child's
+/// contribution covers the virtual-rank interval *above* the accumulator's,
+/// so `acc ← acc ⊙ t` keeps rank order (exact for `root == 0`; other roots
+/// rotate the order and need a commutative `op`, as in MPI practice).
+pub fn reduce_binomial<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    y: &mut DataBuf<E>,
+    op: &O,
+    root: usize,
+) -> Result<()> {
+    let p = comm.size();
+    if p == 1 || y.is_empty() {
+        return Ok(());
+    }
+    let tree = BinomialTree::new(p, root);
+    let rank = comm.rank();
+    for child in tree.children(rank) {
+        let t = comm.recv(child)?;
+        comm.charge_compute(t.bytes());
+        y.reduce_all(&t, op, Side::Right)?;
+    }
+    if let Some(parent) = tree.parent(rank) {
+        comm.send(parent, y.clone())?;
+    }
+    Ok(())
+}
+
+/// Binomial-tree broadcast of `root`'s buffer.
+pub fn bcast_binomial<E: Elem>(
+    comm: &mut impl Comm<E>,
+    y: &mut DataBuf<E>,
+    root: usize,
+) -> Result<()> {
+    let p = comm.size();
+    if p == 1 || y.is_empty() {
+        return Ok(());
+    }
+    let tree = BinomialTree::new(p, root);
+    let rank = comm.rank();
+    if let Some(parent) = tree.parent(rank) {
+        *y = comm.recv(parent)?;
+    }
+    // largest subtrees first, so they start early
+    for child in tree.children(rank).into_iter().rev() {
+        comm.send(child, y.clone())?;
+    }
+    Ok(())
+}
+
+/// `MPI_Reduce` to rank 0 followed by `MPI_Bcast` from rank 0.
+pub fn allreduce_reduce_bcast<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+) -> Result<DataBuf<E>> {
+    let mut y = x;
+    reduce_binomial(comm, &mut y, op, 0)?;
+    bcast_binomial(comm, &mut y, 0)?;
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{SeqCheckOp, Span, SumOp};
+
+    #[test]
+    fn correct_small_worlds() {
+        for p in 1..=12 {
+            let spec = RunSpec::new(p, 23);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::ReduceBcast, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_only_lands_on_root() {
+        let report = run_world::<i32, _, _>(7, Timing::Real, |comm| {
+            let mut y = DataBuf::real(vec![1i32; 5]);
+            reduce_binomial(comm, &mut y, &SumOp, 0)?;
+            Ok((comm.rank(), y))
+        })
+        .unwrap();
+        for (rank, buf) in report.results {
+            if rank == 0 {
+                assert!(buf.as_slice().unwrap().iter().all(|&v| v == 7));
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let report = run_world::<i32, _, _>(9, Timing::Real, |comm| {
+            let mut y = if comm.rank() == 4 {
+                DataBuf::real(vec![42i32; 3])
+            } else {
+                DataBuf::real(vec![0i32; 3])
+            };
+            bcast_binomial(comm, &mut y, 4)?;
+            Ok(y)
+        })
+        .unwrap();
+        for buf in report.results {
+            assert_eq!(buf.as_slice().unwrap(), &[42, 42, 42]);
+        }
+    }
+
+    #[test]
+    fn order_witness_root0() {
+        // root 0: binomial reduce is order-preserving
+        for p in [2usize, 5, 8, 13] {
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); 4]);
+                allreduce_reduce_bcast(comm, x, &SeqCheckOp)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_cost_is_2logp_alpha_beta_m() {
+        // p = 8, no pipelining: T = 2·3·(α + β·m·4B)
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(1e-6, 1e-9)),
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(8, 1000).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::ReduceBcast, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let predicted = 2.0 * 3.0 * (1.0 + 4000.0 * 1e-3); // µs
+        // the binomial tree critical path can be slightly shorter than the
+        // naive bound; allow 25%
+        assert!(
+            (t - predicted).abs() / predicted < 0.25,
+            "measured {t} vs predicted {predicted}"
+        );
+    }
+}

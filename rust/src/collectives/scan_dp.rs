@@ -1,0 +1,161 @@
+//! Pipelined binary-tree prefix scan (inclusive `MPI_Scan`), after Sanders
+//! & Träff [5] — the paper's Algorithm 1 "follows the same idea as" this
+//! doubly-pipelined scan, so we ship it as the natural extension example.
+//!
+//! On the post-order tree, the subtree of node `i` covers the consecutive
+//! ranks `[i′, i]`, so the inclusive prefix of rank `i` is
+//! `prefix-excl(i′) ⊙ (subtree sum of i)`:
+//!
+//! * **up phase** (pipelined): node `i` computes, per block, the partial
+//!   sums `t1 ⊙ t0 ⊙ x_i` of its subtree and streams them to its parent,
+//!   retaining the second child's contribution `t1` per block;
+//! * **down phase** (pipelined): node `i` receives `P = prefix-excl(i′)`
+//!   from its parent (void/identity at the root), forwards `P` to the
+//!   second child (same `i′`), forwards `P ⊙ t1` to the first child (whose
+//!   range starts at `i″ + 1`), and finishes its own blocks as `P ⊙ U`
+//!   where `U` is the up-phase subtree sum.
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+use crate::topo::PostOrderTree;
+
+/// Inclusive prefix scan: rank `r` ends with `x_0 ⊙ … ⊙ x_r`.
+pub fn scan_pipelined<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x; // becomes U (subtree sums), then the result
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    let tree = PostOrderTree::new(0, p - 1)?;
+    let rank = comm.rank();
+    let parent = tree.parent(rank);
+    let [c0, c1] = tree.children(rank);
+    let b = blocks.count();
+
+    // ---- up phase: per block, U ← t1 ⊙ t0 ⊙ x; keep t1 ------------------
+    let mut kept_t1: Vec<DataBuf<E>> = Vec::with_capacity(if c1.is_some() { b } else { 0 });
+    for j in 0..b {
+        if let Some(ch) = c0 {
+            let t0 = comm.recv(ch)?;
+            let (lo, _) = blocks.range(j);
+            comm.charge_compute(t0.bytes());
+            y.reduce_at(lo, &t0, op, Side::Left)?;
+        }
+        if let Some(ch) = c1 {
+            let t1 = comm.recv(ch)?;
+            let (lo, _) = blocks.range(j);
+            comm.charge_compute(t1.bytes());
+            y.reduce_at(lo, &t1, op, Side::Left)?;
+            kept_t1.push(t1);
+        }
+        if let Some(par) = parent {
+            let (lo, hi) = blocks.range(j);
+            comm.send(par, y.extract(lo, hi)?)?;
+        }
+    }
+
+    // ---- down phase: receive prefix-excl, forward, finish ---------------
+    for j in 0..b {
+        let (lo, hi) = blocks.range(j);
+        // P = prefix of everything before my subtree (None at the root)
+        let prefix: Option<DataBuf<E>> = match parent {
+            Some(par) => {
+                let pfx = comm.recv(par)?;
+                if pfx.is_empty() {
+                    None // the root sent a void marker: nothing before us
+                } else {
+                    Some(pfx)
+                }
+            }
+            None => None,
+        };
+        // second child's range starts where mine does: forward P as-is
+        if let Some(ch) = c1 {
+            match &prefix {
+                Some(pfx) => comm.send(ch, pfx.clone())?,
+                None => comm.send(ch, y.empty_like())?,
+            }
+        }
+        // first child's range starts after the second child's: P ⊙ t1
+        if let Some(ch) = c0 {
+            let mut fwd = match &prefix {
+                Some(pfx) => pfx.clone(),
+                None => y.empty_like(),
+            };
+            if let Some(t1) = kept_t1.get(j) {
+                if fwd.is_empty() {
+                    fwd = t1.clone();
+                } else {
+                    comm.charge_compute(t1.bytes());
+                    fwd.reduce_all(t1, op, Side::Right)?;
+                }
+            }
+            comm.send(ch, fwd)?;
+        }
+        // my own result: P ⊙ U
+        if let Some(pfx) = prefix {
+            comm.charge_compute(pfx.bytes());
+            y.reduce_at(lo, &pfx, op, Side::Left)?;
+        }
+        let _ = hi;
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{run_world, Timing};
+    use crate::ops::{SeqCheckOp, Span, SumOp};
+    use crate::util::XorShift64;
+
+    #[test]
+    fn inclusive_scan_matches_oracle() {
+        for p in 1..=14usize {
+            let m = 13;
+            let blocks = Blocks::by_count(m, 4);
+            let inputs: Vec<Vec<i32>> = (0..p)
+                .map(|r| XorShift64::new(77 + r as u64).small_i32_vec(m))
+                .collect();
+            let inputs_for_world = inputs.clone();
+            let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(inputs_for_world[comm.rank()].clone());
+                scan_pipelined(comm, x, &SumOp, &blocks)
+            })
+            .unwrap();
+            let mut acc = vec![0i32; m];
+            for (r, buf) in report.results.into_iter().enumerate() {
+                for (a, v) in acc.iter_mut().zip(&inputs[r]) {
+                    *a = a.wrapping_add(*v);
+                }
+                assert_eq!(buf.as_slice().unwrap(), &acc[..], "p={p} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn order_witness() {
+        for p in [2usize, 5, 9, 16] {
+            let m = 6;
+            let blocks = Blocks::by_count(m, 2);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
+                scan_pipelined(comm, x, &SeqCheckOp, &blocks)
+            })
+            .unwrap();
+            for (r, buf) in report.results.into_iter().enumerate() {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, r as u32), "p={p} r={r}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,452 @@
+//! Two-tree allreduce (Sanders, Speck, Träff [4]) — the full-bandwidth
+//! `O(log p + √(m log p)) + 2βm` scheme the paper cites in §1.2 as the
+//! best-known pipelined binary-tree algorithm. Our A5 ablation compares it
+//! against the dual-root algorithm (`3βm`) and the single tree (`4βm`).
+//!
+//! Structure: two in-order binary trees T1/T2 over ranks `[0, p−2]` such
+//! that (almost) no rank is interior in both ([`TwoTree`]); rank `p−1` is
+//! the root *driver*. Even-indexed pipeline blocks travel through T1,
+//! odd-indexed through T2.
+//!
+//! **Scheduling.** The original algorithm time-slots the two trees with an
+//! explicit edge coloring. Our message-passing substrate is asynchronous,
+//! so we need a schedule whose *blocking receives never form a cross-tree
+//! cycle* (the two parent relations together are cyclic: X can be P's
+//! T2-parent while P is X's T1-parent — naive lockstep supersteps deadlock
+//! there; see the `interior_cycle_shape` regression test):
+//!
+//! * **Reduce** (per superstep `s`; a rank is interior in tree `Ti`, leaf
+//!   in `Tl`):
+//!   `op1: Send(raw Tl block s, Tl.parent) ‖ Recv(t, Ti.c0)`,
+//!   `op2: Send(reduced Ti block s−1, Ti.parent) ‖ Recv(t, Ti.c1)`.
+//!   Every send is posted before its op blocks, and blocking receives wait
+//!   only on the rank's own interior-tree *children* — dependencies
+//!   strictly descend one tree, grounding out at leaves.
+//! * **Broadcast** (per *block*, eager): on receiving final block `g` from
+//!   the `tree(g)` parent, a rank immediately forwards it
+//!   (`Send(c1, g)`, then `Send(c0, g) ‖ Recv(block g+1)`), so a block's
+//!   dependency chain lives entirely inside its own tree's ancestor path.
+//!
+//! The reduce phase runs at ~1 port-slot per block and the broadcast at
+//! ~1.5 (the deadlock-free pairing gives up one overlap the coloring would
+//! exploit), so the measured β-term is ≈ 2.5βm — between the paper's ideal
+//! `2βm` and the dual-root `3βm`, which is exactly what A5 reports.
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+use crate::topo::twotree::{Half, TwoTree};
+
+/// Per-tree view of the block sequence: tree T1 carries global blocks
+/// `0, 2, 4, …`, tree T2 carries `1, 3, 5, …`.
+#[derive(Clone, Copy)]
+struct TreeBlocks {
+    offset: usize, // 0 for T1, 1 for T2
+    count: usize,  // number of blocks this tree carries
+}
+
+impl TreeBlocks {
+    fn new(half: Half, total: usize) -> TreeBlocks {
+        match half {
+            Half::T1 => TreeBlocks {
+                offset: 0,
+                count: (total + 1) / 2,
+            },
+            Half::T2 => TreeBlocks {
+                offset: 1,
+                count: total / 2,
+            },
+        }
+    }
+
+    /// Global block index of this tree's `s`-th block.
+    fn global(&self, s: usize) -> usize {
+        self.offset + 2 * s
+    }
+}
+
+/// The tree a global block index travels through.
+fn half_of(g: usize) -> Half {
+    if g % 2 == 0 {
+        Half::T1
+    } else {
+        Half::T2
+    }
+}
+
+/// Extract the global block `g` of `y` (void if out of range).
+fn block<E: Elem>(y: &DataBuf<E>, blocks: &Blocks, g: usize) -> Result<DataBuf<E>> {
+    if g >= blocks.count() {
+        return Ok(y.empty_like());
+    }
+    let (lo, hi) = blocks.range(g);
+    y.extract(lo, hi)
+}
+
+struct TreeCtx {
+    parent: usize,
+    children: [Option<usize>; 2],
+    tb: TreeBlocks,
+}
+
+impl TreeCtx {
+    fn new(tt: &TwoTree, half: Half, rank: usize, total_blocks: usize) -> TreeCtx {
+        let role = tt.role(half, rank);
+        TreeCtx {
+            parent: role.parent,
+            children: role.children,
+            tb: TreeBlocks::new(half, total_blocks),
+        }
+    }
+
+    fn is_leaf(&self) -> bool {
+        self.children == [None, None]
+    }
+}
+
+/// Reduce-phase pipeline of a rank that is interior in exactly one tree
+/// (`ti`), leaf in the other.
+///
+/// Epoch `k` handles the interior tree's `k`-th block `g_k`:
+///
+/// ```text
+/// op_a: Send(reduced g_{k−1}, ti.parent) ‖ Recv(t, ti.c0);  combine Left
+/// op_b: Send(next raw leaf-tree block, tl.parent) ‖ Recv(t, ti.c1); Right
+/// ```
+///
+/// Deadlock-freedom: a rank's blocking receives wait only for its
+/// interior-tree children's contributions of block `g_k`; an interior
+/// child posts that in *its* epoch `k+1` op_a (which only waits on the
+/// same tree, one level deeper), and a leaf child posts its raw block as
+/// an op_b rider — rides are always posted before their op blocks, and
+/// the ridden raw block for tree-block `g` is posted during an epoch
+/// handling a block `< g` of the *other* tree. Every dependency therefore
+/// either descends one tree at equal block index or strictly decreases the
+/// block index, grounding out at block 0 — no cross-tree cycle is possible
+/// (lockstep superstep schedules deadlock here; see the p = 11 cycle in
+/// the module history and the `deep_world_regression` test).
+fn reduce_interior<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    y: &mut DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    ti: &TreeCtx,
+    tl: &TreeCtx,
+) -> Result<()> {
+    let ci = ti.tb.count;
+    let cl = tl.tb.count;
+    // Leaf-raw sends have no data dependency (they are the rank's own
+    // input), so we give them a W-epoch head start. Without it, a leaf
+    // parent's epoch-k receive waits on a raw posted at the *sender's*
+    // epoch k — a zero-slack cross-tree dependency whose timestamp chains
+    // cascade across O(p) ranks per epoch and inflate the virtual time to
+    // Θ(p·βm). With W ≥ 2 every cross-tree hop points W epochs into the
+    // past and chains cannot accumulate. Costs W small early sends.
+    const W: usize = 32;
+    let mut leaf_sent = 0usize; // leaf-tree blocks posted so far
+    while leaf_sent < cl.min(W) {
+        let g = tl.tb.global(leaf_sent);
+        leaf_sent += 1;
+        comm.send(tl.parent, block(y, blocks, g)?)?;
+    }
+    for k in 0..=ci {
+        let g_k = ti.tb.global(k.min(ci.saturating_sub(1)));
+        let dn_active = k < ci;
+        // op_a: parent send of the previous reduced block ‖ c0 recv
+        let up = k >= 1;
+        let c0 = ti.children[0].filter(|_| dn_active);
+        match (up, c0) {
+            (true, Some(c)) => {
+                let send = block(y, blocks, ti.tb.global(k - 1))?;
+                let t = comm.sendrecv_pair(ti.parent, send, c)?;
+                let (lo, _) = blocks.range(g_k);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, Side::Left)?;
+            }
+            (true, None) => comm.send(ti.parent, block(y, blocks, ti.tb.global(k - 1))?)?,
+            (false, Some(c)) => {
+                let t = comm.recv(c)?;
+                let (lo, _) = blocks.range(g_k);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, Side::Left)?;
+            }
+            (false, None) => {}
+        }
+        // op_b: next leaf-tree raw block rides along ‖ c1 recv
+        let ride = if leaf_sent < cl && tl.tb.global(leaf_sent) <= g_k + 1 + 2 * W {
+            let g = tl.tb.global(leaf_sent);
+            leaf_sent += 1;
+            Some(block(y, blocks, g)?)
+        } else {
+            None
+        };
+        let c1 = ti.children[1].filter(|_| dn_active);
+        match (ride, c1) {
+            (Some(raw), Some(c)) => {
+                let t = comm.sendrecv_pair(tl.parent, raw, c)?;
+                let (lo, _) = blocks.range(g_k);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, Side::Right)?;
+            }
+            (Some(raw), None) => comm.send(tl.parent, raw)?,
+            (None, Some(c)) => {
+                let t = comm.recv(c)?;
+                let (lo, _) = blocks.range(g_k);
+                comm.charge_compute(t.bytes());
+                y.reduce_at(lo, &t, op, Side::Right)?;
+            }
+            (None, None) => {}
+        }
+    }
+    // flush leaf-tree raw blocks the epochs did not cover (small b)
+    while leaf_sent < cl {
+        let g = tl.tb.global(leaf_sent);
+        leaf_sent += 1;
+        comm.send(tl.parent, block(y, blocks, g)?)?;
+    }
+    Ok(())
+}
+
+/// Two-tree allreduce.
+pub fn allreduce_twotree<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x;
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    if p == 2 {
+        // degenerate: a single exchange per block (both trees are rank 0)
+        let t = comm.sendrecv(1 - comm.rank(), y.clone())?;
+        let side = if comm.rank() == 0 { Side::Right } else { Side::Left };
+        comm.charge_compute(t.bytes());
+        y.reduce_all(&t, op, side)?;
+        return Ok(y);
+    }
+    let tt = TwoTree::new(p)?;
+    let rank = comm.rank();
+    let b = blocks.count();
+    let tb1 = TreeBlocks::new(Half::T1, b);
+    let tb2 = TreeBlocks::new(Half::T2, b);
+    let supersteps = tb1.count.max(tb2.count);
+
+    let _ = (tb1, tb2, supersteps);
+    if rank == tt.driver() {
+        // ---- driver: drain both roots (reduce), then feed them (bcast) --
+        for g in 0..b {
+            let t = comm.recv(tt.root(half_of(g)))?;
+            let (lo, _) = blocks.range(g);
+            comm.charge_compute(t.bytes());
+            // incoming covers ranks [0, p−2]; the driver is rank p−1
+            y.reduce_at(lo, &t, op, Side::Left)?;
+        }
+        for g in 0..b {
+            comm.send(tt.root(half_of(g)), block(&y, blocks, g)?)?;
+        }
+        return Ok(y);
+    }
+
+    let t1 = TreeCtx::new(&tt, Half::T1, rank, b);
+    let t2 = TreeCtx::new(&tt, Half::T2, rank, b);
+
+    // ---- reduce phase -----------------------------------------------------
+    match (t1.is_leaf(), t2.is_leaf()) {
+        (false, true) => reduce_interior(comm, &mut y, op, blocks, &t1, &t2)?,
+        (true, false) => reduce_interior(comm, &mut y, op, blocks, &t2, &t1)?,
+        (true, true) => {
+            // leaf in both trees: raw posts only, never blocks
+            for g in 0..b {
+                let parent = match half_of(g) {
+                    Half::T1 => t1.parent,
+                    Half::T2 => t2.parent,
+                };
+                comm.send(parent, block(&y, blocks, g)?)?;
+            }
+        }
+        (false, false) => unreachable!(
+            "two-tree construction guarantees interior-disjointness"
+        ),
+    }
+
+    // ---- broadcast phase (tree-decoupled streaming) -----------------------
+    // A rank streams its *interior* tree: receive block k from the interior
+    // parent, forward to the children — c0's copy rides the receive of
+    // block k+1, c1's copy rides the receive of one of the rank's own
+    // *leaf-tree* blocks. Blocking receives therefore only ever wait on a
+    // parent (interior stream) or on a message whose producers are strictly
+    // tree-ancestors (leaf stream): no dependency ever re-enters the
+    // rank's own subtree, so there are no cycles AND no cross-tree rate
+    // coupling — an earlier per-global-block serial loop was deadlock-free
+    // but let each rank's interior forwarding be gated by its leaf-tree
+    // receipts, throttling the whole stream to Θ(log p · βm).
+    match (t1.is_leaf(), t2.is_leaf()) {
+        (false, true) | (true, false) => {
+            let (ti, tl) = if !t1.is_leaf() { (&t1, &t2) } else { (&t2, &t1) };
+            let (ci, cl) = (ti.tb.count, tl.tb.count);
+            let mut leaf_got = 0usize;
+            if ci > 0 {
+                let first = comm.recv(ti.parent)?;
+                let (lo, _) = blocks.range(ti.tb.global(0));
+                y.write_at(lo, &first)?;
+            }
+            for k in 0..ci {
+                let g = ti.tb.global(k);
+                // op1: forward to c0 ‖ receive the next interior block
+                match (ti.children[0], k + 1 < ci) {
+                    (Some(c), true) => {
+                        let r = comm.sendrecv_pair(c, block(&y, blocks, g)?, ti.parent)?;
+                        let (lo, _) = blocks.range(ti.tb.global(k + 1));
+                        y.write_at(lo, &r)?;
+                    }
+                    (Some(c), false) => comm.send(c, block(&y, blocks, g)?)?,
+                    (None, true) => {
+                        let r = comm.recv(ti.parent)?;
+                        let (lo, _) = blocks.range(ti.tb.global(k + 1));
+                        y.write_at(lo, &r)?;
+                    }
+                    (None, false) => {}
+                }
+                // op2: forward to c1 ‖ receive one leaf-tree block.
+                // The leaf stream is consumed LAG epochs behind the
+                // interior stream: with zero lag, a chain of leaf-parent
+                // dependencies can re-enter this rank's own subtree at the
+                // same epoch and deadlock (observed at p = 17); every hop
+                // of a lagged chain moves ≥ LAG epochs into the past, so
+                // chains ground out in the prologue.
+                const LAG: usize = 8;
+                let leaf_due = leaf_got < cl && leaf_got + LAG <= k;
+                match (ti.children[1], leaf_due) {
+                    (Some(c), true) => {
+                        let r = comm.sendrecv_pair(c, block(&y, blocks, g)?, tl.parent)?;
+                        let (lo, _) = blocks.range(tl.tb.global(leaf_got));
+                        y.write_at(lo, &r)?;
+                        leaf_got += 1;
+                    }
+                    (Some(c), false) => comm.send(c, block(&y, blocks, g)?)?,
+                    (None, true) => {
+                        let r = comm.recv(tl.parent)?;
+                        let (lo, _) = blocks.range(tl.tb.global(leaf_got));
+                        y.write_at(lo, &r)?;
+                        leaf_got += 1;
+                    }
+                    (None, false) => {}
+                }
+            }
+            // drain leaf-tree blocks not covered by op2 rides
+            while leaf_got < cl {
+                let r = comm.recv(tl.parent)?;
+                let (lo, _) = blocks.range(tl.tb.global(leaf_got));
+                y.write_at(lo, &r)?;
+                leaf_got += 1;
+            }
+        }
+        (true, true) => {
+            // leaf in both trees: pure sink; each parent's stream arrives
+            // in its own order
+            for t in [&t1, &t2] {
+                for k in 0..t.tb.count {
+                    let r = comm.recv(t.parent)?;
+                    let (lo, _) = blocks.range(t.tb.global(k));
+                    y.write_at(lo, &r)?;
+                }
+            }
+        }
+        (false, false) => unreachable!(),
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::AlgoKind;
+    use crate::ops::{SeqCheckOp, Span};
+
+    fn check_sum(p: usize, m: usize, block_elems: usize) {
+        let spec = RunSpec::new(p, m).block_elems(block_elems);
+        let expected = spec.expected_sum_i32();
+        let report = run_allreduce_i32(AlgoKind::TwoTree, &spec, Timing::Real).unwrap();
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            assert_eq!(
+                buf.as_slice().unwrap(),
+                &expected[..],
+                "p={p} m={m} blk={block_elems} rank={rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn correct_small_worlds() {
+        for p in 1..=12 {
+            check_sum(p, 24, 6);
+        }
+    }
+
+    #[test]
+    fn interior_cycle_shape() {
+        // p = 5 contains the mutual-parent shape (a rank that is another's
+        // T1-parent while being its T2-child); a lockstepped schedule
+        // deadlocks here — regression guard for the eager schedule.
+        check_sum(5, 40, 4);
+        check_sum(5, 40, 40);
+    }
+
+    #[test]
+    fn correct_larger_and_odd_blockings() {
+        check_sum(17, 55, 7);
+        check_sum(24, 100, 9);
+        check_sum(31, 64, 64); // single block → all through T1
+    }
+
+    #[test]
+    fn order_witness_noncommutative() {
+        for p in [3usize, 4, 5, 9, 14, 21] {
+            let m = 12;
+            let blocks = Blocks::by_count(m, 4);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
+                allreduce_twotree(comm, x, &SeqCheckOp, &blocks)
+            })
+            .unwrap();
+            for buf in report.results {
+                for sp in buf.as_slice().unwrap() {
+                    assert_eq!(*sp, Span::of(0, p as u32 - 1), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beta_term_between_2m_and_3m() {
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        // α = 0, pure bandwidth: two-tree ≈ 2.5βm (see module docs), well
+        // under pipetree's ≈ 4βm.
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(0.0, 1e-9)),
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(33, 320_000).block_elems(1_000).phantom(true);
+        let t_tt = run_allreduce_i32(AlgoKind::TwoTree, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let t_pt = run_allreduce_i32(AlgoKind::PipeTree, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let m_bytes = 320_000.0 * 4.0;
+        let beta_m = m_bytes * 1e-9 * 1e6;
+        assert!(
+            t_tt < 3.0 * beta_m,
+            "two-tree {t_tt} should be under 3βm = {}",
+            3.0 * beta_m
+        );
+        assert!(t_tt < 0.8 * t_pt, "two-tree {t_tt} vs pipetree {t_pt}");
+    }
+}

@@ -1,0 +1,116 @@
+//! A reusable barrier that additionally computes the maximum of a value
+//! contributed by each participant — used to advance all virtual clocks to
+//! the global maximum at an `MPI_Barrier` and by the harness to collect the
+//! slowest-rank completion time.
+
+use std::sync::{Condvar, Mutex};
+
+struct Inner {
+    count: usize,
+    generation: u64,
+    max: f64,
+    result: f64,
+}
+
+/// A counting barrier over `n` threads that reduces `max` over the values
+/// passed to [`VBarrier::wait`].
+pub struct VBarrier {
+    n: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl VBarrier {
+    pub fn new(n: usize) -> VBarrier {
+        assert!(n >= 1);
+        VBarrier {
+            n,
+            inner: Mutex::new(Inner {
+                count: 0,
+                generation: 0,
+                max: f64::NEG_INFINITY,
+                result: 0.0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` participants have called `wait`; returns the
+    /// maximum of all contributed values.
+    ///
+    /// Safe for repeated use: a thread cannot enter generation `g+1` before
+    /// returning from generation `g`, so the published result is stable
+    /// until everyone has read it.
+    pub fn wait(&self, value: f64) -> f64 {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.generation;
+        inner.max = inner.max.max(value);
+        inner.count += 1;
+        if inner.count == self.n {
+            inner.result = inner.max;
+            inner.max = f64::NEG_INFINITY;
+            inner.count = 0;
+            inner.generation += 1;
+            self.cv.notify_all();
+            inner.result
+        } else {
+            while inner.generation == gen {
+                inner = self.cv.wait(inner).unwrap();
+            }
+            inner.result
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn single_thread() {
+        let b = VBarrier::new(1);
+        assert_eq!(b.wait(3.5), 3.5);
+        assert_eq!(b.wait(1.0), 1.0); // reusable, max reset
+    }
+
+    #[test]
+    fn computes_max_across_threads() {
+        let n = 8;
+        let b = Arc::new(VBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                thread::spawn(move || b.wait(i as f64))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), (n - 1) as f64);
+        }
+    }
+
+    #[test]
+    fn repeated_generations() {
+        let n = 4;
+        let b = Arc::new(VBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    let mut results = Vec::new();
+                    for round in 0..100u32 {
+                        results.push(b.wait((round * 10 + i as u32) as f64));
+                    }
+                    results
+                })
+            })
+            .collect();
+        for h in handles {
+            let results = h.join().unwrap();
+            for (round, r) in results.into_iter().enumerate() {
+                assert_eq!(r, (round * 10 + n - 1) as f64);
+            }
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Per-rank traffic and work counters.
+
+/// Counters accumulated by one rank across a collective run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RankMetrics {
+    /// Number of point-to-point operations (a sendrecv counts once).
+    pub exchanges: u64,
+    /// Number of those that were bidirectional sendrecvs.
+    pub sendrecvs: u64,
+    /// Payload bytes sent (void blocks contribute 0).
+    pub bytes_sent: u64,
+    /// Payload bytes received.
+    pub bytes_recv: u64,
+    /// Bytes fed through ⊙ reductions (γ-charged work).
+    pub reduce_bytes: u64,
+    /// Barrier participations.
+    pub barriers: u64,
+}
+
+impl RankMetrics {
+    /// Merge another rank's counters (for world-level aggregation).
+    pub fn merge(&mut self, other: &RankMetrics) {
+        self.exchanges += other.exchanges;
+        self.sendrecvs += other.sendrecvs;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
+        self.reduce_bytes += other.reduce_bytes;
+        self.barriers += other.barriers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RankMetrics {
+            exchanges: 1,
+            sendrecvs: 1,
+            bytes_sent: 10,
+            bytes_recv: 20,
+            reduce_bytes: 5,
+            barriers: 2,
+        };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.exchanges, 2);
+        assert_eq!(a.bytes_sent, 20);
+        assert_eq!(a.bytes_recv, 40);
+        assert_eq!(a.reduce_bytes, 10);
+        assert_eq!(a.barriers, 4);
+    }
+}

@@ -1,0 +1,87 @@
+//! The message-passing substrate the collectives run on.
+//!
+//! Semantics follow the paper's implementation sketch (§1.3): blocking
+//! point-to-point `send`/`recv`, the bidirectional (telephone-model)
+//! [`Comm::sendrecv`] analogous to `MPI_Sendrecv`, variable-length messages
+//! including zero-element "void" blocks, and a barrier (`MPI_Barrier`,
+//! which the mpicroscope-style harness uses to synchronize measurements).
+//!
+//! Every rank runs as an OS thread. Two timing modes share the same
+//! transport ([`Timing`]):
+//!
+//! * **Real** — wall-clock timing; used for in-process runs and unit tests.
+//! * **Virtual** — each rank carries a *virtual clock* charged under the
+//!   paper's linear cost model: a bidirectional exchange of `n` bytes
+//!   between ranks whose clocks read `t_a`, `t_b` completes on both sides
+//!   at `max(t_a, t_b) + α + β·n` (with `n` the larger of the two payload
+//!   sizes), and each local ⊙ reduction adds `γ·n`. Message timestamps make
+//!   both endpoints compute identical completion times without any global
+//!   coordinator, so the simulation itself runs at full parallelism.
+//!
+//! This is the substitution for the paper's 36×32 OmniPath cluster: the
+//! protocol (every message, every block boundary, every round) is executed
+//! for real; only *time* is modelled — and the model is exactly the one the
+//! paper's analysis (§1.2) is stated in.
+
+pub mod barrier;
+pub mod metrics;
+pub mod thread;
+pub mod world;
+
+pub use metrics::RankMetrics;
+pub use thread::{ThreadComm, Timing};
+pub use world::{run_world, WorldReport};
+
+use crate::buffer::DataBuf;
+use crate::error::Result;
+use crate::ops::Elem;
+
+/// The communicator interface the collectives are written against.
+pub trait Comm<E: Elem> {
+    /// This rank's id in `[0, size)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks.
+    fn size(&self) -> usize;
+
+    /// Bidirectional exchange with `peer` (`MPI_Sendrecv`): sends `send`,
+    /// returns the block received from `peer`'s matching call. Either
+    /// direction may be a zero-element void block.
+    fn sendrecv(&mut self, peer: usize, send: DataBuf<E>) -> Result<DataBuf<E>>;
+
+    /// Full `MPI_Sendrecv` semantics with *distinct* partners: send `send`
+    /// to `send_to` while receiving from `recv_from`, in one full-duplex
+    /// step. `sendrecv(p, d)` is the special case `send_to == recv_from`.
+    /// The pipelined single-tree baseline (User-Allreduce1) needs this to
+    /// overlap its parent-bound send with the child-bound receive and reach
+    /// the paper's `2(2h + 2(b−1))` step count.
+    fn sendrecv_pair(
+        &mut self,
+        send_to: usize,
+        send: DataBuf<E>,
+        recv_from: usize,
+    ) -> Result<DataBuf<E>>;
+
+    /// One-directional blocking send.
+    fn send(&mut self, peer: usize, data: DataBuf<E>) -> Result<()>;
+
+    /// One-directional blocking receive from `peer`.
+    fn recv(&mut self, peer: usize) -> Result<DataBuf<E>>;
+
+    /// Synchronize all ranks; under virtual timing all clocks advance to
+    /// the global maximum.
+    fn barrier(&mut self) -> Result<()>;
+
+    /// Charge local reduction work over `bytes` bytes (γ-term). No-op under
+    /// real timing (the actual work takes the actual time).
+    fn charge_compute(&mut self, bytes: usize);
+
+    /// Current time in microseconds (virtual clock or wall clock).
+    fn time_us(&self) -> f64;
+
+    /// Reset the clock/stopwatch to zero (harness use, after a barrier).
+    fn reset_time(&mut self);
+
+    /// Per-rank traffic counters.
+    fn metrics(&self) -> &RankMetrics;
+}

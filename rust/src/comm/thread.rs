@@ -1,0 +1,450 @@
+//! The thread-backed communicator endpoint.
+//!
+//! Each rank owns a `ThreadComm`. Point-to-point channels (`std::sync::mpsc`,
+//! one per directed pair) are created lazily in a shared registry — the
+//! collectives only ever use O(p) of the p² possible edges. Channels are
+//! unbounded, so `send` never blocks and the blocking structure of the
+//! algorithms (which the paper designed for `MPI_Sendrecv`) cannot deadlock
+//! as long as every posted receive is eventually matched.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::barrier::VBarrier;
+use super::metrics::RankMetrics;
+use super::Comm;
+use crate::buffer::DataBuf;
+use crate::error::{Error, Result};
+use crate::model::{ComputeCost, CostModel};
+use crate::ops::Elem;
+
+/// How time is accounted.
+#[derive(Clone, Copy, Debug)]
+pub enum Timing {
+    /// Wall-clock (the run is the measurement).
+    Real,
+    /// Virtual clocks charged under the given cost model (the run is a
+    /// simulation of the paper's cluster).
+    Virtual(CostModel, ComputeCost),
+}
+
+impl Timing {
+    /// Virtual timing with the calibrated "Hydra" uniform model and the
+    /// default γ.
+    pub fn hydra() -> Timing {
+        Timing::Virtual(CostModel::hydra_uniform(), ComputeCost::new(0.25e-9))
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Timing::Virtual(..))
+    }
+}
+
+/// A message on the wire: payload plus the sender's virtual clock at the
+/// time of posting (ignored under real timing).
+struct Msg<E: Elem> {
+    vtime: f64,
+    data: DataBuf<E>,
+}
+
+/// Lazily created directed channels, shared by all endpoints of a world.
+pub(super) struct Registry<E: Elem> {
+    slots: Mutex<HashMap<(usize, usize), ChannelSlot<E>>>,
+    /// Set when any rank fails; blocked receivers notice within
+    /// [`POISON_POLL`] and abort instead of waiting forever (the registry
+    /// itself keeps unclaimed `Sender`s alive, so a dead peer would not
+    /// disconnect the channel).
+    poisoned: std::sync::atomic::AtomicBool,
+}
+
+/// Poll interval for poison detection on blocked receives.
+const POISON_POLL: std::time::Duration = std::time::Duration::from_millis(20);
+
+/// How long a receive may block before we declare a protocol deadlock.
+/// Override with `DPDR_RECV_TIMEOUT_SECS` (legitimate waits in heavily
+/// oversubscribed real-time worlds can be long).
+fn recv_watchdog() -> std::time::Duration {
+    static SECS: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    let secs = *SECS.get_or_init(|| {
+        std::env::var("DPDR_RECV_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(60)
+    });
+    std::time::Duration::from_secs(secs)
+}
+
+struct ChannelSlot<E: Elem> {
+    sender: Option<Sender<Msg<E>>>,
+    receiver: Option<Receiver<Msg<E>>>,
+}
+
+impl<E: Elem> Registry<E> {
+    pub(super) fn new() -> Registry<E> {
+        Registry {
+            slots: Mutex::new(HashMap::new()),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Mark the world failed (called when a rank errors or panics).
+    pub(super) fn poison(&self) {
+        self.poisoned
+            .store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    pub(super) fn is_poisoned(&self) -> bool {
+        self.poisoned.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    fn sender(&self, src: usize, dst: usize) -> Sender<Msg<E>> {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots.entry((src, dst)).or_insert_with(|| {
+            let (s, r) = channel();
+            ChannelSlot {
+                sender: Some(s),
+                receiver: Some(r),
+            }
+        });
+        slot.sender.as_ref().expect("sender already withdrawn").clone()
+    }
+
+    fn receiver(&self, src: usize, dst: usize) -> Receiver<Msg<E>> {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots.entry((src, dst)).or_insert_with(|| {
+            let (s, r) = channel();
+            ChannelSlot {
+                sender: Some(s),
+                receiver: Some(r),
+            }
+        });
+        slot.receiver
+            .take()
+            .expect("receiver claimed twice — one endpoint per rank")
+    }
+}
+
+/// One rank's endpoint.
+pub struct ThreadComm<E: Elem> {
+    rank: usize,
+    size: usize,
+    registry: Arc<Registry<E>>,
+    barrier: Arc<VBarrier>,
+    /// Cached outgoing channels, keyed by destination.
+    tx: HashMap<usize, Sender<Msg<E>>>,
+    /// Claimed incoming channels, keyed by source.
+    rx: HashMap<usize, Receiver<Msg<E>>>,
+    timing: Timing,
+    vtime: f64,
+    start: Instant,
+    metrics: RankMetrics,
+}
+
+impl<E: Elem> ThreadComm<E> {
+    pub(super) fn new(
+        rank: usize,
+        size: usize,
+        registry: Arc<Registry<E>>,
+        barrier: Arc<VBarrier>,
+        timing: Timing,
+    ) -> ThreadComm<E> {
+        ThreadComm {
+            rank,
+            size,
+            registry,
+            barrier,
+            tx: HashMap::new(),
+            rx: HashMap::new(),
+            timing,
+            vtime: 0.0,
+            start: Instant::now(),
+            metrics: RankMetrics::default(),
+        }
+    }
+
+    fn check_peer(&self, peer: usize) -> Result<()> {
+        if peer >= self.size || peer == self.rank {
+            return Err(Error::Config(format!(
+                "rank {}: invalid peer {} (size {})",
+                self.rank, peer, self.size
+            )));
+        }
+        Ok(())
+    }
+
+    fn tx_to(&mut self, peer: usize) -> Sender<Msg<E>> {
+        let (rank, registry) = (self.rank, &self.registry);
+        self.tx
+            .entry(peer)
+            .or_insert_with(|| registry.sender(rank, peer))
+            .clone()
+    }
+
+    fn post(&mut self, peer: usize, data: DataBuf<E>) -> Result<usize> {
+        let bytes = data.bytes();
+        let msg = Msg {
+            vtime: self.vtime,
+            data,
+        };
+        self.tx_to(peer).send(msg).map_err(|_| Error::Disconnected {
+            rank: self.rank,
+            peer,
+        })?;
+        self.metrics.bytes_sent += bytes as u64;
+        Ok(bytes)
+    }
+
+    fn take(&mut self, peer: usize) -> Result<Msg<E>> {
+        let (rank, registry) = (self.rank, &self.registry);
+        let rx = self
+            .rx
+            .entry(peer)
+            .or_insert_with(|| registry.receiver(peer, rank));
+        // Block in POISON_POLL slices so a failed world tears down instead
+        // of hanging on receives whose sender died (the registry keeps the
+        // unclaimed Sender half alive, so disconnect alone is not enough),
+        // and so protocol deadlocks surface as errors instead of hangs.
+        let deadline = std::time::Instant::now() + recv_watchdog();
+        let msg = loop {
+            match rx.recv_timeout(POISON_POLL) {
+                Ok(msg) => break msg,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if registry.is_poisoned() {
+                        return Err(Error::Disconnected {
+                            rank: self.rank,
+                            peer,
+                        });
+                    }
+                    if std::time::Instant::now() > deadline {
+                        registry.poison();
+                        return Err(Error::Protocol(format!(
+                            "rank {} recv from {} timed out — likely protocol deadlock",
+                            self.rank, peer
+                        )));
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Disconnected {
+                        rank: self.rank,
+                        peer,
+                    })
+                }
+            }
+        };
+        self.metrics.bytes_recv += msg.data.bytes() as u64;
+        Ok(msg)
+    }
+
+    /// The virtual clock (0 under real timing).
+    pub fn vtime(&self) -> f64 {
+        self.vtime
+    }
+
+    /// The timing mode this endpoint runs under.
+    pub fn timing(&self) -> Timing {
+        self.timing
+    }
+}
+
+impl<E: Elem> Comm<E> for ThreadComm<E> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn sendrecv(&mut self, peer: usize, send: DataBuf<E>) -> Result<DataBuf<E>> {
+        self.check_peer(peer)?;
+        let sent_bytes = self.post(peer, send)?;
+        let msg = self.take(peer)?;
+        if let Timing::Virtual(cost, _) = self.timing {
+            // Telephone model: both directions complete together; the cost
+            // is driven by the larger payload, and both endpoints compute
+            // the identical completion time max(t_a, t_b) + α + β·n.
+            let bytes = sent_bytes.max(msg.data.bytes());
+            self.vtime = self.vtime.max(msg.vtime) + cost.xfer(self.rank, peer, bytes);
+        }
+        self.metrics.exchanges += 1;
+        self.metrics.sendrecvs += 1;
+        Ok(msg.data)
+    }
+
+    fn sendrecv_pair(
+        &mut self,
+        send_to: usize,
+        send: DataBuf<E>,
+        recv_from: usize,
+    ) -> Result<DataBuf<E>> {
+        if send_to == recv_from {
+            return self.sendrecv(send_to, send);
+        }
+        self.check_peer(send_to)?;
+        self.check_peer(recv_from)?;
+        let sent_bytes = self.post(send_to, send)?;
+        let msg = self.take(recv_from)?;
+        if let Timing::Virtual(cost, _) = self.timing {
+            // Full duplex: the outgoing and incoming transfers overlap; the
+            // step ends when the longer of the two is done, and the incoming
+            // one cannot start before the remote sender posted.
+            let out = cost.xfer(self.rank, send_to, sent_bytes);
+            let inc = cost.xfer(self.rank, recv_from, msg.data.bytes());
+            self.vtime = (self.vtime + out).max(self.vtime.max(msg.vtime) + inc);
+        }
+        self.metrics.exchanges += 1;
+        self.metrics.sendrecvs += 1;
+        Ok(msg.data)
+    }
+
+    fn send(&mut self, peer: usize, data: DataBuf<E>) -> Result<()> {
+        self.check_peer(peer)?;
+        let bytes = self.post(peer, data)?;
+        if let Timing::Virtual(cost, _) = self.timing {
+            // The sender's port is busy for the full transfer.
+            self.vtime += cost.xfer(self.rank, peer, bytes);
+        }
+        self.metrics.exchanges += 1;
+        Ok(())
+    }
+
+    fn recv(&mut self, peer: usize) -> Result<DataBuf<E>> {
+        self.check_peer(peer)?;
+        let msg = self.take(peer)?;
+        if let Timing::Virtual(cost, _) = self.timing {
+            // Transfer starts when the sender posted and the receiver is
+            // ready: max(t_r, t_s) + α + β·n.
+            let bytes = msg.data.bytes();
+            self.vtime = self.vtime.max(msg.vtime) + cost.xfer(self.rank, peer, bytes);
+        }
+        self.metrics.exchanges += 1;
+        Ok(msg.data)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        let max = self.barrier.wait(self.vtime);
+        if self.timing.is_virtual() {
+            self.vtime = max;
+        }
+        self.metrics.barriers += 1;
+        Ok(())
+    }
+
+    fn charge_compute(&mut self, bytes: usize) {
+        if let Timing::Virtual(_, compute) = self.timing {
+            self.vtime += compute.reduce(bytes);
+        }
+        self.metrics.reduce_bytes += bytes as u64;
+    }
+
+    fn time_us(&self) -> f64 {
+        match self.timing {
+            Timing::Real => self.start.elapsed().as_secs_f64() * 1e6,
+            Timing::Virtual(..) => self.vtime * 1e6,
+        }
+    }
+
+    fn reset_time(&mut self) {
+        self.vtime = 0.0;
+        self.start = Instant::now();
+    }
+
+    fn metrics(&self) -> &RankMetrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LinkCost;
+    use std::thread;
+
+    fn pair(timing: Timing) -> (ThreadComm<i32>, ThreadComm<i32>) {
+        let reg = Arc::new(Registry::new());
+        let bar = Arc::new(VBarrier::new(2));
+        (
+            ThreadComm::new(0, 2, Arc::clone(&reg), Arc::clone(&bar), timing),
+            ThreadComm::new(1, 2, reg, bar, timing),
+        )
+    }
+
+    #[test]
+    fn sendrecv_roundtrip() {
+        let (mut a, mut b) = pair(Timing::Real);
+        let h = thread::spawn(move || {
+            let got = b.sendrecv(0, DataBuf::real(vec![7, 8])).unwrap();
+            got.into_vec().unwrap()
+        });
+        let got = a.sendrecv(1, DataBuf::real(vec![1, 2, 3])).unwrap();
+        assert_eq!(got.into_vec().unwrap(), vec![7, 8]);
+        assert_eq!(h.join().unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.metrics().sendrecvs, 1);
+    }
+
+    #[test]
+    fn virtual_clocks_agree_on_sendrecv() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 1e-9));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        let (mut a, mut b) = pair(timing);
+        // skew the clocks, then exchange unequal payloads
+        a.vtime = 5e-6;
+        b.vtime = 2e-6;
+        let h = thread::spawn(move || {
+            b.sendrecv(0, DataBuf::real(vec![0i32; 100])).unwrap();
+            b.vtime()
+        });
+        a.sendrecv(1, DataBuf::real(vec![0i32; 250])).unwrap();
+        let tb = h.join().unwrap();
+        // both: max(5µs, 2µs) + 1µs + 1000B·1e-9 = 7µs
+        assert!((a.vtime() - 7e-6).abs() < 1e-12);
+        assert!((tb - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_sided_timing() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        let (mut a, mut b) = pair(timing);
+        b.vtime = 10e-6;
+        let h = thread::spawn(move || {
+            let _ = b.recv(0).unwrap();
+            b.vtime()
+        });
+        a.send(1, DataBuf::real(vec![1])).unwrap();
+        assert!((a.vtime() - 1e-6).abs() < 1e-12); // sender: 0 + α
+        let tb = h.join().unwrap();
+        assert!((tb - 11e-6).abs() < 1e-12); // receiver: max(10, 0) + α
+    }
+
+    #[test]
+    fn void_blocks_flow() {
+        let (mut a, mut b) = pair(Timing::Real);
+        let h = thread::spawn(move || {
+            let got = b.sendrecv(0, DataBuf::real(vec![9])).unwrap();
+            got.len()
+        });
+        let got = a.sendrecv(1, DataBuf::Real(Vec::new())).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(h.join().unwrap(), 0);
+    }
+
+    #[test]
+    fn compute_charge() {
+        let cost = CostModel::Uniform(LinkCost::new(0.0, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(2e-9));
+        let (mut a, _b) = pair(timing);
+        a.charge_compute(500);
+        assert!((a.vtime() - 1e-6).abs() < 1e-15);
+        assert_eq!(a.metrics().reduce_bytes, 500);
+    }
+
+    #[test]
+    fn invalid_peer_rejected() {
+        let (mut a, _b) = pair(Timing::Real);
+        assert!(a.send(0, DataBuf::real(vec![1])).is_err()); // self
+        assert!(a.send(2, DataBuf::real(vec![1])).is_err()); // out of range
+    }
+}

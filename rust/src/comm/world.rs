@@ -1,0 +1,225 @@
+//! Spawn a world of `p` rank threads and run a closure per rank.
+
+use std::sync::Arc;
+use std::thread;
+
+use super::barrier::VBarrier;
+use super::metrics::RankMetrics;
+use super::thread::{Registry, ThreadComm, Timing};
+use super::Comm;
+use crate::error::{Error, Result};
+use crate::ops::Elem;
+
+/// The outcome of a world run.
+#[derive(Debug)]
+pub struct WorldReport<R> {
+    /// Per-rank closure results, indexed by rank.
+    pub results: Vec<R>,
+    /// Max over ranks of the final virtual clock, in µs (0 for real timing).
+    pub max_vtime_us: f64,
+    /// Wall-clock duration of the whole run, in µs.
+    pub wall_us: f64,
+    /// Per-rank traffic counters.
+    pub metrics: Vec<RankMetrics>,
+}
+
+impl<R> WorldReport<R> {
+    /// Aggregate counters over all ranks.
+    pub fn total_metrics(&self) -> RankMetrics {
+        let mut total = RankMetrics::default();
+        for m in &self.metrics {
+            total.merge(m);
+        }
+        total
+    }
+}
+
+/// Run `f(rank_endpoint)` on `p` threads and collect results.
+///
+/// Threads get 1 MiB stacks (the collectives are iterative, not recursive),
+/// so worlds up to the paper's p = 1152 are cheap. A panic or error on any
+/// rank tears the world down: channel disconnects propagate as
+/// `Error::Disconnected` to peers, and the first rank error is returned.
+pub fn run_world<E, R, F>(p: usize, timing: Timing, f: F) -> Result<WorldReport<R>>
+where
+    E: Elem,
+    R: Send + 'static,
+    F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
+{
+    if p == 0 {
+        return Err(Error::Config("world size must be >= 1".into()));
+    }
+    let registry = Arc::new(Registry::new());
+    let barrier = Arc::new(VBarrier::new(p));
+    let f = Arc::new(f);
+    let start = std::time::Instant::now();
+
+    let mut handles = Vec::with_capacity(p);
+    for rank in 0..p {
+        let registry = Arc::clone(&registry);
+        let barrier = Arc::clone(&barrier);
+        let f = Arc::clone(&f);
+        let handle = thread::Builder::new()
+            .name(format!("rank-{rank}"))
+            .stack_size(1 << 20)
+            .spawn(move || {
+                // poison the world on both error returns and panics, so
+                // peers blocked in recv abort promptly
+                struct PoisonOnUnwind<E: Elem>(Arc<Registry<E>>);
+                impl<E: Elem> Drop for PoisonOnUnwind<E> {
+                    fn drop(&mut self) {
+                        if std::thread::panicking() {
+                            self.0.poison();
+                        }
+                    }
+                }
+                let guard = PoisonOnUnwind(Arc::clone(&registry));
+                let mut comm = ThreadComm::new(rank, p, Arc::clone(&registry), barrier, timing);
+                let result = match f(&mut comm) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        registry.poison();
+                        return Err(e);
+                    }
+                };
+                drop(guard);
+                Ok::<_, Error>((result, comm.vtime(), comm.metrics().clone()))
+            })
+            .map_err(Error::Io)?;
+        handles.push(handle);
+    }
+
+    let mut results = Vec::with_capacity(p);
+    let mut metrics = Vec::with_capacity(p);
+    let mut max_vtime = 0.0f64;
+    let mut first_err: Option<Error> = None;
+    for (rank, handle) in handles.into_iter().enumerate() {
+        match handle.join() {
+            Ok(Ok((r, vtime, m))) => {
+                max_vtime = max_vtime.max(vtime);
+                results.push(r);
+                metrics.push(m);
+            }
+            Ok(Err(e)) => {
+                // Disconnected errors are usually poison fallout from some
+                // other rank's failure — prefer reporting the root cause.
+                match (&first_err, &e) {
+                    (None, _) | (Some(Error::Disconnected { .. }), _)
+                        if !matches!(e, Error::Disconnected { .. })
+                            || first_err.is_none() =>
+                    {
+                        first_err = Some(e)
+                    }
+                    _ => {}
+                }
+            }
+            Err(_) => {
+                let e = Error::Protocol(format!("rank {rank} panicked"));
+                if !matches!(first_err, Some(ref f) if !matches!(f, Error::Disconnected { .. }))
+                {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(WorldReport {
+        results,
+        max_vtime_us: max_vtime * 1e6,
+        wall_us: start.elapsed().as_secs_f64() * 1e6,
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::DataBuf;
+    use crate::comm::Comm;
+    use crate::model::{ComputeCost, CostModel, LinkCost};
+
+    #[test]
+    fn ranks_see_distinct_ids() {
+        let report = run_world::<i32, _, _>(5, Timing::Real, |comm| Ok(comm.rank())).unwrap();
+        assert_eq!(report.results, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn neighbor_exchange_world() {
+        // even ranks exchange with rank+1
+        let report = run_world::<i32, _, _>(6, Timing::Real, |comm| {
+            let r = comm.rank();
+            let peer = if r % 2 == 0 { r + 1 } else { r - 1 };
+            let got = comm.sendrecv(peer, DataBuf::real(vec![r as i32]))?;
+            Ok(got.into_vec()?[0])
+        })
+        .unwrap();
+        assert_eq!(report.results, vec![1, 0, 3, 2, 5, 4]);
+        let total = report.total_metrics();
+        assert_eq!(total.sendrecvs, 6);
+        assert_eq!(total.bytes_sent, 24);
+    }
+
+    #[test]
+    fn virtual_time_ping_chain() {
+        // rank 0 -> 1 -> 2: rank 1 finishes receiving at α and its forward
+        // occupies [α, 2α]; rank 2's receive completes at 2α (store &
+        // forward, ports busy back-to-back)
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        let report = run_world::<i32, _, _>(3, timing, |comm| {
+            match comm.rank() {
+                0 => comm.send(1, DataBuf::real(vec![1]))?,
+                1 => {
+                    let b = comm.recv(0)?;
+                    comm.send(2, b)?;
+                }
+                _ => {
+                    comm.recv(1)?;
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!((report.max_vtime_us - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_propagates() {
+        let r = run_world::<i32, _, _>(2, Timing::Real, |comm| {
+            if comm.rank() == 0 {
+                Err(crate::error::Error::Protocol("boom".into()))
+            } else {
+                // rank 1 blocks on a recv that will disconnect
+                let _ = comm.recv(0);
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn barrier_syncs_clocks() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        let report = run_world::<i32, _, _>(4, timing, |comm| {
+            // rank r does r sends' worth of local charge via compute? use
+            // sendrecv pairs instead: rank 0/1 exchange twice; 2/3 once.
+            let r = comm.rank();
+            let peer = r ^ 1;
+            let n = if r < 2 { 2 } else { 1 };
+            for _ in 0..n {
+                comm.sendrecv(peer, DataBuf::real(vec![0i32]))?;
+            }
+            comm.barrier()?;
+            Ok(comm.time_us())
+        })
+        .unwrap();
+        // all clocks equal the max (2µs) after the barrier
+        for t in report.results {
+            assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Crate-wide error type.
+//!
+//! We deliberately keep a small, explicit error enum instead of threading
+//! `anyhow` through the library API: collective algorithms have a small set
+//! of well-defined failure modes (bad topology parameters, transport
+//! disconnect, artifact problems) and callers (benches, the CLI, tests)
+//! match on them.
+
+use std::fmt;
+
+/// Errors produced by the dpdr library.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid run configuration (p, m, block size, ...).
+    Config(String),
+    /// A transport endpoint disappeared (peer thread panicked / dropped).
+    Disconnected { rank: usize, peer: usize },
+    /// Message arrived that does not match protocol expectations.
+    Protocol(String),
+    /// Mismatch between a real and a phantom buffer in the same exchange.
+    BufferMode(String),
+    /// PJRT runtime / artifact loading problems.
+    Runtime(String),
+    /// CLI parse errors.
+    Cli(String),
+    /// I/O errors (artifact files, TSV output).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "configuration error: {s}"),
+            Error::Disconnected { rank, peer } => {
+                write!(f, "rank {rank}: transport to peer {peer} disconnected")
+            }
+            Error::Protocol(s) => write!(f, "protocol error: {s}"),
+            Error::BufferMode(s) => write!(f, "buffer mode error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Cli(s) => write!(f, "cli error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Config("p must be > 0".into());
+        assert!(e.to_string().contains("p must be > 0"));
+        let e = Error::Disconnected { rank: 3, peer: 7 };
+        assert!(e.to_string().contains("rank 3"));
+        assert!(e.to_string().contains("peer 7"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,153 @@
+//! The benchmark harness — a faithful clone of the *mpicroscope*
+//! methodology the paper uses (§2, [6]): the running time of an experiment
+//! is **the minimum over a number of measurement rounds of the completion
+//! time of the slowest rank**, with individual measurements synchronized by
+//! barriers; data points are the exact, exponentially distributed count
+//! series of Table 2.
+
+pub mod table;
+
+pub use table::{render_markdown, render_tsv, Row};
+
+use crate::buffer::DataBuf;
+use crate::collectives::{allreduce, RunSpec};
+use crate::comm::{run_world, Comm, ThreadComm, Timing};
+use crate::error::Result;
+use crate::model::AlgoKind;
+use crate::ops::SumOp;
+
+/// The exact element-count series of the paper's Table 2
+/// (`MPI_INT` elements, 0 … 40 000 000 bytes, exponentially distributed
+/// as chosen by mpicroscope).
+pub const TABLE2_COUNTS: [usize; 30] = [
+    0, 1, 2, 8, 15, 21, 25, 87, 150, 212, 250, 875, 1_500, 2_125, 2_500, 8_750, 15_000, 21_250,
+    25_000, 87_500, 150_000, 212_500, 250_000, 875_000, 1_500_000, 2_125_000, 2_500_000,
+    4_597_152, 6_694_304, 8_388_608,
+];
+
+/// One measured experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub algo: AlgoKind,
+    pub count: usize,
+    /// min-over-rounds of max-over-ranks completion time, µs.
+    pub time_us: f64,
+    /// measurement rounds taken.
+    pub rounds: usize,
+}
+
+/// Run `rounds` barrier-synchronized measurements of `algo` under `spec`
+/// and return the mpicroscope statistic (min over rounds of the slowest
+/// rank's time).
+///
+/// Under virtual timing a single round is exact (the simulation is
+/// deterministic), but the full protocol is kept so the harness measures
+/// real (wall-clock) worlds identically.
+pub fn measure(
+    algo: AlgoKind,
+    spec: &RunSpec,
+    timing: Timing,
+    rounds: usize,
+) -> Result<Measurement> {
+    let spec = *spec;
+    let rounds = rounds.max(1);
+    let blocks = spec.blocks()?;
+    let report = run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
+        let mut times = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            let x = if spec.phantom {
+                DataBuf::phantom(spec.m)
+            } else {
+                DataBuf::real(spec.input_i32(comm.rank()))
+            };
+            comm.barrier()?; // synchronized start (mpicroscope, [2])
+            comm.reset_time();
+            let _y = allreduce(algo, comm, x, &SumOp, &blocks)?;
+            times.push(comm.time_us());
+        }
+        Ok(times)
+    })?;
+    // per round: slowest rank; overall: fastest round
+    let mut best = f64::INFINITY;
+    for round in 0..rounds {
+        let slowest = report
+            .results
+            .iter()
+            .map(|times| times[round])
+            .fold(f64::NEG_INFINITY, f64::max);
+        best = best.min(slowest);
+    }
+    Ok(Measurement {
+        algo,
+        count: spec.m,
+        time_us: best,
+        rounds,
+    })
+}
+
+/// Measure a whole count series for several algorithms (one Table-2-style
+/// column per algorithm). `base_spec.m` is overridden per count.
+pub fn measure_series(
+    algos: &[AlgoKind],
+    counts: &[usize],
+    base_spec: &RunSpec,
+    timing: Timing,
+    rounds: usize,
+) -> Result<Vec<Row>> {
+    let mut rows = Vec::with_capacity(counts.len());
+    for &count in counts {
+        let mut cells = Vec::with_capacity(algos.len());
+        for &algo in algos {
+            let spec = RunSpec { m: count, ..*base_spec };
+            cells.push(measure(algo, &spec, timing, rounds)?.time_us);
+        }
+        rows.push(Row {
+            count,
+            times_us: cells,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_series_shape() {
+        assert_eq!(TABLE2_COUNTS.len(), 30);
+        assert_eq!(TABLE2_COUNTS[0], 0);
+        assert_eq!(*TABLE2_COUNTS.last().unwrap(), 8_388_608);
+        // strictly increasing
+        assert!(TABLE2_COUNTS.windows(2).all(|w| w[0] < w[1]));
+        // max payload = 8.4M ints ≈ 33.5 MB < the paper's 40 MB range cap
+        assert!(TABLE2_COUNTS.iter().all(|&c| c * 4 <= 40_000_000));
+    }
+
+    #[test]
+    fn measure_virtual_deterministic() {
+        let spec = RunSpec::new(6, 4_000).phantom(true);
+        let a = measure(AlgoKind::Dpdr, &spec, Timing::hydra(), 1).unwrap();
+        let b = measure(AlgoKind::Dpdr, &spec, Timing::hydra(), 3).unwrap();
+        assert!((a.time_us - b.time_us).abs() < 1e-9);
+        assert!(a.time_us > 0.0);
+    }
+
+    #[test]
+    fn measure_series_rows() {
+        let spec = RunSpec::new(4, 0).phantom(true);
+        let rows = measure_series(
+            &[AlgoKind::Dpdr, AlgoKind::ReduceBcast],
+            &[0, 64, 256],
+            &spec,
+            Timing::hydra(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].count, 0);
+        assert_eq!(rows[0].times_us.len(), 2);
+        // larger counts cost more
+        assert!(rows[2].times_us[0] >= rows[1].times_us[0]);
+    }
+}

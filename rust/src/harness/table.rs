@@ -1,0 +1,94 @@
+//! Table rendering: the paper-style raw-data table (markdown) and a
+//! gnuplot/TSV series for the Figure-1 style log-log plot.
+
+use crate::model::AlgoKind;
+use crate::util::{fmt_us, with_thousands};
+
+/// One row: a count and one time per algorithm column.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub count: usize,
+    pub times_us: Vec<f64>,
+}
+
+/// Markdown table in the layout of the paper's Table 2.
+pub fn render_markdown(algos: &[AlgoKind], rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("| Elements (count) |");
+    for a in algos {
+        out.push_str(&format!(" {} |", a.label()));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in algos {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&format!("| {} |", with_thousands(row.count as u64)));
+        for t in &row.times_us {
+            out.push_str(&format!(" {} |", fmt_us(*t)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Tab-separated series: `count<TAB>t_algo1<TAB>t_algo2…` with a `#` header
+/// — directly plottable (`gnuplot> plot "out.tsv" using 1:2 …`), the
+/// Figure 1 format.
+pub fn render_tsv(algos: &[AlgoKind], rows: &[Row]) -> String {
+    let mut out = String::from("#count");
+    for a in algos {
+        out.push('\t');
+        out.push_str(a.name());
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.count.to_string());
+        for t in &row.times_us {
+            out.push_str(&format!("\t{:.3}", t));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vec<AlgoKind>, Vec<Row>) {
+        (
+            vec![AlgoKind::NativeSwitch, AlgoKind::Dpdr],
+            vec![
+                Row {
+                    count: 0,
+                    times_us: vec![0.29, 0.19],
+                },
+                Row {
+                    count: 8_388_608,
+                    times_us: vec![56249.24, 73116.03],
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn markdown_layout() {
+        let (algos, rows) = sample();
+        let md = render_markdown(&algos, &rows);
+        assert!(md.contains("| Elements (count) | MPI_Allreduce | Doubly pipelined |"));
+        assert!(md.contains("| 8 388 608 | 56249.24 | 73116.03 |"));
+        assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    fn tsv_layout() {
+        let (algos, rows) = sample();
+        let tsv = render_tsv(&algos, &rows);
+        let mut lines = tsv.lines();
+        assert_eq!(lines.next().unwrap(), "#count\tnative\tdpdr");
+        assert_eq!(lines.next().unwrap(), "0\t0.290\t0.190");
+    }
+}

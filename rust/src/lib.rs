@@ -1,0 +1,49 @@
+//! # dpdr — Doubly-Pipelined, Dual-Root Reduction-to-All
+//!
+//! A full reproduction of J. L. Träff, *"A Doubly-pipelined, Dual-root
+//! Reduction-to-all Algorithm and Implementation"* (2021): the algorithm,
+//! every baseline of its evaluation, the linear-cost (α-β-γ) cluster
+//! simulator they are measured on, an mpicroscope-style benchmark harness,
+//! and a PJRT-backed reduction engine whose kernels are AOT-compiled from
+//! JAX/Pallas (see `python/compile/`).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dpdr::prelude::*;
+//!
+//! // 14 ranks (p + 2 = 2^4: both trees perfect), 100k ints, 1k-int blocks.
+//! let spec = RunSpec::new(14, 100_000).block_elems(1_000);
+//! let report = dpdr::collectives::run_allreduce_i32(
+//!     AlgoKind::Dpdr, &spec, Timing::hydra()).unwrap();
+//! println!("simulated time: {:.2} us", report.max_vtime_us);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `benches/` for the
+//! reproductions of the paper's Table 2 / Figure 1.
+
+pub mod buffer;
+pub mod cli;
+pub mod collectives;
+pub mod comm;
+pub mod error;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod ops;
+pub mod pipeline;
+pub mod proptest;
+pub mod runtime;
+pub mod topo;
+pub mod util;
+
+/// Commonly used items.
+pub mod prelude {
+    pub use crate::buffer::DataBuf;
+    pub use crate::collectives::RunSpec;
+    pub use crate::comm::{Comm, RankMetrics, ThreadComm, Timing, WorldReport};
+    pub use crate::error::{Error, Result};
+    pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+    pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceOp, Side, SumOp};
+    pub use crate::topo::{DualRootForest, PostOrderTree};
+}

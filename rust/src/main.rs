@@ -1,0 +1,317 @@
+//! `dpdr` — the command-line launcher.
+//!
+//! ```text
+//! dpdr run       --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time] [--hier]
+//! dpdr table2    [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]   reproduce Table 2
+//! dpdr fig1      [--tsv out.tsv]                                          Figure 1 series
+//! dpdr latency   [--hmax 12]                                              §1.2 4h−3 check
+//! dpdr blocksize --p 288 --m 1000000                                      Pipelining-Lemma sweep
+//! dpdr validate  [--pmax 16]                                              correctness battery
+//! dpdr calibrate                                                          thread-transport α/β fit
+//! dpdr sysinfo
+//! ```
+
+use dpdr::cli::Args;
+use dpdr::collectives::RunSpec;
+use dpdr::comm::Timing;
+use dpdr::error::{Error, Result};
+use dpdr::harness::{measure, measure_series, render_markdown, render_tsv, TABLE2_COUNTS};
+use dpdr::model::{
+    paper_h, predicted_time_us, AlgoKind, ComputeCost, CostModel, LinkCost,
+};
+use dpdr::pipeline::Blocks;
+
+const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, BOOL_FLAGS)?;
+    if args.switch("help") || args.subcommand().is_none() {
+        print_help();
+        return Ok(());
+    }
+    match args.subcommand().unwrap() {
+        "run" => cmd_run(&args),
+        "table2" => cmd_table2(&args),
+        "fig1" => cmd_fig1(&args),
+        "latency" => cmd_latency(&args),
+        "blocksize" => cmd_blocksize(&args),
+        "validate" => cmd_validate(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "sysinfo" => cmd_sysinfo(),
+        other => Err(Error::Cli(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "dpdr — doubly-pipelined dual-root reduction-to-all (Träff 2021 reproduction)
+
+subcommands:
+  run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab}}
+             --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
+  table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
+             [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
+  fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
+  latency    validate the 4h-3 latency formula over p = 2^h - 2
+  blocksize  Pipelining-Lemma sweep: measured vs analytic optimum
+  validate   correctness battery across algorithms/p/m
+  calibrate  fit alpha/beta of the real thread transport
+  sysinfo    model constants and environment"
+    );
+}
+
+/// Timing selection shared by the commands.
+fn timing_of(args: &Args) -> Result<Timing> {
+    if args.switch("real-time") {
+        return Ok(Timing::Real);
+    }
+    let alpha = args.get("alpha", 1.0e-6)?;
+    let beta = args.get("beta", 0.70e-9)?;
+    let gamma = args.get("gamma", 0.25e-9)?;
+    let model = if args.switch("hier") {
+        let ranks_per_node = args.get("ppn", 8usize)?;
+        CostModel::Hierarchical {
+            intra: LinkCost::new(args.get("alpha-intra", 0.3e-6)?, args.get("beta-intra", 0.08e-9)?),
+            inter: LinkCost::new(alpha, beta),
+            mapping: dpdr::topo::Mapping::Block { ranks_per_node },
+        }
+    } else {
+        CostModel::Uniform(LinkCost::new(alpha, beta))
+    };
+    Ok(Timing::Virtual(model, ComputeCost::new(gamma)))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = AlgoKind::parse(args.raw("algo").unwrap_or("dpdr"))
+        .ok_or_else(|| Error::Cli("bad --algo".into()))?;
+    let p = args.get("p", 288usize)?;
+    let m = args.get("m", 1_000_000usize)?;
+    let block = args.get("block", dpdr::pipeline::PAPER_BLOCK_ELEMS)?;
+    let rounds = args.get("rounds", 1usize)?;
+    let spec = RunSpec::new(p, m)
+        .block_elems(block)
+        .phantom(args.switch("phantom"));
+    let timing = timing_of(args)?;
+    let meas = measure(algo, &spec, timing, rounds)?;
+    println!(
+        "algo={} p={} m={} block={} rounds={} time_us={:.2}",
+        algo.name(),
+        p,
+        m,
+        block,
+        rounds,
+        meas.time_us
+    );
+    if let Timing::Virtual(model, _) = timing {
+        if let Some(link) = model.as_uniform() {
+            let b = Blocks::by_size(m, block)?.count();
+            let pred = predicted_time_us(algo, p, m * 4, b, link);
+            println!("analytic_us={pred:.2} (paper Sec. 1.2 formula)");
+        }
+    }
+    Ok(())
+}
+
+/// The paper's four evaluation columns.
+fn table2_algos() -> Vec<AlgoKind> {
+    vec![
+        AlgoKind::NativeSwitch,
+        AlgoKind::ReduceBcast,
+        AlgoKind::PipeTree,
+        AlgoKind::Dpdr,
+    ]
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let p = args.get("p", 288usize)?;
+    let block = args.get("block", dpdr::pipeline::PAPER_BLOCK_ELEMS)?;
+    let rounds = args.get("rounds", 1usize)?;
+    let spec = RunSpec::new(p, 0).block_elems(block).phantom(true);
+    let timing = timing_of(args)?;
+    let algos = table2_algos();
+    eprintln!(
+        "# table2: p={p} block={block} timing={} (runs {} experiments)",
+        if args.switch("real-time") { "real" } else { "virtual" },
+        algos.len() * TABLE2_COUNTS.len()
+    );
+    let rows = measure_series(&algos, &TABLE2_COUNTS, &spec, timing, rounds)?;
+    let md = render_markdown(&algos, &rows);
+    println!("{md}");
+    if let Some(path) = args.raw("tsv") {
+        std::fs::write(path, render_tsv(&algos, &rows))?;
+        eprintln!("# wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let p = args.get("p", 288usize)?;
+    let block = args.get("block", dpdr::pipeline::PAPER_BLOCK_ELEMS)?;
+    let spec = RunSpec::new(p, 0).block_elems(block).phantom(true);
+    let timing = timing_of(args)?;
+    let algos = table2_algos();
+    let rows = measure_series(&algos, &TABLE2_COUNTS, &spec, timing, 1)?;
+    let tsv = render_tsv(&algos, &rows);
+    match args.raw("tsv") {
+        Some(path) => {
+            std::fs::write(path, &tsv)?;
+            eprintln!("# wrote {path} (plot: gnuplot> set logscale xy; plot for [i=2:5] '{path}' u 1:i w lp)");
+        }
+        None => println!("{tsv}"),
+    }
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    let hmax = args.get("hmax", 10usize)?;
+    // α = 1, β = 0, b = 1 block ⇒ the virtual time in µs *is* the number of
+    // critical-path communication steps; compare against 4h − 3 (§1.2).
+    let timing = Timing::Virtual(
+        CostModel::Uniform(LinkCost::new(1e-6, 0.0)),
+        ComputeCost::new(0.0),
+    );
+    println!("#p\th\tsteps_measured\tpaper_4h-3");
+    for h in 2..=hmax {
+        let p = (1usize << h) - 2;
+        let spec = RunSpec::new(p, 1).block_elems(1).phantom(true);
+        let meas = measure(AlgoKind::Dpdr, &spec, timing, 1)?;
+        println!(
+            "{p}\t{h}\t{:.0}\t{}",
+            meas.time_us,
+            4 * h as i64 - 3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_blocksize(args: &Args) -> Result<()> {
+    let p = args.get("p", 288usize)?;
+    let m = args.get("m", 1_000_000usize)?;
+    let timing = timing_of(args)?;
+    let link = match timing {
+        Timing::Virtual(model, _) => model
+            .as_uniform()
+            .ok_or_else(|| Error::Cli("blocksize sweep needs the uniform model".into()))?,
+        Timing::Real => return Err(Error::Cli("blocksize sweep is a model experiment".into())),
+    };
+    let (a, c) = AlgoKind::Dpdr.step_structure(p).unwrap();
+    let (b_star, t_star) =
+        dpdr::model::lemma::optimal_time(a, c, link.alpha, link.beta, (m * 4) as f64, m);
+    println!("# p={p} m={m}: Pipelining-Lemma optimum b*={b_star} T*={:.2} us", t_star * 1e6);
+    println!("#blocks\tblock_elems\tmeasured_us\tanalytic_us");
+    let mut b = 1usize;
+    while b <= m.min(1 << 16) {
+        let block_elems = m.div_ceil(b);
+        let spec = RunSpec::new(p, m).block_elems(block_elems).phantom(true);
+        let meas = measure(AlgoKind::Dpdr, &spec, timing, 1)?;
+        let analytic = predicted_time_us(AlgoKind::Dpdr, p, m * 4, b, link);
+        println!("{b}\t{block_elems}\t{:.2}\t{:.2}", meas.time_us, analytic);
+        b *= 2;
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let pmax = args.get("pmax", 16usize)?;
+    let algos = [
+        AlgoKind::Dpdr,
+        AlgoKind::DpdrSingle,
+        AlgoKind::PipeTree,
+        AlgoKind::ReduceBcast,
+        AlgoKind::NativeSwitch,
+        AlgoKind::TwoTree,
+        AlgoKind::Ring,
+        AlgoKind::RecursiveDoubling,
+        AlgoKind::Rabenseifner,
+    ];
+    let mut checked = 0usize;
+    for algo in algos {
+        for p in 1..=pmax {
+            for m in [0usize, 1, 7, 64, 1000] {
+                let spec = RunSpec::new(p, m).block_elems(16);
+                let expected = spec.expected_sum_i32();
+                let report = dpdr::collectives::run_allreduce_i32(algo, &spec, Timing::Real)?;
+                for (rank, buf) in report.results.into_iter().enumerate() {
+                    let got = buf.into_vec()?;
+                    if got != expected {
+                        return Err(Error::Protocol(format!(
+                            "{} p={p} m={m} rank={rank}: wrong result",
+                            algo.name()
+                        )));
+                    }
+                }
+                checked += 1;
+            }
+        }
+        println!("{:>10}: ok", algo.name());
+    }
+    println!("validate: {checked} configurations OK");
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let iters = args.get("iters", 2_000usize)?;
+    // ping-pong two real threads with small and large payloads; fit
+    // t = α + β·bytes from the two points.
+    let small = 64usize; // bytes
+    let large = 1 << 20;
+    let t_small = ping_pong_us(small / 4, iters)?;
+    let t_large = ping_pong_us(large / 4, iters.min(200))?;
+    let beta = (t_large - t_small) * 1e-6 / (large - small) as f64;
+    let alpha = t_small * 1e-6 - beta * small as f64;
+    println!("thread transport: one-way small={t_small:.3} us, large={t_large:.3} us");
+    println!("fitted alpha={:.3e} s  beta={:.3e} s/B", alpha.max(0.0), beta);
+    println!("(pass as --alpha/--beta to model an in-process 'cluster')");
+    Ok(())
+}
+
+fn ping_pong_us(elems: usize, iters: usize) -> Result<f64> {
+    use dpdr::buffer::DataBuf;
+    use dpdr::comm::{run_world, Comm};
+    let report = run_world::<i32, _, _>(2, Timing::Real, move |comm| {
+        let peer = 1 - comm.rank();
+        let payload = DataBuf::real(vec![0i32; elems]);
+        comm.barrier()?;
+        let start = std::time::Instant::now();
+        for _ in 0..iters {
+            let _ = comm.sendrecv(peer, payload.clone())?;
+        }
+        Ok(start.elapsed().as_secs_f64() * 1e6 / iters as f64)
+    })?;
+    Ok(report.results.iter().copied().fold(0.0, f64::max))
+}
+
+fn cmd_sysinfo() -> Result<()> {
+    println!("dpdr {} — Träff 2021 reproduction", env!("CARGO_PKG_VERSION"));
+    println!("simulated system (defaults): 36 nodes x 8 ranks = 288 ranks ('Hydra')");
+    let model = CostModel::hydra_uniform();
+    if let Some(l) = model.as_uniform() {
+        println!("uniform link: alpha={:.2e} s, beta={:.2e} s/B", l.alpha, l.beta);
+    }
+    println!("paper h for p=288: {}", paper_h(288));
+    println!("threads available: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    match dpdr::runtime::ReduceEngine::with_default_dir() {
+        Ok(engine) => {
+            println!("PJRT: cpu client OK; artifacts dir: {}", engine.dir().display());
+            let stem = dpdr::runtime::artifact_name(2, dpdr::ops::OpKind::Sum, "int32", 16_384);
+            println!(
+                "artifact {stem}: {}",
+                if engine.has_artifact(&stem) { "present" } else { "MISSING (run `make artifacts`)" }
+            );
+        }
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    Ok(())
+}

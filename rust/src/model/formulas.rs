@@ -1,0 +1,209 @@
+//! Closed-form predicted running times (§1.2 of the paper) for every
+//! algorithm we implement; the A1/A2 benches compare these against the
+//! virtual-clock measurements.
+
+use super::{lemma, paper_h, LinkCost};
+use crate::util::log2_ceil;
+
+/// The algorithms of the evaluation (plus extensions).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AlgoKind {
+    /// Doubly-pipelined, dual-root reduction-to-all (User-Allreduce2).
+    Dpdr,
+    /// §1.2 variant: doubly-pipelined on a SINGLE tree (no dual root).
+    DpdrSingle,
+    /// Pipelined reduce + pipelined bcast on a single binary tree
+    /// (User-Allreduce1).
+    PipeTree,
+    /// Non-pipelined binomial `MPI_Reduce` + `MPI_Bcast`.
+    ReduceBcast,
+    /// "Native" vendor-style allreduce (count-based algorithm switching).
+    NativeSwitch,
+    /// Two-tree allreduce (Sanders/Speck/Träff [4]), the 2βm reference.
+    TwoTree,
+    /// Ring (reduce-scatter + allgather around a ring).
+    Ring,
+    /// Recursive doubling.
+    RecursiveDoubling,
+    /// Reduce-scatter (halving) + allgather (doubling), Rabenseifner.
+    Rabenseifner,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        Some(match s {
+            "dpdr" => AlgoKind::Dpdr,
+            "dpsingle" => AlgoKind::DpdrSingle,
+            "pipetree" => AlgoKind::PipeTree,
+            "redbcast" => AlgoKind::ReduceBcast,
+            "native" => AlgoKind::NativeSwitch,
+            "twotree" => AlgoKind::TwoTree,
+            "ring" => AlgoKind::Ring,
+            "rd" => AlgoKind::RecursiveDoubling,
+            "rab" => AlgoKind::Rabenseifner,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoKind::Dpdr => "dpdr",
+            AlgoKind::DpdrSingle => "dpsingle",
+            AlgoKind::PipeTree => "pipetree",
+            AlgoKind::ReduceBcast => "redbcast",
+            AlgoKind::NativeSwitch => "native",
+            AlgoKind::TwoTree => "twotree",
+            AlgoKind::Ring => "ring",
+            AlgoKind::RecursiveDoubling => "rd",
+            AlgoKind::Rabenseifner => "rab",
+        }
+    }
+
+    /// Table-2 style column label.
+    pub fn label(self) -> &'static str {
+        match self {
+            AlgoKind::Dpdr => "Doubly pipelined",
+            AlgoKind::DpdrSingle => "Doubly pipelined (1 tree)",
+            AlgoKind::PipeTree => "Pipelined",
+            AlgoKind::ReduceBcast => "MPI_Reduce+MPI_Bcast",
+            AlgoKind::NativeSwitch => "MPI_Allreduce",
+            AlgoKind::TwoTree => "Two-tree",
+            AlgoKind::Ring => "Ring",
+            AlgoKind::RecursiveDoubling => "Recursive doubling",
+            AlgoKind::Rabenseifner => "Rabenseifner",
+        }
+    }
+
+    /// True if the algorithm preserves rank order (safe for non-commutative
+    /// operators). Ring's reduce-scatter rotates the product, so it is
+    /// commutative-only, matching MPI library practice.
+    pub fn order_preserving(self) -> bool {
+        !matches!(self, AlgoKind::Ring)
+    }
+
+    /// The `(A, C)` step structure `A + C·b` of the pipelined algorithms
+    /// (`None` for the non-pipelined ones). From §1.2:
+    /// dpdr: `4h − 3 + 3(b − 1) = (4h − 6) + 3b`;
+    /// pipetree: `2(2h + 2(b − 1)) = (4h − 4) + 4b`;
+    /// twotree (both halves streaming): `≈ (4h) + 2b`.
+    pub fn step_structure(self, p: usize) -> Option<(f64, f64)> {
+        let h = paper_h(p) as f64;
+        match self {
+            AlgoKind::Dpdr => Some((4.0 * h - 6.0, 3.0)),
+            // single tree over p ranks: height one more than the dual-root
+            // halves, no dual exchange: ~4(h−1) fixed steps (paper: "slightly
+            // higher by a small constant term")
+            AlgoKind::DpdrSingle => Some((4.0 * h - 4.0, 3.0)),
+            AlgoKind::PipeTree => Some((4.0 * h - 4.0, 4.0)),
+            AlgoKind::TwoTree => Some((4.0 * h, 2.0)),
+            _ => None,
+        }
+    }
+}
+
+/// Predicted time in **microseconds** for `m_bytes` payload over `p` ranks
+/// with `b` pipeline blocks (ignored by non-pipelined algorithms), under
+/// uniform link cost `link`.
+pub fn predicted_time_us(algo: AlgoKind, p: usize, m_bytes: usize, b: usize, link: LinkCost) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let (alpha, beta) = (link.alpha, link.beta);
+    let m = m_bytes as f64;
+    let logp = log2_ceil(p) as f64;
+    let b = b.max(1) as f64;
+    let secs = match algo {
+        AlgoKind::Dpdr | AlgoKind::DpdrSingle | AlgoKind::PipeTree | AlgoKind::TwoTree => {
+            let (a, c) = algo.step_structure(p).unwrap();
+            lemma::time_at(a, c, alpha, beta, m, b)
+        }
+        AlgoKind::ReduceBcast => 2.0 * logp * (alpha + beta * m),
+        AlgoKind::RecursiveDoubling => logp * (alpha + beta * m),
+        AlgoKind::Ring => {
+            let pf = p as f64;
+            2.0 * (pf - 1.0) * alpha + 2.0 * ((pf - 1.0) / pf) * beta * m
+        }
+        AlgoKind::Rabenseifner => {
+            let pf = p as f64;
+            2.0 * logp * alpha + 2.0 * ((pf - 1.0) / pf) * beta * m
+        }
+        AlgoKind::NativeSwitch => {
+            // the switcher's branches (see collectives::native_switch)
+            let branch = if m_bytes <= 8 * 1024 {
+                AlgoKind::RecursiveDoubling
+            } else {
+                AlgoKind::Ring
+            };
+            return predicted_time_us(branch, p, m_bytes, 1, link);
+        }
+    };
+    secs * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LINK: LinkCost = LinkCost {
+        alpha: 1.0e-6,
+        beta: 0.7e-9,
+    };
+
+    #[test]
+    fn dpdr_beats_pipetree_at_large_m() {
+        // β-term: 3βm vs 4βm — at the per-algorithm optimal b the ratio
+        // tends to 4/3 (paper §1.2).
+        let p = 286; // 2^h − 2 shape near the paper's 288
+        let m = 400_000_000; // large
+        let (a1, c1) = AlgoKind::Dpdr.step_structure(p).unwrap();
+        let (a2, c2) = AlgoKind::PipeTree.step_structure(p).unwrap();
+        let (_b1, t1) = lemma::optimal_time(a1, c1, LINK.alpha, LINK.beta, m as f64, usize::MAX);
+        let (_b2, t2) = lemma::optimal_time(a2, c2, LINK.alpha, LINK.beta, m as f64, usize::MAX);
+        let ratio = t2 / t1;
+        assert!(ratio > 1.25 && ratio < 4.0 / 3.0 + 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn redbcast_worst_at_large_m() {
+        let p = 288;
+        let m = 33_554_432; // 8.4M ints
+        let t_rb = predicted_time_us(AlgoKind::ReduceBcast, p, m, 1, LINK);
+        let t_dp = predicted_time_us(AlgoKind::Dpdr, p, m, 2048, LINK);
+        assert!(t_rb > 2.0 * t_dp, "rb={t_rb} dp={t_dp}");
+    }
+
+    #[test]
+    fn zero_and_tiny() {
+        assert_eq!(predicted_time_us(AlgoKind::Dpdr, 1, 123, 4, LINK), 0.0);
+        let t = predicted_time_us(AlgoKind::Dpdr, 288, 4, 1, LINK);
+        assert!(t > 0.0 && t < 100.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        for a in [
+            AlgoKind::Dpdr,
+            AlgoKind::DpdrSingle,
+            AlgoKind::PipeTree,
+            AlgoKind::ReduceBcast,
+            AlgoKind::NativeSwitch,
+            AlgoKind::TwoTree,
+            AlgoKind::Ring,
+            AlgoKind::RecursiveDoubling,
+            AlgoKind::Rabenseifner,
+        ] {
+            assert_eq!(AlgoKind::parse(a.name()), Some(a));
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn ring_bandwidth_optimal_beta_term() {
+        let p = 64;
+        let m = 100_000_000;
+        let t_ring = predicted_time_us(AlgoKind::Ring, p, m, 1, LINK);
+        // β-term ≈ 2βm(p−1)/p < 3βm: ring wins on pure bandwidth at huge m
+        let t_dp = predicted_time_us(AlgoKind::Dpdr, p, m, 8192, LINK);
+        assert!(t_ring < t_dp);
+    }
+}

@@ -1,0 +1,108 @@
+//! The "Pipelining Lemma" (paper §1.2): balancing the block-count terms.
+//!
+//! A pipelined algorithm that takes `(A + C·b)` communication steps on
+//! blocks of `m/b` elements costs
+//!
+//! ```text
+//! T(b) = (A + C·b)(α + β·m/b) = Aα + Cβm + Aβm/b + Cαb
+//! ```
+//!
+//! which is minimized at `b* = sqrt(A·β·m / (C·α))`, giving
+//!
+//! ```text
+//! T(b*) = Aα + Cβm + 2·sqrt(A·C·α·β·m).
+//! ```
+//!
+//! For the doubly-pipelined dual-root algorithm `A = 4h − 6`, `C = 3`
+//! (from `4h − 3 + 3(b − 1)`), which is exactly the paper's
+//! `(4k−6)α + 2√(3(4k−6)αβm) + 3βm`.
+
+/// The continuous optimum block count `b*` for step structure `A + C·b`
+/// over a payload of `m_bytes` bytes. Returns at least 1.
+pub fn optimal_block_count(a_steps: f64, c_steps: f64, alpha: f64, beta: f64, m_bytes: f64) -> f64 {
+    if m_bytes <= 0.0 || alpha <= 0.0 {
+        return 1.0;
+    }
+    let b = (a_steps * beta * m_bytes / (c_steps * alpha)).sqrt();
+    b.max(1.0)
+}
+
+/// `T(b)` for step structure `A + C·b` (seconds).
+pub fn time_at(a_steps: f64, c_steps: f64, alpha: f64, beta: f64, m_bytes: f64, b: f64) -> f64 {
+    (a_steps + c_steps * b) * (alpha + beta * m_bytes / b)
+}
+
+/// The optimal time `T(b*)`, with `b*` clamped to `[1, m_elems]` and rounded
+/// to the better of the two neighbouring integers (blocks are integral).
+pub fn optimal_time(
+    a_steps: f64,
+    c_steps: f64,
+    alpha: f64,
+    beta: f64,
+    m_bytes: f64,
+    max_blocks: usize,
+) -> (usize, f64) {
+    let b_star = optimal_block_count(a_steps, c_steps, alpha, beta, m_bytes)
+        .min(max_blocks.max(1) as f64);
+    let lo = b_star.floor().max(1.0);
+    let hi = b_star.ceil().min(max_blocks.max(1) as f64).max(1.0);
+    let t_lo = time_at(a_steps, c_steps, alpha, beta, m_bytes, lo);
+    let t_hi = time_at(a_steps, c_steps, alpha, beta, m_bytes, hi);
+    if t_lo <= t_hi {
+        (lo as usize, t_lo)
+    } else {
+        (hi as usize, t_hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_is_a_minimum() {
+        let (a, c, al, be, m) = (30.0, 3.0, 1e-6, 1e-9, 4e7);
+        let b = optimal_block_count(a, c, al, be, m);
+        let t = time_at(a, c, al, be, m, b);
+        for factor in [0.5, 0.8, 1.25, 2.0] {
+            assert!(time_at(a, c, al, be, m, b * factor) >= t - 1e-15);
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_paper_shape() {
+        // T(b*) = Aα + Cβm + 2 sqrt(ACαβm)
+        let (a, c, al, be, m) = (26.0, 3.0, 2e-6, 0.5e-9, 1e8);
+        let b = optimal_block_count(a, c, al, be, m);
+        let t = time_at(a, c, al, be, m, b);
+        let closed = a * al + c * be * m + 2.0 * (a * c * al * be * m).sqrt();
+        assert!((t - closed).abs() / closed < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(optimal_block_count(10.0, 3.0, 1e-6, 1e-9, 0.0), 1.0);
+        let (b, _t) = optimal_time(10.0, 3.0, 1e-6, 1e-9, 4.0, 1);
+        assert_eq!(b, 1);
+    }
+
+    #[test]
+    fn integral_rounding_picks_better_neighbor() {
+        let (a, c, al, be, m) = (30.0, 3.0, 1e-6, 1e-9, 4e7);
+        let (b, t) = optimal_time(a, c, al, be, m, usize::MAX);
+        assert!(b >= 1);
+        assert!(t <= time_at(a, c, al, be, m, (b + 1) as f64) + 1e-15);
+        if b > 1 {
+            assert!(t <= time_at(a, c, al, be, m, (b - 1) as f64) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn grows_with_message_size() {
+        let b1 = optimal_block_count(30.0, 3.0, 1e-6, 1e-9, 1e6);
+        let b2 = optimal_block_count(30.0, 3.0, 1e-6, 1e-9, 1e8);
+        assert!(b2 > b1);
+        // sqrt scaling
+        assert!((b2 / b1 - 10.0).abs() < 1e-9);
+    }
+}

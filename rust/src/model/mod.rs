@@ -1,0 +1,160 @@
+//! The linear (α-β-γ) communication cost model the paper analyses, its
+//! hierarchical (intra-/inter-node) extension, the closed-form running-time
+//! formulas of §1.2, and the "Pipelining Lemma" block-count optimizer.
+
+pub mod formulas;
+pub mod lemma;
+
+pub use formulas::{predicted_time_us, AlgoKind};
+pub use lemma::{optimal_block_count, optimal_time};
+
+use crate::topo::{node_of, Mapping};
+
+/// Cost of one link direction: `α + β · bytes` seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCost {
+    /// Start-up latency in seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time in seconds.
+    pub beta: f64,
+}
+
+impl LinkCost {
+    pub fn new(alpha: f64, beta: f64) -> LinkCost {
+        LinkCost { alpha, beta }
+    }
+
+    /// Time to move `bytes` over this link (bidirectional exchanges use the
+    /// max of the two payload sizes — telephone model).
+    pub fn xfer(&self, bytes: usize) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+}
+
+/// Per-element-wise-reduction compute cost: `γ · bytes` seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeCost {
+    pub gamma: f64,
+}
+
+impl ComputeCost {
+    pub fn new(gamma: f64) -> ComputeCost {
+        ComputeCost { gamma }
+    }
+
+    pub fn reduce(&self, bytes: usize) -> f64 {
+        self.gamma * bytes as f64
+    }
+}
+
+/// The machine model used by the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostModel {
+    /// Uniform links, the model of the paper's analysis.
+    Uniform(LinkCost),
+    /// Clustered machine: cheap intra-node links, expensive inter-node ones.
+    /// Which is which follows from the rank→node `mapping`.
+    Hierarchical {
+        intra: LinkCost,
+        inter: LinkCost,
+        mapping: Mapping,
+    },
+}
+
+impl CostModel {
+    /// Our simulated "Hydra" defaults, calibrated so the α term (the paper's
+    /// small-count rows, tens of µs at p=288) and the β term (the large-count
+    /// rows, ~73 ms for the doubly-pipelined algorithm at 8.4M ints) land in
+    /// the paper's range. See EXPERIMENTS.md §Calibration.
+    pub fn hydra_uniform() -> CostModel {
+        CostModel::Uniform(LinkCost::new(1.0e-6, 0.70e-9))
+    }
+
+    /// Hierarchical Hydra: 8 ranks per node share memory (fast links),
+    /// inter-node OmniPath links as in [`Self::hydra_uniform`].
+    pub fn hydra_hier() -> CostModel {
+        CostModel::Hierarchical {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping: Mapping::Block { ranks_per_node: 8 },
+        }
+    }
+
+    /// The link cost between two ranks.
+    pub fn link(&self, a: usize, b: usize) -> LinkCost {
+        match *self {
+            CostModel::Uniform(l) => l,
+            CostModel::Hierarchical {
+                intra,
+                inter,
+                mapping,
+            } => {
+                if node_of(mapping, a) == node_of(mapping, b) {
+                    intra
+                } else {
+                    inter
+                }
+            }
+        }
+    }
+
+    /// Time for an exchange of `bytes` between `a` and `b`.
+    pub fn xfer(&self, a: usize, b: usize, bytes: usize) -> f64 {
+        self.link(a, b).xfer(bytes)
+    }
+
+    /// The uniform link parameters, if uniform.
+    pub fn as_uniform(&self) -> Option<LinkCost> {
+        match *self {
+            CostModel::Uniform(l) => Some(l),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's `h`: `p + 2 = 2^h` generalized to arbitrary `p` as
+/// `h = ⌈log2(p + 2)⌉`; used by the §1.2 formulas.
+pub fn paper_h(p: usize) -> usize {
+    crate::util::log2_ceil(p + 2) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_xfer_linear() {
+        let l = LinkCost::new(1e-6, 1e-9);
+        assert!((l.xfer(0) - 1e-6).abs() < 1e-15);
+        assert!((l.xfer(1000) - 2e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hierarchical_picks_links() {
+        let m = CostModel::Hierarchical {
+            intra: LinkCost::new(1e-7, 1e-10),
+            inter: LinkCost::new(1e-6, 1e-9),
+            mapping: Mapping::Block { ranks_per_node: 4 },
+        };
+        assert_eq!(m.link(0, 3), LinkCost::new(1e-7, 1e-10));
+        assert_eq!(m.link(3, 4), LinkCost::new(1e-6, 1e-9));
+        assert!(m.as_uniform().is_none());
+    }
+
+    #[test]
+    fn paper_h_matches_sweet_spots() {
+        // p = 2^h − 2 ⇒ h
+        assert_eq!(paper_h(2), 2);
+        assert_eq!(paper_h(6), 3);
+        assert_eq!(paper_h(14), 4);
+        assert_eq!(paper_h(254), 8);
+        // general p rounds up
+        assert_eq!(paper_h(288), 9);
+    }
+
+    #[test]
+    fn compute_cost() {
+        let c = ComputeCost::new(2e-10);
+        assert!((c.reduce(1000) - 2e-7).abs() < 1e-18);
+    }
+}

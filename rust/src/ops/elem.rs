@@ -1,0 +1,180 @@
+//! Element types that can flow through the collectives.
+
+use std::fmt::Debug;
+
+/// An element of the vectors being reduced.
+///
+/// `BYTES` feeds the cost model (the β term is per byte on the wire);
+/// `zero()` provides a fill value for receive buffers (it is *not* the
+/// reduction identity — that lives on the operator).
+pub trait Elem: Copy + Send + Sync + PartialEq + Debug + 'static {
+    /// Wire size of one element in bytes.
+    const BYTES: usize;
+    /// Short dtype name used for artifact lookup and table headers.
+    const DTYPE: &'static str;
+    /// A fill value for freshly allocated buffers.
+    fn zero() -> Self;
+}
+
+impl Elem for i32 {
+    const BYTES: usize = 4;
+    const DTYPE: &'static str = "int32";
+    fn zero() -> Self {
+        0
+    }
+}
+
+impl Elem for i64 {
+    const BYTES: usize = 8;
+    const DTYPE: &'static str = "int64";
+    fn zero() -> Self {
+        0
+    }
+}
+
+impl Elem for f32 {
+    const BYTES: usize = 4;
+    const DTYPE: &'static str = "float32";
+    fn zero() -> Self {
+        0.0
+    }
+}
+
+impl Elem for f64 {
+    const BYTES: usize = 8;
+    const DTYPE: &'static str = "float64";
+    fn zero() -> Self {
+        0.0
+    }
+}
+
+/// A 2×2 matrix over wrapping u32 — the classic example of an associative,
+/// non-commutative monoid. Used by tests to verify reduction ordering.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Mat2(pub [u32; 4]);
+
+impl Mat2 {
+    /// Identity matrix.
+    pub const IDENT: Mat2 = Mat2([1, 0, 0, 1]);
+
+    /// Wrapping matrix product `self * rhs`.
+    pub fn mul(self, rhs: Mat2) -> Mat2 {
+        let a = self.0;
+        let b = rhs.0;
+        Mat2([
+            a[0].wrapping_mul(b[0]).wrapping_add(a[1].wrapping_mul(b[2])),
+            a[0].wrapping_mul(b[1]).wrapping_add(a[1].wrapping_mul(b[3])),
+            a[2].wrapping_mul(b[0]).wrapping_add(a[3].wrapping_mul(b[2])),
+            a[2].wrapping_mul(b[1]).wrapping_add(a[3].wrapping_mul(b[3])),
+        ])
+    }
+}
+
+impl Elem for Mat2 {
+    const BYTES: usize = 16;
+    const DTYPE: &'static str = "mat2u32";
+    fn zero() -> Self {
+        Mat2([0; 4])
+    }
+}
+
+/// A contiguous rank interval `[lo, hi]`, or the poison / identity markers.
+///
+/// `SeqCheckOp` concatenates adjacent intervals and poisons everything else,
+/// so a final value of `Span::of(0, p-1)` proves the reduction visited the
+/// ranks in exactly ascending order using only associativity.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Span {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Span {
+    /// The identity element (empty interval).
+    pub const IDENT: Span = Span {
+        lo: u32::MAX,
+        hi: u32::MAX,
+    };
+    /// The absorbing poison element (order violation witness).
+    pub const POISON: Span = Span { lo: u32::MAX - 1, hi: u32::MAX - 1 };
+
+    /// Interval `[lo, hi]`.
+    pub fn of(lo: u32, hi: u32) -> Span {
+        Span { lo, hi }
+    }
+
+    /// Singleton interval for one rank.
+    pub fn rank(r: u32) -> Span {
+        Span::of(r, r)
+    }
+
+    pub fn is_ident(self) -> bool {
+        self == Span::IDENT
+    }
+
+    pub fn is_poison(self) -> bool {
+        self == Span::POISON
+    }
+
+    /// Ordered concatenation; poison on non-adjacency.
+    pub fn concat(self, rhs: Span) -> Span {
+        if self.is_poison() || rhs.is_poison() {
+            return Span::POISON;
+        }
+        if self.is_ident() {
+            return rhs;
+        }
+        if rhs.is_ident() {
+            return self;
+        }
+        if self.hi.wrapping_add(1) == rhs.lo {
+            Span::of(self.lo, rhs.hi)
+        } else {
+            Span::POISON
+        }
+    }
+}
+
+impl Elem for Span {
+    const BYTES: usize = 8;
+    const DTYPE: &'static str = "span";
+    fn zero() -> Self {
+        Span::IDENT
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat2_identity_and_assoc() {
+        let a = Mat2([1, 2, 3, 4]);
+        let b = Mat2([5, 6, 7, 8]);
+        let c = Mat2([2, 0, 1, 2]);
+        assert_eq!(a.mul(Mat2::IDENT), a);
+        assert_eq!(Mat2::IDENT.mul(a), a);
+        assert_eq!(a.mul(b).mul(c), a.mul(b.mul(c)));
+        assert_ne!(a.mul(b), b.mul(a)); // non-commutative
+    }
+
+    #[test]
+    fn span_concat_rules() {
+        let a = Span::of(0, 3);
+        let b = Span::of(4, 9);
+        assert_eq!(a.concat(b), Span::of(0, 9));
+        assert_eq!(b.concat(a), Span::POISON); // wrong order
+        assert_eq!(a.concat(Span::IDENT), a);
+        assert_eq!(Span::IDENT.concat(b), b);
+        assert_eq!(Span::POISON.concat(a), Span::POISON);
+        // gap poisons
+        assert_eq!(Span::of(0, 1).concat(Span::of(3, 4)), Span::POISON);
+    }
+
+    #[test]
+    fn span_assoc_on_adjacent_chain() {
+        let (a, b, c) = (Span::rank(0), Span::rank(1), Span::rank(2));
+        assert_eq!(a.concat(b).concat(c), a.concat(b.concat(c)));
+        assert_eq!(a.concat(b).concat(c), Span::of(0, 2));
+    }
+}

@@ -1,0 +1,35 @@
+//! Element types and reduction operators.
+//!
+//! The paper reduces vectors of `MPI_INT` with `MPI_SUM`, but the algorithm
+//! only requires an *associative* (not necessarily commutative) operator ⊙,
+//! and its post-order tree construction is specifically designed so that all
+//! partial reductions happen in rank order. We therefore keep the operator
+//! abstract ([`ReduceOp`]) and ship, besides the MPI-style arithmetic ops,
+//! two deliberately non-commutative operators used by the test suite to
+//! prove the implementation respects reduction order:
+//!
+//! * [`Mat2Op`] — 2×2 wrapping integer matrix multiplication;
+//! * [`SeqCheckOp`] — interval concatenation over [`Span`], which *poisons*
+//!   the result if two non-adjacent rank intervals are ever combined, i.e.
+//!   it is an executable witness of "reduced exactly in rank order".
+
+pub mod elem;
+pub mod reduce;
+
+pub use elem::{Elem, Mat2, Span};
+pub use reduce::{MaxOp, MinOp, OpKind, ProdOp, ReduceOp, SeqCheckOp, Side, SumOp};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_is_commutative_mat2_is_not() {
+        let s = SumOp;
+        assert!(ReduceOp::<i32>::commutative(&s));
+        let m = Mat2Op;
+        assert!(!ReduceOp::<Mat2>::commutative(&m));
+    }
+}
+
+pub use reduce::Mat2Op;

@@ -1,0 +1,266 @@
+//! Reduction operators over [`Elem`] slices.
+
+use super::elem::{Elem, Mat2, Span};
+
+/// Which side of ⊙ the *incoming* (received) block stands on.
+///
+/// Algorithm 1 computes `Y[j] ← t ⊙ Y[j]` for blocks received from children
+/// (incoming on the **left**) and `Y[j] ← Y[j] ⊙ t` at the lower-numbered
+/// dual root (incoming on the **right**). Getting this wrong is invisible
+/// with `MPI_SUM` but breaks non-commutative operators — the test suite
+/// covers both sides via [`Mat2Op`] and [`SeqCheckOp`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Side {
+    /// `acc ← incoming ⊙ acc`
+    Left,
+    /// `acc ← acc ⊙ incoming`
+    Right,
+}
+
+/// An associative binary reduction operator over element type `E`.
+pub trait ReduceOp<E: Elem>: Send + Sync {
+    /// The identity element of ⊙ (also used for padding partial blocks).
+    fn identity(&self) -> E;
+
+    /// `a ⊙ b` — order is significant for non-commutative operators.
+    fn combine(&self, a: E, b: E) -> E;
+
+    /// Whether ⊙ commutes; purely informational (algorithms never rely on it).
+    fn commutative(&self) -> bool {
+        false
+    }
+
+    /// Stable operator name, used for artifact lookup and reports.
+    fn name(&self) -> &'static str;
+
+    /// Element-wise in-place reduction of `incoming` into `acc`.
+    ///
+    /// Hot path: the default implementation is a plain loop; `SumOp` etc.
+    /// override nothing because LLVM auto-vectorizes the loop given the
+    /// concrete element type after monomorphization. The PJRT runtime
+    /// backend (see `runtime::ReduceEngine`) substitutes an XLA executable
+    /// for this call when enabled.
+    fn reduce_into(&self, acc: &mut [E], incoming: &[E], side: Side) {
+        debug_assert_eq!(acc.len(), incoming.len());
+        match side {
+            Side::Left => {
+                for (a, t) in acc.iter_mut().zip(incoming) {
+                    *a = self.combine(*t, *a);
+                }
+            }
+            Side::Right => {
+                for (a, t) in acc.iter_mut().zip(incoming) {
+                    *a = self.combine(*a, *t);
+                }
+            }
+        }
+    }
+}
+
+/// The operator vocabulary the CLI / harness can name.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpKind {
+    Sum,
+    Prod,
+    Max,
+    Min,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> Option<OpKind> {
+        match s {
+            "sum" => Some(OpKind::Sum),
+            "prod" => Some(OpKind::Prod),
+            "max" => Some(OpKind::Max),
+            "min" => Some(OpKind::Min),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Sum => "sum",
+            OpKind::Prod => "prod",
+            OpKind::Max => "max",
+            OpKind::Min => "min",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic ops (MPI_SUM / MPI_PROD / MPI_MAX / MPI_MIN analogues)
+// ---------------------------------------------------------------------------
+
+/// Element-wise addition (`MPI_SUM`). Wrapping for integers, IEEE for floats.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct SumOp;
+
+/// Element-wise product (`MPI_PROD`).
+#[derive(Clone, Copy, Default, Debug)]
+pub struct ProdOp;
+
+/// Element-wise maximum (`MPI_MAX`).
+#[derive(Clone, Copy, Default, Debug)]
+pub struct MaxOp;
+
+/// Element-wise minimum (`MPI_MIN`).
+#[derive(Clone, Copy, Default, Debug)]
+pub struct MinOp;
+
+macro_rules! arith_ops_int {
+    ($($t:ty),*) => {$(
+        impl ReduceOp<$t> for SumOp {
+            fn identity(&self) -> $t { 0 }
+            fn combine(&self, a: $t, b: $t) -> $t { a.wrapping_add(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "sum" }
+        }
+        impl ReduceOp<$t> for ProdOp {
+            fn identity(&self) -> $t { 1 }
+            fn combine(&self, a: $t, b: $t) -> $t { a.wrapping_mul(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "prod" }
+        }
+        impl ReduceOp<$t> for MaxOp {
+            fn identity(&self) -> $t { <$t>::MIN }
+            fn combine(&self, a: $t, b: $t) -> $t { a.max(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "max" }
+        }
+        impl ReduceOp<$t> for MinOp {
+            fn identity(&self) -> $t { <$t>::MAX }
+            fn combine(&self, a: $t, b: $t) -> $t { a.min(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "min" }
+        }
+    )*};
+}
+arith_ops_int!(i32, i64);
+
+macro_rules! arith_ops_float {
+    ($($t:ty),*) => {$(
+        impl ReduceOp<$t> for SumOp {
+            fn identity(&self) -> $t { 0.0 }
+            fn combine(&self, a: $t, b: $t) -> $t { a + b }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "sum" }
+        }
+        impl ReduceOp<$t> for ProdOp {
+            fn identity(&self) -> $t { 1.0 }
+            fn combine(&self, a: $t, b: $t) -> $t { a * b }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "prod" }
+        }
+        impl ReduceOp<$t> for MaxOp {
+            fn identity(&self) -> $t { <$t>::NEG_INFINITY }
+            fn combine(&self, a: $t, b: $t) -> $t { a.max(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "max" }
+        }
+        impl ReduceOp<$t> for MinOp {
+            fn identity(&self) -> $t { <$t>::INFINITY }
+            fn combine(&self, a: $t, b: $t) -> $t { a.min(b) }
+            fn commutative(&self) -> bool { true }
+            fn name(&self) -> &'static str { "min" }
+        }
+    )*};
+}
+arith_ops_float!(f32, f64);
+
+// ---------------------------------------------------------------------------
+// Non-commutative test operators
+// ---------------------------------------------------------------------------
+
+/// 2×2 wrapping-u32 matrix multiplication — associative, non-commutative.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct Mat2Op;
+
+impl ReduceOp<Mat2> for Mat2Op {
+    fn identity(&self) -> Mat2 {
+        Mat2::IDENT
+    }
+    fn combine(&self, a: Mat2, b: Mat2) -> Mat2 {
+        a.mul(b)
+    }
+    fn name(&self) -> &'static str {
+        "mat2"
+    }
+}
+
+/// Ordered interval concatenation over [`Span`] — associative, and an
+/// executable *order witness*: any out-of-order or non-adjacent combination
+/// poisons the result, so `allreduce(…) == Span::of(0, p-1)` proves the
+/// implementation reduced in exact rank order.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct SeqCheckOp;
+
+impl ReduceOp<Span> for SeqCheckOp {
+    fn identity(&self) -> Span {
+        Span::IDENT
+    }
+    fn combine(&self, a: Span, b: Span) -> Span {
+        a.concat(b)
+    }
+    fn name(&self) -> &'static str {
+        "seqcheck"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_into_left_vs_right() {
+        let op = Mat2Op;
+        let a = Mat2([1, 2, 3, 4]);
+        let t = Mat2([5, 6, 7, 8]);
+        let mut acc = [a];
+        op.reduce_into(&mut acc, &[t], Side::Left);
+        assert_eq!(acc[0], t.mul(a));
+        let mut acc = [a];
+        op.reduce_into(&mut acc, &[t], Side::Right);
+        assert_eq!(acc[0], a.mul(t));
+    }
+
+    #[test]
+    fn sum_reduce_into() {
+        let op = SumOp;
+        let mut acc = vec![1i32, 2, 3];
+        op.reduce_into(&mut acc, &[10, 20, 30], Side::Left);
+        assert_eq!(acc, vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn identities() {
+        assert_eq!(ReduceOp::<i32>::identity(&SumOp), 0);
+        assert_eq!(ReduceOp::<i32>::identity(&ProdOp), 1);
+        assert_eq!(ReduceOp::<i32>::identity(&MaxOp), i32::MIN);
+        assert_eq!(ReduceOp::<i32>::identity(&MinOp), i32::MAX);
+        assert_eq!(ReduceOp::<f64>::identity(&MaxOp), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn float_ops() {
+        assert_eq!(ReduceOp::<f32>::combine(&SumOp, 1.5, 2.5), 4.0);
+        assert_eq!(ReduceOp::<f64>::combine(&MinOp, 1.5, 2.5), 1.5);
+        assert_eq!(ReduceOp::<f64>::combine(&ProdOp, 3.0, 2.0), 6.0);
+    }
+
+    #[test]
+    fn opkind_parse() {
+        assert_eq!(OpKind::parse("sum"), Some(OpKind::Sum));
+        assert_eq!(OpKind::parse("min"), Some(OpKind::Min));
+        assert_eq!(OpKind::parse("xor"), None);
+        assert_eq!(OpKind::Prod.name(), "prod");
+    }
+
+    #[test]
+    fn seqcheck_detects_out_of_order() {
+        let op = SeqCheckOp;
+        let ordered = op.combine(op.combine(Span::rank(0), Span::rank(1)), Span::rank(2));
+        assert_eq!(ordered, Span::of(0, 2));
+        let swapped = op.combine(Span::rank(1), Span::rank(0));
+        assert!(swapped.is_poison());
+    }
+}

@@ -1,0 +1,159 @@
+//! Pipeline block partitioning and block-count selection.
+//!
+//! The paper divides each m-element vector into `b` successive blocks,
+//! `0 < b ≤ m`, of roughly `m/b` elements (§1.1). The evaluation fixes the
+//! *block size* at 16000 elements instead (§2), i.e. `b = ⌈m / 16000⌉`;
+//! [`Blocks`] supports both parameterizations, and
+//! [`Blocks::lemma_optimal`] applies the Pipelining Lemma of §1.2.
+
+use crate::error::{Error, Result};
+use crate::model::{lemma, LinkCost};
+use crate::util::div_ceil;
+
+/// The paper's compile-time pipeline block size (elements), §2.
+pub const PAPER_BLOCK_ELEMS: usize = 16_000;
+
+/// A balanced partition of an `m`-element vector into `b` blocks.
+///
+/// Block `k` covers `[k·m/b, (k+1)·m/b)` (integer arithmetic), so sizes
+/// differ by at most one element and concatenation is exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocks {
+    m: usize,
+    b: usize,
+}
+
+impl Blocks {
+    /// Partition into exactly `b` blocks (clamped to `[1, max(m,1)]`).
+    pub fn by_count(m: usize, b: usize) -> Blocks {
+        let b = b.clamp(1, m.max(1));
+        Blocks { m, b }
+    }
+
+    /// Partition into *exactly* `b` segments, allowing empty ones (`m < b`).
+    /// Used by the segment-based algorithms (ring, Rabenseifner), where the
+    /// segment count is fixed by the rank count, not the data size.
+    pub fn segments(m: usize, b: usize) -> Blocks {
+        Blocks { m, b: b.max(1) }
+    }
+
+    /// Partition into blocks of at most `block_elems` elements
+    /// (the paper's parameterization; `b = ⌈m / block_elems⌉`).
+    pub fn by_size(m: usize, block_elems: usize) -> Result<Blocks> {
+        if block_elems == 0 {
+            return Err(Error::Config("block size must be > 0".into()));
+        }
+        Ok(Blocks::by_count(m, div_ceil(m.max(1), block_elems)))
+    }
+
+    /// The Pipelining-Lemma optimal block count for a pipelined algorithm
+    /// with step structure `A + C·b` (§1.2) under `link`, for elements of
+    /// `elem_bytes` bytes.
+    pub fn lemma_optimal(
+        m: usize,
+        elem_bytes: usize,
+        a_steps: f64,
+        c_steps: f64,
+        link: LinkCost,
+    ) -> Blocks {
+        let (b, _t) = lemma::optimal_time(
+            a_steps,
+            c_steps,
+            link.alpha,
+            link.beta,
+            (m * elem_bytes) as f64,
+            m.max(1),
+        );
+        Blocks::by_count(m, b)
+    }
+
+    /// Total element count.
+    pub fn total(&self) -> usize {
+        self.m
+    }
+
+    /// Number of blocks (≥ 1).
+    pub fn count(&self) -> usize {
+        self.b
+    }
+
+    /// Element range `[lo, hi)` of block `k` (`k < count()`).
+    pub fn range(&self, k: usize) -> (usize, usize) {
+        debug_assert!(k < self.b);
+        (k * self.m / self.b, (k + 1) * self.m / self.b)
+    }
+
+    /// Size of block `k` in elements.
+    pub fn len(&self, k: usize) -> usize {
+        let (lo, hi) = self.range(k);
+        hi - lo
+    }
+
+    /// Largest block size (the `m/b` the cost formulas use).
+    pub fn max_len(&self) -> usize {
+        div_ceil(self.m, self.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_exact_and_balanced() {
+        for m in [0usize, 1, 5, 16, 100, 16001] {
+            for b in [1usize, 2, 3, 7, 16, 100] {
+                let blocks = Blocks::by_count(m, b);
+                let mut covered = 0;
+                let mut prev_hi = 0;
+                for k in 0..blocks.count() {
+                    let (lo, hi) = blocks.range(k);
+                    assert_eq!(lo, prev_hi, "m={m} b={b} k={k}");
+                    assert!(hi >= lo);
+                    covered += hi - lo;
+                    prev_hi = hi;
+                    // balanced within one element
+                    assert!(blocks.len(k) + 1 >= blocks.max_len());
+                }
+                assert_eq!(covered, m);
+            }
+        }
+    }
+
+    #[test]
+    fn segments_allow_empty() {
+        let s = Blocks::segments(3, 8);
+        assert_eq!(s.count(), 8);
+        let total: usize = (0..8).map(|k| s.len(k)).sum();
+        assert_eq!(total, 3);
+        assert_eq!(Blocks::segments(0, 4).count(), 4);
+        assert_eq!(Blocks::segments(5, 0).count(), 1);
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(Blocks::by_count(5, 100).count(), 5); // b ≤ m
+        assert_eq!(Blocks::by_count(5, 0).count(), 1); // b ≥ 1
+        assert_eq!(Blocks::by_count(0, 4).count(), 1); // m = 0 still one (empty) block
+        assert_eq!(Blocks::by_count(0, 4).len(0), 0);
+    }
+
+    #[test]
+    fn by_size_matches_paper() {
+        // the paper's fixed 16000-element blocks
+        let blocks = Blocks::by_size(8_388_608, PAPER_BLOCK_ELEMS).unwrap();
+        assert_eq!(blocks.count(), div_ceil(8_388_608, 16_000));
+        assert!(blocks.max_len() <= PAPER_BLOCK_ELEMS);
+        assert!(Blocks::by_size(10, 0).is_err());
+    }
+
+    #[test]
+    fn lemma_optimal_reasonable() {
+        let link = LinkCost::new(1e-6, 0.7e-9);
+        // dpdr at p = 286: A = 4h−6 = 30, C = 3
+        let blocks = Blocks::lemma_optimal(1_000_000, 4, 30.0, 3.0, link);
+        let b = blocks.count() as f64;
+        let ideal = (30.0_f64 * 0.7e-9 * 4e6 / (3.0 * 1e-6)).sqrt();
+        assert!((b - ideal).abs() <= 1.0, "b={b} ideal={ideal}");
+    }
+}

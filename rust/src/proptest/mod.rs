@@ -1,0 +1,151 @@
+//! A minimal property-testing substrate (the offline registry has no
+//! `proptest`/`quickcheck`, so we roll the 100 lines we need).
+//!
+//! Properties are closures over a [`Gen`]; [`forall`] drives N cases from a
+//! base seed and, on failure, retries the failing case with progressively
+//! *smaller* size hints (a crude but effective shrink), then panics with
+//! the reproducing seed.
+
+use crate::util::XorShift64;
+
+/// A source of sized random values for one test case.
+pub struct Gen {
+    rng: XorShift64,
+    /// Size hint in (0, 1]: shrunken re-runs scale ranges down by this.
+    size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: XorShift64::new(seed),
+            size: 1.0,
+        }
+    }
+
+    fn sized(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: XorShift64::new(seed),
+            size,
+        }
+    }
+
+    /// usize in `[lo, hi]`, with the upper end scaled by the size hint.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled_hi = lo + ((span as f64 * self.size).ceil() as usize).min(span);
+        self.rng.range(lo, scaled_hi)
+    }
+
+    /// One of the provided choices.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.range(0, items.len() - 1)]
+    }
+
+    /// A small i32 (overflow-safe for summation tests).
+    pub fn small_i32(&mut self) -> i32 {
+        self.rng.small_i32()
+    }
+
+    /// A vector of small i32 of the given length.
+    pub fn vec_i32(&mut self, len: usize) -> Vec<i32> {
+        self.rng.small_i32_vec(len)
+    }
+
+    /// A raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// A bool with probability 1/2.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` property cases derived from `base_seed`. The property
+/// returns `Err(description)` to signal failure.
+///
+/// On failure the case is re-run at smaller size hints; the smallest still-
+/// failing configuration is reported. Panics with a message embedding the
+/// seed so failures are reproducible.
+pub fn forall<F>(name: &str, cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry with smaller size hints, keep the last failure
+            let mut final_msg = msg;
+            let mut final_size = 1.0;
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen::sized(seed, size);
+                if let Err(m) = prop(&mut g) {
+                    final_msg = m;
+                    final_size = size;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {final_size}): {final_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("add-commutes", 50, 42, |g| {
+            let a = g.small_i32();
+            let b = g.small_i32();
+            if a.wrapping_add(b) == b.wrapping_add(a) {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("must-fail", 10, 1, |g| {
+            let v = g.usize_in(0, 100);
+            if v <= 100 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let items = [10, 20, 30];
+        for _ in 0..100 {
+            assert!(items.contains(g.choose(&items)));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

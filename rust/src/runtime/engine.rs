@@ -1,0 +1,299 @@
+//! PJRT engine: artifact loading, compilation caching, execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::ops::OpKind;
+
+/// Block sizes the AOT pipeline compiles kernels for (elements). Must stay
+/// in sync with `python/compile/aot.py::SIZES`; ascending.
+pub const COMPILED_SIZES: [usize; 3] = [1_024, 16_384, 131_072];
+
+/// Canonical artifact stem for a kernel variant, e.g.
+/// `combine2_sum_int32_16384`.
+pub fn artifact_name(arity: usize, op: OpKind, dtype: &str, n: usize) -> String {
+    format!("combine{arity}_{}_{dtype}_{n}", op.name())
+}
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct ReduceEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ReduceEngine {
+    /// Create an engine reading artifacts from `dir`.
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<ReduceEngine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(ReduceEngine {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Engine over `$DPDR_ARTIFACTS` or `./artifacts`.
+    pub fn with_default_dir() -> Result<ReduceEngine> {
+        let dir = std::env::var("DPDR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        ReduceEngine::new(dir)
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if the artifact directory contains the given kernel.
+    pub fn has_artifact(&self, stem: &str) -> bool {
+        self.dir.join(format!("{stem}.hlo.txt")).is_file()
+    }
+
+    /// The smallest compiled size ≥ `len`, or the largest available if
+    /// `len` exceeds them all (callers then chunk).
+    pub fn pick_size(len: usize) -> usize {
+        for &s in &COMPILED_SIZES {
+            if len <= s {
+                return s;
+            }
+        }
+        *COMPILED_SIZES.last().unwrap()
+    }
+
+    /// Load (and cache) the executable for `stem`.
+    pub fn load(&mut self, stem: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(stem) {
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                Error::Runtime(format!("loading {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compiling {stem}: {e}")))?;
+            self.cache.insert(stem.to_string(), exe);
+        }
+        Ok(self.cache.get(stem).unwrap())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute `acc ← lhs ⊙ rhs` element-wise over i32 blocks via the
+    /// compiled `combine2` kernel, padding to the compiled size with the
+    /// operator identity. `lhs`/`rhs` must have equal length; the result is
+    /// written into `out` (same length).
+    pub fn combine2_i32(
+        &mut self,
+        op: OpKind,
+        lhs: &[i32],
+        rhs: &[i32],
+        out: &mut [i32],
+    ) -> Result<()> {
+        debug_assert_eq!(lhs.len(), rhs.len());
+        debug_assert_eq!(lhs.len(), out.len());
+        let ident = identity_i32(op);
+        self.run_chunks(op, "int32", lhs.len(), |eng, lo, hi, n| {
+            let a = padded_i32(&lhs[lo..hi], n, ident);
+            let b = padded_i32(&rhs[lo..hi], n, ident);
+            let stem = artifact_name(2, op, "int32", n);
+            let exe = eng.load(&stem)?;
+            let la = xla::Literal::vec1(&a);
+            let lb = xla::Literal::vec1(&b);
+            let result = exec1(exe, &[la, lb])?;
+            let v = result
+                .to_vec::<i32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            out[lo..hi].copy_from_slice(&v[..hi - lo]);
+            Ok(())
+        })
+    }
+
+    /// Same for f32.
+    pub fn combine2_f32(
+        &mut self,
+        op: OpKind,
+        lhs: &[f32],
+        rhs: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(lhs.len(), rhs.len());
+        debug_assert_eq!(lhs.len(), out.len());
+        let ident = identity_f32(op);
+        self.run_chunks(op, "float32", lhs.len(), |eng, lo, hi, n| {
+            let a = padded_f32(&lhs[lo..hi], n, ident);
+            let b = padded_f32(&rhs[lo..hi], n, ident);
+            let stem = artifact_name(2, op, "float32", n);
+            let exe = eng.load(&stem)?;
+            let la = xla::Literal::vec1(&a);
+            let lb = xla::Literal::vec1(&b);
+            let result = exec1(exe, &[la, lb])?;
+            let v = result
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            out[lo..hi].copy_from_slice(&v[..hi - lo]);
+            Ok(())
+        })
+    }
+
+    /// The fused 3-input kernel `t1 ⊙ (t0 ⊙ y)` of the inner tree node
+    /// (one XLA call instead of two).
+    pub fn combine3_i32(
+        &mut self,
+        op: OpKind,
+        t1: &[i32],
+        t0: &[i32],
+        y: &[i32],
+        out: &mut [i32],
+    ) -> Result<()> {
+        debug_assert_eq!(t0.len(), y.len());
+        debug_assert_eq!(t1.len(), y.len());
+        debug_assert_eq!(out.len(), y.len());
+        let ident = identity_i32(op);
+        self.run_chunks(op, "int32", y.len(), |eng, lo, hi, n| {
+            let a = padded_i32(&t1[lo..hi], n, ident);
+            let b = padded_i32(&t0[lo..hi], n, ident);
+            let c = padded_i32(&y[lo..hi], n, ident);
+            let stem = artifact_name(3, op, "int32", n);
+            let exe = eng.load(&stem)?;
+            let result = exec1(
+                exe,
+                &[
+                    xla::Literal::vec1(&a),
+                    xla::Literal::vec1(&b),
+                    xla::Literal::vec1(&c),
+                ],
+            )?;
+            let v = result
+                .to_vec::<i32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            out[lo..hi].copy_from_slice(&v[..hi - lo]);
+            Ok(())
+        })
+    }
+
+    /// Drive `f` over chunks of at most the largest compiled size.
+    fn run_chunks<F>(&mut self, _op: OpKind, _dtype: &str, len: usize, mut f: F) -> Result<()>
+    where
+        F: FnMut(&mut ReduceEngine, usize, usize, usize) -> Result<()>,
+    {
+        if len == 0 {
+            return Ok(());
+        }
+        let max = *COMPILED_SIZES.last().unwrap();
+        let mut lo = 0;
+        while lo < len {
+            let hi = (lo + max).min(len);
+            let n = ReduceEngine::pick_size(hi - lo);
+            f(self, lo, hi, n)?;
+            lo = hi;
+        }
+        Ok(())
+    }
+}
+
+/// Execute and unwrap the single tupled output as a Literal.
+fn exec1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let outs = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+    let lit = outs[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal_sync: {e}")))?;
+    // aot.py lowers with return_tuple=True → a 1-tuple
+    lit.to_tuple1()
+        .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))
+}
+
+fn identity_i32(op: OpKind) -> i32 {
+    match op {
+        OpKind::Sum => 0,
+        OpKind::Prod => 1,
+        OpKind::Max => i32::MIN,
+        OpKind::Min => i32::MAX,
+    }
+}
+
+fn identity_f32(op: OpKind) -> f32 {
+    match op {
+        OpKind::Sum => 0.0,
+        OpKind::Prod => 1.0,
+        OpKind::Max => f32::NEG_INFINITY,
+        OpKind::Min => f32::INFINITY,
+    }
+}
+
+/// Borrow the slice when it already matches the compiled size; otherwise
+/// pad a copy with the operator identity (perf: the exact-size case — the
+/// steady state for full pipeline blocks — skips one buffer copy per
+/// operand per call).
+fn padded_i32<'a>(src: &'a [i32], n: usize, ident: i32) -> std::borrow::Cow<'a, [i32]> {
+    if src.len() == n {
+        std::borrow::Cow::Borrowed(src)
+    } else {
+        let mut v = Vec::with_capacity(n);
+        v.extend_from_slice(src);
+        v.resize(n, ident);
+        std::borrow::Cow::Owned(v)
+    }
+}
+
+fn padded_f32<'a>(src: &'a [f32], n: usize, ident: f32) -> std::borrow::Cow<'a, [f32]> {
+    if src.len() == n {
+        std::borrow::Cow::Borrowed(src)
+    } else {
+        let mut v = Vec::with_capacity(n);
+        v.extend_from_slice(src);
+        v.resize(n, ident);
+        std::borrow::Cow::Owned(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_naming() {
+        assert_eq!(
+            artifact_name(2, OpKind::Sum, "int32", 16_384),
+            "combine2_sum_int32_16384"
+        );
+        assert_eq!(
+            artifact_name(3, OpKind::Max, "float32", 1_024),
+            "combine3_max_float32_1024"
+        );
+    }
+
+    #[test]
+    fn size_picking() {
+        assert_eq!(ReduceEngine::pick_size(0), 1_024);
+        assert_eq!(ReduceEngine::pick_size(1_024), 1_024);
+        assert_eq!(ReduceEngine::pick_size(1_025), 16_384);
+        assert_eq!(ReduceEngine::pick_size(16_000), 16_384);
+        assert_eq!(ReduceEngine::pick_size(1 << 20), 131_072);
+    }
+
+    #[test]
+    fn identities() {
+        assert_eq!(identity_i32(OpKind::Sum), 0);
+        assert_eq!(identity_i32(OpKind::Min), i32::MAX);
+        assert_eq!(identity_f32(OpKind::Max), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(padded_i32(&[1, 2], 4, 0).as_ref(), &[1, 2, 0, 0]);
+        assert_eq!(padded_f32(&[1.0], 2, 9.0).as_ref(), &[1.0, 9.0]);
+        // exact size borrows (no copy)
+        assert!(matches!(
+            padded_i32(&[1, 2], 2, 0),
+            std::borrow::Cow::Borrowed(_)
+        ));
+    }
+}

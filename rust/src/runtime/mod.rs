@@ -1,0 +1,15 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas reduction kernels
+//! (HLO text under `artifacts/`, produced once by `make artifacts`) and
+//! executes them from the Rust hot path. Python never runs at request time.
+//!
+//! The artifacts implement the block-wise `MPI_Reduce_local` of the
+//! algorithm — `combine2(x, y) = x ⊙ y` element-wise over a fixed-size
+//! block — for each (arity, op, dtype, block size) variant. Arbitrary
+//! block lengths are handled by padding with the operator identity up to
+//! the smallest compiled size (see [`ReduceEngine::pick_size`]).
+
+pub mod engine;
+pub mod ops;
+
+pub use engine::{artifact_name, ReduceEngine, COMPILED_SIZES};
+pub use ops::{EngineCell, PjrtOp, ReduceBackend};

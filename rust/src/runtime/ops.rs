@@ -1,0 +1,167 @@
+//! [`ReduceOp`] adapters over the PJRT engine, so the collectives can run
+//! their block reductions through the AOT-compiled JAX/Pallas kernels with
+//! zero changes to algorithm code.
+
+use std::sync::{Arc, Mutex};
+
+use super::engine::ReduceEngine;
+use crate::ops::{OpKind, ReduceOp, Side};
+
+/// A `Send` cell around the engine.
+///
+/// SAFETY: the `xla` crate's `PjRtClient` wraps the C++ client in an `Rc`,
+/// which makes it `!Send`, but the underlying PJRT CPU client is
+/// thread-safe and the `Rc` reference counter is only ever touched while
+/// the owning [`Mutex`] is held (we never clone the client out of the
+/// cell), so moving the cell between threads is sound.
+pub struct EngineCell(pub ReduceEngine);
+unsafe impl Send for EngineCell {}
+
+/// Which implementation performs the block-wise ⊙.
+#[derive(Clone)]
+pub enum ReduceBackend {
+    /// The plain (auto-vectorized) Rust loop.
+    Native,
+    /// The AOT-compiled JAX/Pallas kernel via PJRT.
+    Pjrt(Arc<Mutex<EngineCell>>),
+}
+
+impl ReduceBackend {
+    /// A PJRT backend over the default artifact directory.
+    pub fn pjrt_default() -> crate::error::Result<ReduceBackend> {
+        Ok(ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(
+            ReduceEngine::with_default_dir()?,
+        )))))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceBackend::Native => "native",
+            ReduceBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// An i32 reduction operator whose `reduce_into` dispatches to the chosen
+/// backend. Scalar `combine` is always native (tree bookkeeping only).
+#[derive(Clone)]
+pub struct PjrtOp {
+    kind: OpKind,
+    backend: ReduceBackend,
+}
+
+impl PjrtOp {
+    pub fn new(kind: OpKind, backend: ReduceBackend) -> PjrtOp {
+        PjrtOp { kind, backend }
+    }
+
+    pub fn kind(&self) -> OpKind {
+        self.kind
+    }
+
+    fn scalar(&self, a: i32, b: i32) -> i32 {
+        match self.kind {
+            OpKind::Sum => a.wrapping_add(b),
+            OpKind::Prod => a.wrapping_mul(b),
+            OpKind::Max => a.max(b),
+            OpKind::Min => a.min(b),
+        }
+    }
+}
+
+impl ReduceOp<i32> for PjrtOp {
+    fn identity(&self) -> i32 {
+        match self.kind {
+            OpKind::Sum => 0,
+            OpKind::Prod => 1,
+            OpKind::Max => i32::MIN,
+            OpKind::Min => i32::MAX,
+        }
+    }
+
+    fn combine(&self, a: i32, b: i32) -> i32 {
+        self.scalar(a, b)
+    }
+
+    fn commutative(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn reduce_into(&self, acc: &mut [i32], incoming: &[i32], side: Side) {
+        match &self.backend {
+            ReduceBackend::Native => {
+                // the default element loop (side matters only for
+                // non-commutative ops; these four are commutative)
+                match side {
+                    Side::Left => {
+                        for (a, t) in acc.iter_mut().zip(incoming) {
+                            *a = self.scalar(*t, *a);
+                        }
+                    }
+                    Side::Right => {
+                        for (a, t) in acc.iter_mut().zip(incoming) {
+                            *a = self.scalar(*a, *t);
+                        }
+                    }
+                }
+            }
+            ReduceBackend::Pjrt(engine) => {
+                let mut cell = engine.lock().unwrap();
+                let engine = &mut cell.0;
+                // combine2(lhs, rhs) = lhs ⊙ rhs
+                let (lhs, rhs): (&[i32], Vec<i32>) = match side {
+                    Side::Left => (incoming, acc.to_vec()),
+                    Side::Right => {
+                        let a = acc.to_vec();
+                        // borrow juggling: lhs must outlive; use acc copy as lhs
+                        let mut out = vec![0i32; acc.len()];
+                        engine
+                            .combine2_i32(self.kind, &a, incoming, &mut out)
+                            .expect("pjrt combine2 failed");
+                        acc.copy_from_slice(&out);
+                        return;
+                    }
+                };
+                let mut out = vec![0i32; acc.len()];
+                engine
+                    .combine2_i32(self.kind, lhs, &rhs, &mut out)
+                    .expect("pjrt combine2 failed");
+                acc.copy_from_slice(&out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_matches_sum() {
+        let op = PjrtOp::new(OpKind::Sum, ReduceBackend::Native);
+        let mut acc = vec![1, 2, 3];
+        op.reduce_into(&mut acc, &[10, 20, 30], Side::Left);
+        assert_eq!(acc, vec![11, 22, 33]);
+        assert_eq!(op.identity(), 0);
+        assert_eq!(op.combine(3, 4), 7);
+        assert_eq!(ReduceBackend::Native.name(), "native");
+    }
+
+    #[test]
+    fn min_max_prod_native() {
+        for (kind, a, b, want) in [
+            (OpKind::Min, 3, -1, -1),
+            (OpKind::Max, 3, -1, 3),
+            (OpKind::Prod, 3, -2, -6),
+        ] {
+            let op = PjrtOp::new(kind, ReduceBackend::Native);
+            let mut acc = vec![a];
+            op.reduce_into(&mut acc, &[b], Side::Left);
+            assert_eq!(acc, vec![want], "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Binomial trees, the shape behind the non-pipelined `MPI_Reduce` /
+//! `MPI_Bcast` baselines (evaluation item 2 in the paper).
+//!
+//! Ranks are virtualized around `root` (`vrank = (rank − root) mod p`), the
+//! standard MPI library trick. With `root = 0` the reduction order is
+//! rank-ascending (see `collectives::reduce_bcast`), which the
+//! non-commutative tests rely on.
+
+/// A binomial tree over `p` ranks rooted at `root`.
+#[derive(Clone, Copy, Debug)]
+pub struct BinomialTree {
+    pub p: usize,
+    pub root: usize,
+}
+
+impl BinomialTree {
+    pub fn new(p: usize, root: usize) -> BinomialTree {
+        debug_assert!(p >= 1 && root < p);
+        BinomialTree { p, root }
+    }
+
+    #[inline]
+    fn vrank(&self, rank: usize) -> usize {
+        (rank + self.p - self.root) % self.p
+    }
+
+    #[inline]
+    fn unvrank(&self, v: usize) -> usize {
+        (v + self.root) % self.p
+    }
+
+    /// Parent of `rank` (`None` for the root): clear the lowest set bit of
+    /// the virtual rank.
+    pub fn parent(&self, rank: usize) -> Option<usize> {
+        let v = self.vrank(rank);
+        if v == 0 {
+            return None;
+        }
+        let lsb = v & v.wrapping_neg();
+        Some(self.unvrank(v & !lsb))
+    }
+
+    /// Children of `rank`, in *increasing virtual-rank distance* order:
+    /// `v + 1, v + 2, v + 4, …` below the next power-of-two boundary.
+    pub fn children(&self, rank: usize) -> Vec<usize> {
+        let v = self.vrank(rank);
+        let mut out = Vec::new();
+        let mut bit = 1usize;
+        // children are v | bit for bit below v's lowest set bit (root: all bits)
+        let limit = if v == 0 { self.p.next_power_of_two() } else { v & v.wrapping_neg() };
+        while bit < limit {
+            let c = v | bit;
+            if c < self.p {
+                out.push(self.unvrank(c));
+            }
+            bit <<= 1;
+        }
+        out
+    }
+
+    /// Number of communication rounds (`⌈log2 p⌉`).
+    pub fn rounds(&self) -> usize {
+        crate::util::log2_ceil(self.p) as usize
+    }
+
+    /// The inclusive virtual-rank interval covered by `rank`'s subtree:
+    /// `[v, min(v + lsb(v), p) − 1]` (used by order-preserving reduction).
+    pub fn subtree_vrange(&self, rank: usize) -> (usize, usize) {
+        let v = self.vrank(rank);
+        let span = if v == 0 {
+            self.p
+        } else {
+            v & v.wrapping_neg()
+        };
+        (v, (v + span).min(self.p) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_has_log_children() {
+        let t = BinomialTree::new(8, 0);
+        assert_eq!(t.children(0), vec![1, 2, 4]);
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.rounds(), 3);
+    }
+
+    #[test]
+    fn parent_child_symmetry() {
+        for p in 1..=40usize {
+            for root in [0, p / 2, p - 1] {
+                let t = BinomialTree::new(p, root);
+                for r in 0..p {
+                    for c in t.children(r) {
+                        assert_eq!(t.parent(c), Some(r), "p={p} root={root} r={r} c={c}");
+                    }
+                    if let Some(par) = t.parent(r) {
+                        assert!(t.children(par).contains(&r));
+                    }
+                }
+                // exactly p-1 edges
+                let edges: usize = (0..p).map(|r| t.children(r).len()).sum();
+                assert_eq!(edges, p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_ranges_partition() {
+        let t = BinomialTree::new(13, 0);
+        // children of root partition [1, 12]
+        let mut covered = vec![false; 13];
+        covered[0] = true;
+        for c in t.children(0) {
+            let (lo, hi) = t.subtree_vrange(c);
+            for v in lo..=hi {
+                assert!(!covered[v]);
+                covered[v] = true;
+            }
+        }
+        assert!(covered.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn non_zero_root() {
+        let t = BinomialTree::new(6, 4);
+        assert_eq!(t.parent(4), None);
+        // all other ranks reach the root
+        for r in 0..6 {
+            if r == 4 {
+                continue;
+            }
+            let mut cur = r;
+            let mut hops = 0;
+            while let Some(p) = t.parent(cur) {
+                cur = p;
+                hops += 1;
+                assert!(hops <= 10);
+            }
+            assert_eq!(cur, 4);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! The paper's dual-root forest: two post-order binary trees with
+//! communicating roots.
+//!
+//! Ranks `[0, q)` form tree **A** (root `q−1`, the *lower* root), ranks
+//! `[q, p)` form tree **B** (root `p−1`, the *upper* root). The split is as
+//! even as possible; for the paper's sweet spot `p + 2 = 2^h` both trees
+//! are perfect with height `h − 2`.
+//!
+//! At the dual exchange the lower root computes `Y[j] ⊙ t` and the upper
+//! root `t ⊙ Y[j]` so that the result is the in-rank-order product
+//! `(⊙_{0..q-1} x_k) ⊙ (⊙_{q..p-1} x_k)` (paper, Algorithm 1 line 9).
+
+use super::postorder::PostOrderTree;
+use crate::error::{Error, Result};
+
+/// Which of the two trees a rank belongs to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TreeId {
+    A,
+    B,
+}
+
+/// Everything a rank needs to know to run Algorithm 1.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct NodeRole {
+    pub tree: TreeId,
+    /// Depth within the own tree (root = 0).
+    pub depth: usize,
+    /// `[first_child, second_child]`; first child is `rank − 1` when present.
+    pub children: [Option<usize>; 2],
+    /// Parent within the own tree; `None` for the two roots.
+    pub parent: Option<usize>,
+    /// The other tree's root, set only on the two roots.
+    pub dual: Option<usize>,
+    /// True on the lower-numbered root (tree A's root): it combines the
+    /// dual's contribution on the right.
+    pub lower_root: bool,
+}
+
+/// The dual-root forest over `p` ranks (`p ≥ 2`).
+#[derive(Clone, Debug)]
+pub struct DualRootForest {
+    pub a: PostOrderTree,
+    pub b: PostOrderTree,
+    p: usize,
+}
+
+impl DualRootForest {
+    /// Build the forest; tree A gets `⌈p/2⌉` ranks.
+    pub fn new(p: usize) -> Result<DualRootForest> {
+        if p < 2 {
+            return Err(Error::Config(format!(
+                "dual-root forest needs p >= 2, got {p}"
+            )));
+        }
+        let q = (p + 1) / 2;
+        Ok(DualRootForest {
+            a: PostOrderTree::new(0, q - 1)?,
+            b: PostOrderTree::new(q, p - 1)?,
+            p,
+        })
+    }
+
+    /// Number of ranks.
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    /// First rank of tree B (== size of tree A).
+    pub fn split(&self) -> usize {
+        self.b.lo
+    }
+
+    /// The two roots `(lower, upper)`.
+    pub fn roots(&self) -> (usize, usize) {
+        (self.a.root(), self.b.root())
+    }
+
+    /// Max height over the two trees.
+    pub fn height(&self) -> usize {
+        self.a.height.max(self.b.height)
+    }
+
+    /// The tree containing `rank`.
+    pub fn tree_of(&self, rank: usize) -> &PostOrderTree {
+        if rank < self.b.lo {
+            &self.a
+        } else {
+            &self.b
+        }
+    }
+
+    /// Per-rank role for Algorithm 1.
+    pub fn role(&self, rank: usize) -> Result<NodeRole> {
+        if rank >= self.p {
+            return Err(Error::Config(format!(
+                "rank {rank} out of range for p={}",
+                self.p
+            )));
+        }
+        let (tree_id, tree) = if rank < self.b.lo {
+            (TreeId::A, &self.a)
+        } else {
+            (TreeId::B, &self.b)
+        };
+        let is_root = rank == tree.root();
+        let dual = if is_root {
+            Some(if tree_id == TreeId::A {
+                self.b.root()
+            } else {
+                self.a.root()
+            })
+        } else {
+            None
+        };
+        Ok(NodeRole {
+            tree: tree_id,
+            depth: tree.depth(rank),
+            children: tree.children(rank),
+            parent: tree.parent(rank),
+            dual,
+            lower_root: is_root && tree_id == TreeId::A,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_forests() {
+        let f = DualRootForest::new(2).unwrap();
+        assert_eq!(f.roots(), (0, 1));
+        let r0 = f.role(0).unwrap();
+        assert!(r0.lower_root);
+        assert_eq!(r0.dual, Some(1));
+        assert_eq!(r0.children, [None, None]);
+        let r1 = f.role(1).unwrap();
+        assert!(!r1.lower_root);
+        assert_eq!(r1.dual, Some(0));
+    }
+
+    #[test]
+    fn three_ranks() {
+        let f = DualRootForest::new(3).unwrap();
+        // q = 2: A = [0,1] root 1, B = [2,2] root 2
+        assert_eq!(f.roots(), (1, 2));
+        assert_eq!(f.role(0).unwrap().parent, Some(1));
+        assert_eq!(f.role(1).unwrap().children, [Some(0), None]);
+        assert_eq!(f.role(2).unwrap().children, [None, None]);
+        assert_eq!(f.role(2).unwrap().dual, Some(1));
+    }
+
+    #[test]
+    fn paper_sweet_spot_is_perfect() {
+        // p + 2 = 2^h → both trees perfect with height h − 2
+        for h in 2..=10usize {
+            let p = (1usize << h) - 2;
+            let f = DualRootForest::new(p).unwrap();
+            assert_eq!(f.a.size(), f.b.size());
+            assert_eq!(f.a.height, h - 2, "p={p}");
+            assert_eq!(f.b.height, h - 2, "p={p}");
+        }
+    }
+
+    #[test]
+    fn roles_are_consistent() {
+        for p in 2..=65usize {
+            let f = DualRootForest::new(p).unwrap();
+            let (lo_root, hi_root) = f.roots();
+            assert_eq!(hi_root, p - 1);
+            let mut roots_seen = 0;
+            for r in 0..p {
+                let role = f.role(r).unwrap();
+                if role.dual.is_some() {
+                    roots_seen += 1;
+                    assert!(role.parent.is_none());
+                    assert!(r == lo_root || r == hi_root);
+                } else {
+                    assert!(role.parent.is_some());
+                }
+                if role.lower_root {
+                    assert_eq!(r, lo_root);
+                }
+                // first child is rank-1 when present
+                if let Some(c0) = role.children[0] {
+                    assert_eq!(c0, r - 1);
+                }
+            }
+            assert_eq!(roots_seen, 2);
+        }
+    }
+
+    #[test]
+    fn p1_rejected() {
+        assert!(DualRootForest::new(1).is_err());
+        assert!(DualRootForest::new(0).is_err());
+    }
+
+    #[test]
+    fn split_sizes_balanced() {
+        for p in 2..=64usize {
+            let f = DualRootForest::new(p).unwrap();
+            let qa = f.a.size();
+            let qb = f.b.size();
+            assert!(qa == qb || qa == qb + 1, "p={p}: {qa} vs {qb}");
+            assert_eq!(qa + qb, p);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Rank → compute-node mappings for hierarchical (clustered) machines.
+//!
+//! The paper's Hydra runs place 8 MPI processes on each of 36 nodes and
+//! §3 explicitly leaves "the role of the hierarchical structure (network
+//! and nodes)" as an open question — our A4 ablation answers it in-model:
+//! the hierarchical cost model charges different (α, β) for intra-node vs
+//! inter-node edges, and the mapping decides which edges are which.
+
+/// How consecutive ranks are laid out over nodes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Mapping {
+    /// Ranks 0..k-1 on node 0, k..2k-1 on node 1, … ("by node", the common
+    /// default; k = ranks per node).
+    Block { ranks_per_node: usize },
+    /// Rank r on node r mod n ("round robin" / cyclic over n nodes).
+    RoundRobin { nodes: usize },
+}
+
+/// The node hosting `rank` under `mapping`.
+pub fn node_of(mapping: Mapping, rank: usize) -> usize {
+    match mapping {
+        Mapping::Block { ranks_per_node } => {
+            debug_assert!(ranks_per_node > 0);
+            rank / ranks_per_node
+        }
+        Mapping::RoundRobin { nodes } => {
+            debug_assert!(nodes > 0);
+            rank % nodes
+        }
+    }
+}
+
+impl Mapping {
+    /// Parse "block:8" / "rr:36".
+    pub fn parse(s: &str) -> Option<Mapping> {
+        let (kind, n) = s.split_once(':')?;
+        let n: usize = n.parse().ok().filter(|&n| n > 0)?;
+        match kind {
+            "block" => Some(Mapping::Block { ranks_per_node: n }),
+            "rr" => Some(Mapping::RoundRobin { nodes: n }),
+            _ => None,
+        }
+    }
+
+    /// True when `a` and `b` share a node.
+    pub fn same_node(self, a: usize, b: usize) -> bool {
+        node_of(self, a) == node_of(self, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_mapping() {
+        let m = Mapping::Block { ranks_per_node: 8 };
+        assert_eq!(node_of(m, 0), 0);
+        assert_eq!(node_of(m, 7), 0);
+        assert_eq!(node_of(m, 8), 1);
+        assert_eq!(node_of(m, 287), 35); // the paper's 36x8 layout
+        assert!(m.same_node(0, 7));
+        assert!(!m.same_node(7, 8));
+    }
+
+    #[test]
+    fn round_robin_mapping() {
+        let m = Mapping::RoundRobin { nodes: 36 };
+        assert_eq!(node_of(m, 0), 0);
+        assert_eq!(node_of(m, 36), 0);
+        assert_eq!(node_of(m, 37), 1);
+        assert!(m.same_node(1, 37));
+        assert!(!m.same_node(1, 2));
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!(
+            Mapping::parse("block:8"),
+            Some(Mapping::Block { ranks_per_node: 8 })
+        );
+        assert_eq!(Mapping::parse("rr:36"), Some(Mapping::RoundRobin { nodes: 36 }));
+        assert_eq!(Mapping::parse("block:0"), None);
+        assert_eq!(Mapping::parse("weird:3"), None);
+        assert_eq!(Mapping::parse("block8"), None);
+    }
+}

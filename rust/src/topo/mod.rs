@@ -1,0 +1,16 @@
+//! Process topologies: the paper's post-order binary trees and dual-root
+//! forest, plus the tree/graph shapes needed by the baseline algorithms
+//! (binomial trees, ring, hypercube neighborhoods, two-tree) and the
+//! rank→node mappings of a clustered machine.
+
+pub mod binomial;
+pub mod dualroot;
+pub mod mapping;
+pub mod postorder;
+pub mod twotree;
+
+pub use binomial::BinomialTree;
+pub use dualroot::{DualRootForest, NodeRole, TreeId};
+pub use mapping::{node_of, Mapping};
+pub use postorder::PostOrderTree;
+pub use twotree::TwoTree;

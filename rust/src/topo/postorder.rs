@@ -1,0 +1,256 @@
+//! Post-order numbered, as-balanced-as-possible binary trees.
+//!
+//! The paper (§1.1): *"the subtree rooted at some processor i consists of
+//! successively numbered processors [i′, …, i″] and [i″+1, …, i−1] for some
+//! child processors i′, i″ < i. The first child of processor i is processor
+//! i−1, and the second child is processor i″."*
+//!
+//! Consequences we rely on:
+//! * the root of the range `[lo, hi]` is `hi` (post-order: root last);
+//! * every subtree covers a *consecutive* rank interval, so reductions
+//!   combined as `(second-child) ⊙ (first-child) ⊙ own` need only
+//!   associativity — verified by `SeqCheckOp` tests;
+//! * for a perfect tree (`n = 2^k − 1`) the height is `k − 1`.
+
+use crate::error::{Error, Result};
+
+/// A post-order numbered binary tree over the inclusive rank range
+/// `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct PostOrderTree {
+    /// Lowest rank in the tree.
+    pub lo: usize,
+    /// Highest rank in the tree; also the root (post-order).
+    pub hi: usize,
+    /// Height of the tree (max depth; a single node has height 0).
+    pub height: usize,
+    parent: Vec<Option<usize>>,
+    /// `[first_child, second_child]` per node. The first child is `i − 1`
+    /// (covering the upper sub-range), the second child the root of the
+    /// lower sub-range, matching the paper's numbering.
+    children: Vec<[Option<usize>; 2]>,
+    depth: Vec<usize>,
+}
+
+impl PostOrderTree {
+    /// Build the tree over `[lo, hi]`.
+    pub fn new(lo: usize, hi: usize) -> Result<PostOrderTree> {
+        if lo > hi {
+            return Err(Error::Config(format!(
+                "post-order tree range [{lo}, {hi}] is empty"
+            )));
+        }
+        let n = hi - lo + 1;
+        let mut t = PostOrderTree {
+            lo,
+            hi,
+            height: 0,
+            parent: vec![None; n],
+            children: vec![[None, None]; n],
+            depth: vec![0; n],
+        };
+        t.build(lo, hi, 0, None);
+        t.height = t.depth.iter().copied().max().unwrap_or(0);
+        Ok(t)
+    }
+
+    /// Recursive construction: root of `[lo, hi]` is `hi`; the remaining
+    /// `[lo, hi-1]` splits into a lower (second-child) part of
+    /// `⌊(n−1)/2⌋` nodes and an upper (first-child) part rooted at `hi−1`.
+    fn build(&mut self, lo: usize, hi: usize, depth: usize, parent: Option<usize>) {
+        let i = self.idx(hi);
+        self.parent[i] = parent;
+        self.depth[i] = depth;
+        let rest = hi - lo; // nodes below the root
+        if rest == 0 {
+            return; // leaf
+        }
+        let n_second = (rest) / 2; // size of the lower, second-child subtree
+        if n_second == 0 {
+            // only the first child (i − 1) exists
+            self.children[i] = [Some(hi - 1), None];
+            self.build(lo, hi - 1, depth + 1, Some(hi));
+        } else {
+            let mid = lo + n_second - 1; // second child root (covers [lo, mid])
+            self.children[i] = [Some(hi - 1), Some(mid)];
+            self.build(mid + 1, hi - 1, depth + 1, Some(hi)); // first child
+            self.build(lo, mid, depth + 1, Some(hi)); // second child
+        }
+    }
+
+    #[inline]
+    fn idx(&self, rank: usize) -> usize {
+        debug_assert!(self.contains(rank));
+        rank - self.lo
+    }
+
+    /// Number of nodes.
+    pub fn size(&self) -> usize {
+        self.hi - self.lo + 1
+    }
+
+    /// The root rank (`hi`, by post-order numbering).
+    pub fn root(&self) -> usize {
+        self.hi
+    }
+
+    /// True if `rank` belongs to this tree.
+    pub fn contains(&self, rank: usize) -> bool {
+        (self.lo..=self.hi).contains(&rank)
+    }
+
+    /// Parent of `rank`, `None` for the root.
+    pub fn parent(&self, rank: usize) -> Option<usize> {
+        self.parent[self.idx(rank)]
+    }
+
+    /// `[first_child, second_child]` of `rank` (either may be `None`).
+    pub fn children(&self, rank: usize) -> [Option<usize>; 2] {
+        self.children[self.idx(rank)]
+    }
+
+    /// Depth of `rank` (root is 0).
+    pub fn depth(&self, rank: usize) -> usize {
+        self.depth[self.idx(rank)]
+    }
+
+    /// True if `rank` has no children.
+    pub fn is_leaf(&self, rank: usize) -> bool {
+        self.children[self.idx(rank)] == [None, None]
+    }
+
+    /// The consecutive rank interval covered by the subtree of `rank`
+    /// (test/diagnostic helper; O(subtree)).
+    pub fn subtree_range(&self, rank: usize) -> (usize, usize) {
+        match self.children(rank) {
+            [None, None] => (rank, rank),
+            [Some(_c0), None] => {
+                // first child covers [x, rank-1]
+                let lo = self.leftmost(rank);
+                (lo, rank)
+            }
+            [Some(_), Some(_)] | [None, Some(_)] => (self.leftmost(rank), rank),
+        }
+    }
+
+    fn leftmost(&self, rank: usize) -> usize {
+        let mut r = rank;
+        loop {
+            let ch = self.children(r);
+            // the lowest-numbered descendant is through the second child if
+            // present, else the first child
+            match (ch[1], ch[0]) {
+                (Some(c), _) => r = c,
+                (None, Some(c)) => r = c,
+                (None, None) => return r,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(t: &PostOrderTree) {
+        // root is hi, depth 0, no parent
+        assert_eq!(t.root(), t.hi);
+        assert_eq!(t.depth(t.root()), 0);
+        assert!(t.parent(t.root()).is_none());
+        for r in t.lo..=t.hi {
+            // parent/child symmetry
+            if let Some(p) = t.parent(r) {
+                assert!(t.children(p).contains(&Some(r)));
+                assert_eq!(t.depth(r), t.depth(p) + 1);
+            }
+            for c in t.children(r).into_iter().flatten() {
+                assert_eq!(t.parent(c), Some(r));
+                assert!(c < r, "post-order: children numbered below parent");
+            }
+            // first child, when present, is r-1 (paper §1.1)
+            if let Some(c0) = t.children(r)[0] {
+                assert_eq!(c0, r - 1);
+            }
+            // subtree ranges are consecutive and properly nested
+            let (lo, hi) = t.subtree_range(r);
+            assert_eq!(hi, r, "post-order root of subtree is its max rank");
+            assert!(lo >= t.lo);
+            if let [Some(c0), Some(c1)] = t.children(r) {
+                let (l0, h0) = t.subtree_range(c0);
+                let (l1, h1) = t.subtree_range(c1);
+                // second child covers [lo, mid], first child [mid+1, r-1]
+                assert_eq!(l1, lo);
+                assert_eq!(h1 + 1, l0);
+                assert_eq!(h0, r - 1);
+            }
+        }
+        assert_eq!(t.height, (t.lo..=t.hi).map(|r| t.depth(r)).max().unwrap());
+    }
+
+    #[test]
+    fn singleton() {
+        let t = PostOrderTree::new(5, 5).unwrap();
+        assert!(t.is_leaf(5));
+        assert_eq!(t.height, 0);
+        check_invariants(&t);
+    }
+
+    #[test]
+    fn pair() {
+        let t = PostOrderTree::new(0, 1).unwrap();
+        assert_eq!(t.children(1), [Some(0), None]);
+        assert_eq!(t.height, 1);
+        check_invariants(&t);
+    }
+
+    #[test]
+    fn perfect_trees_have_log_height() {
+        for k in 1..=9usize {
+            let n = (1usize << k) - 1;
+            let t = PostOrderTree::new(0, n - 1).unwrap();
+            assert_eq!(t.height, k - 1, "n={n}");
+            check_invariants(&t);
+        }
+    }
+
+    #[test]
+    fn arbitrary_sizes_invariants() {
+        for n in 1..=64usize {
+            let t = PostOrderTree::new(0, n - 1).unwrap();
+            check_invariants(&t);
+            // balanced: height within ceil(log2(n+1))-1 .. ceil(log2(n+1))
+            let hmin = (usize::BITS - (n as usize).leading_zeros()) as usize - 1;
+            assert!(
+                t.height <= hmin + 1,
+                "n={n}: height {} too large (min {hmin})",
+                t.height
+            );
+        }
+    }
+
+    #[test]
+    fn offset_range() {
+        let t = PostOrderTree::new(10, 20).unwrap();
+        assert_eq!(t.root(), 20);
+        assert!(t.contains(10) && t.contains(20) && !t.contains(9));
+        check_invariants(&t);
+    }
+
+    #[test]
+    fn empty_range_rejected() {
+        assert!(PostOrderTree::new(3, 2).is_err());
+    }
+
+    #[test]
+    fn paper_seven_node_example() {
+        // n = 7 perfect: [0..6], root 6, children 5 and 2;
+        // 5 covers [3,5] with children 4,3; 2 covers [0,2] with children 1,0.
+        let t = PostOrderTree::new(0, 6).unwrap();
+        assert_eq!(t.children(6), [Some(5), Some(2)]);
+        assert_eq!(t.children(5), [Some(4), Some(3)]);
+        assert_eq!(t.children(2), [Some(1), Some(0)]);
+        assert!(t.is_leaf(0) && t.is_leaf(1) && t.is_leaf(3) && t.is_leaf(4));
+        assert_eq!(t.subtree_range(5), (3, 5));
+        assert_eq!(t.subtree_range(2), (0, 2));
+    }
+}

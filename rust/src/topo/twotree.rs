@@ -1,0 +1,242 @@
+//! Two-tree topology after Sanders, Speck, Träff [4] ("Two-tree algorithms
+//! for full bandwidth broadcast, reduction and scan", ParCo 2009) — the
+//! `2βm` comparison point the paper cites in §1.2.
+//!
+//! Construction over `n = p − 1` ranks (rank `p − 1` is the root driver):
+//! both trees are **in-order numbered** (left subtree < node < right
+//! subtree, so rank-order reductions need only associativity), but they
+//! root their ranges at opposite parities:
+//!
+//! * **T1** is *odd-rooted*: every interior node sits at an odd index
+//!   (ranges are rooted at the odd index nearest their middle; a range
+//!   that closes on its root produces a unary interior node);
+//! * **T2** is *even-rooted*: every interior node sits at an even index.
+//!
+//! Interiors are therefore disjoint for **every** `p` — the load-balance
+//! behind the `2βm` bandwidth argument, and also what keeps the
+//! collective's blocking schedule acyclic (see `collectives::twotree`):
+//! two mutually parent/child double-interior ranks would deadlock it.
+
+use crate::error::{Error, Result};
+
+/// One of the two trees.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Half {
+    T1,
+    T2,
+}
+
+/// Per-rank, per-tree role.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct TwoTreeRole {
+    /// Parent rank in this tree (the tree root's parent is `p−1`).
+    pub parent: usize,
+    /// Children in this tree (in-order: lower subtree first).
+    pub children: [Option<usize>; 2],
+    /// Depth below the root driver (root has depth 1).
+    pub depth: usize,
+}
+
+/// The two-tree topology over `p ≥ 2` ranks; rank `p−1` is the root driver.
+#[derive(Clone, Debug)]
+pub struct TwoTree {
+    pub p: usize,
+    t1: Vec<TwoTreeRole>,
+    t2: Vec<TwoTreeRole>,
+    root1: usize,
+    root2: usize,
+}
+
+/// Build an in-order tree over `[lo, hi]` whose interior nodes all have
+/// index parity `parity`; returns the root. Single-index ranges become
+/// leaves regardless of parity.
+fn build_parity(
+    lo: usize,
+    hi: usize,
+    parity: usize,
+    depth: usize,
+    parent: usize,
+    roles: &mut [TwoTreeRole],
+) -> usize {
+    if lo == hi {
+        roles[lo].parent = parent;
+        roles[lo].depth = depth;
+        return lo;
+    }
+    let mut mid = (lo + hi) / 2;
+    if mid % 2 != parity {
+        mid += 1; // ≤ hi because (lo+hi)/2 < hi when lo < hi
+    }
+    debug_assert!(mid <= hi);
+    roles[mid].parent = parent;
+    roles[mid].depth = depth;
+    if mid > lo {
+        let c0 = build_parity(lo, mid - 1, parity, depth + 1, mid, roles);
+        roles[mid].children[0] = Some(c0);
+    }
+    if mid < hi {
+        let c1 = build_parity(mid + 1, hi, parity, depth + 1, mid, roles);
+        roles[mid].children[1] = Some(c1);
+    }
+    mid
+}
+
+impl TwoTree {
+    pub fn new(p: usize) -> Result<TwoTree> {
+        if p < 2 {
+            return Err(Error::Config(format!("two-tree needs p >= 2, got {p}")));
+        }
+        let n = p - 1; // ranks in each tree
+        let driver = p - 1;
+        let blank = TwoTreeRole {
+            parent: usize::MAX,
+            children: [None, None],
+            depth: 0,
+        };
+        let mut t1 = vec![blank; p];
+        let mut t2 = vec![blank; p];
+        let root1 = build_parity(0, n - 1, 1, 1, driver, &mut t1);
+        let root2 = build_parity(0, n - 1, 0, 1, driver, &mut t2);
+        Ok(TwoTree {
+            p,
+            t1,
+            t2,
+            root1,
+            root2,
+        })
+    }
+
+    /// The root driver rank (`p − 1`).
+    pub fn driver(&self) -> usize {
+        self.p - 1
+    }
+
+    /// Root of the given tree half.
+    pub fn root(&self, half: Half) -> usize {
+        match half {
+            Half::T1 => self.root1,
+            Half::T2 => self.root2,
+        }
+    }
+
+    /// Role of `rank` in the given tree (`rank < p − 1`).
+    pub fn role(&self, half: Half, rank: usize) -> TwoTreeRole {
+        debug_assert!(rank < self.p - 1);
+        match half {
+            Half::T1 => self.t1[rank],
+            Half::T2 => self.t2[rank],
+        }
+    }
+
+    /// True if `rank` is a leaf in the given tree.
+    pub fn is_leaf(&self, half: Half, rank: usize) -> bool {
+        self.role(half, rank).children == [None, None]
+    }
+
+    /// Tree height (max depth over ranks), per half.
+    pub fn height(&self, half: Half) -> usize {
+        let roles = match half {
+            Half::T1 => &self.t1,
+            Half::T2 => &self.t2,
+        };
+        roles[..self.p - 1].iter().map(|r| r.depth).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(p: usize) {
+        let tt = TwoTree::new(p).unwrap();
+        let n = p - 1;
+        for half in [Half::T1, Half::T2] {
+            // every non-driver rank has a parent path to the driver
+            for r in 0..n {
+                let mut cur = r;
+                let mut hops = 0;
+                while cur != tt.driver() {
+                    cur = tt.role(half, cur).parent;
+                    hops += 1;
+                    assert!(hops <= 2 * p, "p={p}: cycle from {r}");
+                }
+            }
+            // parent/child symmetry + edge count
+            let mut edges = 0;
+            for r in 0..n {
+                for c in tt.role(half, r).children.into_iter().flatten() {
+                    assert_eq!(tt.role(half, c).parent, r);
+                    edges += 1;
+                }
+            }
+            assert_eq!(edges, n - 1); // plus the root-driver edge
+            assert_eq!(tt.role(half, tt.root(half)).parent, tt.driver());
+            // height is logarithmic (parity-rooting costs at most ~1 level)
+            assert!(
+                tt.height(half) <= crate::util::log2_ceil(n + 1) as usize + 2,
+                "p={p}: height {}",
+                tt.height(half)
+            );
+        }
+    }
+
+    #[test]
+    fn structural_invariants() {
+        for p in 2..=64 {
+            check(p);
+        }
+        check(127);
+        check(128);
+        check(289);
+    }
+
+    #[test]
+    fn interior_disjointness_exact() {
+        // The defining property, for EVERY p: T1 interiors are odd, T2
+        // interiors are even, so no rank is interior in both trees.
+        for p in 2..=128usize {
+            let tt = TwoTree::new(p).unwrap();
+            for r in 0..p - 1 {
+                if !tt.is_leaf(Half::T1, r) {
+                    assert_eq!(r % 2, 1, "p={p}: T1 interior {r} not odd");
+                }
+                if !tt.is_leaf(Half::T2, r) {
+                    assert_eq!(r % 2, 0, "p={p}: T2 interior {r} not even");
+                }
+                assert!(
+                    tt.is_leaf(Half::T1, r) || tt.is_leaf(Half::T2, r),
+                    "p={p}: rank {r} interior in both trees"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn in_order_orientation_both_trees() {
+        // children[0] subtree < node < children[1] subtree — this is what
+        // lets the collective preserve rank order for non-commutative ops.
+        for p in [3usize, 5, 9, 16, 33, 64] {
+            let tt = TwoTree::new(p).unwrap();
+            for half in [Half::T1, Half::T2] {
+                for r in 0..p - 1 {
+                    let role = tt.role(half, r);
+                    if let Some(c0) = role.children[0] {
+                        assert!(c0 < r, "p={p} {half:?} r={r}");
+                    }
+                    if let Some(c1) = role.children[1] {
+                        assert!(c1 > r, "p={p} {half:?} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny() {
+        let tt = TwoTree::new(2).unwrap();
+        assert_eq!(tt.driver(), 1);
+        assert_eq!(tt.root(Half::T1), 0);
+        assert!(tt.is_leaf(Half::T1, 0));
+        assert!(tt.is_leaf(Half::T2, 0));
+    }
+}

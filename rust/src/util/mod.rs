@@ -1,0 +1,86 @@
+//! Small shared utilities: deterministic RNG, formatting helpers.
+
+pub mod rng;
+
+pub use rng::XorShift64;
+
+/// Format a number of elements / bytes with thousands separators, as the
+/// paper's tables do implicitly ("8 388 608").
+pub fn with_thousands(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(' ');
+        }
+        out.push(*c as char);
+    }
+    out
+}
+
+/// Format a duration given in microseconds the way the paper's Table 2
+/// reports times (two decimals, microseconds).
+pub fn fmt_us(us: f64) -> String {
+    format!("{us:.2}")
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `floor(log2(n))` for `n >= 1`.
+pub fn log2_floor(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    usize::BITS - 1 - n.leading_zeros()
+}
+
+/// `ceil(log2(n))` for `n >= 1`.
+pub fn log2_ceil(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thousands() {
+        assert_eq!(with_thousands(0), "0");
+        assert_eq!(with_thousands(999), "999");
+        assert_eq!(with_thousands(1000), "1 000");
+        assert_eq!(with_thousands(8388608), "8 388 608");
+    }
+
+    #[test]
+    fn ceil_div() {
+        assert_eq!(div_ceil(0, 3), 0);
+        assert_eq!(div_ceil(1, 3), 1);
+        assert_eq!(div_ceil(3, 3), 1);
+        assert_eq!(div_ceil(4, 3), 2);
+    }
+
+    #[test]
+    fn logs() {
+        assert_eq!(log2_floor(1), 0);
+        assert_eq!(log2_floor(2), 1);
+        assert_eq!(log2_floor(3), 1);
+        assert_eq!(log2_floor(4), 2);
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(5), 3);
+    }
+
+    #[test]
+    fn fmt_us_two_decimals() {
+        assert_eq!(fmt_us(0.194), "0.19");
+        assert_eq!(fmt_us(56249.239), "56249.24");
+    }
+}

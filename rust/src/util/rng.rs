@@ -1,0 +1,123 @@
+//! Deterministic xorshift64* RNG.
+//!
+//! Used by tests, the property-testing substrate, and workload generators.
+//! We cannot pull `rand` from the offline registry, and a 20-line xorshift
+//! is all the randomness this project needs; determinism-by-seed is a
+//! feature for reproducible experiments.
+
+/// xorshift64* generator (Vigna 2016). Never yields state 0.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator from a seed; seed 0 is mapped to a fixed non-zero
+    /// constant because the all-zero state is a fixed point of xorshift.
+    pub fn new(seed: u64) -> Self {
+        XorShift64 {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be > 0.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift bounded sampling; bias is < 2^-64 per draw which is
+        // irrelevant for test workloads.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Random i32 in a small symmetric range, handy for overflow-safe sums.
+    pub fn small_i32(&mut self) -> i32 {
+        self.range(0, 200) as i32 - 100
+    }
+
+    /// Fill a vector with small i32 values.
+    pub fn small_i32_vec(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.small_i32()).collect()
+    }
+
+    /// Random f32 in [-1, 1).
+    pub fn small_f32(&mut self) -> f32 {
+        (self.unit_f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Fill a vector with small f32 values.
+    pub fn small_f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.small_f32()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_usable() {
+        let mut r = XorShift64::new(0);
+        let v = r.next_u64();
+        assert_ne!(v, 0);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift64::new(42);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = XorShift64::new(42);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.range(3, 5);
+            assert!((3..=5).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn unit_f64_in_unit_interval() {
+        let mut r = XorShift64::new(1);
+        for _ in 0..10_000 {
+            let v = r.unit_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-algorithm correctness battery: every allreduce implementation,
+//! against a sequential oracle, across world sizes, vector lengths, element
+//! types, operators — including non-commutative operators for the
+//! order-preserving algorithms.
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::{allreduce, run_allreduce_i32, scan_pipelined, RunSpec};
+use dpdr::comm::{run_world, Timing};
+use dpdr::model::AlgoKind;
+use dpdr::ops::{Mat2, Mat2Op, MaxOp, MinOp, ProdOp, ReduceOp, SeqCheckOp, Span, SumOp};
+use dpdr::pipeline::Blocks;
+use dpdr::util::XorShift64;
+
+const ALL_ALGOS: [AlgoKind; 9] = [
+    AlgoKind::Dpdr,
+    AlgoKind::DpdrSingle,
+    AlgoKind::PipeTree,
+    AlgoKind::ReduceBcast,
+    AlgoKind::NativeSwitch,
+    AlgoKind::TwoTree,
+    AlgoKind::Ring,
+    AlgoKind::RecursiveDoubling,
+    AlgoKind::Rabenseifner,
+];
+
+#[test]
+fn i32_sum_battery() {
+    for algo in ALL_ALGOS {
+        for p in [1usize, 2, 3, 4, 5, 6, 7, 8, 11, 14, 16, 20, 30] {
+            for m in [0usize, 1, 7, 64, 1000] {
+                let spec = RunSpec::new(p, m).block_elems(16).seed(p as u64 * 31 + m as u64);
+                let expected = spec.expected_sum_i32();
+                let report = run_allreduce_i32(algo, &spec, Timing::Real)
+                    .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
+                for (rank, buf) in report.results.into_iter().enumerate() {
+                    assert_eq!(
+                        buf.into_vec().unwrap(),
+                        expected,
+                        "{} p={p} m={m} rank={rank}",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Generic oracle-checked run for any element type and operator.
+fn check_generic<E, O, F>(algo: AlgoKind, p: usize, m: usize, b: usize, op: O, gen: F)
+where
+    E: dpdr::ops::Elem,
+    O: ReduceOp<E> + Clone + 'static,
+    F: Fn(usize, usize) -> E + Send + Sync + Copy + 'static,
+{
+    let blocks = Blocks::by_count(m, b);
+    let op2 = op.clone();
+    let report = run_world::<E, _, _>(p, Timing::Real, move |comm| {
+        use dpdr::comm::Comm;
+        let rank = comm.rank();
+        let x = DataBuf::real((0..m).map(|i| gen(rank, i)).collect());
+        allreduce(algo, comm, x, &op2, &blocks)
+    })
+    .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
+    // oracle: fold in rank order
+    let mut expected: Vec<E> = (0..m).map(|i| gen(0, i)).collect();
+    for r in 1..p {
+        for (i, e) in expected.iter_mut().enumerate() {
+            *e = op.combine(*e, gen(r, i));
+        }
+    }
+    for (rank, buf) in report.results.into_iter().enumerate() {
+        assert_eq!(
+            buf.into_vec().unwrap(),
+            expected,
+            "{} p={p} rank={rank}",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn f32_and_f64_ops() {
+    // exact arithmetic inputs (small integers as floats) so equality holds
+    // regardless of combine order
+    for algo in ALL_ALGOS {
+        check_generic(algo, 9, 50, 7, MaxOp, |r, i| ((r * 31 + i) % 17) as f32);
+        check_generic(algo, 9, 50, 7, MinOp, |r, i| ((r * 13 + i) % 23) as f64);
+        check_generic(algo, 6, 33, 4, SumOp, |r, i| ((r + i) % 5) as f64);
+    }
+}
+
+#[test]
+fn prod_op_i64() {
+    // ±1 values keep products in range
+    for algo in ALL_ALGOS {
+        check_generic(algo, 8, 40, 5, ProdOp, |r, i| {
+            if (r + i) % 2 == 0 {
+                1i64
+            } else {
+                -1i64
+            }
+        });
+    }
+}
+
+#[test]
+fn noncommutative_mat2_order_preserving_algos() {
+    for algo in ALL_ALGOS.into_iter().filter(|a| a.order_preserving()) {
+        check_generic(algo, 10, 24, 6, Mat2Op, |r, i| {
+            let mut rng = XorShift64::new((r * 97 + i) as u64);
+            Mat2([
+                (rng.below(5) + 1) as u32,
+                rng.below(5) as u32,
+                rng.below(5) as u32,
+                (rng.below(5) + 1) as u32,
+            ])
+        });
+    }
+}
+
+#[test]
+fn seqcheck_span_witness_all_order_preserving() {
+    // Span-concat poisons any out-of-rank-order combine: the strictest
+    // order witness. Every order-preserving algorithm must survive it.
+    for algo in ALL_ALGOS.into_iter().filter(|a| a.order_preserving()) {
+        for p in [2usize, 3, 5, 9, 13, 17, 25] {
+            let m = 9;
+            let blocks = Blocks::by_count(m, 3);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                use dpdr::comm::Comm;
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
+                allreduce(algo, comm, x, &SeqCheckOp, &blocks)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.into_vec().unwrap() {
+                    assert_eq!(s, Span::of(0, p as u32 - 1), "{} p={p}", algo.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_block_size_with_paper_like_world() {
+    // the evaluation's exact parameterization at a reduced scale:
+    // block = 16000 ints, p = 36 (one rank per simulated node)
+    for algo in [AlgoKind::Dpdr, AlgoKind::PipeTree] {
+        let spec = RunSpec::new(36, 100_000); // default block_elems = 16000
+        let expected = spec.expected_sum_i32();
+        let report = run_allreduce_i32(algo, &spec, Timing::Real).unwrap();
+        for buf in report.results {
+            assert_eq!(buf.into_vec().unwrap(), expected, "{}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn scan_matches_prefix_oracle() {
+    for p in [1usize, 4, 9, 16] {
+        let m = 21;
+        let blocks = Blocks::by_count(m, 5);
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            use dpdr::comm::Comm;
+            let rank = comm.rank();
+            let x = DataBuf::real((0..m).map(|i| (rank * 7 + i) as i32 % 11).collect());
+            scan_pipelined(comm, x, &SumOp, &blocks)
+        })
+        .unwrap();
+        let mut acc = vec![0i32; m];
+        for (r, buf) in report.results.into_iter().enumerate() {
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a += (r * 7 + i) as i32 % 11;
+            }
+            assert_eq!(buf.into_vec().unwrap(), acc, "p={p} rank={r}");
+        }
+    }
+}
+
+#[test]
+fn repeated_collectives_share_one_world() {
+    // channels must stay clean across consecutive collectives on the same
+    // communicator (FIFO leftovers would corrupt the second run)
+    let report = run_world::<i32, _, _>(8, Timing::Real, |comm| {
+        use dpdr::comm::Comm;
+        let m = 64;
+        let blocks = Blocks::by_count(m, 4);
+        let mut results = Vec::new();
+        for round in 0..4 {
+            let x = DataBuf::real(vec![comm.rank() as i32 + round; m]);
+            let algo = [
+                AlgoKind::Dpdr,
+                AlgoKind::PipeTree,
+                AlgoKind::TwoTree,
+                AlgoKind::Ring,
+            ][round as usize];
+            let y = allreduce(algo, comm, x, &SumOp, &blocks)?;
+            results.push(y.into_vec()?[0]);
+            comm.barrier()?;
+        }
+        Ok(results)
+    })
+    .unwrap();
+    let base: i32 = (0..8).sum();
+    for r in report.results {
+        assert_eq!(r, vec![base, base + 8, base + 16, base + 24]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Failure injection: the world must tear down cleanly — no hangs, the
+//! root-cause error surfaced — when ranks die mid-collective. (The paper's
+//! MPI code would abort the job; our substrate must do the moral
+//! equivalent: poison + prompt teardown, which is also what converts any
+//! future protocol deadlock into a test failure instead of a CI timeout.)
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::allreduce;
+use dpdr::comm::{run_world, Comm, Timing};
+use dpdr::error::Error;
+use dpdr::model::AlgoKind;
+use dpdr::ops::SumOp;
+use dpdr::pipeline::Blocks;
+
+#[test]
+fn rank_error_mid_collective_tears_world_down() {
+    let start = std::time::Instant::now();
+    let result = run_world::<i32, _, _>(8, Timing::Real, |comm| {
+        let m = 1000;
+        let blocks = Blocks::by_count(m, 10);
+        if comm.rank() == 3 {
+            // die before participating
+            return Err(Error::Protocol("injected fault on rank 3".into()));
+        }
+        let x = DataBuf::real(vec![1i32; m]);
+        allreduce(AlgoKind::Dpdr, comm, x, &SumOp, &blocks)
+    });
+    let err = result.expect_err("world must fail");
+    // the injected fault is reported, not the secondary disconnects
+    assert!(
+        err.to_string().contains("injected fault"),
+        "got secondary error instead of root cause: {err}"
+    );
+    // teardown is prompt (poison polling), far under the deadlock watchdog
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(10),
+        "teardown took {:?}",
+        start.elapsed()
+    );
+}
+
+#[test]
+fn rank_panic_mid_collective_tears_world_down() {
+    let start = std::time::Instant::now();
+    let result = run_world::<i32, _, _>(6, Timing::Real, |comm| {
+        let m = 500;
+        let blocks = Blocks::by_count(m, 5);
+        if comm.rank() == 5 {
+            panic!("injected panic");
+        }
+        let x = DataBuf::real(vec![1i32; m]);
+        allreduce(AlgoKind::PipeTree, comm, x, &SumOp, &blocks)
+    });
+    assert!(result.is_err());
+    assert!(start.elapsed() < std::time::Duration::from_secs(10));
+}
+
+#[test]
+fn deadlock_watchdog_fires() {
+    // two ranks both receive first — a textbook deadlock; the watchdog
+    // must convert it into an error on every blocked rank
+    std::env::set_var("DPDR_RECV_TIMEOUT_SECS", "2");
+    let start = std::time::Instant::now();
+    let result = run_world::<i32, _, _>(2, Timing::Real, |comm| {
+        let peer = 1 - comm.rank();
+        let _ = comm.recv(peer)?; // nobody ever sends
+        Ok(())
+    });
+    std::env::remove_var("DPDR_RECV_TIMEOUT_SECS");
+    let err = result.expect_err("deadlock must be detected");
+    assert!(
+        err.to_string().contains("deadlock") || err.to_string().contains("disconnected"),
+        "{err}"
+    );
+    assert!(start.elapsed() < std::time::Duration::from_secs(30));
+}
+
+#[test]
+fn world_size_one_runs_every_algorithm() {
+    // degenerate worlds must not touch the transport at all
+    for algo in [
+        AlgoKind::Dpdr,
+        AlgoKind::DpdrSingle,
+        AlgoKind::PipeTree,
+        AlgoKind::TwoTree,
+        AlgoKind::Ring,
+        AlgoKind::ReduceBcast,
+        AlgoKind::NativeSwitch,
+        AlgoKind::RecursiveDoubling,
+        AlgoKind::Rabenseifner,
+    ] {
+        let report = run_world::<i32, _, _>(1, Timing::Real, move |comm| {
+            let x = DataBuf::real(vec![7i32; 10]);
+            let blocks = Blocks::by_count(10, 3);
+            allreduce(algo, comm, x, &SumOp, &blocks)
+        })
+        .unwrap();
+        assert_eq!(report.results[0].as_slice().unwrap(), &[7i32; 10]);
+        assert_eq!(report.metrics[0].exchanges, 0, "{}", algo.name());
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT runtime integration: load the AOT artifacts (HLO text produced by
+//! `make artifacts` from the JAX/Pallas kernels), execute them, and check
+//! they agree with the native Rust reduction — including running a whole
+//! allreduce with the PJRT backend on the hot path.
+//!
+//! These tests skip (with a note) when `artifacts/` has not been built.
+
+use std::sync::{Arc, Mutex};
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::allreduce;
+use dpdr::comm::{run_world, Timing};
+use dpdr::model::AlgoKind;
+use dpdr::ops::{OpKind, ReduceOp, Side};
+use dpdr::pipeline::Blocks;
+use dpdr::runtime::{artifact_name, EngineCell, PjrtOp, ReduceBackend, ReduceEngine};
+use dpdr::util::XorShift64;
+
+fn engine_or_skip() -> Option<ReduceEngine> {
+    let engine = match ReduceEngine::with_default_dir() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: no PJRT client ({e})");
+            return None;
+        }
+    };
+    let probe = artifact_name(2, OpKind::Sum, "int32", 1024);
+    if !engine.has_artifact(&probe) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(engine)
+}
+
+#[test]
+fn combine2_matches_native_all_ops() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let mut rng = XorShift64::new(42);
+    for op in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+        for n in [1usize, 5, 1024, 1025, 16_000, 20_000] {
+            let lhs = rng.small_i32_vec(n);
+            let rhs = rng.small_i32_vec(n);
+            let mut out = vec![0i32; n];
+            engine.combine2_i32(op, &lhs, &rhs, &mut out).unwrap();
+            let native = PjrtOp::new(op, ReduceBackend::Native);
+            let mut expected = rhs.clone();
+            native.reduce_into(&mut expected, &lhs, Side::Left);
+            assert_eq!(out, expected, "op={op:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn combine2_f32() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let mut rng = XorShift64::new(7);
+    let n = 2048;
+    let lhs = rng.small_f32_vec(n);
+    let rhs = rng.small_f32_vec(n);
+    let mut out = vec![0f32; n];
+    engine
+        .combine2_f32(OpKind::Max, &lhs, &rhs, &mut out)
+        .unwrap();
+    for i in 0..n {
+        assert_eq!(out[i], lhs[i].max(rhs[i]), "i={i}");
+    }
+}
+
+#[test]
+fn combine3_fused_matches_two_step() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let mut rng = XorShift64::new(11);
+    let n = 16_000;
+    let t1 = rng.small_i32_vec(n);
+    let t0 = rng.small_i32_vec(n);
+    let y = rng.small_i32_vec(n);
+    let mut fused = vec![0i32; n];
+    engine
+        .combine3_i32(OpKind::Sum, &t1, &t0, &y, &mut fused)
+        .unwrap();
+    // two-step: t0 ⊙ y, then t1 ⊙ (...)
+    let mut two = vec![0i32; n];
+    engine.combine2_i32(OpKind::Sum, &t0, &y, &mut two).unwrap();
+    let snapshot = two.clone();
+    engine
+        .combine2_i32(OpKind::Sum, &t1, &snapshot, &mut two)
+        .unwrap();
+    assert_eq!(fused, two);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    assert_eq!(engine.cached(), 0);
+    let a = vec![1i32; 1024];
+    let mut out = vec![0i32; 1024];
+    engine.combine2_i32(OpKind::Sum, &a, &a, &mut out).unwrap();
+    assert_eq!(engine.cached(), 1);
+    engine.combine2_i32(OpKind::Sum, &a, &a, &mut out).unwrap();
+    assert_eq!(engine.cached(), 1); // cache hit
+    engine.combine2_i32(OpKind::Max, &a, &a, &mut out).unwrap();
+    assert_eq!(engine.cached(), 2);
+}
+
+#[test]
+fn chunking_covers_lengths_beyond_largest_kernel() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let n = 300_000; // > 131072, forces chunked execution
+    let lhs: Vec<i32> = (0..n as i32).collect();
+    let rhs: Vec<i32> = (0..n as i32).rev().collect();
+    let mut out = vec![0i32; n];
+    engine.combine2_i32(OpKind::Sum, &lhs, &rhs, &mut out).unwrap();
+    assert!(out.iter().all(|&v| v == n as i32 - 1));
+}
+
+#[test]
+fn full_allreduce_with_pjrt_hot_path() {
+    // the paper's algorithm with the blockwise ⊙ executed by the compiled
+    // JAX/Pallas kernel via PJRT — Python is not involved at runtime.
+    let Some(engine) = engine_or_skip() else {
+        return;
+    };
+    let backend = ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(engine))));
+    let p = 6;
+    let m = 40_000;
+    let blocks = Blocks::by_size(m, 16_000).unwrap();
+    let op = PjrtOp::new(OpKind::Sum, backend);
+    let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+        use dpdr::comm::Comm;
+        let rank = comm.rank();
+        let x = DataBuf::real(XorShift64::new(rank as u64).small_i32_vec(m));
+        allreduce(AlgoKind::Dpdr, comm, x, &op, &blocks)
+    })
+    .unwrap();
+    // oracle
+    let mut expected = vec![0i32; m];
+    for r in 0..p {
+        for (e, v) in expected.iter_mut().zip(XorShift64::new(r as u64).small_i32_vec(m)) {
+            *e = e.wrapping_add(v);
+        }
+    }
+    for buf in report.results {
+        assert_eq!(buf.into_vec().unwrap(), expected);
+    }
+}
+
+#[test]
+fn backend_equality_native_vs_pjrt() {
+    let Some(engine) = engine_or_skip() else {
+        return;
+    };
+    let backend = ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(engine))));
+    for op_kind in [OpKind::Sum, OpKind::Min] {
+        let pjrt_op = PjrtOp::new(op_kind, backend.clone());
+        let native_op = PjrtOp::new(op_kind, ReduceBackend::Native);
+        let mut rng = XorShift64::new(3);
+        let inc = rng.small_i32_vec(5000);
+        let base = rng.small_i32_vec(5000);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        pjrt_op.reduce_into(&mut a, &inc, Side::Left);
+        native_op.reduce_into(&mut b, &inc, Side::Left);
+        assert_eq!(a, b, "{op_kind:?} left");
+        let mut a = base.clone();
+        let mut b = base;
+        pjrt_op.reduce_into(&mut a, &inc, Side::Right);
+        native_op.reduce_into(&mut b, &inc, Side::Right);
+        assert_eq!(a, b, "{op_kind:?} right");
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let err = engine.load("no_such_kernel_9999");
+    assert!(err.is_err());
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("no_such_kernel_9999"), "{msg}");
+}

@@ -1,0 +1,321 @@
+//! Property-based tests (own mini-proptest substrate; the offline registry
+//! has no proptest): randomized configurations against the sequential
+//! oracle, structural tree invariants, cost-model laws, and
+//! real-vs-phantom virtual-time equivalence.
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::{allreduce, run_allreduce_i32, RunSpec};
+use dpdr::comm::{run_world, Timing};
+use dpdr::model::{lemma, AlgoKind, ComputeCost, CostModel, LinkCost};
+use dpdr::ops::SumOp;
+use dpdr::pipeline::Blocks;
+use dpdr::proptest::{forall, Gen};
+use dpdr::topo::{DualRootForest, PostOrderTree};
+
+fn random_algo(g: &mut Gen) -> AlgoKind {
+    *g.choose(&[
+        AlgoKind::Dpdr,
+        AlgoKind::DpdrSingle,
+        AlgoKind::PipeTree,
+        AlgoKind::ReduceBcast,
+        AlgoKind::NativeSwitch,
+        AlgoKind::TwoTree,
+        AlgoKind::Ring,
+        AlgoKind::RecursiveDoubling,
+        AlgoKind::Rabenseifner,
+    ])
+}
+
+#[test]
+fn prop_allreduce_equals_oracle() {
+    forall("allreduce == oracle", 60, 0xA11, |g| {
+        let algo = random_algo(g);
+        let p = g.usize_in(1, 24);
+        let m = g.usize_in(0, 300);
+        let b = g.usize_in(1, 20);
+        let seed = g.u64();
+        let spec = RunSpec::new(p, m)
+            .block_elems(m.max(1).div_ceil(b))
+            .seed(seed);
+        let expected = spec.expected_sum_i32();
+        let report = run_allreduce_i32(algo, &spec, Timing::Real)
+            .map_err(|e| format!("{} p={p} m={m} b={b}: {e}", algo.name()))?;
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            let got = buf.into_vec().map_err(|e| e.to_string())?;
+            if got != expected {
+                return Err(format!(
+                    "{} p={p} m={m} b={b} rank={rank}: wrong result",
+                    algo.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_postorder_tree_invariants() {
+    forall("post-order invariants", 200, 0x7EE, |g| {
+        let lo = g.usize_in(0, 50);
+        let n = g.usize_in(1, 200);
+        let hi = lo + n - 1;
+        let t = PostOrderTree::new(lo, hi).map_err(|e| e.to_string())?;
+        if t.root() != hi {
+            return Err("root must be hi".into());
+        }
+        let mut leaves = 0;
+        for r in lo..=hi {
+            if let Some(parent) = t.parent(r) {
+                if !t.children(parent).contains(&Some(r)) {
+                    return Err(format!("parent/child asymmetry at {r}"));
+                }
+                if t.depth(r) != t.depth(parent) + 1 {
+                    return Err(format!("depth mismatch at {r}"));
+                }
+            } else if r != hi {
+                return Err(format!("non-root {r} has no parent"));
+            }
+            if let Some(c0) = t.children(r)[0] {
+                if c0 != r - 1 {
+                    return Err(format!("first child of {r} must be {}", r - 1));
+                }
+            }
+            if t.is_leaf(r) {
+                leaves += 1;
+            }
+            let (slo, shi) = t.subtree_range(r);
+            if shi != r || slo > r {
+                return Err(format!("subtree range of {r} is [{slo},{shi}]"));
+            }
+        }
+        // balanced: height ≤ ceil(log2(n+1)) and ≥ floor(log2 n)
+        let height = t.height;
+        let upper = (usize::BITS - n.leading_zeros()) as usize;
+        if height > upper {
+            return Err(format!("n={n}: height {height} > {upper}"));
+        }
+        if leaves == 0 {
+            return Err("no leaves".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dualroot_roles_partition() {
+    forall("dual-root partition", 150, 0xD0A1, |g| {
+        let p = g.usize_in(2, 300);
+        let f = DualRootForest::new(p).map_err(|e| e.to_string())?;
+        let (lo_root, hi_root) = f.roots();
+        let mut dual_count = 0;
+        for r in 0..p {
+            let role = f.role(r).map_err(|e| e.to_string())?;
+            if role.dual.is_some() {
+                dual_count += 1;
+                // duals reference each other
+                let other = f.role(role.dual.unwrap()).map_err(|e| e.to_string())?;
+                if other.dual != Some(r) {
+                    return Err(format!("dual of dual of {r} is not {r}"));
+                }
+            }
+            if role.lower_root && r != lo_root {
+                return Err("lower_root flag on wrong rank".into());
+            }
+        }
+        if dual_count != 2 {
+            return Err(format!("p={p}: {dual_count} roots"));
+        }
+        if hi_root != p - 1 {
+            return Err("upper root must be p-1".into());
+        }
+        // tree sizes balanced within 1
+        let (qa, qb) = (f.a.size(), f.b.size());
+        if qa.abs_diff(qb) > 1 || qa + qb != p {
+            return Err(format!("p={p}: sizes {qa}/{qb}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocks_partition_exact() {
+    forall("block partition", 300, 0xB10C, |g| {
+        let m = g.usize_in(0, 100_000);
+        let b = g.usize_in(1, 600);
+        let blocks = if g.bool() {
+            Blocks::by_count(m, b)
+        } else {
+            Blocks::segments(m, b)
+        };
+        let mut prev = 0;
+        let mut total = 0;
+        for k in 0..blocks.count() {
+            let (lo, hi) = blocks.range(k);
+            if lo != prev || hi < lo {
+                return Err(format!("m={m} b={b} k={k}: range [{lo},{hi})"));
+            }
+            total += hi - lo;
+            prev = hi;
+            if blocks.len(k) > blocks.max_len() {
+                return Err("block larger than max_len".into());
+            }
+        }
+        if total != m {
+            return Err(format!("partition covers {total} != {m}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lemma_optimum_is_optimal() {
+    forall("pipelining lemma", 200, 0x1E44A, |g| {
+        let a = g.usize_in(1, 100) as f64;
+        let c = g.usize_in(1, 8) as f64;
+        let alpha = 10f64.powi(-(g.usize_in(5, 7) as i32));
+        let beta = 10f64.powi(-(g.usize_in(8, 10) as i32));
+        let m = g.usize_in(1, 100_000_000) as f64;
+        let (b, t) = lemma::optimal_time(a, c, alpha, beta, m, usize::MAX);
+        // integral neighbors cannot beat it
+        for nb in [b.saturating_sub(1).max(1), b + 1] {
+            let tn = lemma::time_at(a, c, alpha, beta, m, nb as f64);
+            if tn < t - 1e-12 {
+                return Err(format!(
+                    "b={b} t={t} but b={nb} gives {tn} (A={a} C={c} α={alpha} β={beta} m={m})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phantom_real_vtime_equivalence() {
+    // the virtual clock must not depend on whether payloads are real
+    forall("phantom == real vtime", 20, 0xFAA7, |g| {
+        let algo = random_algo(g);
+        let p = g.usize_in(2, 12);
+        let m = g.usize_in(1, 400);
+        let spec = RunSpec::new(p, m).block_elems(g.usize_in(1, 64));
+        let t_real = run_allreduce_i32(algo, &spec, Timing::hydra())
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        let t_phantom = run_allreduce_i32(algo, &spec.phantom(true), Timing::hydra())
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        if (t_real - t_phantom).abs() > 1e-9 {
+            return Err(format!(
+                "{} p={p} m={m}: real {t_real} vs phantom {t_phantom}",
+                algo.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vtime_deterministic_across_runs() {
+    forall("vtime deterministic", 15, 0xDE7, |g| {
+        let algo = random_algo(g);
+        let p = g.usize_in(2, 16);
+        let m = g.usize_in(1, 2_000);
+        let spec = RunSpec::new(p, m).block_elems(97).phantom(true);
+        let a = run_allreduce_i32(algo, &spec, Timing::hydra())
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        let b = run_allreduce_i32(algo, &spec, Timing::hydra())
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        if (a - b).abs() > 1e-9 {
+            return Err(format!("{} p={p} m={m}: {a} vs {b}", algo.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vtime_monotone_in_m() {
+    forall("vtime monotone in m", 15, 0x3030, |g| {
+        let mut algo = random_algo(g);
+        // the count-switching "native" allreduce is intentionally
+        // non-monotone at its thresholds (the Table 2 pathology)
+        while algo == AlgoKind::NativeSwitch {
+            algo = random_algo(g);
+        }
+        let p = g.usize_in(2, 10);
+        let m1 = g.usize_in(1, 5_000);
+        let m2 = m1 + g.usize_in(1, 5_000);
+        let t = |m: usize| {
+            run_allreduce_i32(
+                algo,
+                &RunSpec::new(p, m).block_elems(256).phantom(true),
+                Timing::hydra(),
+            )
+            .map(|r| r.max_vtime_us)
+        };
+        let t1 = t(m1).map_err(|e| e.to_string())?;
+        let t2 = t(m2).map_err(|e| e.to_string())?;
+        if t2 + 1e-9 < t1 {
+            return Err(format!("{} p={p}: t({m1})={t1} > t({m2})={t2}", algo.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_never_slower_than_uniform_inter() {
+    // intra-node links are strictly faster, so the hierarchical model can
+    // only help when the uniform model uses the inter-node link everywhere
+    forall("hier <= uniform", 10, 0x41E4, |g| {
+        let p = 8 * g.usize_in(2, 6);
+        let m = g.usize_in(100, 20_000);
+        let inter = LinkCost::new(1e-6, 0.7e-9);
+        let uni = Timing::Virtual(CostModel::Uniform(inter), ComputeCost::new(0.0));
+        let hier = Timing::Virtual(
+            CostModel::Hierarchical {
+                intra: LinkCost::new(0.2e-6, 0.05e-9),
+                inter,
+                mapping: dpdr::topo::Mapping::Block { ranks_per_node: 8 },
+            },
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(p, m).block_elems(1000).phantom(true);
+        let tu = run_allreduce_i32(AlgoKind::Dpdr, &spec, uni)
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        let th = run_allreduce_i32(AlgoKind::Dpdr, &spec, hier)
+            .map_err(|e| e.to_string())?
+            .max_vtime_us;
+        if th > tu + 1e-6 {
+            return Err(format!("p={p} m={m}: hier {th} > uniform {tu}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_repeated_use_of_world_is_clean() {
+    forall("world reuse", 10, 0x5EED, |g| {
+        let p = g.usize_in(2, 10);
+        let m = g.usize_in(1, 100);
+        let algo1 = random_algo(g);
+        let algo2 = random_algo(g);
+        let blocks = Blocks::by_count(m, 4);
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            use dpdr::comm::Comm;
+            let x1 = DataBuf::real(vec![1i32; m]);
+            let y1 = allreduce(algo1, comm, x1, &SumOp, &blocks)?;
+            comm.barrier()?;
+            let x2 = DataBuf::real(vec![2i32; m]);
+            let y2 = allreduce(algo2, comm, x2, &SumOp, &blocks)?;
+            Ok((y1.into_vec()?, y2.into_vec()?))
+        })
+        .map_err(|e| format!("{}+{}: {e}", algo1.name(), algo2.name()))?;
+        for (y1, y2) in report.results {
+            if y1 != vec![p as i32; m] || y2 != vec![2 * p as i32; m] {
+                return Err(format!("{}+{} corrupted results", algo1.name(), algo2.name()));
+            }
+        }
+        Ok(())
+    });
+}
