@@ -2,6 +2,11 @@
 //! operations (sendrecv ping, barrier, virtual-clock overhead) — the L3
 //! numbers behind the §Perf simulator-overhead target (worlds of p = 288
 //! × 30 counts × 4 algorithms must complete in minutes).
+//!
+//! Besides the human-readable TSV on stdout, the run writes
+//! `BENCH_transport.json` (messages/sec and MB/s for small and large
+//! blocks, plus the buffer-layer counters) so the perf trajectory of the
+//! zero-copy transport is tracked from PR to PR.
 
 use std::time::Instant;
 
@@ -10,6 +15,9 @@ use dpdr::collectives::{run_allreduce_i32, RunSpec};
 use dpdr::comm::{run_world, Comm, Timing};
 use dpdr::model::AlgoKind;
 
+/// Mean per-iteration sendrecv latency in µs (worst rank) for one payload
+/// size, exercising the real zero-copy block path: each iteration extracts
+/// a block view of a working vector, exactly like the collectives do.
 fn ping(timing: Timing, elems: usize, iters: usize) -> f64 {
     let report = run_world::<i32, _, _>(2, timing, move |comm| {
         let peer = 1 - comm.rank();
@@ -17,7 +25,8 @@ fn ping(timing: Timing, elems: usize, iters: usize) -> f64 {
         comm.barrier()?;
         let start = Instant::now();
         for _ in 0..iters {
-            let _ = comm.sendrecv(peer, payload.clone())?;
+            let block = payload.extract(0, elems)?;
+            let _ = comm.sendrecv(peer, block)?;
         }
         Ok(start.elapsed().as_secs_f64() * 1e6 / iters as f64)
     })
@@ -25,14 +34,36 @@ fn ping(timing: Timing, elems: usize, iters: usize) -> f64 {
     report.results.iter().copied().fold(0.0, f64::max)
 }
 
+/// One JSON line of the throughput record.
+fn throughput_fields(label: &str, elems: usize, us_per_iter: f64) -> String {
+    let msgs_per_sec = 1e6 / us_per_iter;
+    // a sendrecv moves the payload both ways
+    let mb_per_sec = 2.0 * (elems * 4) as f64 / us_per_iter; // bytes/µs == MB/s
+    format!(
+        "  \"{label}\": {{\"elems\": {elems}, \"us_per_sendrecv\": {us_per_iter:.4}, \
+         \"msgs_per_sec\": {msgs_per_sec:.0}, \"mb_per_sec\": {mb_per_sec:.1}}}"
+    )
+}
+
 fn main() {
     println!("#metric\tvalue");
-    for (label, elems) in [("sendrecv_small_us", 4usize), ("sendrecv_16k_us", 16_000)] {
-        let t = ping(Timing::Real, elems, 5_000);
-        println!("{label}\t{t:.3}");
-    }
+    let mut json: Vec<String> = Vec::new();
+
+    let small_elems = 4usize;
+    let large_elems = 256 * 1024; // 1 MiB blocks: bandwidth-bound
+    let t_small = ping(Timing::Real, small_elems, 5_000);
+    println!("sendrecv_small_us\t{t_small:.3}");
+    json.push(throughput_fields("small_block", small_elems, t_small));
+    let t_16k = ping(Timing::Real, 16_000, 5_000);
+    println!("sendrecv_16k_us\t{t_16k:.3}");
+    json.push(throughput_fields("paper_block_16k", 16_000, t_16k));
+    let t_large = ping(Timing::Real, large_elems, 2_000);
+    println!("sendrecv_1mib_us\t{t_large:.3}");
+    json.push(throughput_fields("large_block", large_elems, t_large));
+
     let t = ping(Timing::hydra(), 4, 5_000);
     println!("sendrecv_vclock_overhead_us\t{t:.3}");
+    json.push(format!("  \"vclock_overhead_us\": {t:.4}"));
 
     // barrier cost across world sizes
     for p in [8usize, 64, 288] {
@@ -47,7 +78,22 @@ fn main() {
         .unwrap();
         let worst = report.results.iter().copied().fold(0.0, f64::max);
         println!("barrier_p{p}_us\t{worst:.2}");
+        json.push(format!("  \"barrier_p{p}_us\": {worst:.2}"));
     }
+
+    // steady-state copy/alloc profile of a real-mode pipelined run: the
+    // zero-copy invariant made measurable
+    let spec = RunSpec::new(14, 200_000).block_elems(16_000);
+    let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+    let totals = report.total_metrics();
+    println!("dpdr_real_bytes_copied\t{}", totals.bytes_copied);
+    println!("dpdr_real_allocs\t{}", totals.allocs);
+    println!("dpdr_real_pool_recycled\t{}", totals.pool_recycled);
+    json.push(format!(
+        "  \"dpdr_real_p14_m200k\": {{\"bytes_copied\": {}, \"allocs\": {}, \
+         \"pool_recycled\": {}, \"bytes_sent\": {}}}",
+        totals.bytes_copied, totals.allocs, totals.pool_recycled, totals.bytes_sent
+    ));
 
     // whole-world cost: one full Table-2 cell (p=288, largest count)
     let start = Instant::now();
@@ -60,6 +106,15 @@ fn main() {
     println!("table2_largest_cell_sim_us\t{sim:.1}");
     let total = report_exchanges(&spec);
     println!("exchanges_per_wall_s\t{:.0}", total as f64 / wall);
+    json.push(format!("  \"table2_largest_cell_wall_s\": {wall:.3}"));
+    json.push(format!(
+        "  \"exchanges_per_wall_s\": {:.0}",
+        total as f64 / wall
+    ));
+
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    std::fs::write("BENCH_transport.json", &body).expect("write BENCH_transport.json");
+    eprintln!("wrote BENCH_transport.json");
 }
 
 fn report_exchanges(spec: &RunSpec) -> u64 {

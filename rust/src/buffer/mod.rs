@@ -1,37 +1,251 @@
 //! Data buffers that can be *real* (carrying elements) or *phantom*
-//! (carrying only a length).
+//! (carrying only a length) — with zero-copy block views over a shared
+//! slab on the real path.
 //!
-//! Why: regenerating the paper's Table 2 means running p = 288 ranks on
-//! vectors of up to 8 388 608 `int` elements. With real data that is
-//! ~9.7 GB of live buffers *per algorithm run* — pointless, because the
-//! quantity being reproduced is *time in the α-β cost model*, not the sums
-//! themselves. Phantom buffers let the exact same algorithm code run the
-//! full protocol (every sendrecv, every round, every block boundary) while
-//! messages carry only sizes; reduction cost is still charged (γ·n) by the
-//! virtual clock. Correctness of the data path is established separately by
-//! the real-mode test battery at smaller (p, m).
+//! ## Phantom buffers
+//!
+//! Regenerating the paper's Table 2 means running p = 288 ranks on vectors
+//! of up to 8 388 608 `int` elements. With real data that is ~9.7 GB of
+//! live buffers *per algorithm run* — pointless, because the quantity being
+//! reproduced is *time in the α-β cost model*, not the sums themselves.
+//! Phantom buffers let the exact same algorithm code run the full protocol
+//! (every sendrecv, every round, every block boundary) while messages carry
+//! only sizes; reduction cost is still charged (γ·n) by the virtual clock.
+//! Correctness of the data path is established separately by the real-mode
+//! test battery at smaller (p, m).
+//!
+//! ## Real buffers: slab + view
+//!
+//! A real buffer is a `(slab, offset, len)` **view** of a reference-counted
+//! element [`Slab`](slab::Slab). The owner of a vector holds the slab's
+//! single *exclusive* (writable) view; [`DataBuf::extract`] / the
+//! [`DataBuf::block`] alias carve out sub-views that share the slab without
+//! copying — sending a pipeline block is a refcount bump, not a memcpy.
+//! The receiving rank reduces straight out of the sender's slab and drops
+//! the view; steady-state block transport is copy-free and allocation-free
+//! (see [`pool`] for the free lists that absorb the remaining cold-path
+//! allocations, and `RankMetrics::{allocs, bytes_copied, pool_recycled}`
+//! for the counters that prove it).
+//!
+//! Mutation keeps the old value semantics via copy-on-write:
+//!
+//! * a non-exclusive view that is mutated first copies its range into a
+//!   fresh slab (the view had no write rights);
+//! * the exclusive view checks the slab's lease table (see [`slab`]) and
+//!   copies out only if an in-flight view overlaps the range being
+//!   written — which preserves MPI send semantics exactly: a sent block
+//!   always reads as its send-time contents, never as later updates.
+//!
+//! Collectives that *knowingly* overwrite a range right after sending it
+//! (the dual-root exchange, the recursive-doubling butterfly) use
+//! [`DataBuf::extract_owned`] / [`DataBuf::snapshot`] to pay one pooled
+//! block copy up front instead of a whole-vector CoW.
+
+pub mod pool;
+mod slab;
+
+pub use pool::BufStats;
+
+use std::mem::ManuallyDrop;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::ops::{Elem, ReduceOp, Side};
+use slab::Slab;
+
+/// How many scheduler yields the exclusive view waits for an overlapping
+/// in-flight lease to clear before falling back to copy-on-write. Protocol
+/// conflicts are transient (the receiver is about to consume the block), so
+/// a short wait usually avoids the copy entirely.
+const COW_SPINS: usize = 32;
+
+/// A view of a shared real slab: the storage behind `DataBuf::Real`.
+///
+/// Fields are private; construct through [`DataBuf::real`],
+/// [`DataBuf::extract`], or [`DataBuf::clone`]. A `RealBuf` is either the
+/// slab's single *exclusive* (writable) handle or a read-only view holding
+/// a registered lease for its whole lifetime.
+pub struct RealBuf<E: Elem> {
+    slab: Arc<Slab<E>>,
+    off: usize,
+    len: usize,
+    /// `None` ⇒ exclusive writable handle; `Some(id)` ⇒ read lease.
+    lease: Option<u64>,
+}
+
+impl<E: Elem> RealBuf<E> {
+    fn from_vec(v: Vec<E>) -> RealBuf<E> {
+        let len = v.len();
+        RealBuf {
+            slab: Arc::new(Slab::from_vec(v)),
+            off: 0,
+            len,
+            lease: None,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn as_slice(&self) -> &[E] {
+        // SAFETY: views hold a lease over [off, off+len) for their whole
+        // lifetime; the exclusive handle is the only possible writer and
+        // is borrowed shared here.
+        unsafe { self.slab.read(self.off, self.len) }
+    }
+
+    /// A read-only sub-view `[lo, hi)` sharing this buffer's slab.
+    fn view(&self, lo: usize, hi: usize) -> RealBuf<E> {
+        debug_assert!(lo <= hi && hi <= self.len);
+        let off = self.off + lo;
+        let len = hi - lo;
+        let lease = self.slab.lease(off, len);
+        RealBuf {
+            slab: Arc::clone(&self.slab),
+            off,
+            len,
+            lease: Some(lease),
+        }
+    }
+
+    /// True if this buffer shares its slab (a view, or an exclusive handle
+    /// with live views of it elsewhere).
+    fn is_shared(&self) -> bool {
+        self.lease.is_some() || Arc::strong_count(&self.slab) > 1
+    }
+
+    /// Replace this handle with an exclusive copy of its range.
+    fn cow(&mut self) {
+        let mut v = pool::acquire::<E>(self.len);
+        v.extend_from_slice(self.as_slice());
+        pool::charge_copy(self.len * E::BYTES);
+        if let Some(id) = self.lease.take() {
+            self.slab.release(id);
+        }
+        self.slab = Arc::new(Slab::from_vec(v));
+        self.off = 0;
+    }
+
+    /// Writable access to `[lo, lo + n)`, copying out first if this handle
+    /// is a read-only view or an in-flight view overlaps the range.
+    fn writable(&mut self, lo: usize, n: usize) -> &mut [E] {
+        debug_assert!(lo + n <= self.len);
+        if self.lease.is_some() {
+            self.cow();
+        } else if n > 0 && self.slab.overlaps(self.off + lo, n, None) {
+            let mut spins = 0;
+            while spins < COW_SPINS && self.slab.overlaps(self.off + lo, n, None) {
+                std::thread::yield_now();
+                spins += 1;
+            }
+            if self.slab.overlaps(self.off + lo, n, None) {
+                self.cow();
+            }
+        }
+        // SAFETY: self is now the exclusive handle and no lease overlaps
+        // the range (checked above, and new overlapping leases cannot be
+        // created while we hold &mut self — see the slab module docs).
+        unsafe { self.slab.write(self.off + lo, n) }
+    }
+
+    /// An exclusive (owned) copy of `[lo, hi)`, storage drawn from the
+    /// rank's free list.
+    fn snapshot_range(&self, lo: usize, hi: usize) -> RealBuf<E> {
+        debug_assert!(lo <= hi && hi <= self.len);
+        let mut v = pool::acquire::<E>(hi - lo);
+        v.extend_from_slice(&self.as_slice()[lo..hi]);
+        pool::charge_copy((hi - lo) * E::BYTES);
+        RealBuf::from_vec(v)
+    }
+
+    fn into_vec(self) -> Vec<E> {
+        if self.lease.is_some() || self.off != 0 || self.len != self.slab.len() {
+            // a sub-view: copy out; the lease is released by Drop *after*
+            // the read, so the range cannot be mutated under us
+            pool::charge_copy(self.len * E::BYTES);
+            return self.as_slice().to_vec();
+        }
+        let this = ManuallyDrop::new(self);
+        // SAFETY: lease is None so the skipped Drop would only release the
+        // Arc, whose ownership we take here.
+        let slab = unsafe { std::ptr::read(&this.slab) };
+        match Arc::try_unwrap(slab) {
+            Ok(s) => s.into_vec(),
+            Err(arc) => {
+                // views of this slab are still in flight: leave them the
+                // storage and copy out
+                pool::charge_copy(arc.len() * E::BYTES);
+                // SAFETY: we held the exclusive handle, so no writer
+                // exists; remaining handles are read-only views.
+                unsafe { arc.read(0, arc.len()) }.to_vec()
+            }
+        }
+    }
+}
+
+impl<E: Elem> Clone for RealBuf<E> {
+    fn clone(&self) -> RealBuf<E> {
+        self.view(0, self.len)
+    }
+}
+
+impl<E: Elem> Drop for RealBuf<E> {
+    fn drop(&mut self) {
+        if let Some(id) = self.lease.take() {
+            self.slab.release(id);
+        }
+    }
+}
+
+impl<E: Elem> std::fmt::Debug for RealBuf<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RealBuf")
+            .field("len", &self.len)
+            .field("off", &self.off)
+            .field("view", &self.lease.is_some())
+            .finish()
+    }
+}
+
+impl<E: Elem> PartialEq for RealBuf<E> {
+    fn eq(&self, other: &RealBuf<E>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
 
 /// A vector of `E` that either physically exists or is a counted phantom.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub enum DataBuf<E: Elem> {
-    /// Real data.
-    Real(Vec<E>),
+    /// Real data: a (possibly shared) view of an element slab.
+    Real(RealBuf<E>),
     /// Only a length; contents are never materialized.
     Phantom(usize),
 }
 
+impl<E: Elem> PartialEq for DataBuf<E> {
+    fn eq(&self, other: &DataBuf<E>) -> bool {
+        match (self, other) {
+            (DataBuf::Real(a), DataBuf::Real(b)) => a == b,
+            (DataBuf::Phantom(a), DataBuf::Phantom(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
 impl<E: Elem> DataBuf<E> {
-    /// A real buffer from a vector.
+    /// A real buffer taking ownership of a vector (becomes the slab's
+    /// exclusive handle).
     pub fn real(v: Vec<E>) -> Self {
-        DataBuf::Real(v)
+        DataBuf::Real(RealBuf::from_vec(v))
     }
 
-    /// A real zero-filled buffer of length `n`.
+    /// A real zero-filled buffer of length `n`, storage drawn from the
+    /// rank's free list.
     pub fn real_zeroed(n: usize) -> Self {
-        DataBuf::Real(vec![E::zero(); n])
+        let mut v = pool::acquire::<E>(n);
+        v.resize(n, E::zero());
+        DataBuf::Real(RealBuf::from_vec(v))
     }
 
     /// A phantom buffer of length `n`.
@@ -43,7 +257,7 @@ impl<E: Elem> DataBuf<E> {
     /// paper's implementation sketch).
     pub fn empty_like(&self) -> Self {
         match self {
-            DataBuf::Real(_) => DataBuf::Real(Vec::new()),
+            DataBuf::Real(_) => DataBuf::real(Vec::new()),
             DataBuf::Phantom(_) => DataBuf::Phantom(0),
         }
     }
@@ -51,7 +265,7 @@ impl<E: Elem> DataBuf<E> {
     /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
-            DataBuf::Real(v) => v.len(),
+            DataBuf::Real(b) => b.len(),
             DataBuf::Phantom(n) => *n,
         }
     }
@@ -66,6 +280,15 @@ impl<E: Elem> DataBuf<E> {
         matches!(self, DataBuf::Phantom(_))
     }
 
+    /// True for a real buffer that shares storage with other live buffers
+    /// (a zero-copy view, or a slab with views in flight).
+    pub fn is_shared(&self) -> bool {
+        match self {
+            DataBuf::Real(b) => b.is_shared(),
+            DataBuf::Phantom(_) => false,
+        }
+    }
+
     /// Wire size in bytes (drives the β term of the cost model).
     pub fn bytes(&self) -> usize {
         self.len() * E::BYTES
@@ -74,33 +297,41 @@ impl<E: Elem> DataBuf<E> {
     /// Borrow real contents; `None` for phantoms.
     pub fn as_slice(&self) -> Option<&[E]> {
         match self {
-            DataBuf::Real(v) => Some(v),
+            DataBuf::Real(b) => Some(b.as_slice()),
             DataBuf::Phantom(_) => None,
         }
     }
 
-    /// Mutably borrow real contents; `None` for phantoms.
+    /// Mutably borrow real contents; `None` for phantoms. Copies out first
+    /// if the buffer is a shared view (copy-on-write).
     pub fn as_mut_slice(&mut self) -> Option<&mut [E]> {
         match self {
-            DataBuf::Real(v) => Some(v),
+            DataBuf::Real(b) => {
+                let n = b.len();
+                Some(b.writable(0, n))
+            }
             DataBuf::Phantom(_) => None,
         }
     }
 
-    /// Consume into a vector; errors on phantoms.
+    /// Consume into a vector; errors on phantoms. Zero-copy when the
+    /// buffer is the sole owner of its full slab.
     pub fn into_vec(self) -> Result<Vec<E>> {
         match self {
-            DataBuf::Real(v) => Ok(v),
+            DataBuf::Real(b) => Ok(b.into_vec()),
             DataBuf::Phantom(_) => Err(Error::BufferMode(
                 "into_vec on a phantom buffer".into(),
             )),
         }
     }
 
-    /// Copy out the sub-range `[lo, hi)` as a new buffer of the same mode.
+    /// The sub-range `[lo, hi)` as a buffer of the same mode — for real
+    /// buffers a **zero-copy view** sharing this buffer's slab.
     ///
     /// This is the "send a block" primitive: blocks leave the pipelining
-    /// array as standalone messages.
+    /// array as reference-counted views, not copies. The sent block reads
+    /// as its send-time contents even if the source range is later
+    /// overwritten (copy-on-write triggers on the writer's side).
     pub fn extract(&self, lo: usize, hi: usize) -> Result<DataBuf<E>> {
         if lo > hi || hi > self.len() {
             return Err(Error::Config(format!(
@@ -109,9 +340,41 @@ impl<E: Elem> DataBuf<E> {
             )));
         }
         Ok(match self {
-            DataBuf::Real(v) => DataBuf::Real(v[lo..hi].to_vec()),
+            DataBuf::Real(b) => DataBuf::Real(b.view(lo, hi)),
             DataBuf::Phantom(_) => DataBuf::Phantom(hi - lo),
         })
+    }
+
+    /// Alias of [`DataBuf::extract`] under the pipeline vocabulary: block
+    /// `[lo, hi)` of the working vector as a zero-copy view.
+    pub fn block(&self, lo: usize, hi: usize) -> Result<DataBuf<E>> {
+        self.extract(lo, hi)
+    }
+
+    /// The sub-range `[lo, hi)` as an **owned** buffer (one pooled block
+    /// copy). Use instead of [`DataBuf::extract`] when the caller will
+    /// overwrite `[lo, hi)` before the receiver can possibly have consumed
+    /// the block — e.g. the dual-root exchange reduces into the very block
+    /// it just sent — where a view would force a whole-vector
+    /// copy-on-write.
+    pub fn extract_owned(&self, lo: usize, hi: usize) -> Result<DataBuf<E>> {
+        if lo > hi || hi > self.len() {
+            return Err(Error::Config(format!(
+                "extract [{lo}, {hi}) out of bounds for len {}",
+                self.len()
+            )));
+        }
+        Ok(match self {
+            DataBuf::Real(b) => DataBuf::Real(b.snapshot_range(lo, hi)),
+            DataBuf::Phantom(_) => DataBuf::Phantom(hi - lo),
+        })
+    }
+
+    /// An owned send-time copy of the whole buffer
+    /// (`extract_owned(0, len)`).
+    pub fn snapshot(&self) -> DataBuf<E> {
+        self.extract_owned(0, self.len())
+            .expect("full-range extract cannot be out of bounds")
     }
 
     /// Overwrite the sub-range `[lo, lo+incoming.len())` with `incoming`
@@ -127,7 +390,8 @@ impl<E: Elem> DataBuf<E> {
         }
         match (self, incoming) {
             (DataBuf::Real(dst), DataBuf::Real(src)) => {
-                dst[lo..lo + n].copy_from_slice(src);
+                let s = src.as_slice();
+                dst.writable(lo, n).copy_from_slice(s);
                 Ok(())
             }
             (DataBuf::Phantom(_), DataBuf::Phantom(_)) => Ok(()),
@@ -140,7 +404,8 @@ impl<E: Elem> DataBuf<E> {
     /// Reduce `incoming` into the sub-range `[lo, lo+incoming.len())`:
     /// `self[lo..] ← incoming ⊙ self[lo..]` (Side::Left) or the mirror.
     ///
-    /// This is `MPI_Reduce_local` restricted to one pipeline block. For
+    /// This is `MPI_Reduce_local` restricted to one pipeline block — on the
+    /// zero-copy path it reads straight out of the sender's slab. For
     /// phantom buffers it is a no-op (the virtual clock charges γ·n at the
     /// call site).
     pub fn reduce_at<O: ReduceOp<E> + ?Sized>(
@@ -160,7 +425,8 @@ impl<E: Elem> DataBuf<E> {
         }
         match (self, incoming) {
             (DataBuf::Real(dst), DataBuf::Real(src)) => {
-                op.reduce_into(&mut dst[lo..lo + n], src, side);
+                let s = src.as_slice();
+                op.reduce_into(dst.writable(lo, n), s, side);
                 Ok(())
             }
             (DataBuf::Phantom(_), DataBuf::Phantom(_)) => Ok(()),
@@ -224,10 +490,60 @@ mod tests {
     }
 
     #[test]
+    fn extract_is_zero_copy_view() {
+        let b = DataBuf::real(vec![1i32, 2, 3, 4]);
+        let blk = b.extract(0, 2).unwrap();
+        assert!(blk.is_shared());
+        assert!(b.is_shared()); // views of its slab are live
+        drop(blk);
+        assert!(!b.is_shared());
+    }
+
+    #[test]
+    fn extract_owned_is_independent() {
+        let mut b = DataBuf::real(vec![1i32, 2, 3, 4]);
+        let blk = b.extract_owned(0, 2).unwrap();
+        assert!(!blk.is_shared());
+        b.as_mut_slice().unwrap()[0] = 99;
+        assert_eq!(blk.as_slice().unwrap(), &[1, 2]); // unaffected
+    }
+
+    #[test]
+    fn writer_cow_preserves_send_time_contents() {
+        let mut b = DataBuf::real(vec![1i32, 2, 3, 4]);
+        let sent = b.extract(0, 4).unwrap(); // full-range in-flight view
+        b.as_mut_slice().unwrap()[0] = 77; // overlapping write → CoW
+        assert_eq!(sent.as_slice().unwrap(), &[1, 2, 3, 4]); // send-time data
+        assert_eq!(b.as_slice().unwrap(), &[77, 2, 3, 4]);
+    }
+
+    #[test]
+    fn disjoint_write_keeps_sharing() {
+        let mut b = DataBuf::real(vec![1i32, 2, 3, 4]);
+        let blk = b.extract(0, 2).unwrap();
+        // write outside the view's range: no CoW, the slab stays shared
+        if let DataBuf::Real(rb) = &mut b {
+            rb.writable(2, 2).copy_from_slice(&[8, 9]);
+        }
+        assert!(b.is_shared());
+        assert_eq!(blk.as_slice().unwrap(), &[1, 2]);
+        assert_eq!(b.as_slice().unwrap(), &[1, 2, 8, 9]);
+    }
+
+    #[test]
+    fn view_of_view_nests() {
+        let b = DataBuf::real(vec![0i32, 1, 2, 3, 4, 5]);
+        let v = b.extract(2, 6).unwrap();
+        let vv = v.extract(1, 3).unwrap();
+        assert_eq!(vv.as_slice().unwrap(), &[3, 4]);
+    }
+
+    #[test]
     fn extract_bounds_checked() {
         let b = DataBuf::real(vec![1i32]);
         assert!(b.extract(0, 2).is_err());
         assert!(b.extract(2, 2).is_err());
+        assert!(b.extract_owned(0, 2).is_err());
         let mut d = DataBuf::real(vec![1i32]);
         assert!(d.write_at(1, &DataBuf::real(vec![5])).is_err());
     }
@@ -266,8 +582,50 @@ mod tests {
     #[test]
     fn empty_like_preserves_mode() {
         let r = DataBuf::real(vec![1i32]);
-        assert!(matches!(r.empty_like(), DataBuf::Real(v) if v.is_empty()));
+        let e = r.empty_like();
+        assert!(!e.is_phantom());
+        assert!(e.is_empty());
         let p: DataBuf<i32> = DataBuf::phantom(3);
         assert!(matches!(p.empty_like(), DataBuf::Phantom(0)));
+    }
+
+    #[test]
+    fn into_vec_with_views_in_flight_copies() {
+        let b = DataBuf::real(vec![4i32, 5, 6]);
+        let v = b.extract(0, 2).unwrap();
+        let out = b.into_vec().unwrap();
+        assert_eq!(out, vec![4, 5, 6]);
+        assert_eq!(v.as_slice().unwrap(), &[4, 5]); // view survives
+    }
+
+    #[test]
+    fn view_into_vec_copies_range() {
+        let b = DataBuf::real(vec![7i32, 8, 9]);
+        let v = b.extract(1, 3).unwrap();
+        assert_eq!(v.into_vec().unwrap(), vec![8, 9]);
+        assert_eq!(b.as_slice().unwrap(), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn clone_is_view_and_mutation_cows() {
+        let b = DataBuf::real(vec![1i32, 2]);
+        let mut c = b.clone();
+        assert!(c.is_shared());
+        c.as_mut_slice().unwrap()[1] = 5; // view mutation → its own slab
+        assert_eq!(b.as_slice().unwrap(), &[1, 2]);
+        assert_eq!(c.as_slice().unwrap(), &[1, 5]);
+    }
+
+    #[test]
+    fn pool_counters_track_snapshot_traffic() {
+        let before = pool::stats();
+        let b = DataBuf::real(vec![0i32; 64]);
+        let s = b.snapshot();
+        drop(s); // storage goes to the free list
+        let s2 = b.snapshot(); // served from the free list
+        drop(s2);
+        let after = pool::stats();
+        assert_eq!(after.bytes_copied - before.bytes_copied, 2 * 64 * 4);
+        assert!(after.pool_recycled > before.pool_recycled);
     }
 }

@@ -1,0 +1,204 @@
+//! The shared storage behind real [`DataBuf`](super::DataBuf)s: a
+//! reference-counted slab of elements plus a table of outstanding *read
+//! leases*.
+//!
+//! ## Why leases
+//!
+//! Zero-copy block transport means a sent block is a `(slab, offset, len)`
+//! view of the sender's working vector, read by the receiving rank's thread
+//! while the sender keeps mutating *other* ranges of the same vector. Rust
+//! cannot express "disjoint ranges of one allocation, touched from two
+//! threads" with references alone, so the slab owns its storage as raw
+//! parts and hands out range-scoped slices derived from the base pointer:
+//!
+//! * every live view holds a **lease** `(off, len)` registered in the
+//!   slab's table for the view's whole lifetime — all reads through a view
+//!   are covered by its lease;
+//! * the single **exclusive** handle (the one created by
+//!   [`Slab::from_vec`] or by a copy-on-write) may mutate a range only
+//!   after checking, under the table lock, that no lease overlaps it; on
+//!   overlap it must copy out first (see `RealBuf::writable` in the parent
+//!   module).
+//!
+//! New overlapping leases cannot appear between the check and the
+//! mutation: leases are created only by `extract`/`clone` on an existing
+//! handle, sub-views stay inside their parent's leased range, and creating
+//! a view from the exclusive handle needs `&self` — which the mutation's
+//! `&mut self` excludes. Lease *releases* from other threads during a
+//! mutation are harmless (they only shrink the set of readers).
+//!
+//! The table is a `Mutex<Vec<..>>`: it holds a handful of entries (one per
+//! in-flight block), and the three touches per block (register, check,
+//! release) replace a heap allocation and a memcpy — the trade the whole
+//! zero-copy transport is built on.
+
+use std::mem::ManuallyDrop;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::ops::Elem;
+
+/// One outstanding read lease: `(id, off, len)` in elements.
+#[derive(Clone, Copy, Debug)]
+struct Lease {
+    id: u64,
+    off: usize,
+    len: usize,
+}
+
+/// A reference-counted element slab with range-lease bookkeeping.
+///
+/// Storage is the raw parts of a `Vec<E>`; `Drop` reassembles the vector
+/// and returns it to the thread-local [`pool`](super::pool) — receives
+/// recycle buffers on the *receiving* rank's free list, which is exactly
+/// the per-rank receive-side pooling the transport wants.
+pub(crate) struct Slab<E: Elem> {
+    ptr: *mut E,
+    len: usize,
+    cap: usize,
+    leases: Mutex<Vec<Lease>>,
+    next_lease: AtomicU64,
+}
+
+// SAFETY: `E: Elem` is `Copy + Send + Sync`; concurrent access to the raw
+// storage is governed by the lease discipline documented on the module —
+// readers hold leases, the single exclusive handle checks them before
+// writing, and disjoint-range slices derived from the base pointer never
+// alias.
+unsafe impl<E: Elem> Send for Slab<E> {}
+unsafe impl<E: Elem> Sync for Slab<E> {}
+
+impl<E: Elem> Slab<E> {
+    /// Take ownership of a vector's storage.
+    pub(crate) fn from_vec(v: Vec<E>) -> Slab<E> {
+        let mut v = ManuallyDrop::new(v);
+        Slab {
+            ptr: v.as_mut_ptr(),
+            len: v.len(),
+            cap: v.capacity(),
+            leases: Mutex::new(Vec::new()),
+            next_lease: AtomicU64::new(0),
+        }
+    }
+
+    /// Initialized length in elements.
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Register a read lease over `[off, off + len)`; returns its id.
+    pub(crate) fn lease(&self, off: usize, len: usize) -> u64 {
+        debug_assert!(off + len <= self.len);
+        let id = self.next_lease.fetch_add(1, Ordering::Relaxed);
+        self.leases.lock().unwrap().push(Lease { id, off, len });
+        id
+    }
+
+    /// Release a lease previously returned by [`Slab::lease`].
+    pub(crate) fn release(&self, id: u64) {
+        let mut leases = self.leases.lock().unwrap();
+        if let Some(i) = leases.iter().position(|l| l.id == id) {
+            leases.swap_remove(i);
+        }
+    }
+
+    /// True if any outstanding lease other than `own` overlaps
+    /// `[off, off + len)`. Empty ranges never overlap.
+    pub(crate) fn overlaps(&self, off: usize, len: usize, own: Option<u64>) -> bool {
+        if len == 0 {
+            return false;
+        }
+        self.leases
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|l| Some(l.id) != own && l.len != 0 && l.off < off + len && off < l.off + l.len)
+    }
+
+    /// Read `[off, off + len)`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent mutation of the range — by
+    /// holding a lease covering it, or by holding `&`/`&mut` on the slab's
+    /// exclusive handle (the only possible writer).
+    pub(crate) unsafe fn read(&self, off: usize, len: usize) -> &[E] {
+        debug_assert!(off + len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(off), len)
+    }
+
+    /// Mutably access `[off, off + len)`.
+    ///
+    /// # Safety
+    /// The caller must be the slab's exclusive handle, hold it mutably,
+    /// and have verified via [`Slab::overlaps`] that no lease covers the
+    /// range.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn write(&self, off: usize, len: usize) -> &mut [E] {
+        debug_assert!(off + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+
+    /// Consume the slab, reclaiming the storage as a `Vec` without copying.
+    pub(crate) fn into_vec(self) -> Vec<E> {
+        let this = ManuallyDrop::new(self);
+        // SAFETY: the raw parts came from a Vec in `from_vec`; ManuallyDrop
+        // prevents the Drop impl from also reclaiming them.
+        unsafe { Vec::from_raw_parts(this.ptr, this.len, this.cap) }
+    }
+}
+
+impl<E: Elem> Drop for Slab<E> {
+    fn drop(&mut self) {
+        // SAFETY: same provenance argument as `into_vec`; after this the
+        // slab's pointer is never touched again.
+        let v = unsafe { Vec::from_raw_parts(self.ptr, self.len, self.cap) };
+        super::pool::recycle(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_reads() {
+        let s = Slab::from_vec(vec![1i32, 2, 3, 4]);
+        assert_eq!(s.len(), 4);
+        assert_eq!(unsafe { s.read(1, 2) }, &[2, 3]);
+        assert_eq!(s.into_vec(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lease_overlap_detection() {
+        let s = Slab::from_vec(vec![0i32; 10]);
+        let id = s.lease(2, 4); // [2, 6)
+        assert!(s.overlaps(0, 3, None)); // [0,3) ∩ [2,6)
+        assert!(s.overlaps(5, 5, None)); // [5,10) ∩ [2,6)
+        assert!(!s.overlaps(6, 4, None)); // adjacent, no overlap
+        assert!(!s.overlaps(0, 2, None));
+        assert!(!s.overlaps(0, 10, Some(id))); // own lease excluded
+        s.release(id);
+        assert!(!s.overlaps(0, 10, None));
+    }
+
+    #[test]
+    fn zero_len_ranges_never_overlap() {
+        let s = Slab::from_vec(vec![0i32; 4]);
+        let _id = s.lease(0, 4);
+        assert!(!s.overlaps(2, 0, None));
+        let e = Slab::from_vec(Vec::<i32>::new());
+        let _eid = e.lease(0, 0);
+        assert!(!e.overlaps(0, 0, None));
+    }
+
+    #[test]
+    fn disjoint_write_while_leased() {
+        let s = Slab::from_vec(vec![0i32; 8]);
+        let id = s.lease(0, 4);
+        assert!(!s.overlaps(4, 4, None));
+        // SAFETY: range [4,8) is checked disjoint from the lease above.
+        unsafe { s.write(4, 4) }.copy_from_slice(&[9, 9, 9, 9]);
+        s.release(id);
+        assert_eq!(unsafe { s.read(0, 8) }, &[0, 0, 0, 0, 9, 9, 9, 9]);
+    }
+}

@@ -43,7 +43,7 @@ fn block_or_void<E: Elem>(y: &DataBuf<E>, blocks: &Blocks, k: isize) -> Result<D
         Ok(y.empty_like())
     } else {
         let (lo, hi) = blocks.range(k as usize);
-        y.extract(lo, hi)
+        y.block(lo, hi)
     }
 }
 
@@ -134,7 +134,13 @@ fn run_rounds<E: Elem, O: ReduceOp<E>>(
         if let Some(dual) = role.dual {
             if j < b {
                 let (lo, hi) = blocks.range(j);
-                let send = y.extract(lo, hi)?;
+                // Owned send, not a view: the root reduces into block j in
+                // this very round while the dual still holds the sent
+                // block, and both roots do so symmetrically — sharing here
+                // would make each root wait on the other's in-flight view
+                // and fall back to a whole-vector copy-on-write. One pooled
+                // block copy is the cheap side of that trade.
+                let send = y.extract_owned(lo, hi)?;
                 let t = comm.sendrecv(dual, send)?;
                 // lower root holds the rank-prefix [0, q): its own partial
                 // stands on the left of the dual's.
@@ -237,6 +243,29 @@ mod tests {
                 for s in buf.as_slice().unwrap() {
                     assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_block_path_is_zero_copy() {
+        // The tentpole invariant of the zero-copy transport: across all
+        // pipeline epochs, non-root ranks move blocks purely as slab views
+        // (no memcpy, no allocator traffic), and the dual roots' per-epoch
+        // snapshots are absorbed by the receive-side pool after warm-up.
+        let spec = RunSpec::new(14, 4_000).block_elems(100); // 40 epochs
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+        let forest = crate::topo::DualRootForest::new(14).unwrap();
+        for (rank, m) in report.metrics.iter().enumerate() {
+            let is_root = forest.role(rank).unwrap().dual.is_some();
+            if !is_root {
+                assert_eq!(m.bytes_copied, 0, "rank {rank} copied bytes");
+                assert_eq!(m.allocs, 0, "rank {rank} hit the allocator");
+            } else {
+                // one pooled block copy per epoch by design (see the dual
+                // exchange), but allocator traffic stays O(1), not O(b)
+                assert!(m.allocs <= 4, "root {rank}: {} allocs", m.allocs);
+                assert!(m.pool_recycled > 0, "root {rank} never recycled");
             }
         }
     }

@@ -63,7 +63,12 @@ pub fn allreduce_recursive_doubling<E: Elem, O: ReduceOp<E>>(
         for bit in 0..k {
             let partner_e = e ^ (1usize << bit);
             let partner = carrier(partner_e, rem);
-            let t = comm.sendrecv(partner, y.clone())?;
+            // Owned send-time snapshot, not a view: both partners reduce
+            // over their whole vector right after the exchange, so a
+            // shared view would make each wait on the other's in-flight
+            // lease and degrade to the same full copy anyway — snapshot()
+            // pays it up front from the free list, with no stall.
+            let t = comm.sendrecv(partner, y.snapshot())?;
             let side = if partner_e < e { Side::Left } else { Side::Right };
             comm.charge_compute(t.bytes());
             y.reduce_all(&t, op, side)?;

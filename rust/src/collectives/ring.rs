@@ -35,7 +35,7 @@ pub fn allreduce_ring<E: Elem, O: ReduceOp<E>>(
 
     let seg_buf = |y: &DataBuf<E>, s: usize| -> Result<DataBuf<E>> {
         let (lo, hi) = segs.range(s);
-        y.extract(lo, hi)
+        y.block(lo, hi)
     };
 
     // --- reduce-scatter: after step t, rank r holds the partial of segment

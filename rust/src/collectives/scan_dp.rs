@@ -54,7 +54,12 @@ pub fn scan_pipelined<E: Elem, O: ReduceOp<E>>(
             let (lo, _) = blocks.range(j);
             comm.charge_compute(t1.bytes());
             y.reduce_at(lo, &t1, op, Side::Left)?;
-            kept_t1.push(t1);
+            // Retain an owned copy, not the received view: kept blocks
+            // live until the down phase, and holding a lease on the
+            // child's slab that long would force the child into
+            // copy-on-write when it finalizes the same block. The view
+            // itself drops here, so the up-phase transfer stays zero-copy.
+            kept_t1.push(t1.snapshot());
         }
         if let Some(par) = parent {
             let (lo, hi) = blocks.range(j);

@@ -82,7 +82,7 @@ fn block<E: Elem>(y: &DataBuf<E>, blocks: &Blocks, g: usize) -> Result<DataBuf<E
         return Ok(y.empty_like());
     }
     let (lo, hi) = blocks.range(g);
-    y.extract(lo, hi)
+    y.block(lo, hi)
 }
 
 struct TreeCtx {
@@ -222,8 +222,10 @@ pub fn allreduce_twotree<E: Elem, O: ReduceOp<E>>(
         return Ok(y);
     }
     if p == 2 {
-        // degenerate: a single exchange per block (both trees are rank 0)
-        let t = comm.sendrecv(1 - comm.rank(), y.clone())?;
+        // degenerate: a single exchange per block (both trees are rank 0);
+        // owned snapshot because both ranks immediately reduce over the
+        // range they just sent (see the dual-root exchange in dpdr)
+        let t = comm.sendrecv(1 - comm.rank(), y.snapshot())?;
         let side = if comm.rank() == 0 { Side::Right } else { Side::Left };
         comm.charge_compute(t.bytes());
         y.reduce_all(&t, op, side)?;
@@ -232,11 +234,6 @@ pub fn allreduce_twotree<E: Elem, O: ReduceOp<E>>(
     let tt = TwoTree::new(p)?;
     let rank = comm.rank();
     let b = blocks.count();
-    let tb1 = TreeBlocks::new(Half::T1, b);
-    let tb2 = TreeBlocks::new(Half::T2, b);
-    let supersteps = tb1.count.max(tb2.count);
-
-    let _ = (tb1, tb2, supersteps);
     if rank == tt.driver() {
         // ---- driver: drain both roots (reduce), then feed them (bcast) --
         for g in 0..b {

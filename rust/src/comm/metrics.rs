@@ -15,6 +15,15 @@ pub struct RankMetrics {
     pub reduce_bytes: u64,
     /// Barrier participations.
     pub barriers: u64,
+    /// Buffer-layer memcpy traffic (copy-on-write, send-time snapshots,
+    /// `into_vec` fallbacks) — zero on the steady-state zero-copy block
+    /// path. Reduction work is counted in `reduce_bytes`, not here.
+    pub bytes_copied: u64,
+    /// Slab allocations that missed the rank's free list and hit the
+    /// system allocator.
+    pub allocs: u64,
+    /// Slab allocations served from the rank's receive-side free list.
+    pub pool_recycled: u64,
 }
 
 impl RankMetrics {
@@ -26,6 +35,17 @@ impl RankMetrics {
         self.bytes_recv += other.bytes_recv;
         self.reduce_bytes += other.reduce_bytes;
         self.barriers += other.barriers;
+        self.bytes_copied += other.bytes_copied;
+        self.allocs += other.allocs;
+        self.pool_recycled += other.pool_recycled;
+    }
+
+    /// Fold one rank's buffer-layer counters (thread-local, harvested when
+    /// the rank thread finishes) into this record.
+    pub fn absorb_buffer_stats(&mut self, stats: &crate::buffer::BufStats) {
+        self.bytes_copied += stats.bytes_copied;
+        self.allocs += stats.allocs;
+        self.pool_recycled += stats.pool_recycled;
     }
 }
 
@@ -42,6 +62,9 @@ mod tests {
             bytes_recv: 20,
             reduce_bytes: 5,
             barriers: 2,
+            bytes_copied: 7,
+            allocs: 3,
+            pool_recycled: 1,
         };
         let b = a.clone();
         a.merge(&b);
@@ -50,5 +73,21 @@ mod tests {
         assert_eq!(a.bytes_recv, 40);
         assert_eq!(a.reduce_bytes, 10);
         assert_eq!(a.barriers, 4);
+        assert_eq!(a.bytes_copied, 14);
+        assert_eq!(a.allocs, 6);
+        assert_eq!(a.pool_recycled, 2);
+    }
+
+    #[test]
+    fn absorb_buffer_stats_folds_counters() {
+        let mut m = RankMetrics::default();
+        m.absorb_buffer_stats(&crate::buffer::BufStats {
+            allocs: 2,
+            pool_recycled: 5,
+            bytes_copied: 128,
+        });
+        assert_eq!(m.allocs, 2);
+        assert_eq!(m.pool_recycled, 5);
+        assert_eq!(m.bytes_copied, 128);
     }
 }

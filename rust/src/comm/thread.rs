@@ -1,15 +1,21 @@
 //! The thread-backed communicator endpoint.
 //!
 //! Each rank owns a `ThreadComm`. Point-to-point channels (`std::sync::mpsc`,
-//! one per directed pair) are created lazily in a shared registry — the
-//! collectives only ever use O(p) of the p² possible edges. Channels are
+//! one per directed pair) live in a dense, preallocated `p × p` edge table
+//! of `OnceLock` slots shared by all endpoints of a world: after the first
+//! touch of an edge, sender lookup is one atomic load — no registry mutex,
+//! no `HashMap` hashing, and no `Sender` clone per post. Channels are
 //! unbounded, so `send` never blocks and the blocking structure of the
 //! algorithms (which the paper designed for `MPI_Sendrecv`) cannot deadlock
 //! as long as every posted receive is eventually matched.
+//!
+//! Messages carry [`DataBuf`]s directly — with the zero-copy buffer layer
+//! (see [`crate::buffer`]) a posted block is a reference-counted view of
+//! the sender's slab, so the steady-state block path moves no payload
+//! bytes at all: the receiver reduces straight out of the sender's memory.
 
-use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use super::barrier::VBarrier;
@@ -43,15 +49,33 @@ impl Timing {
 }
 
 /// A message on the wire: payload plus the sender's virtual clock at the
-/// time of posting (ignored under real timing).
+/// time of posting (ignored under real timing). The payload is typically a
+/// zero-copy view of the sender's slab.
 struct Msg<E: Elem> {
     vtime: f64,
     data: DataBuf<E>,
 }
 
-/// Lazily created directed channels, shared by all endpoints of a world.
+/// One directed channel of the edge table.
+///
+/// The `Sender` sits here unguarded: `std::sync::mpsc::Sender` is `Sync`
+/// (Rust ≥ 1.72), so endpoints send through a shared reference without
+/// cloning. The `Receiver` half is claimed exactly once by the destination
+/// rank.
+struct Edge<E: Elem> {
+    sender: Sender<Msg<E>>,
+    receiver: Mutex<Option<Receiver<Msg<E>>>>,
+}
+
+/// The dense `p × p` channel table, shared by all endpoints of a world.
+///
+/// Slot `(src, dst)` lives at index `src * p + dst`; each slot is a
+/// lazily initialized `OnceLock` (the collectives only ever touch O(p) of
+/// the p² edges, and an empty slot is 16 bytes). Lookup after first touch
+/// is lock-free.
 pub(super) struct Registry<E: Elem> {
-    slots: Mutex<HashMap<(usize, usize), ChannelSlot<E>>>,
+    size: usize,
+    edges: Box<[OnceLock<Box<Edge<E>>>]>,
     /// Set when any rank fails; blocked receivers notice within
     /// [`POISON_POLL`] and abort instead of waiting forever (the registry
     /// itself keeps unclaimed `Sender`s alive, so a dead peer would not
@@ -66,7 +90,7 @@ const POISON_POLL: std::time::Duration = std::time::Duration::from_millis(20);
 /// Override with `DPDR_RECV_TIMEOUT_SECS` (legitimate waits in heavily
 /// oversubscribed real-time worlds can be long).
 fn recv_watchdog() -> std::time::Duration {
-    static SECS: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    static SECS: OnceLock<u64> = OnceLock::new();
     let secs = *SECS.get_or_init(|| {
         std::env::var("DPDR_RECV_TIMEOUT_SECS")
             .ok()
@@ -76,15 +100,11 @@ fn recv_watchdog() -> std::time::Duration {
     std::time::Duration::from_secs(secs)
 }
 
-struct ChannelSlot<E: Elem> {
-    sender: Option<Sender<Msg<E>>>,
-    receiver: Option<Receiver<Msg<E>>>,
-}
-
 impl<E: Elem> Registry<E> {
-    pub(super) fn new() -> Registry<E> {
+    pub(super) fn new(size: usize) -> Registry<E> {
         Registry {
-            slots: Mutex::new(HashMap::new()),
+            size,
+            edges: (0..size * size).map(|_| OnceLock::new()).collect(),
             poisoned: std::sync::atomic::AtomicBool::new(false),
         }
     }
@@ -99,28 +119,31 @@ impl<E: Elem> Registry<E> {
         self.poisoned.load(std::sync::atomic::Ordering::Acquire)
     }
 
-    fn sender(&self, src: usize, dst: usize) -> Sender<Msg<E>> {
-        let mut slots = self.slots.lock().unwrap();
-        let slot = slots.entry((src, dst)).or_insert_with(|| {
+    /// The edge `(src, dst)`, creating its channel on first touch.
+    fn edge(&self, src: usize, dst: usize) -> &Edge<E> {
+        debug_assert!(src < self.size && dst < self.size);
+        self.edges[src * self.size + dst].get_or_init(|| {
             let (s, r) = channel();
-            ChannelSlot {
-                sender: Some(s),
-                receiver: Some(r),
-            }
-        });
-        slot.sender.as_ref().expect("sender already withdrawn").clone()
+            Box::new(Edge {
+                sender: s,
+                receiver: Mutex::new(Some(r)),
+            })
+        })
     }
 
+    /// Shared reference to the sender of edge `(src, dst)` — O(1),
+    /// lock-free after first touch, never cloned.
+    fn sender(&self, src: usize, dst: usize) -> &Sender<Msg<E>> {
+        &self.edge(src, dst).sender
+    }
+
+    /// Claim the receive half of edge `(src, dst)`; each endpoint may do
+    /// this exactly once.
     fn receiver(&self, src: usize, dst: usize) -> Receiver<Msg<E>> {
-        let mut slots = self.slots.lock().unwrap();
-        let slot = slots.entry((src, dst)).or_insert_with(|| {
-            let (s, r) = channel();
-            ChannelSlot {
-                sender: Some(s),
-                receiver: Some(r),
-            }
-        });
-        slot.receiver
+        self.edge(src, dst)
+            .receiver
+            .lock()
+            .unwrap()
             .take()
             .expect("receiver claimed twice — one endpoint per rank")
     }
@@ -132,10 +155,8 @@ pub struct ThreadComm<E: Elem> {
     size: usize,
     registry: Arc<Registry<E>>,
     barrier: Arc<VBarrier>,
-    /// Cached outgoing channels, keyed by destination.
-    tx: HashMap<usize, Sender<Msg<E>>>,
-    /// Claimed incoming channels, keyed by source.
-    rx: HashMap<usize, Receiver<Msg<E>>>,
+    /// Claimed incoming channels, indexed by source rank.
+    rx: Vec<Option<Receiver<Msg<E>>>>,
     timing: Timing,
     vtime: f64,
     start: Instant,
@@ -155,8 +176,7 @@ impl<E: Elem> ThreadComm<E> {
             size,
             registry,
             barrier,
-            tx: HashMap::new(),
-            rx: HashMap::new(),
+            rx: (0..size).map(|_| None).collect(),
             timing,
             vtime: 0.0,
             start: Instant::now(),
@@ -174,34 +194,26 @@ impl<E: Elem> ThreadComm<E> {
         Ok(())
     }
 
-    fn tx_to(&mut self, peer: usize) -> Sender<Msg<E>> {
-        let (rank, registry) = (self.rank, &self.registry);
-        self.tx
-            .entry(peer)
-            .or_insert_with(|| registry.sender(rank, peer))
-            .clone()
-    }
-
     fn post(&mut self, peer: usize, data: DataBuf<E>) -> Result<usize> {
         let bytes = data.bytes();
         let msg = Msg {
             vtime: self.vtime,
             data,
         };
-        self.tx_to(peer).send(msg).map_err(|_| Error::Disconnected {
-            rank: self.rank,
-            peer,
-        })?;
+        self.registry
+            .sender(self.rank, peer)
+            .send(msg)
+            .map_err(|_| Error::Disconnected {
+                rank: self.rank,
+                peer,
+            })?;
         self.metrics.bytes_sent += bytes as u64;
         Ok(bytes)
     }
 
     fn take(&mut self, peer: usize) -> Result<Msg<E>> {
         let (rank, registry) = (self.rank, &self.registry);
-        let rx = self
-            .rx
-            .entry(peer)
-            .or_insert_with(|| registry.receiver(peer, rank));
+        let rx = self.rx[peer].get_or_insert_with(|| registry.receiver(peer, rank));
         // Block in POISON_POLL slices so a failed world tears down instead
         // of hanging on receives whose sender died (the registry keeps the
         // unclaimed Sender half alive, so disconnect alone is not enough),
@@ -363,7 +375,7 @@ mod tests {
     use std::thread;
 
     fn pair(timing: Timing) -> (ThreadComm<i32>, ThreadComm<i32>) {
-        let reg = Arc::new(Registry::new());
+        let reg = Arc::new(Registry::new(2));
         let bar = Arc::new(VBarrier::new(2));
         (
             ThreadComm::new(0, 2, Arc::clone(&reg), Arc::clone(&bar), timing),
@@ -382,6 +394,23 @@ mod tests {
         assert_eq!(got.into_vec().unwrap(), vec![7, 8]);
         assert_eq!(h.join().unwrap(), vec![1, 2, 3]);
         assert_eq!(a.metrics().sendrecvs, 1);
+    }
+
+    #[test]
+    fn zero_copy_views_cross_the_channel() {
+        // a posted view shares its slab end to end: the receiver reads the
+        // sender's storage, no copy in between
+        let (mut a, mut b) = pair(Timing::Real);
+        let h = thread::spawn(move || {
+            let got = b.recv(0).unwrap();
+            assert!(got.is_shared()); // still a view of the sender's slab
+            got.into_vec().unwrap()
+        });
+        let y = DataBuf::real(vec![1, 2, 3, 4]);
+        let blk = y.extract(1, 3).unwrap();
+        a.send(1, blk).unwrap();
+        assert_eq!(h.join().unwrap(), vec![2, 3]);
+        drop(y);
     }
 
     #[test]
@@ -426,7 +455,7 @@ mod tests {
             let got = b.sendrecv(0, DataBuf::real(vec![9])).unwrap();
             got.len()
         });
-        let got = a.sendrecv(1, DataBuf::Real(Vec::new())).unwrap();
+        let got = a.sendrecv(1, DataBuf::real(Vec::new())).unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(h.join().unwrap(), 0);
     }
@@ -446,5 +475,25 @@ mod tests {
         let (mut a, _b) = pair(Timing::Real);
         assert!(a.send(0, DataBuf::real(vec![1])).is_err()); // self
         assert!(a.send(2, DataBuf::real(vec![1])).is_err()); // out of range
+    }
+
+    #[test]
+    fn edge_table_is_stable_across_posts() {
+        // the same &Sender must come back on every lookup (no re-init)
+        let reg: Registry<i32> = Registry::new(3);
+        let s1 = reg.sender(0, 2) as *const _;
+        let s2 = reg.sender(0, 2) as *const _;
+        assert_eq!(s1, s2);
+        // distinct edges get distinct channels
+        let s3 = reg.sender(2, 0) as *const _;
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    #[should_panic(expected = "claimed twice")]
+    fn receiver_single_claim() {
+        let reg: Registry<i32> = Registry::new(2);
+        let _r = reg.receiver(0, 1);
+        let _r2 = reg.receiver(0, 1);
     }
 }

@@ -49,7 +49,7 @@ where
     if p == 0 {
         return Err(Error::Config("world size must be >= 1".into()));
     }
-    let registry = Arc::new(Registry::new());
+    let registry = Arc::new(Registry::new(p));
     let barrier = Arc::new(VBarrier::new(p));
     let f = Arc::new(f);
     let start = std::time::Instant::now();
@@ -74,6 +74,9 @@ where
                     }
                 }
                 let guard = PoisonOnUnwind(Arc::clone(&registry));
+                // rank threads are fresh per world, but reset the buffer
+                // counters anyway so harvested stats cover exactly this run
+                let _ = crate::buffer::pool::take_stats();
                 let mut comm = ThreadComm::new(rank, p, Arc::clone(&registry), barrier, timing);
                 let result = match f(&mut comm) {
                     Ok(r) => r,
@@ -83,7 +86,9 @@ where
                     }
                 };
                 drop(guard);
-                Ok::<_, Error>((result, comm.vtime(), comm.metrics().clone()))
+                let mut metrics = comm.metrics().clone();
+                metrics.absorb_buffer_stats(&crate::buffer::pool::take_stats());
+                Ok::<_, Error>((result, comm.vtime(), metrics))
             })
             .map_err(Error::Io)?;
         handles.push(handle);

@@ -38,6 +38,21 @@ impl Gen {
         self.rng.range(lo, scaled_hi)
     }
 
+    /// An **odd** usize in `[lo, hi]` (`hi > lo`). Odd block sizes are the
+    /// adversarial case for the block partitioners (unbalanced blocks,
+    /// ragged tails), so transport-parity properties fuzz with these.
+    pub fn odd_usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        let v = self.usize_in(lo, hi);
+        if v % 2 == 1 {
+            v
+        } else if v < hi {
+            v + 1
+        } else {
+            v - 1 // v == hi > lo, so v - 1 >= lo, and v even makes it odd
+        }
+    }
+
     /// One of the provided choices.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.rng.range(0, items.len() - 1)]
@@ -125,6 +140,17 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    fn odd_usize_is_odd_and_in_range() {
+        let mut g = Gen::new(11);
+        for _ in 0..1000 {
+            let v = g.odd_usize_in(2, 9);
+            assert!(v % 2 == 1 && (2..=9).contains(&v), "v={v}");
+            let w = g.odd_usize_in(4, 5);
+            assert_eq!(w, 5);
+        }
     }
 
     #[test]

@@ -54,6 +54,76 @@ fn prop_allreduce_equals_oracle() {
 }
 
 #[test]
+fn prop_transport_parity_all_algos() {
+    // Zero-copy transport parity: for every AlgoKind, at adversarial odd
+    // block sizes, (1) real-mode results are byte-identical across repeated
+    // runs and equal to the oracle, and (2) the virtual clock is
+    // *bit-identical* between real and phantom payloads and across runs —
+    // the α-β-γ cost model cannot see the transport's slab views, pooling,
+    // or copy-on-write at all.
+    forall("transport parity", 36, 0x2E40C0, |g| {
+        let algo = random_algo(g);
+        let p = g.usize_in(2, 14);
+        let m = g.usize_in(1, 257);
+        let blk = g.odd_usize_in(1, 33);
+        let spec = RunSpec::new(p, m).block_elems(blk).seed(g.u64());
+        let expected = spec.expected_sum_i32();
+        for run in 0..2 {
+            let report = run_allreduce_i32(algo, &spec, Timing::Real)
+                .map_err(|e| format!("{} p={p} m={m} blk={blk}: {e}", algo.name()))?;
+            for (rank, buf) in report.results.into_iter().enumerate() {
+                if buf.as_slice() != Some(&expected[..]) {
+                    return Err(format!(
+                        "{} p={p} m={m} blk={blk} rank={rank} run={run}: wrong bytes",
+                        algo.name()
+                    ));
+                }
+            }
+        }
+        let t = |ph: bool| {
+            run_allreduce_i32(algo, &spec.phantom(ph), Timing::hydra())
+                .map(|r| r.max_vtime_us)
+                .map_err(|e| e.to_string())
+        };
+        let (a, b, c) = (t(false)?, t(true)?, t(true)?);
+        if a.to_bits() != b.to_bits() || b.to_bits() != c.to_bits() {
+            return Err(format!(
+                "{} p={p} m={m} blk={blk}: vtime real={a} phantom={b}/{c}",
+                algo.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_copy_allocs_flat_in_epochs() {
+    // Allocator traffic must not grow with the number of pipeline epochs:
+    // blocks travel as slab views and the roots' snapshot buffers recycle
+    // through the receive-side pool, so 16× more epochs may not cost more
+    // than a constant number of extra allocations.
+    forall("allocs flat across epochs", 12, 0x2E60, |g| {
+        let p = g.usize_in(2, 12);
+        let m = 1usize << g.usize_in(8, 12); // 256 … 4096 elements
+        let few = RunSpec::new(p, m).block_elems(m / 2); // 2 epochs
+        let many = RunSpec::new(p, m).block_elems(m / 32); // 32 epochs
+        let run = |spec: &RunSpec| {
+            run_allreduce_i32(AlgoKind::Dpdr, spec, Timing::Real)
+                .map(|r| r.total_metrics())
+                .map_err(|e| e.to_string())
+        };
+        let (a, b) = (run(&few)?, run(&many)?);
+        if b.allocs > a.allocs + 8 {
+            return Err(format!(
+                "p={p} m={m}: allocs grew with epochs ({} @2 vs {} @32)",
+                a.allocs, b.allocs
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_postorder_tree_invariants() {
     forall("post-order invariants", 200, 0x7EE, |g| {
         let lo = g.usize_in(0, 50);
