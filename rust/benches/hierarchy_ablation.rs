@@ -1,11 +1,22 @@
 //! **A4 — hierarchy ablation** (§3 open question: "the role of the
 //! hierarchical structure (network and nodes) of a clustered
-//! high-performance system"): rerun the Table-2 comparison under a
-//! two-level cost model (fast intra-node links, OmniPath-like inter-node
-//! links, 8 ranks per node as in the paper's runs) and compare rank→node
-//! mappings.
+//! high-performance system"), in two parts:
 //!
-//! Run: `cargo bench --bench hierarchy_ablation [-- --p 288]`
+//! 1. **Mapping ablation** — rerun the Table-2 comparison under a
+//!    two-level cost model (fast intra-node links, OmniPath-like
+//!    inter-node links, 8 ranks per node as in the paper's runs) and
+//!    compare rank→node mappings.
+//! 2. **Node-aware ablation** — the paper's machine at full width
+//!    (36 nodes × 32 ranks = p 1152, the cluster its evaluation ran on):
+//!    flat `dpdr` vs the node-aware `hier` (intra-node reduce-scatter →
+//!    dpdr across nodes per segment → intra-node allgather) under
+//!    β_intra ≪ β_inter. The hierarchical algorithm must win: its
+//!    inter-node β-term is `3βm/32`, the flat tree's is `Θ(βm)`.
+//!
+//! Writes `BENCH_hierarchy.json` next to the manifest so CI tracks the
+//! node-aware speedups from PR to PR.
+//!
+//! Run: `cargo bench --bench hierarchy_ablation [-- --p 288 --p2 1152]`
 
 use dpdr::cli::Args;
 use dpdr::collectives::{run_allreduce_i32, RunSpec};
@@ -13,27 +24,30 @@ use dpdr::comm::Timing;
 use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
 use dpdr::topo::Mapping;
 
-fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
-    let p = args.get("p", 288usize).unwrap();
-    let ppn = args.get("ppn", 8usize).unwrap();
+const INTER: LinkCost = LinkCost {
+    alpha: 1.0e-6,
+    beta: 0.70e-9,
+};
+const INTRA: LinkCost = LinkCost {
+    alpha: 0.3e-6,
+    beta: 0.08e-9,
+};
+
+fn hier_timing(mapping: Mapping) -> Timing {
+    Timing::Virtual(
+        CostModel::Hierarchical {
+            intra: INTRA,
+            inter: INTER,
+            mapping,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
+/// Part 1: block vs round-robin rank→node mappings under two-level costs.
+fn mapping_ablation(p: usize, ppn: usize) {
     let nodes = p / ppn;
-
-    let inter = LinkCost::new(1.0e-6, 0.70e-9);
-    let intra = LinkCost::new(0.3e-6, 0.08e-9);
-    let uniform = Timing::Virtual(CostModel::Uniform(inter), ComputeCost::new(0.25e-9));
-    let hier = |mapping: Mapping| {
-        Timing::Virtual(
-            CostModel::Hierarchical {
-                intra,
-                inter,
-                mapping,
-            },
-            ComputeCost::new(0.25e-9),
-        )
-    };
-
+    let uniform = Timing::Virtual(CostModel::Uniform(INTER), ComputeCost::new(0.25e-9));
     let algos = [
         AlgoKind::Dpdr,
         AlgoKind::PipeTree,
@@ -51,11 +65,11 @@ fn main() {
             let t_block = run_allreduce_i32(
                 algo,
                 &spec,
-                hier(Mapping::Block { ranks_per_node: ppn }),
+                hier_timing(Mapping::Block { ranks_per_node: ppn }),
             )
             .unwrap()
             .max_vtime_us;
-            let t_rr = run_allreduce_i32(algo, &spec, hier(Mapping::RoundRobin { nodes }))
+            let t_rr = run_allreduce_i32(algo, &spec, hier_timing(Mapping::RoundRobin { nodes }))
                 .unwrap()
                 .max_vtime_us;
             println!(
@@ -79,4 +93,53 @@ fn main() {
          (tree algorithms are rank-local; answer to the paper's Sec. 3 question)"
     );
     assert!(block_wins * 2 >= cases, "block mapping should win mostly");
+}
+
+/// Part 2: flat dpdr vs node-aware hier on the paper's 36 × 32 cluster.
+fn node_aware_ablation(p2: usize, ppn2: usize, json: &mut Vec<String>) {
+    let mapping = Mapping::Block { ranks_per_node: ppn2 };
+    let timing = hier_timing(mapping);
+    println!("# node-aware ablation: p={p2} ({} nodes x {ppn2})", p2 / ppn2);
+    println!("#count\tflat_dpdr_us\thier_us\tspeedup");
+    for m in [2_500usize, 250_000, 2_500_000] {
+        let spec = RunSpec::new(p2, m)
+            .block_elems(16_000)
+            .phantom(true)
+            .mapping(mapping);
+        let t_flat = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        let t_hier = run_allreduce_i32(AlgoKind::Hier, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        println!("{m}\t{t_flat:.1}\t{t_hier:.1}\t{:.2}x", t_flat / t_hier);
+        json.push(format!(
+            "  \"hier_p{p2}_m{m}\": {{\"flat_dpdr_us\": {t_flat:.1}, \"hier_us\": {t_hier:.1}, \
+             \"speedup\": {:.3}}}",
+            t_flat / t_hier
+        ));
+        assert!(
+            t_hier < t_flat,
+            "m={m}: node-aware hier ({t_hier:.1} us) must beat flat dpdr ({t_flat:.1} us) \
+             on the {p2}-rank two-level cluster"
+        );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 288usize).unwrap();
+    let ppn = args.get("ppn", 8usize).unwrap();
+    // the paper's cluster: 36 nodes, 32 cores each
+    let p2 = args.get("p2", 1152usize).unwrap();
+    let ppn2 = args.get("ppn2", 32usize).unwrap();
+
+    mapping_ablation(p, ppn);
+    let mut json: Vec<String> = Vec::new();
+    node_aware_ablation(p2, ppn2, &mut json);
+
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    std::fs::write("BENCH_hierarchy.json", &body).expect("write BENCH_hierarchy.json");
+    eprintln!("wrote BENCH_hierarchy.json");
 }

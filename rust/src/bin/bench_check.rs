@@ -1,0 +1,177 @@
+//! Bench regression gate: compare a fresh `BENCH_transport.json` (written
+//! by `cargo bench --bench transport_micro`) against the committed
+//! baseline and fail if the transport regressed.
+//!
+//! Checked (the ROADMAP's perf-trajectory invariants):
+//!
+//! * `large_block.mb_per_sec` — large-block throughput must not drop more
+//!   than `--tolerance` (default 10%);
+//! * `dpdr_real_p14_m200k.bytes_copied` — the zero-copy invariant: copied
+//!   bytes must not grow more than the tolerance (plus a small absolute
+//!   slack for near-zero baselines).
+//!
+//! ```text
+//! cargo run --release --bin bench_check                 # gate against baseline
+//! cargo run --release --bin bench_check -- --write-baseline   # (re)record it
+//! ```
+//!
+//! A missing baseline is not a failure: the first machine with a Rust
+//! toolchain records one with `--write-baseline` and commits it; until
+//! then the gate reports and passes, so CI bootstraps cleanly.
+
+use dpdr::cli::Args;
+
+/// Extract the number following `"field":` inside the object introduced by
+/// `"obj"`. Enough JSON for the flat two-level records our benches write —
+/// no dependency needed (the build environment is offline by design). The
+/// field search is bounded at the object's closing brace, so a field
+/// missing from the named object is reported missing rather than silently
+/// read from a later object.
+fn num_after(text: &str, obj: &str, field: &str) -> Option<f64> {
+    let oi = text.find(&format!("\"{obj}\""))?;
+    let rest = &text[oi..];
+    let close = rest.find('}').unwrap_or(rest.len());
+    let scope = &rest[..close];
+    let fi = scope.find(&format!("\"{field}\""))?;
+    let scope = &scope[fi..];
+    let ci = scope.find(':')?;
+    let scope = scope[ci + 1..].trim_start();
+    let end = scope
+        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+        .unwrap_or(scope.len());
+    scope[..end].parse().ok()
+}
+
+struct Gate {
+    failures: Vec<String>,
+}
+
+impl Gate {
+    /// `fresh` must be at least `(1 − tol) ×` baseline (throughput-like).
+    fn check_floor(&mut self, what: &str, fresh: f64, base: f64, tol: f64) {
+        let floor = base * (1.0 - tol);
+        let verdict = if fresh < floor { "REGRESSED" } else { "ok" };
+        println!("{what}: baseline {base:.1}, fresh {fresh:.1}, floor {floor:.1} — {verdict}");
+        if fresh < floor {
+            self.failures
+                .push(format!("{what} regressed: {fresh:.1} < {floor:.1}"));
+        }
+    }
+
+    /// `fresh` must be at most `(1 + tol) ×` baseline `+ slack` (cost-like).
+    fn check_ceiling(&mut self, what: &str, fresh: f64, base: f64, tol: f64, slack: f64) {
+        let ceil = base * (1.0 + tol) + slack;
+        let verdict = if fresh > ceil { "REGRESSED" } else { "ok" };
+        println!("{what}: baseline {base:.1}, fresh {fresh:.1}, ceiling {ceil:.1} — {verdict}");
+        if fresh > ceil {
+            self.failures
+                .push(format!("{what} regressed: {fresh:.1} > {ceil:.1}"));
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["write-baseline", "help"]).expect("args");
+    let fresh_path = args.raw("fresh").unwrap_or("BENCH_transport.json").to_string();
+    let base_path = args.raw("baseline").unwrap_or("BENCH_baseline.json").to_string();
+    let tol: f64 = args.get("tolerance", 0.10).expect("tolerance");
+
+    let fresh = match std::fs::read_to_string(&fresh_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "bench_check: cannot read {fresh_path}: {e}\n\
+                 run `cargo bench --bench transport_micro` first"
+            );
+            std::process::exit(2);
+        }
+    };
+
+    if args.switch("write-baseline") {
+        std::fs::write(&base_path, &fresh).expect("write baseline");
+        println!("bench_check: recorded {base_path} from {fresh_path}");
+        return;
+    }
+
+    let base = match std::fs::read_to_string(&base_path) {
+        Ok(s) => s,
+        Err(_) => {
+            println!(
+                "bench_check: no baseline at {base_path} — gate passes (bootstrap).\n\
+                 Record one with `cargo run --release --bin bench_check -- --write-baseline` \
+                 and commit it to arm the gate."
+            );
+            return;
+        }
+    };
+
+    let pick = |text: &str, obj: &str, field: &str| -> f64 {
+        num_after(text, obj, field).unwrap_or_else(|| {
+            eprintln!("bench_check: {obj}.{field} missing from a report");
+            std::process::exit(2);
+        })
+    };
+
+    let mut gate = Gate { failures: Vec::new() };
+    gate.check_floor(
+        "large_block.mb_per_sec",
+        pick(&fresh, "large_block", "mb_per_sec"),
+        pick(&base, "large_block", "mb_per_sec"),
+        tol,
+    );
+    gate.check_ceiling(
+        "dpdr_real_p14_m200k.bytes_copied",
+        pick(&fresh, "dpdr_real_p14_m200k", "bytes_copied"),
+        pick(&base, "dpdr_real_p14_m200k", "bytes_copied"),
+        tol,
+        4096.0, // absolute slack so a near-zero baseline is not a hair trigger
+    );
+    // informational (no gate): small-block rate and allocator traffic
+    if let (Some(f), Some(b)) = (
+        num_after(&fresh, "small_block", "msgs_per_sec"),
+        num_after(&base, "small_block", "msgs_per_sec"),
+    ) {
+        println!("small_block.msgs_per_sec: baseline {b:.0}, fresh {f:.0} (informational)");
+    }
+    if let (Some(f), Some(b)) = (
+        num_after(&fresh, "dpdr_real_p14_m200k", "allocs"),
+        num_after(&base, "dpdr_real_p14_m200k", "allocs"),
+    ) {
+        println!("dpdr_real_p14_m200k.allocs: baseline {b:.0}, fresh {f:.0} (informational)");
+    }
+
+    if gate.failures.is_empty() {
+        println!("bench_check: OK (tolerance {:.0}%)", tol * 100.0);
+    } else {
+        for f in &gate.failures {
+            eprintln!("bench_check: {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::num_after;
+
+    const SAMPLE: &str = r#"{
+  "small_block": {"elems": 4, "us_per_sendrecv": 0.5100, "msgs_per_sec": 1960784, "mb_per_sec": 0.1},
+  "large_block": {"elems": 262144, "us_per_sendrecv": 1.9, "msgs_per_sec": 526316, "mb_per_sec": 1103.9},
+  "dpdr_real_p14_m200k": {"bytes_copied": 183296, "allocs": 40, "pool_recycled": 258, "bytes_sent": 11200000}
+}"#;
+
+    #[test]
+    fn extracts_nested_numbers() {
+        assert_eq!(num_after(SAMPLE, "large_block", "mb_per_sec"), Some(1103.9));
+        assert_eq!(
+            num_after(SAMPLE, "dpdr_real_p14_m200k", "bytes_copied"),
+            Some(183296.0)
+        );
+        assert_eq!(num_after(SAMPLE, "small_block", "elems"), Some(4.0));
+        assert_eq!(num_after(SAMPLE, "missing", "mb_per_sec"), None);
+        assert_eq!(num_after(SAMPLE, "large_block", "missing"), None);
+        // the search must not bleed into a later object's fields
+        assert_eq!(num_after(SAMPLE, "small_block", "bytes_copied"), None);
+    }
+}

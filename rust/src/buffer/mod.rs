@@ -44,7 +44,7 @@
 pub mod pool;
 mod slab;
 
-pub use pool::BufStats;
+pub use pool::{BufStats, CowEvent, ShardPool};
 
 use std::mem::ManuallyDrop;
 use std::sync::Arc;

@@ -1,6 +1,8 @@
 //! Per-rank (thread-local) capacity-bucketed free lists for slab storage,
-//! plus the allocation/copy counters that make the zero-copy transport's
-//! behavior observable.
+//! per node-group shared overflow arenas ([`ShardPool`]), the
+//! allocation/copy counters that make the zero-copy transport's behavior
+//! observable, and (under the `debug-cow` feature) per-copy attribution of
+//! *which* collective and call site triggered each memcpy.
 //!
 //! Every rank of a world runs on its own OS thread, so a `thread_local!`
 //! pool *is* a per-rank pool with no synchronization at all. Buffers enter
@@ -11,19 +13,31 @@
 //! collective therefore runs with zero allocator traffic: the paper's
 //! `O(b)` per-phase allocations become `O(1)`.
 //!
+//! When the thread-local list overflows or misses, the fallback is the
+//! rank's **node-group shard pool** (bound by `run_world` from the world's
+//! shard layout), not the global allocator: storage freed by one rank of a
+//! node group is reclaimed by its neighbors, and different shards never
+//! contend on a shared arena. Only a miss in *both* tiers hits the system
+//! allocator (counted in `allocs`).
+//!
 //! Buckets are powers of two by *capacity in elements*; a request is served
-//! from the smallest bucket whose capacity fits. The pool is bounded
-//! ([`MAX_PER_BUCKET`], [`MAX_POOLED_BYTES`] per bucket entry) so a one-off
-//! giant vector cannot pin memory forever.
+//! from the smallest bucket whose capacity fits. Both tiers are bounded
+//! ([`MAX_PER_BUCKET`] / [`SHARD_PER_BUCKET`], [`MAX_POOLED_BYTES`] per
+//! entry) so a one-off giant vector cannot pin memory forever.
 
 use std::any::{Any, TypeId};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::ops::Elem;
 
-/// Free-list entries kept per capacity class.
+/// Free-list entries kept per capacity class in a rank's local pool.
 const MAX_PER_BUCKET: usize = 8;
+
+/// Free-list entries kept per capacity class in a shard (node group) pool —
+/// it backs many ranks, so it holds more before dropping storage.
+const SHARD_PER_BUCKET: usize = 64;
 
 /// Largest single buffer the pool will retain (bytes). Bigger ones go back
 /// to the allocator — they are whole working vectors, not pipeline blocks.
@@ -34,12 +48,14 @@ const CLASSES: usize = 48;
 
 struct Pool<E: Elem> {
     buckets: Vec<Vec<Vec<E>>>,
+    per_bucket: usize,
 }
 
 impl<E: Elem> Pool<E> {
-    fn new() -> Pool<E> {
+    fn new(per_bucket: usize) -> Pool<E> {
         Pool {
             buckets: (0..CLASSES).map(|_| Vec::new()).collect(),
+            per_bucket,
         }
     }
 
@@ -53,7 +69,7 @@ impl<E: Elem> Pool<E> {
         let lo = Self::class(cap);
         for c in lo..CLASSES.min(lo + 2) {
             // a class is a capacity floor, not a guarantee: scan the whole
-            // bucket (≤ MAX_PER_BUCKET entries) for the first fit
+            // bucket (≤ per_bucket entries) for the first fit
             let bucket = &mut self.buckets[c];
             if let Some(i) = bucket.iter().position(|v| v.capacity() >= cap) {
                 let mut v = bucket.swap_remove(i);
@@ -64,24 +80,124 @@ impl<E: Elem> Pool<E> {
         None
     }
 
-    fn put(&mut self, v: Vec<E>) {
+    /// Keep `v` if there is room; hand it back (for donation to the next
+    /// tier) when the bucket is full. Empty or oversized vectors are
+    /// dropped outright (`None`) — they are not worth pooling anywhere.
+    fn put(&mut self, v: Vec<E>) -> Option<Vec<E>> {
         let cap = v.capacity();
         if cap == 0 || cap * E::BYTES > MAX_POOLED_BYTES {
-            return;
+            return None;
         }
         let c = Self::class(cap).min(CLASSES - 1);
-        if self.buckets[c].len() < MAX_PER_BUCKET {
+        if self.buckets[c].len() < self.per_bucket {
             self.buckets[c].push(v);
+            None
+        } else {
+            Some(v)
         }
     }
+}
+
+/// Per-element-type pools, keyed by `TypeId`.
+type PoolMap = HashMap<TypeId, Box<dyn Any + Send>>;
+
+/// A shared overflow arena for one node group (registry shard) of a world:
+/// the second tier between the per-rank thread-local free lists and the
+/// system allocator. One instance exists per shard, so large sharded
+/// worlds never serialize buffer recycling on a single arena.
+pub struct ShardPool {
+    inner: Mutex<PoolMap>,
+}
+
+impl ShardPool {
+    pub fn new() -> ShardPool {
+        ShardPool {
+            inner: Mutex::new(PoolMap::new()),
+        }
+    }
+
+    fn with_pool<E: Elem, R>(&self, f: impl FnOnce(&mut Pool<E>) -> R) -> R {
+        let mut map = self.inner.lock().unwrap();
+        let pool = map
+            .entry(TypeId::of::<E>())
+            .or_insert_with(|| Box::new(Pool::<E>::new(SHARD_PER_BUCKET)) as Box<dyn Any + Send>)
+            .downcast_mut::<Pool<E>>()
+            .expect("shard pool type keyed by TypeId");
+        f(pool)
+    }
+
+    fn get<E: Elem>(&self, cap: usize) -> Option<Vec<E>> {
+        self.with_pool(|p: &mut Pool<E>| p.get(cap))
+    }
+
+    fn put<E: Elem>(&self, v: Vec<E>) {
+        self.with_pool(move |p: &mut Pool<E>| {
+            let _ = p.put(v); // overflow past the shard tier is dropped
+        });
+    }
+}
+
+impl Default for ShardPool {
+    fn default() -> ShardPool {
+        ShardPool::new()
+    }
+}
+
+/// Where a buffer-layer copy was charged from: the collective (and, for
+/// the known snapshot points, the call site) active when `charge_copy`
+/// ran. Only populated under the `debug-cow` feature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CowEvent {
+    /// Site label, e.g. `"dpdr/dual-exchange"`; `"untracked"` when the
+    /// copy happened outside any labelled scope.
+    pub site: &'static str,
+    /// Bytes copied by this event.
+    pub bytes: u64,
 }
 
 thread_local! {
     /// One pool per element type per thread (rank).
     static POOLS: RefCell<HashMap<TypeId, Box<dyn Any>>> = RefCell::new(HashMap::new());
+    /// The node-group overflow arena this rank thread is bound to.
+    static SHARD: RefCell<Option<Arc<ShardPool>>> = const { RefCell::new(None) };
+    /// The label copies are currently attributed to (see [`cow_site`]).
+    static COW_SITE: Cell<&'static str> = const { Cell::new("") };
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
     static POOL_RECYCLED: Cell<u64> = const { Cell::new(0) };
     static BYTES_COPIED: Cell<u64> = const { Cell::new(0) };
+}
+
+#[cfg(feature = "debug-cow")]
+thread_local! {
+    static COW_LOG: RefCell<Vec<CowEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Bind (or unbind, with `None`) this rank thread's node-group overflow
+/// arena. `run_world` binds each rank thread to its shard's pool; threads
+/// outside a world run with the thread-local tier only.
+pub(crate) fn bind_shard_pool(pool: Option<Arc<ShardPool>>) {
+    SHARD.with(|s| *s.borrow_mut() = pool);
+}
+
+/// Label buffer-layer copies with `label` until the returned guard drops
+/// (the previous label is restored — scopes nest). Cheap enough to leave
+/// on unconditionally; the per-copy log behind it only exists under the
+/// `debug-cow` feature.
+pub fn cow_site(label: &'static str) -> CowSiteGuard {
+    CowSiteGuard {
+        prev: COW_SITE.with(|c| c.replace(label)),
+    }
+}
+
+/// Scope guard of [`cow_site`].
+pub struct CowSiteGuard {
+    prev: &'static str,
+}
+
+impl Drop for CowSiteGuard {
+    fn drop(&mut self) {
+        COW_SITE.with(|c| c.set(self.prev));
+    }
 }
 
 fn with_pool<E: Elem, R>(f: impl FnOnce(&mut Pool<E>) -> R) -> R {
@@ -89,7 +205,7 @@ fn with_pool<E: Elem, R>(f: impl FnOnce(&mut Pool<E>) -> R) -> R {
         let mut pools = pools.borrow_mut();
         let pool = pools
             .entry(TypeId::of::<E>())
-            .or_insert_with(|| Box::new(Pool::<E>::new()))
+            .or_insert_with(|| Box::new(Pool::<E>::new(MAX_PER_BUCKET)))
             .downcast_mut::<Pool<E>>()
             .expect("pool type keyed by TypeId");
         f(pool)
@@ -97,26 +213,50 @@ fn with_pool<E: Elem, R>(f: impl FnOnce(&mut Pool<E>) -> R) -> R {
 }
 
 /// A zero-length vector with capacity for at least `cap` elements, served
-/// from this rank's free list when possible. Counts an alloc on miss, a
-/// recycle on hit.
+/// from this rank's free list — or its node group's shard pool — when
+/// possible. Counts an alloc only when both tiers miss, a recycle on
+/// either hit.
 pub(crate) fn acquire<E: Elem>(cap: usize) -> Vec<E> {
     if let Some(v) = with_pool::<E, _>(|p| p.get(cap)) {
         POOL_RECYCLED.with(|c| c.set(c.get() + 1));
-        v
-    } else {
-        ALLOCS.with(|c| c.set(c.get() + 1));
-        Vec::with_capacity(cap)
+        return v;
+    }
+    if let Some(v) = SHARD.with(|s| s.borrow().as_ref().and_then(|sp| sp.get::<E>(cap))) {
+        POOL_RECYCLED.with(|c| c.set(c.get() + 1));
+        return v;
+    }
+    ALLOCS.with(|c| c.set(c.get() + 1));
+    Vec::with_capacity(cap)
+}
+
+/// Return a vector's storage to this rank's free list; overflow is donated
+/// to the node group's shard pool instead of being dropped.
+pub(crate) fn recycle<E: Elem>(v: Vec<E>) {
+    if let Some(overflow) = with_pool::<E, _>(|p| p.put(v)) {
+        SHARD.with(|s| {
+            if let Some(sp) = s.borrow().as_ref() {
+                sp.put(overflow);
+            }
+        });
     }
 }
 
-/// Return a vector's storage to this rank's free list.
-pub(crate) fn recycle<E: Elem>(v: Vec<E>) {
-    with_pool::<E, _>(|p| p.put(v));
-}
-
 /// Charge `n` copied bytes to this rank's counter (CoW and snapshots).
+/// Under `debug-cow`, also record the active [`cow_site`] label so the
+/// copy names its caller.
 pub(crate) fn charge_copy(bytes: usize) {
     BYTES_COPIED.with(|c| c.set(c.get() + bytes as u64));
+    #[cfg(feature = "debug-cow")]
+    if bytes > 0 {
+        let site = COW_SITE.with(Cell::get);
+        let site = if site.is_empty() { "untracked" } else { site };
+        COW_LOG.with(|l| {
+            l.borrow_mut().push(CowEvent {
+                site,
+                bytes: bytes as u64,
+            })
+        });
+    }
 }
 
 /// Snapshot of one rank's buffer-layer counters.
@@ -150,6 +290,20 @@ pub fn take_stats() -> BufStats {
     s
 }
 
+/// Drain this thread's copy-attribution log. Always callable; the log is
+/// only populated when the crate is built with the `debug-cow` feature, so
+/// without it this returns an empty vector.
+pub fn take_cow_log() -> Vec<CowEvent> {
+    #[cfg(feature = "debug-cow")]
+    {
+        COW_LOG.with(|l| std::mem::take(&mut *l.borrow_mut()))
+    }
+    #[cfg(not(feature = "debug-cow"))]
+    {
+        Vec::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +330,65 @@ mod tests {
         // as a type confusion — it simply comes from the i32 pool
         let w: Vec<i32> = acquire(16);
         assert!(w.capacity() >= 16);
+    }
+
+    #[test]
+    fn shard_pool_absorbs_local_overflow_and_serves_misses() {
+        let shard = Arc::new(ShardPool::new());
+        bind_shard_pool(Some(Arc::clone(&shard)));
+        // overflow the local bucket for one capacity class: the extras
+        // must land in the shard pool, not the floor
+        let cap = 1 << 20; // distinctive class, unlikely noise from other tests
+        for _ in 0..MAX_PER_BUCKET + 3 {
+            recycle::<i64>(Vec::with_capacity(cap));
+        }
+        assert!(shard.get::<i64>(cap).is_some()); // donated overflow is there
+        // a local miss falls through to the shard tier and counts a recycle
+        shard.put::<i64>(Vec::with_capacity(2 * cap));
+        let before = stats();
+        let v: Vec<i64> = acquire(2 * cap);
+        assert!(v.capacity() >= 2 * cap);
+        let after = stats();
+        assert_eq!(after.pool_recycled - before.pool_recycled, 1);
+        assert_eq!(after.allocs, before.allocs);
+        bind_shard_pool(None);
+    }
+
+    #[test]
+    fn unbound_threads_keep_the_old_single_tier_behavior() {
+        bind_shard_pool(None);
+        let before = stats();
+        let v: Vec<i32> = acquire(1 << 21); // larger than anything pooled here
+        assert!(v.capacity() >= 1 << 21);
+        assert_eq!(stats().allocs - before.allocs, 1);
+    }
+
+    #[test]
+    fn cow_site_scopes_nest_and_restore() {
+        let _a = cow_site("outer");
+        assert_eq!(COW_SITE.with(Cell::get), "outer");
+        {
+            let _b = cow_site("inner");
+            assert_eq!(COW_SITE.with(Cell::get), "inner");
+        }
+        assert_eq!(COW_SITE.with(Cell::get), "outer");
+    }
+
+    #[cfg(feature = "debug-cow")]
+    #[test]
+    fn cow_log_attributes_copies_to_the_active_site() {
+        let _ = take_cow_log();
+        {
+            let _s = cow_site("test/site");
+            charge_copy(40);
+        }
+        charge_copy(0); // zero-byte charges are not logged
+        charge_copy(2); // outside any scope → "untracked"
+        let log = take_cow_log();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], CowEvent { site: "test/site", bytes: 40 });
+        assert_eq!(log[1].site, "untracked");
+        assert!(take_cow_log().is_empty()); // drained
     }
 
     #[test]

@@ -68,6 +68,22 @@ impl Args {
         }
     }
 
+    /// Flag parsed with a custom parser (for non-`FromStr` values such as
+    /// `--mapping block:8`); the default is used when the flag is absent.
+    pub fn get_parsed<T>(
+        &self,
+        name: &str,
+        default: T,
+        parse: impl FnOnce(&str) -> Option<T>,
+    ) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                parse(v).ok_or_else(|| Error::Cli(format!("flag --{name}: cannot parse '{v}'")))
+            }
+        }
+    }
+
     /// Typed mandatory flag.
     pub fn require<T: FromStr>(&self, name: &str) -> Result<T> {
         let v = self
@@ -102,6 +118,19 @@ mod tests {
         let a = Args::parse(&argv("bench"), &[]).unwrap();
         assert_eq!(a.get::<usize>("p", 288).unwrap(), 288);
         assert!(a.require::<usize>("p").is_err());
+    }
+
+    #[test]
+    fn get_parsed_custom_values() {
+        let a = Args::parse(&argv("run --mapping block:8"), &[]).unwrap();
+        let parsed = a.get_parsed("mapping", 0usize, |s| {
+            s.strip_prefix("block:").and_then(|n| n.parse().ok())
+        });
+        assert_eq!(parsed.unwrap(), 8);
+        // default when absent
+        assert_eq!(a.get_parsed("other", 3usize, |_| None).unwrap(), 3);
+        // parse failure is a CLI error
+        assert!(a.get_parsed("mapping", 0usize, |_| Option::<usize>::None).is_err());
     }
 
     #[test]

@@ -140,6 +140,7 @@ fn run_rounds<E: Elem, O: ReduceOp<E>>(
                 // would make each root wait on the other's in-flight view
                 // and fall back to a whole-vector copy-on-write. One pooled
                 // block copy is the cheap side of that trade.
+                let _site = crate::buffer::pool::cow_site("dpdr/dual-exchange");
                 let send = y.extract_owned(lo, hi)?;
                 let t = comm.sendrecv(dual, send)?;
                 // lower root holds the rank-prefix [0, q): its own partial

@@ -1,0 +1,332 @@
+//! Node-aware hierarchical reduction-to-all (`AlgoKind::Hier`): exploit a
+//! clustered machine's two-level structure (cheap intra-node links,
+//! expensive inter-node links) instead of treating the world as flat —
+//! the §3 open question of the paper, answered in the style of Bienz,
+//! Olson & Gropp (*Node-Aware Improvements to Allreduce*) and Kolmakov &
+//! Zhang (*A Generalization of the Allreduce Operation*).
+//!
+//! Two shapes, chosen per node layout:
+//!
+//! * **Segment-parallel** (all node groups the same power-of-two size `k`):
+//!   intra-node *reduce-scatter* by recursive halving leaves each rank
+//!   owning `1/k` of the node's partial sum; each of the `k` cross-node
+//!   groups (the `i`-th rank of every node) then runs the paper's
+//!   doubly-pipelined dual-root allreduce on its segment **concurrently**;
+//!   an intra-node *allgather* reassembles the vector. Inter-node β-cost
+//!   per rank drops from `3βm` to `3βm/k` — the node-aware win — while the
+//!   intra phases add only `≈ 2·β_intra·m`.
+//! * **Leader-based** (ragged or non-power-of-two groups): intra-node
+//!   binomial reduce to the node leader, dpdr among the leaders, intra-node
+//!   binomial broadcast. Robust for any `p` / layout, including `p` not
+//!   divisible by the node size and single-rank nodes.
+//!
+//! Both shapes combine node contributions in node order with rank order
+//! inside each node, so under a `Block` mapping (contiguous ranks per
+//! node) the reduction order is exactly rank order; for non-contiguous
+//! mappings (round robin) the operator must be commutative, as with
+//! `AlgoKind::Ring` — `AlgoKind::Hier::order_preserving()` is
+//! conservatively `false`. For commutative operators the result is
+//! bitwise identical to flat [`allreduce_dpdr`] on any layout.
+//!
+//! The collectives run on borrowed sub-communicators ([`ThreadComm::sub`])
+//! over [`Group`]s derived deterministically from `(p, mapping)` — no
+//! communication is needed to agree on the hierarchy.
+
+use crate::buffer::DataBuf;
+use crate::comm::{Comm, Group, ThreadComm};
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+use crate::topo::Mapping;
+
+use super::dpdr::allreduce_dpdr;
+use super::reduce_bcast::{bcast_binomial, reduce_binomial};
+
+/// Element range `[lo, hi)` covered by segment indices `[slo, shi)`.
+fn elem_range(segs: &Blocks, slo: usize, shi: usize) -> (usize, usize) {
+    debug_assert!(slo < shi);
+    (segs.range(slo).0, segs.range(shi - 1).1)
+}
+
+/// Node-aware hierarchical allreduce over the node layout of `mapping`.
+///
+/// `blocks` is the global pipeline partition; the segment-parallel shape
+/// re-blocks each `m/k` segment at the same block *count* for its
+/// cross-node dpdr. Requires associativity of `op` plus commutativity when node
+/// groups are not contiguous rank ranges (see module docs).
+pub fn allreduce_hier<E: Elem, O: ReduceOp<E>>(
+    comm: &mut ThreadComm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    mapping: Mapping,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    if p == 1 || x.is_empty() {
+        return Ok(x);
+    }
+    let node_groups = Group::by_node(p, mapping);
+    if node_groups.len() == 1 {
+        // one node: the hierarchy degenerates to the flat algorithm
+        return allreduce_dpdr(comm, x, op, blocks);
+    }
+    let me = comm.rank();
+    let gi = node_groups
+        .iter()
+        .position(|g| g.contains(me))
+        .expect("node groups partition the world");
+    let k = node_groups[gi].size();
+    let uniform = node_groups.iter().all(|g| g.size() == k);
+    if uniform && k > 1 && k.is_power_of_two() {
+        hier_segment_parallel(comm, x, op, blocks, &node_groups, gi)
+    } else {
+        hier_leader(comm, x, op, blocks, &node_groups, gi)
+    }
+}
+
+/// Leader shape: intra-node reduce → dpdr among node leaders → intra-node
+/// bcast. Handles every layout (ragged tail nodes, k = 1, k not a power
+/// of two); its inter-node traffic is the full vector, so it wins on
+/// latency (the leader world is `n ≪ p` ranks) rather than bandwidth.
+fn hier_leader<E: Elem, O: ReduceOp<E>>(
+    comm: &mut ThreadComm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    node_groups: &[Group],
+    gi: usize,
+) -> Result<DataBuf<E>> {
+    let group = &node_groups[gi];
+    let me = comm.rank();
+    let mut y = x;
+    {
+        // binomial reduce onto local rank 0 keeps rank order exactly
+        let mut sub = comm.sub(group)?;
+        reduce_binomial(&mut sub, &mut y, op, 0)?;
+    }
+    if me == group.members()[0] {
+        let leaders = Group::leaders(node_groups)?;
+        let mut sub = comm.sub(&leaders)?;
+        y = allreduce_dpdr(&mut sub, y, op, blocks)?;
+    }
+    {
+        let mut sub = comm.sub(group)?;
+        bcast_binomial(&mut sub, &mut y, 0)?;
+    }
+    Ok(y)
+}
+
+/// Segment-parallel shape for uniform power-of-two node groups: halving
+/// reduce-scatter inside the node, dpdr across nodes per owned segment
+/// (all `k` segment groups concurrently over disjoint links), doubling
+/// allgather inside the node. The halving pairs by the *lowest* bit first
+/// (as in [`super::rabenseifner`]), which keeps every accumulated interval
+/// aligned and contiguous and the local reduction order exact.
+fn hier_segment_parallel<E: Elem, O: ReduceOp<E>>(
+    comm: &mut ThreadComm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    node_groups: &[Group],
+    gi: usize,
+) -> Result<DataBuf<E>> {
+    let group = &node_groups[gi];
+    let me = comm.rank();
+    let e = group.local_rank(me).expect("gi is this rank's node group");
+    let k = group.size();
+    let mut y = x;
+    let segs = Blocks::segments(y.len(), k);
+
+    // --- phase 1: intra-node reduce-scatter (recursive halving) ----------
+    let (mut slo, mut shi) = (0usize, k);
+    let mut levels: Vec<(usize, usize, usize)> = Vec::new(); // (bit, parent_lo, parent_hi)
+    {
+        let mut sub = comm.sub(group)?;
+        let mut bit = 1usize;
+        while bit < k {
+            let partner_e = e ^ bit;
+            levels.push((bit, slo, shi));
+            let smid = slo + (shi - slo) / 2;
+            let (keep, give) = if e & bit == 0 {
+                ((slo, smid), (smid, shi))
+            } else {
+                ((smid, shi), (slo, smid))
+            };
+            let (glo, ghi) = elem_range(&segs, give.0, give.1);
+            let send = y.extract(glo, ghi)?;
+            let got = sub.sendrecv(partner_e, send)?;
+            let (klo, _khi) = elem_range(&segs, keep.0, keep.1);
+            let side = if partner_e < e { Side::Left } else { Side::Right };
+            sub.charge_compute(got.bytes());
+            y.reduce_at(klo, &got, op, side)?;
+            (slo, shi) = keep;
+            bit <<= 1;
+        }
+    }
+    debug_assert_eq!(shi - slo, 1); // this rank owns one segment
+
+    // --- phase 2: dpdr across nodes on the owned segment ------------------
+    let (mlo, mhi) = elem_range(&segs, slo, shi);
+    {
+        // the i-th rank of every node, in node order
+        let cross = Group::new(
+            node_groups
+                .iter()
+                .map(|g| g.members()[e])
+                .collect::<Vec<_>>(),
+        )?;
+        let mut sub = comm.sub(&cross)?;
+        // owned snapshot, not a view: dpdr reduces into the segment it is
+        // handed, and a view would force a whole-vector copy-on-write
+        let _site = crate::buffer::pool::cow_site("hier/cross-dpdr");
+        let seg = y.extract_owned(mlo, mhi)?;
+        // keep the global pipeline *depth* (block count), not block size:
+        // the segment is m/k elements, so same-size blocks would collapse
+        // the cross-node pipeline to b/k stages and squander the overlap
+        // the α-term is paid for
+        let seg_blocks = Blocks::by_count(mhi - mlo, blocks.count());
+        let out = allreduce_dpdr(&mut sub, seg, op, &seg_blocks)?;
+        y.write_at(mlo, &out)?;
+    }
+
+    // --- phase 3: intra-node allgather (replay the halving in reverse) ---
+    {
+        let mut sub = comm.sub(group)?;
+        while let Some((bit, plo, phi)) = levels.pop() {
+            let partner_e = e ^ bit;
+            let (xlo, xhi) = elem_range(&segs, slo, shi);
+            let send = y.extract(xlo, xhi)?;
+            let got = sub.sendrecv(partner_e, send)?;
+            // the partner owns the other half of the parent range
+            let pmid = plo + (phi - plo) / 2;
+            let (sib_lo, sib_hi) = if slo == plo { (pmid, phi) } else { (plo, pmid) };
+            let (wlo, _whi) = elem_range(&segs, sib_lo, sib_hi);
+            y.write_at(wlo, &got)?;
+            (slo, shi) = (plo, phi);
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::{run_world, Timing};
+    use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+    use crate::ops::{SeqCheckOp, Span};
+
+    fn check_against_flat(p: usize, m: usize, block: usize, mapping: Mapping) {
+        let spec = RunSpec::new(p, m).block_elems(block).mapping(mapping);
+        let expected = spec.expected_sum_i32();
+        let flat = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+        let hier = run_allreduce_i32(AlgoKind::Hier, &spec, Timing::Real).unwrap();
+        for (rank, (h, f)) in hier.results.into_iter().zip(flat.results).enumerate() {
+            let h = h.into_vec().unwrap();
+            assert_eq!(h, f.into_vec().unwrap(), "hier != dpdr at rank {rank}");
+            assert_eq!(h, expected, "hier != oracle at rank {rank} ({p},{m},{block})");
+        }
+    }
+
+    #[test]
+    fn segment_parallel_path_matches_flat() {
+        // uniform power-of-two nodes: 3 nodes × 4, 2 × 8, 4 × 2
+        check_against_flat(12, 57, 10, Mapping::Block { ranks_per_node: 4 });
+        check_against_flat(16, 64, 16, Mapping::Block { ranks_per_node: 8 });
+        check_against_flat(8, 9, 3, Mapping::Block { ranks_per_node: 2 });
+    }
+
+    #[test]
+    fn leader_path_matches_flat() {
+        // ragged tail (10 = 4+4+2), non-power-of-two nodes (9 = 3+3+3),
+        // single-rank nodes (k = 1)
+        check_against_flat(10, 33, 8, Mapping::Block { ranks_per_node: 4 });
+        check_against_flat(9, 40, 7, Mapping::Block { ranks_per_node: 3 });
+        check_against_flat(5, 21, 4, Mapping::Block { ranks_per_node: 1 });
+    }
+
+    #[test]
+    fn single_node_world_degenerates_to_flat() {
+        check_against_flat(6, 30, 5, Mapping::Block { ranks_per_node: 8 });
+    }
+
+    #[test]
+    fn round_robin_layout_correct_for_commutative_ops() {
+        check_against_flat(12, 45, 9, Mapping::RoundRobin { nodes: 3 });
+        check_against_flat(7, 20, 6, Mapping::RoundRobin { nodes: 4 });
+    }
+
+    #[test]
+    fn tiny_vectors_empty_segments() {
+        // m < k: some cross-node groups run on empty segments
+        check_against_flat(8, 3, 2, Mapping::Block { ranks_per_node: 4 });
+        check_against_flat(16, 1, 1, Mapping::Block { ranks_per_node: 4 });
+    }
+
+    #[test]
+    fn zero_elements_is_noop() {
+        let spec = RunSpec::new(6, 0).mapping(Mapping::Block { ranks_per_node: 2 });
+        let report = run_allreduce_i32(AlgoKind::Hier, &spec, Timing::Real).unwrap();
+        for buf in report.results {
+            assert_eq!(buf.len(), 0);
+        }
+    }
+
+    #[test]
+    fn order_witness_block_mapping() {
+        // contiguous node groups: both shapes must visit ranks in exactly
+        // ascending order (SeqCheckOp poisons any other combination)
+        for (p, k) in [(8usize, 2usize), (12, 4), (10, 4), (9, 3), (6, 6)] {
+            let mapping = Mapping::Block { ranks_per_node: k };
+            let blocks = Blocks::by_count(12, 3);
+            let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
+                let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); 12]);
+                allreduce_hier(comm, x, &SeqCheckOp, &blocks, mapping)
+            })
+            .unwrap();
+            for buf in report.results {
+                for s in buf.as_slice().unwrap() {
+                    assert_eq!(*s, Span::of(0, p as u32 - 1), "p={p} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phantom_real_vtime_identical() {
+        let spec = RunSpec::new(12, 500)
+            .block_elems(64)
+            .mapping(Mapping::Block { ranks_per_node: 4 });
+        let t = |ph: bool| {
+            run_allreduce_i32(AlgoKind::Hier, &spec.phantom(ph), Timing::hydra())
+                .unwrap()
+                .max_vtime_us
+        };
+        assert_eq!(t(false).to_bits(), t(true).to_bits());
+    }
+
+    #[test]
+    fn node_aware_beats_flat_under_two_level_costs() {
+        // β_intra ≪ β_inter, segment-parallel shape: the inter-node β-term
+        // drops by ~k, so hier must beat flat dpdr at bandwidth-bound m
+        let mapping = Mapping::Block { ranks_per_node: 8 };
+        let timing = Timing::Virtual(
+            CostModel::Hierarchical {
+                intra: LinkCost::new(0.3e-6, 0.08e-9),
+                inter: LinkCost::new(1.0e-6, 0.70e-9),
+                mapping,
+            },
+            ComputeCost::new(0.25e-9),
+        );
+        let spec = RunSpec::new(64, 400_000)
+            .block_elems(16_000)
+            .mapping(mapping)
+            .phantom(true);
+        let flat = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing).unwrap().max_vtime_us;
+        let hier = run_allreduce_i32(AlgoKind::Hier, &spec, timing).unwrap().max_vtime_us;
+        assert!(
+            hier < flat,
+            "node-aware should win at large m: hier={hier} flat={flat}"
+        );
+    }
+}

@@ -7,6 +7,7 @@
 //! simulation, with real or phantom payloads.
 
 pub mod dpdr;
+pub mod hierarchical;
 pub mod native_switch;
 pub mod pipetree;
 pub mod rabenseifner;
@@ -17,6 +18,7 @@ pub mod scan_dp;
 pub mod twotree;
 
 pub use dpdr::{allreduce_dpdr, allreduce_dpdr_single};
+pub use hierarchical::allreduce_hier;
 pub use native_switch::allreduce_native_switch;
 pub use pipetree::allreduce_pipetree;
 pub use rabenseifner::allreduce_rabenseifner;
@@ -28,13 +30,16 @@ pub use twotree::allreduce_twotree;
 
 use crate::buffer::DataBuf;
 use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::AlgoKind;
 use crate::ops::{Elem, ReduceOp, SumOp};
 use crate::pipeline::Blocks;
+use crate::topo::Mapping;
 use crate::util::XorShift64;
 
-/// Dispatch an allreduce by [`AlgoKind`].
+/// Dispatch a *flat* allreduce by [`AlgoKind`] on any communicator
+/// (including a sub-communicator). `AlgoKind::Hier` needs a node layout
+/// and a world endpoint — dispatch it through [`allreduce_on`].
 pub fn allreduce<E: Elem, O: ReduceOp<E>>(
     algo: AlgoKind,
     comm: &mut impl Comm<E>,
@@ -42,6 +47,8 @@ pub fn allreduce<E: Elem, O: ReduceOp<E>>(
     op: &O,
     blocks: &Blocks,
 ) -> Result<DataBuf<E>> {
+    // label buffer-layer copies with the collective that caused them
+    let _site = crate::buffer::pool::cow_site(algo.name());
     match algo {
         AlgoKind::Dpdr => allreduce_dpdr(comm, x, op, blocks),
         AlgoKind::DpdrSingle => allreduce_dpdr_single(comm, x, op, blocks),
@@ -52,7 +59,28 @@ pub fn allreduce<E: Elem, O: ReduceOp<E>>(
         AlgoKind::Ring => allreduce_ring(comm, x, op),
         AlgoKind::RecursiveDoubling => allreduce_recursive_doubling(comm, x, op),
         AlgoKind::Rabenseifner => allreduce_rabenseifner(comm, x, op),
+        AlgoKind::Hier => Err(Error::Config(
+            "hier is node-aware: dispatch it with allreduce_on(algo, comm, …, mapping)".into(),
+        )),
     }
+}
+
+/// Dispatch an allreduce by [`AlgoKind`] on a world endpoint, including
+/// the node-aware [`AlgoKind::Hier`] (which splits the world by `mapping`;
+/// all other algorithms ignore it).
+pub fn allreduce_on<E: Elem, O: ReduceOp<E>>(
+    algo: AlgoKind,
+    comm: &mut ThreadComm<E>,
+    x: DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    mapping: Mapping,
+) -> Result<DataBuf<E>> {
+    if algo == AlgoKind::Hier {
+        let _site = crate::buffer::pool::cow_site(algo.name());
+        return allreduce_hier(comm, x, op, blocks, mapping);
+    }
+    allreduce(algo, comm, x, op, blocks)
 }
 
 /// Parameters of one collective run.
@@ -68,6 +96,9 @@ pub struct RunSpec {
     pub phantom: bool,
     /// Seed for deterministic input generation (real payloads).
     pub seed: u64,
+    /// Rank → node layout, used by the node-aware `AlgoKind::Hier` (other
+    /// algorithms ignore it). Defaults to the paper's 8 ranks per node.
+    pub mapping: Mapping,
 }
 
 impl RunSpec {
@@ -78,7 +109,13 @@ impl RunSpec {
             block_elems: crate::pipeline::PAPER_BLOCK_ELEMS,
             phantom: false,
             seed: 0xD7D2,
+            mapping: Mapping::Block { ranks_per_node: 8 },
         }
+    }
+
+    pub fn mapping(mut self, mapping: Mapping) -> RunSpec {
+        self.mapping = mapping;
+        self
     }
 
     pub fn block_elems(mut self, block_elems: usize) -> RunSpec {
@@ -134,7 +171,7 @@ pub fn run_allreduce_i32(
         } else {
             DataBuf::real(spec.input_i32(comm.rank()))
         };
-        allreduce(algo, comm, x, &SumOp, &blocks)
+        allreduce_on(algo, comm, x, &SumOp, &blocks, spec.mapping)
     })
 }
 

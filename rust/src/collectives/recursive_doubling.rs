@@ -68,6 +68,7 @@ pub fn allreduce_recursive_doubling<E: Elem, O: ReduceOp<E>>(
             // shared view would make each wait on the other's in-flight
             // lease and degrade to the same full copy anyway — snapshot()
             // pays it up front from the free list, with no stall.
+            let _site = crate::buffer::pool::cow_site("rd/butterfly-snapshot");
             let t = comm.sendrecv(partner, y.snapshot())?;
             let side = if partner_e < e { Side::Left } else { Side::Right };
             comm.charge_compute(t.bytes());

@@ -59,6 +59,7 @@ pub fn scan_pipelined<E: Elem, O: ReduceOp<E>>(
             // child's slab that long would force the child into
             // copy-on-write when it finalizes the same block. The view
             // itself drops here, so the up-phase transfer stays zero-copy.
+            let _site = crate::buffer::pool::cow_site("scan/kept-block");
             kept_t1.push(t1.snapshot());
         }
         if let Some(par) = parent {

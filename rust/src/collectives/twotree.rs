@@ -225,6 +225,7 @@ pub fn allreduce_twotree<E: Elem, O: ReduceOp<E>>(
         // degenerate: a single exchange per block (both trees are rank 0);
         // owned snapshot because both ranks immediately reduce over the
         // range they just sent (see the dual-root exchange in dpdr)
+        let _site = crate::buffer::pool::cow_site("twotree/p2-exchange");
         let t = comm.sendrecv(1 - comm.rank(), y.snapshot())?;
         let side = if comm.rank() == 0 { Side::Right } else { Side::Left };
         comm.charge_compute(t.bytes());

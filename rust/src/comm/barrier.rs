@@ -1,9 +1,12 @@
 //! A reusable barrier that additionally computes the maximum of a value
 //! contributed by each participant — used to advance all virtual clocks to
 //! the global maximum at an `MPI_Barrier` and by the harness to collect the
-//! slowest-rank completion time.
+//! slowest-rank completion time — plus a [`BarrierTable`] that hands every
+//! communicator *group* its own lazily created barrier, so sub-communicator
+//! barriers have exactly the world barrier's semantics.
 
-use std::sync::{Condvar, Mutex};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
 
 struct Inner {
     count: usize,
@@ -62,10 +65,41 @@ impl VBarrier {
     }
 }
 
+/// Lazily created, shared barriers keyed by a group's exact member list.
+///
+/// All members of a [`Group`](super::Group) that call a group barrier must
+/// agree on the member list (they derive it from the same `Group` value),
+/// so the list itself is the rendezvous key: the first caller creates the
+/// `VBarrier`, everyone else finds it. Entries live for the world's
+/// lifetime — a table entry is ~the member vector plus one barrier, and the
+/// set of distinct groups a run uses is small (node groups, leader group).
+pub(super) struct BarrierTable {
+    inner: Mutex<HashMap<Vec<usize>, Arc<VBarrier>>>,
+}
+
+impl BarrierTable {
+    pub(super) fn new() -> BarrierTable {
+        BarrierTable {
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The barrier shared by exactly the ranks in `members` (created on
+    /// first touch; `VBarrier` is reusable across generations).
+    pub(super) fn get(&self, members: &[usize]) -> Arc<VBarrier> {
+        let mut map = self.inner.lock().unwrap();
+        if let Some(b) = map.get(members) {
+            return Arc::clone(b);
+        }
+        let b = Arc::new(VBarrier::new(members.len()));
+        map.insert(members.to_vec(), Arc::clone(&b));
+        b
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
     use std::thread;
 
     #[test]
@@ -88,6 +122,18 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), (n - 1) as f64);
         }
+    }
+
+    #[test]
+    fn table_is_keyed_by_member_list() {
+        let t = BarrierTable::new();
+        let a = t.get(&[0, 2, 4]);
+        let b = t.get(&[0, 2, 4]);
+        assert!(Arc::ptr_eq(&a, &b)); // same group → same barrier
+        let c = t.get(&[0, 2]);
+        assert!(!Arc::ptr_eq(&a, &c)); // different group → its own barrier
+        // a single-member group's barrier never blocks
+        assert_eq!(t.get(&[7]).wait(1.5), 1.5);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Communicator groups: ordered rank subsets with local ↔ global rank
+//! translation, MPI-style `split`, and the borrowed sub-communicator
+//! ([`SubComm`]) that runs any [`Comm`]-written collective on a subset of
+//! a world.
+//!
+//! A [`Group`] is pure data — the same value is derived independently on
+//! every member rank (from `p` and a [`Mapping`], or by splitting a parent
+//! group), exactly like an `MPI_Group`: no communication is needed to
+//! construct one, and agreement follows from determinism. A
+//! [`SubComm`] then borrows a rank's [`ThreadComm`] endpoint and relabels
+//! peers through the group, which is what `MPI_Comm_split` +
+//! communicator-scoped collectives do, without duplicating any transport
+//! state: the sub-communicator shares the endpoint's channels, virtual
+//! clock, and metrics.
+
+use super::metrics::RankMetrics;
+use super::thread::ThreadComm;
+use super::Comm;
+use crate::buffer::DataBuf;
+use crate::error::{Error, Result};
+use crate::ops::Elem;
+use crate::topo::Mapping;
+
+/// An ordered subset of a world's ranks; position in the member list *is*
+/// the local rank.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Group {
+    members: Vec<usize>,
+}
+
+impl Group {
+    /// A group over explicit members (position = local rank). Members must
+    /// be non-empty and distinct; they need *not* be sorted — the order
+    /// given is the reduction order a sub-communicator exposes.
+    pub fn new(members: Vec<usize>) -> Result<Group> {
+        if members.is_empty() {
+            return Err(Error::Config("group must have at least one member".into()));
+        }
+        let mut seen = members.clone();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Config("group members must be distinct".into()));
+        }
+        Ok(Group { members })
+    }
+
+    /// The full world `0..p` as a group.
+    pub fn world(p: usize) -> Group {
+        Group {
+            members: (0..p).collect(),
+        }
+    }
+
+    /// Number of members.
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The members in local-rank order.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// True if `global` is a member.
+    pub fn contains(&self, global: usize) -> bool {
+        self.local_rank(global).is_some()
+    }
+
+    /// The local rank of `global` within this group, if a member.
+    pub fn local_rank(&self, global: usize) -> Option<usize> {
+        self.members.iter().position(|&g| g == global)
+    }
+
+    /// The global rank at local position `local`, if in range.
+    pub fn global_rank(&self, local: usize) -> Option<usize> {
+        self.members.get(local).copied()
+    }
+
+    /// `MPI_Comm_split` over this group: `color_key(global)` assigns every
+    /// member a `(color, key)`; the result is one group per color (ordered
+    /// by color), each ordered by `(key, global rank)` — so equal keys fall
+    /// back to rank order, as in MPI. Every member lands in exactly one
+    /// subgroup.
+    pub fn split(&self, color_key: impl Fn(usize) -> (usize, i64)) -> Vec<Group> {
+        let mut buckets: std::collections::BTreeMap<usize, Vec<(i64, usize)>> =
+            std::collections::BTreeMap::new();
+        for &g in &self.members {
+            let (color, key) = color_key(g);
+            buckets.entry(color).or_default().push((key, g));
+        }
+        buckets
+            .into_values()
+            .map(|mut v| {
+                v.sort_unstable();
+                Group {
+                    members: v.into_iter().map(|(_, g)| g).collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// The node groups of a `p`-rank world: ordered by node id, members
+    /// ascending. Built directly from [`Mapping::shards`] — the *same*
+    /// partition the sharded registry uses for its edge-table and
+    /// buffer-pool shards — so transport shards and hierarchical-allreduce
+    /// node groups agree structurally, not by parallel construction.
+    pub fn by_node(p: usize, mapping: Mapping) -> Vec<Group> {
+        mapping
+            .shards(p)
+            .into_iter()
+            .map(|members| {
+                Group::new(members).expect("mapping shards are non-empty and disjoint")
+            })
+            .collect()
+    }
+
+    /// The leader group: local rank 0 of each given group, in group order.
+    /// Errors if the groups share leaders (i.e. are not disjoint).
+    pub fn leaders(groups: &[Group]) -> Result<Group> {
+        Group::new(groups.iter().map(|g| g.members[0]).collect())
+    }
+}
+
+/// A borrowed sub-communicator: `parent` restricted and relabelled to
+/// `group`. Implements [`Comm`] by translating local peer ranks to global
+/// ones, so every collective in this crate runs unchanged on the subset.
+/// The virtual clock, wall stopwatch, and metrics are the *parent's* —
+/// time spent inside a sub-communicator is time spent by the rank.
+pub struct SubComm<'a, E: Elem> {
+    parent: &'a mut ThreadComm<E>,
+    group: &'a Group,
+    local: usize,
+}
+
+impl<'a, E: Elem> SubComm<'a, E> {
+    pub(super) fn new(parent: &'a mut ThreadComm<E>, group: &'a Group) -> Result<SubComm<'a, E>> {
+        let world = parent.size();
+        if let Some(&bad) = group.members().iter().find(|&&g| g >= world) {
+            return Err(Error::Config(format!(
+                "group member {bad} outside world of size {world}"
+            )));
+        }
+        let local = group.local_rank(parent.rank()).ok_or_else(|| {
+            Error::Config(format!(
+                "rank {} is not a member of the group {:?}",
+                parent.rank(),
+                group.members()
+            ))
+        })?;
+        Ok(SubComm {
+            parent,
+            group,
+            local,
+        })
+    }
+
+    /// The group this sub-communicator is scoped to.
+    pub fn group(&self) -> &Group {
+        self.group
+    }
+
+    fn global(&self, peer: usize) -> Result<usize> {
+        self.group.global_rank(peer).ok_or_else(|| {
+            Error::Config(format!(
+                "peer {peer} out of range for group of size {}",
+                self.group.size()
+            ))
+        })
+    }
+}
+
+impl<E: Elem> Comm<E> for SubComm<'_, E> {
+    fn rank(&self) -> usize {
+        self.local
+    }
+
+    fn size(&self) -> usize {
+        self.group.size()
+    }
+
+    fn sendrecv(&mut self, peer: usize, send: DataBuf<E>) -> Result<DataBuf<E>> {
+        let peer = self.global(peer)?;
+        self.parent.sendrecv(peer, send)
+    }
+
+    fn sendrecv_pair(
+        &mut self,
+        send_to: usize,
+        send: DataBuf<E>,
+        recv_from: usize,
+    ) -> Result<DataBuf<E>> {
+        let send_to = self.global(send_to)?;
+        let recv_from = self.global(recv_from)?;
+        self.parent.sendrecv_pair(send_to, send, recv_from)
+    }
+
+    fn send(&mut self, peer: usize, data: DataBuf<E>) -> Result<()> {
+        let peer = self.global(peer)?;
+        self.parent.send(peer, data)
+    }
+
+    fn recv(&mut self, peer: usize) -> Result<DataBuf<E>> {
+        let peer = self.global(peer)?;
+        self.parent.recv(peer)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.parent.group_barrier_wait(self.group.members())
+    }
+
+    fn charge_compute(&mut self, bytes: usize) {
+        self.parent.charge_compute(bytes);
+    }
+
+    fn time_us(&self) -> f64 {
+        self.parent.time_us()
+    }
+
+    fn reset_time(&mut self) {
+        self.parent.reset_time();
+    }
+
+    fn metrics(&self) -> &RankMetrics {
+        self.parent.metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{run_world, Timing};
+
+    #[test]
+    fn world_and_translation() {
+        let g = Group::world(5);
+        assert_eq!(g.size(), 5);
+        assert_eq!(g.local_rank(3), Some(3));
+        assert_eq!(g.global_rank(4), Some(4));
+        assert_eq!(g.global_rank(5), None);
+        assert!(!g.contains(5));
+    }
+
+    #[test]
+    fn new_rejects_bad_member_lists() {
+        assert!(Group::new(vec![]).is_err());
+        assert!(Group::new(vec![1, 3, 1]).is_err());
+        // unsorted is fine — order is the local rank order
+        let g = Group::new(vec![4, 0, 2]).unwrap();
+        assert_eq!(g.local_rank(4), Some(0));
+        assert_eq!(g.global_rank(2), Some(2));
+    }
+
+    #[test]
+    fn split_partitions_by_color_and_orders_by_key() {
+        let g = Group::world(7);
+        // color = parity; key = descending rank for odds, rank for evens
+        let parts = g.split(|r| {
+            if r % 2 == 0 {
+                (0, r as i64)
+            } else {
+                (1, -(r as i64))
+            }
+        });
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].members(), &[0, 2, 4, 6]);
+        assert_eq!(parts[1].members(), &[5, 3, 1]); // key order, not rank
+    }
+
+    #[test]
+    fn by_node_and_leaders() {
+        let groups = Group::by_node(10, Mapping::Block { ranks_per_node: 4 });
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[2].members(), &[8, 9]); // ragged tail
+        let leaders = Group::leaders(&groups).unwrap();
+        assert_eq!(leaders.members(), &[0, 4, 8]);
+        // overlapping groups cannot form a leader group
+        let overlap = [Group::world(2), Group::world(3)];
+        assert!(Group::leaders(&overlap).is_err());
+    }
+
+    #[test]
+    fn subcomm_relabels_and_exchanges() {
+        // world of 6; the even-rank group {0, 2, 4} runs a local ring
+        // exchange under its own rank labels
+        let report = run_world::<i32, _, _>(6, Timing::Real, |comm| {
+            let g = Group::new(vec![0, 2, 4]).unwrap();
+            if !g.contains(comm.rank()) {
+                return Ok(-1);
+            }
+            let mut sub = comm.sub(&g)?;
+            let me = sub.rank();
+            let right = (me + 1) % sub.size();
+            let left = (me + sub.size() - 1) % sub.size();
+            let got = sub.sendrecv_pair(right, DataBuf::real(vec![me as i32]), left)?;
+            Ok(got.into_vec()?[0])
+        })
+        .unwrap();
+        // each even rank receives its left neighbor's local id
+        assert_eq!(report.results, vec![2, -1, 0, -1, 1, -1]);
+    }
+
+    #[test]
+    fn subcomm_rejects_non_members_and_bad_peers() {
+        let report = run_world::<i32, _, _>(3, Timing::Real, |comm| {
+            let g = Group::new(vec![0, 2]).unwrap();
+            match comm.rank() {
+                1 => Ok(comm.sub(&g).is_err()),
+                _ => {
+                    let mut sub = comm.sub(&g)?;
+                    Ok(sub.send(5, DataBuf::real(vec![1])).is_err())
+                }
+            }
+        })
+        .unwrap();
+        assert_eq!(report.results, vec![true, true, true]);
+    }
+
+    #[test]
+    fn subcomm_barrier_syncs_group_clocks_only() {
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(1e-6, 0.0)),
+            ComputeCost::new(1e-6), // 1 µs per reduced byte, to skew clocks
+        );
+        let report = run_world::<i32, _, _>(4, timing, |comm| {
+            if comm.rank() < 2 {
+                // skew the two clocks (0 µs vs 5 µs), then group-barrier
+                comm.charge_compute(comm.rank() * 5);
+                let g = Group::new(vec![0, 1]).unwrap();
+                let mut sub = comm.sub(&g)?;
+                sub.barrier()?;
+            }
+            Ok(comm.time_us())
+        })
+        .unwrap();
+        // the group barrier advances exactly its members to the group max
+        assert!((report.results[0] - 5.0).abs() < 1e-9, "{:?}", report.results);
+        assert!((report.results[1] - 5.0).abs() < 1e-9);
+        assert_eq!(report.results[2], 0.0);
+        assert_eq!(report.results[3], 0.0);
+    }
+}

@@ -3,6 +3,12 @@
 /// Counters accumulated by one rank across a collective run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RankMetrics {
+    /// The registry shard (node group) this rank belongs to — `0` in a
+    /// flat (single-shard) world. Identification, not a counter: `merge`
+    /// keeps the left-hand side's value, so aggregating a shard's ranks
+    /// into a fresh record tagged with that shard id stays correctly
+    /// labelled, and cross-shard totals read as shard 0.
+    pub shard_id: u32,
     /// Number of point-to-point operations (a sendrecv counts once).
     pub exchanges: u64,
     /// Number of those that were bidirectional sendrecvs.
@@ -27,7 +33,10 @@ pub struct RankMetrics {
 }
 
 impl RankMetrics {
-    /// Merge another rank's counters (for world-level aggregation).
+    /// Merge another rank's counters (for per-shard or world-level
+    /// aggregation). `shard_id` is a label, not a counter: the left-hand
+    /// side's id is kept, so each rank contributes its counters to exactly
+    /// one aggregate and leader ranks are never double-counted.
     pub fn merge(&mut self, other: &RankMetrics) {
         self.exchanges += other.exchanges;
         self.sendrecvs += other.sendrecvs;
@@ -56,6 +65,7 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = RankMetrics {
+            shard_id: 3,
             exchanges: 1,
             sendrecvs: 1,
             bytes_sent: 10,
@@ -68,6 +78,7 @@ mod tests {
         };
         let b = a.clone();
         a.merge(&b);
+        assert_eq!(a.shard_id, 3); // label, not summed
         assert_eq!(a.exchanges, 2);
         assert_eq!(a.bytes_sent, 20);
         assert_eq!(a.bytes_recv, 40);

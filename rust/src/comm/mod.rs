@@ -25,20 +25,29 @@
 //!
 //! The transport itself is zero-copy: a posted block is a reference-counted
 //! view of the sender's slab (see [`crate::buffer`]), channels live in a
-//! dense lock-free `p × p` edge table, and receive-side free lists recycle
-//! slab storage — so the in-process steady state adds no allocator or
-//! memcpy traffic the α-β-γ model doesn't account for. The cost model sees
-//! identical messages either way; `RankMetrics::{bytes_copied, allocs,
+//! sharded lock-free edge table (one dense arena per node group plus a
+//! sparse cross-node table — see [`thread`]), and receive-side free lists
+//! recycle slab storage — so the in-process steady state adds no allocator
+//! or memcpy traffic the α-β-γ model doesn't account for. The cost model
+//! sees identical messages either way; `RankMetrics::{bytes_copied, allocs,
 //! pool_recycled}` make the remaining cold-path traffic observable.
+//!
+//! On top of the flat world sits the communicator-group layer ([`group`]):
+//! [`Group`] rank subsets with MPI-style `split` and local ↔ global rank
+//! translation, and [`SubComm`] sub-communicators that run any
+//! [`Comm`]-written collective on a subset — the substrate of the
+//! node-aware hierarchical allreduce (`collectives::hierarchical`).
 
 pub mod barrier;
+pub mod group;
 pub mod metrics;
 pub mod thread;
 pub mod world;
 
+pub use group::{Group, SubComm};
 pub use metrics::RankMetrics;
 pub use thread::{ThreadComm, Timing};
-pub use world::{run_world, WorldReport};
+pub use world::{run_world, run_world_sharded, WorldReport};
 
 use crate::buffer::DataBuf;
 use crate::error::Result;

@@ -1,30 +1,41 @@
 //! The thread-backed communicator endpoint.
 //!
 //! Each rank owns a `ThreadComm`. Point-to-point channels (`std::sync::mpsc`,
-//! one per directed pair) live in a dense, preallocated `p × p` edge table
-//! of `OnceLock` slots shared by all endpoints of a world: after the first
-//! touch of an edge, sender lookup is one atomic load — no registry mutex,
-//! no `HashMap` hashing, and no `Sender` clone per post. Channels are
-//! unbounded, so `send` never blocks and the blocking structure of the
-//! algorithms (which the paper designed for `MPI_Sendrecv`) cannot deadlock
-//! as long as every posted receive is eventually matched.
+//! one per directed pair) live in a [`ShardedRegistry`]: one dense, local
+//! edge table per *node group* (shard) plus a sparse, striped table for the
+//! cross-shard edges. A flat world is the one-shard special case. Endpoints
+//! cache the `Arc<Edge>` per peer, so after the first touch of an edge a
+//! post is a plain vector index — no registry mutex, no `HashMap` hashing,
+//! and no `Sender` clone per post. Channels are unbounded, so `send` never
+//! blocks and the blocking structure of the algorithms (which the paper
+//! designed for `MPI_Sendrecv`) cannot deadlock as long as every posted
+//! receive is eventually matched.
+//!
+//! Sharding matters at scale: the old single dense `p × p` table preallocates
+//! `p²` slots from one arena (256 MiB of slots at p = 4096), while the
+//! sharded form preallocates only `Σ kᵢ²` intra-node slots (one independent
+//! arena per node group) and materializes cross-node edges on demand — the
+//! collectives only ever touch O(p log p) of them.
 //!
 //! Messages carry [`DataBuf`]s directly — with the zero-copy buffer layer
 //! (see [`crate::buffer`]) a posted block is a reference-counted view of
 //! the sender's slab, so the steady-state block path moves no payload
 //! bytes at all: the receiver reduces straight out of the sender's memory.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-use super::barrier::VBarrier;
+use super::barrier::{BarrierTable, VBarrier};
+use super::group::{Group, SubComm};
 use super::metrics::RankMetrics;
 use super::Comm;
 use crate::buffer::DataBuf;
 use crate::error::{Error, Result};
 use crate::model::{ComputeCost, CostModel};
 use crate::ops::Elem;
+use crate::topo::Mapping;
 
 /// How time is accounted.
 #[derive(Clone, Copy, Debug)]
@@ -67,15 +78,89 @@ struct Edge<E: Elem> {
     receiver: Mutex<Option<Receiver<Msg<E>>>>,
 }
 
-/// The dense `p × p` channel table, shared by all endpoints of a world.
-///
-/// Slot `(src, dst)` lives at index `src * p + dst`; each slot is a
-/// lazily initialized `OnceLock` (the collectives only ever touch O(p) of
-/// the p² edges, and an empty slot is 16 bytes). Lookup after first touch
-/// is lock-free.
-pub(super) struct Registry<E: Elem> {
+fn new_edge<E: Elem>() -> Arc<Edge<E>> {
+    let (s, r) = channel();
+    Arc::new(Edge {
+        sender: s,
+        receiver: Mutex::new(Some(r)),
+    })
+}
+
+/// One node group's dense intra-shard edge table over *local* indices —
+/// its own independent allocation, so large worlds stop serializing p²
+/// slots through a single arena. Slot `(ls, ld)` lives at `ls * k + ld`;
+/// each slot is a lazily initialized `OnceLock` and lookup after first
+/// touch is lock-free.
+struct ShardTable<E: Elem> {
     size: usize,
-    edges: Box<[OnceLock<Box<Edge<E>>>]>,
+    edges: Box<[OnceLock<Arc<Edge<E>>>]>,
+}
+
+impl<E: Elem> ShardTable<E> {
+    fn new(size: usize) -> ShardTable<E> {
+        ShardTable {
+            size,
+            edges: (0..size * size).map(|_| OnceLock::new()).collect(),
+        }
+    }
+
+    fn edge(&self, ls: usize, ld: usize) -> &Arc<Edge<E>> {
+        debug_assert!(ls < self.size && ld < self.size);
+        self.edges[ls * self.size + ld].get_or_init(new_edge)
+    }
+}
+
+/// Lock stripes of the sparse cross-shard edge table.
+const INTER_STRIPES: usize = 64;
+
+/// One stripe's worth of cross-shard edges, keyed by global `(src, dst)`.
+type InterMap<E> = HashMap<(usize, usize), Arc<Edge<E>>>;
+
+/// Cross-shard edges, keyed by global `(src, dst)` and created on first
+/// touch. Sparse by design: tree collectives cross node boundaries on
+/// O(p log p) pairs, a vanishing fraction of the p² a dense table would
+/// preallocate. The stripe lock is only taken on an endpoint's *first*
+/// touch of an edge — after that the endpoint's `Arc` cache serves lookups
+/// without any shared state.
+struct InterTable<E: Elem> {
+    stripes: Box<[Mutex<InterMap<E>>]>,
+}
+
+impl<E: Elem> InterTable<E> {
+    fn new() -> InterTable<E> {
+        InterTable {
+            stripes: (0..INTER_STRIPES)
+                .map(|_| Mutex::new(InterMap::new()))
+                .collect(),
+        }
+    }
+
+    fn edge(&self, src: usize, dst: usize) -> Arc<Edge<E>> {
+        let h = src.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(dst);
+        let mut map = self.stripes[h % INTER_STRIPES].lock().unwrap();
+        Arc::clone(map.entry((src, dst)).or_insert_with(new_edge))
+    }
+}
+
+/// The channel registry backing one logical world: one [`ShardTable`] per
+/// node group plus the sparse [`InterTable`] for cross-shard edges, with
+/// rank → (shard, local index) translation, the per-group barrier table,
+/// and the world poison flag.
+///
+/// `new(p, None)` is the flat world (a single shard — the previous dense
+/// `Registry` exactly); `new(p, Some(mapping))` shards by the mapping's
+/// node groups, which is how `run_world` aligns the transport's arenas
+/// with the cost model's node layout.
+pub(super) struct ShardedRegistry<E: Elem> {
+    size: usize,
+    /// Global rank → shard id.
+    shard_of: Box<[u32]>,
+    /// Global rank → local index within its shard.
+    local_of: Box<[u32]>,
+    shards: Box<[ShardTable<E>]>,
+    inter: InterTable<E>,
+    /// Per-group barriers for sub-communicators (see [`BarrierTable`]).
+    barriers: BarrierTable,
     /// Set when any rank fails; blocked receivers notice within
     /// [`POISON_POLL`] and abort instead of waiting forever (the registry
     /// itself keeps unclaimed `Sender`s alive, so a dead peer would not
@@ -100,13 +185,41 @@ fn recv_watchdog() -> std::time::Duration {
     std::time::Duration::from_secs(secs)
 }
 
-impl<E: Elem> Registry<E> {
-    pub(super) fn new(size: usize) -> Registry<E> {
-        Registry {
+impl<E: Elem> ShardedRegistry<E> {
+    pub(super) fn new(size: usize, mapping: Option<Mapping>) -> ShardedRegistry<E> {
+        let groups: Vec<Vec<usize>> = match mapping {
+            Some(m) => m.shards(size),
+            None => vec![(0..size).collect()],
+        };
+        let mut shard_of = vec![0u32; size];
+        let mut local_of = vec![0u32; size];
+        let mut shards = Vec::with_capacity(groups.len());
+        for (si, g) in groups.iter().enumerate() {
+            for (li, &r) in g.iter().enumerate() {
+                shard_of[r] = si as u32;
+                local_of[r] = li as u32;
+            }
+            shards.push(ShardTable::new(g.len()));
+        }
+        ShardedRegistry {
             size,
-            edges: (0..size * size).map(|_| OnceLock::new()).collect(),
+            shard_of: shard_of.into_boxed_slice(),
+            local_of: local_of.into_boxed_slice(),
+            shards: shards.into_boxed_slice(),
+            inter: InterTable::new(),
+            barriers: BarrierTable::new(),
             poisoned: std::sync::atomic::AtomicBool::new(false),
         }
+    }
+
+    /// Number of shards (node groups) backing this world.
+    pub(super) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard (node group) hosting `rank`.
+    pub(super) fn shard_of(&self, rank: usize) -> usize {
+        self.shard_of[rank] as usize
     }
 
     /// Mark the world failed (called when a rank errors or panics).
@@ -119,22 +232,21 @@ impl<E: Elem> Registry<E> {
         self.poisoned.load(std::sync::atomic::Ordering::Acquire)
     }
 
-    /// The edge `(src, dst)`, creating its channel on first touch.
-    fn edge(&self, src: usize, dst: usize) -> &Edge<E> {
+    /// The edge `(src, dst)`, creating its channel on first touch: dense
+    /// shard-local slot when both ends share a node group, sparse striped
+    /// entry otherwise. Endpoints cache the returned `Arc` per peer, so
+    /// this runs once per (endpoint, peer) pair.
+    fn edge(&self, src: usize, dst: usize) -> Arc<Edge<E>> {
         debug_assert!(src < self.size && dst < self.size);
-        self.edges[src * self.size + dst].get_or_init(|| {
-            let (s, r) = channel();
-            Box::new(Edge {
-                sender: s,
-                receiver: Mutex::new(Some(r)),
-            })
-        })
-    }
-
-    /// Shared reference to the sender of edge `(src, dst)` — O(1),
-    /// lock-free after first touch, never cloned.
-    fn sender(&self, src: usize, dst: usize) -> &Sender<Msg<E>> {
-        &self.edge(src, dst).sender
+        let (ss, sd) = (self.shard_of[src], self.shard_of[dst]);
+        if ss == sd {
+            Arc::clone(self.shards[ss as usize].edge(
+                self.local_of[src] as usize,
+                self.local_of[dst] as usize,
+            ))
+        } else {
+            self.inter.edge(src, dst)
+        }
     }
 
     /// Claim the receive half of edge `(src, dst)`; each endpoint may do
@@ -147,14 +259,22 @@ impl<E: Elem> Registry<E> {
             .take()
             .expect("receiver claimed twice — one endpoint per rank")
     }
+
+    /// The barrier shared by exactly the ranks in `members`.
+    fn group_barrier(&self, members: &[usize]) -> Arc<VBarrier> {
+        self.barriers.get(members)
+    }
 }
 
 /// One rank's endpoint.
 pub struct ThreadComm<E: Elem> {
     rank: usize,
     size: usize,
-    registry: Arc<Registry<E>>,
+    registry: Arc<ShardedRegistry<E>>,
     barrier: Arc<VBarrier>,
+    /// Cached outgoing edges, indexed by destination rank (first touch
+    /// resolves through the registry; afterwards a post is a vector index).
+    tx: Vec<Option<Arc<Edge<E>>>>,
     /// Claimed incoming channels, indexed by source rank.
     rx: Vec<Option<Receiver<Msg<E>>>>,
     timing: Timing,
@@ -167,21 +287,48 @@ impl<E: Elem> ThreadComm<E> {
     pub(super) fn new(
         rank: usize,
         size: usize,
-        registry: Arc<Registry<E>>,
+        registry: Arc<ShardedRegistry<E>>,
         barrier: Arc<VBarrier>,
         timing: Timing,
     ) -> ThreadComm<E> {
+        let shard_id = registry.shard_of(rank) as u32;
         ThreadComm {
             rank,
             size,
             registry,
             barrier,
+            tx: (0..size).map(|_| None).collect(),
             rx: (0..size).map(|_| None).collect(),
             timing,
             vtime: 0.0,
             start: Instant::now(),
-            metrics: RankMetrics::default(),
+            metrics: RankMetrics {
+                shard_id,
+                ..RankMetrics::default()
+            },
         }
+    }
+
+    /// Borrow a sub-communicator scoped to `group` (this rank must be a
+    /// member). The sub-communicator relabels ranks to `0..group.size()`
+    /// and shares this endpoint's clock, metrics, and channels — it is a
+    /// view, not a second endpoint, so collectives written against
+    /// [`Comm`] run unchanged on rank subsets.
+    pub fn sub<'a>(&'a mut self, group: &'a Group) -> Result<SubComm<'a, E>> {
+        SubComm::new(self, group)
+    }
+
+    /// Synchronize exactly the ranks in `members` (each must call this
+    /// with the same list); under virtual timing the member clocks advance
+    /// to the group maximum, mirroring the world [`Comm::barrier`].
+    pub(super) fn group_barrier_wait(&mut self, members: &[usize]) -> Result<()> {
+        let bar = self.registry.group_barrier(members);
+        let max = bar.wait(self.vtime);
+        if self.timing.is_virtual() {
+            self.vtime = max;
+        }
+        self.metrics.barriers += 1;
+        Ok(())
     }
 
     fn check_peer(&self, peer: usize) -> Result<()> {
@@ -200,13 +347,12 @@ impl<E: Elem> ThreadComm<E> {
             vtime: self.vtime,
             data,
         };
-        self.registry
-            .sender(self.rank, peer)
-            .send(msg)
-            .map_err(|_| Error::Disconnected {
-                rank: self.rank,
-                peer,
-            })?;
+        let (rank, registry) = (self.rank, &self.registry);
+        let edge = self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer));
+        edge.sender.send(msg).map_err(|_| Error::Disconnected {
+            rank: self.rank,
+            peer,
+        })?;
         self.metrics.bytes_sent += bytes as u64;
         Ok(bytes)
     }
@@ -375,7 +521,7 @@ mod tests {
     use std::thread;
 
     fn pair(timing: Timing) -> (ThreadComm<i32>, ThreadComm<i32>) {
-        let reg = Arc::new(Registry::new(2));
+        let reg = Arc::new(ShardedRegistry::new(2, None));
         let bar = Arc::new(VBarrier::new(2));
         (
             ThreadComm::new(0, 2, Arc::clone(&reg), Arc::clone(&bar), timing),
@@ -479,20 +625,79 @@ mod tests {
 
     #[test]
     fn edge_table_is_stable_across_posts() {
-        // the same &Sender must come back on every lookup (no re-init)
-        let reg: Registry<i32> = Registry::new(3);
-        let s1 = reg.sender(0, 2) as *const _;
-        let s2 = reg.sender(0, 2) as *const _;
-        assert_eq!(s1, s2);
+        // the same Edge must come back on every lookup (no re-init)
+        let reg: ShardedRegistry<i32> = ShardedRegistry::new(3, None);
+        let e1 = reg.edge(0, 2);
+        let e2 = reg.edge(0, 2);
+        assert!(Arc::ptr_eq(&e1, &e2));
         // distinct edges get distinct channels
-        let s3 = reg.sender(2, 0) as *const _;
-        assert_ne!(s1, s3);
+        let e3 = reg.edge(2, 0);
+        assert!(!Arc::ptr_eq(&e1, &e3));
+    }
+
+    #[test]
+    fn sharded_registry_translates_and_routes() {
+        // 5 ranks, nodes of 2: shards {0,1} {2,3} {4}
+        let mapping = Mapping::Block { ranks_per_node: 2 };
+        let reg: ShardedRegistry<i32> = ShardedRegistry::new(5, Some(mapping));
+        assert_eq!(reg.shard_count(), 3);
+        assert_eq!(reg.shard_of(0), 0);
+        assert_eq!(reg.shard_of(3), 1);
+        assert_eq!(reg.shard_of(4), 2);
+        // intra edge is stable and distinct per direction
+        let a = reg.edge(2, 3);
+        assert!(Arc::ptr_eq(&a, &reg.edge(2, 3)));
+        assert!(!Arc::ptr_eq(&a, &reg.edge(3, 2)));
+        // cross-shard edge resolves through the sparse table, stably
+        let x = reg.edge(1, 4);
+        assert!(Arc::ptr_eq(&x, &reg.edge(1, 4)));
+        assert!(!Arc::ptr_eq(&x, &reg.edge(4, 1)));
+    }
+
+    #[test]
+    fn sharded_world_exchanges_across_shards() {
+        // messages must flow both intra-shard (dense table) and
+        // cross-shard (sparse table) with identical semantics
+        let mapping = Mapping::Block { ranks_per_node: 2 };
+        let reg = Arc::new(ShardedRegistry::new(4, Some(mapping)));
+        let bar = Arc::new(VBarrier::new(4));
+        let mut comms: Vec<ThreadComm<i32>> = (0..4)
+            .map(|r| ThreadComm::new(r, 4, Arc::clone(&reg), Arc::clone(&bar), Timing::Real))
+            .collect();
+        assert_eq!(comms[3].metrics().shard_id, 1);
+        let c3 = comms.pop().unwrap();
+        let c2 = comms.pop().unwrap();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        // pairs (0,1) intra, then (1,2) cross; 3 idles after its exchange
+        let h = thread::spawn(move || {
+            let mut c1 = c1;
+            let intra = c1.sendrecv(0, DataBuf::real(vec![10])).unwrap();
+            let cross = c1.sendrecv(2, DataBuf::real(vec![11])).unwrap();
+            (intra.into_vec().unwrap(), cross.into_vec().unwrap())
+        });
+        let h2 = thread::spawn(move || {
+            let mut c2 = c2;
+            let cross = c2.sendrecv(1, DataBuf::real(vec![20])).unwrap();
+            let intra = c2.sendrecv(3, DataBuf::real(vec![21])).unwrap();
+            (cross.into_vec().unwrap(), intra.into_vec().unwrap())
+        });
+        let h3 = thread::spawn(move || {
+            let mut c3 = c3;
+            c3.sendrecv(2, DataBuf::real(vec![30])).unwrap().into_vec().unwrap()
+        });
+        let mut c0 = c0;
+        let got = c0.sendrecv(1, DataBuf::real(vec![0])).unwrap();
+        assert_eq!(got.into_vec().unwrap(), vec![10]);
+        assert_eq!(h.join().unwrap(), (vec![0], vec![20]));
+        assert_eq!(h2.join().unwrap(), (vec![11], vec![30]));
+        assert_eq!(h3.join().unwrap(), vec![21]);
     }
 
     #[test]
     #[should_panic(expected = "claimed twice")]
     fn receiver_single_claim() {
-        let reg: Registry<i32> = Registry::new(2);
+        let reg: ShardedRegistry<i32> = ShardedRegistry::new(2, None);
         let _r = reg.receiver(0, 1);
         let _r2 = reg.receiver(0, 1);
     }

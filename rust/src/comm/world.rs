@@ -1,14 +1,25 @@
 //! Spawn a world of `p` rank threads and run a closure per rank.
+//!
+//! A world's transport state is sharded by node group (see
+//! [`ShardedRegistry`](super::thread)): under a hierarchical cost model the
+//! shard layout is derived from the model's rank → node [`Mapping`]
+//! automatically, so the edge-table and buffer-pool arenas align with the
+//! simulated machine's nodes; [`run_world_sharded`] pins an explicit
+//! layout. Sharding is invisible to the cost model — virtual times are
+//! bit-identical across layouts — but observable in the per-shard metrics
+//! ([`WorldReport::shard_metrics`]).
 
 use std::sync::Arc;
 use std::thread;
 
 use super::barrier::VBarrier;
 use super::metrics::RankMetrics;
-use super::thread::{Registry, ThreadComm, Timing};
+use super::thread::{ShardedRegistry, ThreadComm, Timing};
 use super::Comm;
+use crate::buffer::pool::{CowEvent, ShardPool};
 use crate::error::{Error, Result};
 use crate::ops::Elem;
+use crate::topo::Mapping;
 
 /// The outcome of a world run.
 #[derive(Debug)]
@@ -19,8 +30,11 @@ pub struct WorldReport<R> {
     pub max_vtime_us: f64,
     /// Wall-clock duration of the whole run, in µs.
     pub wall_us: f64,
-    /// Per-rank traffic counters.
+    /// Per-rank traffic counters (each tagged with its `shard_id`).
     pub metrics: Vec<RankMetrics>,
+    /// Per-rank copy-attribution events — empty unless the crate is built
+    /// with the `debug-cow` feature (see `buffer::pool::take_cow_log`).
+    pub cow_events: Vec<Vec<CowEvent>>,
 }
 
 impl<R> WorldReport<R> {
@@ -32,9 +46,42 @@ impl<R> WorldReport<R> {
         }
         total
     }
+
+    /// Aggregate counters per registry shard (node group), indexed by
+    /// shard id. Every rank contributes to exactly one shard — leader
+    /// ranks included once, in their home shard — so the shard aggregates
+    /// sum to [`WorldReport::total_metrics`].
+    pub fn shard_metrics(&self) -> Vec<RankMetrics> {
+        let shards = self
+            .metrics
+            .iter()
+            .map(|m| m.shard_id as usize)
+            .max()
+            .map_or(0, |s| s + 1);
+        let mut out: Vec<RankMetrics> = (0..shards)
+            .map(|s| RankMetrics {
+                shard_id: s as u32,
+                ..RankMetrics::default()
+            })
+            .collect();
+        for m in &self.metrics {
+            out[m.shard_id as usize].merge(m);
+        }
+        out
+    }
 }
 
-/// Run `f(rank_endpoint)` on `p` threads and collect results.
+/// The shard layout implied by a timing mode: a hierarchical cost model
+/// shards by its node mapping, everything else runs one flat shard.
+fn implied_mapping(timing: Timing) -> Option<Mapping> {
+    match timing {
+        Timing::Virtual(model, _) => model.mapping(),
+        Timing::Real => None,
+    }
+}
+
+/// Run `f(rank_endpoint)` on `p` threads and collect results, sharding the
+/// transport by the cost model's node mapping (if any).
 ///
 /// Threads get 1 MiB stacks (the collectives are iterative, not recursive),
 /// so worlds up to the paper's p = 1152 are cheap. A panic or error on any
@@ -46,11 +93,34 @@ where
     R: Send + 'static,
     F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
 {
+    run_world_sharded(p, timing, implied_mapping(timing), f)
+}
+
+/// [`run_world`] with an explicit shard layout: `Some(mapping)` backs the
+/// world with one edge-table + buffer-pool shard per node group of the
+/// mapping, `None` runs the flat single-shard world.
+pub fn run_world_sharded<E, R, F>(
+    p: usize,
+    timing: Timing,
+    mapping: Option<Mapping>,
+    f: F,
+) -> Result<WorldReport<R>>
+where
+    E: Elem,
+    R: Send + 'static,
+    F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
+{
     if p == 0 {
         return Err(Error::Config("world size must be >= 1".into()));
     }
-    let registry = Arc::new(Registry::new(p));
+    let registry = Arc::new(ShardedRegistry::new(p, mapping));
     let barrier = Arc::new(VBarrier::new(p));
+    // one shared overflow arena per shard: storage a rank's thread-local
+    // free list cannot hold is donated to (and reclaimed from) its node
+    // group, never a global arena
+    let shard_pools: Vec<Arc<ShardPool>> = (0..registry.shard_count())
+        .map(|_| Arc::new(ShardPool::new()))
+        .collect();
     let f = Arc::new(f);
     let start = std::time::Instant::now();
 
@@ -58,6 +128,7 @@ where
     for rank in 0..p {
         let registry = Arc::clone(&registry);
         let barrier = Arc::clone(&barrier);
+        let pool = Arc::clone(&shard_pools[registry.shard_of(rank)]);
         let f = Arc::clone(&f);
         let handle = thread::Builder::new()
             .name(format!("rank-{rank}"))
@@ -65,7 +136,7 @@ where
             .spawn(move || {
                 // poison the world on both error returns and panics, so
                 // peers blocked in recv abort promptly
-                struct PoisonOnUnwind<E: Elem>(Arc<Registry<E>>);
+                struct PoisonOnUnwind<E: Elem>(Arc<ShardedRegistry<E>>);
                 impl<E: Elem> Drop for PoisonOnUnwind<E> {
                     fn drop(&mut self) {
                         if std::thread::panicking() {
@@ -77,6 +148,8 @@ where
                 // rank threads are fresh per world, but reset the buffer
                 // counters anyway so harvested stats cover exactly this run
                 let _ = crate::buffer::pool::take_stats();
+                let _ = crate::buffer::pool::take_cow_log();
+                crate::buffer::pool::bind_shard_pool(Some(pool));
                 let mut comm = ThreadComm::new(rank, p, Arc::clone(&registry), barrier, timing);
                 let result = match f(&mut comm) {
                     Ok(r) => r,
@@ -88,7 +161,8 @@ where
                 drop(guard);
                 let mut metrics = comm.metrics().clone();
                 metrics.absorb_buffer_stats(&crate::buffer::pool::take_stats());
-                Ok::<_, Error>((result, comm.vtime(), metrics))
+                let cow = crate::buffer::pool::take_cow_log();
+                Ok::<_, Error>((result, comm.vtime(), metrics, cow))
             })
             .map_err(Error::Io)?;
         handles.push(handle);
@@ -96,14 +170,16 @@ where
 
     let mut results = Vec::with_capacity(p);
     let mut metrics = Vec::with_capacity(p);
+    let mut cow_events = Vec::with_capacity(p);
     let mut max_vtime = 0.0f64;
     let mut first_err: Option<Error> = None;
     for (rank, handle) in handles.into_iter().enumerate() {
         match handle.join() {
-            Ok(Ok((r, vtime, m))) => {
+            Ok(Ok((r, vtime, m, cow))) => {
                 max_vtime = max_vtime.max(vtime);
                 results.push(r);
                 metrics.push(m);
+                cow_events.push(cow);
             }
             Ok(Err(e)) => {
                 // Disconnected errors are usually poison fallout from some
@@ -135,6 +211,7 @@ where
         max_vtime_us: max_vtime * 1e6,
         wall_us: start.elapsed().as_secs_f64() * 1e6,
         metrics,
+        cow_events,
     })
 }
 
@@ -225,6 +302,68 @@ mod tests {
         // all clocks equal the max (2µs) after the barrier
         for t in report.results {
             assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_timing_shards_the_world() {
+        // a hierarchical cost model implies the shard layout: 6 ranks on
+        // nodes of 2 → 3 shards, tagged in the per-rank metrics
+        let timing = Timing::Virtual(
+            CostModel::Hierarchical {
+                intra: LinkCost::new(1e-7, 0.0),
+                inter: LinkCost::new(1e-6, 0.0),
+                mapping: Mapping::Block { ranks_per_node: 2 },
+            },
+            ComputeCost::new(0.0),
+        );
+        let report = run_world::<i32, _, _>(6, timing, |comm| {
+            let r = comm.rank();
+            let peer = if r % 2 == 0 { r + 1 } else { r - 1 };
+            let got = comm.sendrecv(peer, DataBuf::real(vec![r as i32]))?;
+            Ok(got.into_vec()?[0])
+        })
+        .unwrap();
+        let shard_ids: Vec<u32> = report.metrics.iter().map(|m| m.shard_id).collect();
+        assert_eq!(shard_ids, vec![0, 0, 1, 1, 2, 2]);
+        let per_shard = report.shard_metrics();
+        assert_eq!(per_shard.len(), 3);
+        for (s, m) in per_shard.iter().enumerate() {
+            assert_eq!(m.shard_id, s as u32);
+            assert_eq!(m.sendrecvs, 2); // one exchange per member
+            assert_eq!(m.bytes_sent, 8);
+        }
+        // shard aggregates sum to the world total — no double counting
+        let total = report.total_metrics();
+        let summed: u64 = per_shard.iter().map(|m| m.bytes_sent).sum();
+        assert_eq!(summed, total.bytes_sent);
+    }
+
+    #[test]
+    fn sharding_does_not_change_virtual_time() {
+        // the registry layout is invisible to the cost model: same world,
+        // flat vs sharded transport, bit-identical clocks
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(1e-6, 1e-9)),
+            ComputeCost::new(0.0),
+        );
+        let run = |mapping: Option<Mapping>| {
+            run_world_sharded::<i32, _, _>(8, timing, mapping, |comm| {
+                // one intra-pair and one cross-pair exchange per rank
+                comm.sendrecv(comm.rank() ^ 1, DataBuf::real(vec![comm.rank() as i32; 100]))?;
+                comm.sendrecv(comm.rank() ^ 4, DataBuf::real(vec![0i32; 50]))?;
+                Ok(comm.time_us())
+            })
+            .unwrap()
+        };
+        let flat = run(None);
+        let sharded = run(Some(Mapping::Block { ranks_per_node: 2 }));
+        assert_eq!(
+            flat.max_vtime_us.to_bits(),
+            sharded.max_vtime_us.to_bits()
+        );
+        for (a, b) in flat.results.iter().zip(&sharded.results) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 }

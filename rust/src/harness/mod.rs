@@ -10,7 +10,7 @@ pub mod table;
 pub use table::{render_markdown, render_tsv, Row};
 
 use crate::buffer::DataBuf;
-use crate::collectives::{allreduce, RunSpec};
+use crate::collectives::{allreduce_on, RunSpec};
 use crate::comm::{run_world, Comm, ThreadComm, Timing};
 use crate::error::Result;
 use crate::model::AlgoKind;
@@ -62,7 +62,7 @@ pub fn measure(
             };
             comm.barrier()?; // synchronized start (mpicroscope, [2])
             comm.reset_time();
-            let _y = allreduce(algo, comm, x, &SumOp, &blocks)?;
+            let _y = allreduce_on(algo, comm, x, &SumOp, &blocks, spec.mapping)?;
             times.push(comm.time_us());
         }
         Ok(times)

@@ -41,9 +41,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::buffer::DataBuf;
     pub use crate::collectives::RunSpec;
-    pub use crate::comm::{Comm, RankMetrics, ThreadComm, Timing, WorldReport};
+    pub use crate::comm::{Comm, Group, RankMetrics, SubComm, ThreadComm, Timing, WorldReport};
     pub use crate::error::{Error, Result};
     pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
     pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceOp, Side, SumOp};
-    pub use crate::topo::{DualRootForest, PostOrderTree};
+    pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};
 }

@@ -1,7 +1,8 @@
 //! `dpdr` — the command-line launcher.
 //!
 //! ```text
-//! dpdr run       --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time] [--hier]
+//! dpdr run       --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time]
+//!                [--hier] [--mapping block:8]
 //! dpdr table2    [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]   reproduce Table 2
 //! dpdr fig1      [--tsv out.tsv]                                          Figure 1 series
 //! dpdr latency   [--hmax 12]                                              §1.2 4h−3 check
@@ -10,6 +11,10 @@
 //! dpdr calibrate                                                          thread-transport α/β fit
 //! dpdr sysinfo
 //! ```
+//!
+//! `--algo hier` runs the node-aware hierarchical allreduce over the node
+//! layout given by `--mapping` (`block:K` / `rr:N`); `--hier` switches the
+//! *cost model* to two-level links over the same layout — they compose.
 
 use dpdr::cli::Args;
 use dpdr::collectives::RunSpec;
@@ -59,8 +64,9 @@ fn print_help() {
         "dpdr — doubly-pipelined dual-root reduction-to-all (Träff 2021 reproduction)
 
 subcommands:
-  run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab}}
+  run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier}}
              --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
+             [--mapping block:K|rr:N]  (node layout for --algo hier / --hier cost model)
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -72,6 +78,17 @@ subcommands:
     );
 }
 
+/// The rank → node layout: `--mapping block:K|rr:N`, defaulting to the
+/// paper's `block:<ppn>` (with `--ppn`, default 8).
+fn mapping_of(args: &Args) -> Result<dpdr::topo::Mapping> {
+    let ranks_per_node = args.get("ppn", 8usize)?;
+    args.get_parsed(
+        "mapping",
+        dpdr::topo::Mapping::Block { ranks_per_node },
+        dpdr::topo::Mapping::parse,
+    )
+}
+
 /// Timing selection shared by the commands.
 fn timing_of(args: &Args) -> Result<Timing> {
     if args.switch("real-time") {
@@ -81,11 +98,10 @@ fn timing_of(args: &Args) -> Result<Timing> {
     let beta = args.get("beta", 0.70e-9)?;
     let gamma = args.get("gamma", 0.25e-9)?;
     let model = if args.switch("hier") {
-        let ranks_per_node = args.get("ppn", 8usize)?;
         CostModel::Hierarchical {
             intra: LinkCost::new(args.get("alpha-intra", 0.3e-6)?, args.get("beta-intra", 0.08e-9)?),
             inter: LinkCost::new(alpha, beta),
-            mapping: dpdr::topo::Mapping::Block { ranks_per_node },
+            mapping: mapping_of(args)?,
         }
     } else {
         CostModel::Uniform(LinkCost::new(alpha, beta))
@@ -102,7 +118,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let rounds = args.get("rounds", 1usize)?;
     let spec = RunSpec::new(p, m)
         .block_elems(block)
-        .phantom(args.switch("phantom"));
+        .phantom(args.switch("phantom"))
+        .mapping(mapping_of(args)?);
     let timing = timing_of(args)?;
     let meas = measure(algo, &spec, timing, rounds)?;
     println!(
@@ -115,8 +132,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         meas.time_us
     );
     if let Timing::Virtual(model, _) = timing {
-        if let Some(link) = model.as_uniform() {
-            let b = Blocks::by_size(m, block)?.count();
+        let b = Blocks::by_size(m, block)?.count();
+        if algo == AlgoKind::Hier {
+            // two-level closed form over the actual link levels
+            if let dpdr::topo::Mapping::Block { ranks_per_node } = spec.mapping {
+                let (intra, inter) = model.link_levels();
+                let pred =
+                    dpdr::model::predicted_time_us_hier(p, ranks_per_node, m * 4, b, intra, inter);
+                println!("analytic_us={pred:.2} (two-level node-aware form)");
+            }
+        } else if let Some(link) = model.as_uniform() {
             let pred = predicted_time_us(algo, p, m * 4, b, link);
             println!("analytic_us={pred:.2} (paper Sec. 1.2 formula)");
         }
@@ -235,6 +260,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         AlgoKind::Ring,
         AlgoKind::RecursiveDoubling,
         AlgoKind::Rabenseifner,
+        AlgoKind::Hier,
     ];
     let mut checked = 0usize;
     for algo in algos {

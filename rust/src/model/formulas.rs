@@ -27,6 +27,10 @@ pub enum AlgoKind {
     RecursiveDoubling,
     /// Reduce-scatter (halving) + allgather (doubling), Rabenseifner.
     Rabenseifner,
+    /// Node-aware hierarchical allreduce (intra-node reduce-scatter, dpdr
+    /// across nodes per segment, intra-node allgather) — see
+    /// `collectives::hierarchical`.
+    Hier,
 }
 
 impl AlgoKind {
@@ -41,6 +45,7 @@ impl AlgoKind {
             "ring" => AlgoKind::Ring,
             "rd" => AlgoKind::RecursiveDoubling,
             "rab" => AlgoKind::Rabenseifner,
+            "hier" => AlgoKind::Hier,
             _ => return None,
         })
     }
@@ -56,6 +61,7 @@ impl AlgoKind {
             AlgoKind::Ring => "ring",
             AlgoKind::RecursiveDoubling => "rd",
             AlgoKind::Rabenseifner => "rab",
+            AlgoKind::Hier => "hier",
         }
     }
 
@@ -71,14 +77,17 @@ impl AlgoKind {
             AlgoKind::Ring => "Ring",
             AlgoKind::RecursiveDoubling => "Recursive doubling",
             AlgoKind::Rabenseifner => "Rabenseifner",
+            AlgoKind::Hier => "Hierarchical (node-aware)",
         }
     }
 
     /// True if the algorithm preserves rank order (safe for non-commutative
     /// operators). Ring's reduce-scatter rotates the product, so it is
-    /// commutative-only, matching MPI library practice.
+    /// commutative-only, matching MPI library practice; the hierarchical
+    /// allreduce preserves order only under contiguous (Block) node
+    /// layouts, so it is conservatively commutative-only too.
     pub fn order_preserving(self) -> bool {
-        !matches!(self, AlgoKind::Ring)
+        !matches!(self, AlgoKind::Ring | AlgoKind::Hier)
     }
 
     /// The `(A, C)` step structure `A + C·b` of the pipelined algorithms
@@ -136,8 +145,51 @@ pub fn predicted_time_us(algo: AlgoKind, p: usize, m_bytes: usize, b: usize, lin
             };
             return predicted_time_us(branch, p, m_bytes, 1, link);
         }
+        AlgoKind::Hier => {
+            // uniform-link degenerate case of the two-level form, at the
+            // paper's default 8 ranks per node
+            return predicted_time_us_hier(p, 8, m_bytes, b as usize, link, link);
+        }
     };
     secs * 1e6
+}
+
+/// Predicted time in **microseconds** for the node-aware hierarchical
+/// allreduce over `p` ranks in nodes of `ppn`, with two-level link costs:
+/// intra-node reduce-scatter + allgather (`2·log2(ppn)` steps, `≈ 2·β·m`
+/// bytes on intra links) around a dpdr across the `⌈p/ppn⌉` nodes on
+/// `m/ppn`-byte segments over inter links — the `3βm/ppn` inter β-term
+/// that makes node-aware decomposition win the bandwidth regime.
+pub fn predicted_time_us_hier(
+    p: usize,
+    ppn: usize,
+    m_bytes: usize,
+    b: usize,
+    intra: LinkCost,
+    inter: LinkCost,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let ppn = ppn.clamp(1, p);
+    let nodes = p.div_ceil(ppn);
+    if nodes <= 1 {
+        return predicted_time_us(AlgoKind::Dpdr, p, m_bytes, b, intra);
+    }
+    let m = m_bytes as f64;
+    let k = ppn as f64;
+    let logk = log2_ceil(ppn) as f64;
+    // intra: halving reduce-scatter + doubling allgather, m(1−1/k) each way
+    let intra_secs = 2.0 * (logk * intra.alpha + intra.beta * m * (1.0 - 1.0 / k));
+    // inter: dpdr over the node count on an m/k segment
+    let cross_us = predicted_time_us(
+        AlgoKind::Dpdr,
+        nodes,
+        (m_bytes as f64 / k).ceil() as usize,
+        b.max(1),
+        inter,
+    );
+    intra_secs * 1e6 + cross_us
 }
 
 #[cfg(test)]
@@ -191,10 +243,26 @@ mod tests {
             AlgoKind::Ring,
             AlgoKind::RecursiveDoubling,
             AlgoKind::Rabenseifner,
+            AlgoKind::Hier,
         ] {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn hier_two_level_beats_flat_dpdr_beta_term() {
+        // β_intra ≪ β_inter, large m: the 3βm/ppn inter term must beat
+        // flat dpdr's 3βm by roughly the node width
+        let intra = LinkCost::new(0.3e-6, 0.08e-9);
+        let inter = LinkCost::new(1.0e-6, 0.70e-9);
+        let m = 40_000_000;
+        let t_hier = predicted_time_us_hier(1152, 32, m, 64, intra, inter);
+        let t_flat = predicted_time_us(AlgoKind::Dpdr, 1152, m, 64, inter);
+        assert!(t_hier < t_flat / 2.0, "hier={t_hier} flat={t_flat}");
+        // degenerate cases stay sane
+        assert_eq!(predicted_time_us_hier(1, 8, m, 4, intra, inter), 0.0);
+        assert!(predicted_time_us_hier(8, 8, m, 4, intra, inter) > 0.0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 pub mod formulas;
 pub mod lemma;
 
-pub use formulas::{predicted_time_us, AlgoKind};
+pub use formulas::{predicted_time_us, predicted_time_us_hier, AlgoKind};
 pub use lemma::{optimal_block_count, optimal_time};
 
 use crate::topo::{node_of, Mapping};
@@ -80,6 +80,36 @@ impl CostModel {
         }
     }
 
+    /// Hierarchical Hydra at full node width: the paper's machine is 36
+    /// nodes × 32 cores, so p = 1152 with 32-rank node groups — the layout
+    /// the `hierarchy_ablation` bench and the node-aware `AlgoKind::Hier`
+    /// ablations run on.
+    pub fn hydra_hier32() -> CostModel {
+        CostModel::Hierarchical {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping: Mapping::Block { ranks_per_node: 32 },
+        }
+    }
+
+    /// The rank → node layout, when the model distinguishes one. This is
+    /// what `run_world` uses to align the transport's registry/pool shards
+    /// with the simulated machine's nodes.
+    pub fn mapping(&self) -> Option<Mapping> {
+        match *self {
+            CostModel::Uniform(_) => None,
+            CostModel::Hierarchical { mapping, .. } => Some(mapping),
+        }
+    }
+
+    /// The two link levels `(intra, inter)` — equal for a uniform model.
+    pub fn link_levels(&self) -> (LinkCost, LinkCost) {
+        match *self {
+            CostModel::Uniform(l) => (l, l),
+            CostModel::Hierarchical { intra, inter, .. } => (intra, inter),
+        }
+    }
+
     /// The link cost between two ranks.
     pub fn link(&self, a: usize, b: usize) -> LinkCost {
         match *self {
@@ -139,6 +169,18 @@ mod tests {
         assert_eq!(m.link(0, 3), LinkCost::new(1e-7, 1e-10));
         assert_eq!(m.link(3, 4), LinkCost::new(1e-6, 1e-9));
         assert!(m.as_uniform().is_none());
+        assert_eq!(m.mapping(), Some(Mapping::Block { ranks_per_node: 4 }));
+        assert_eq!(
+            m.link_levels(),
+            (LinkCost::new(1e-7, 1e-10), LinkCost::new(1e-6, 1e-9))
+        );
+        let u = CostModel::hydra_uniform();
+        assert_eq!(u.mapping(), None);
+        assert_eq!(u.link_levels().0, u.link_levels().1);
+        assert_eq!(
+            CostModel::hydra_hier32().mapping(),
+            Some(Mapping::Block { ranks_per_node: 32 })
+        );
     }
 
     #[test]

@@ -46,6 +46,21 @@ impl Mapping {
     pub fn same_node(self, a: usize, b: usize) -> bool {
         node_of(self, a) == node_of(self, b)
     }
+
+    /// The node groups of a `p`-rank world under this mapping: one entry
+    /// per *populated* node, ordered by node id, members ascending. Every
+    /// rank appears in exactly one group — this partition is what the
+    /// sharded registry and the communicator-group layer (`comm::Group`)
+    /// both build on, so edge-table shards and `allreduce_hier` node
+    /// groups always agree.
+    pub fn shards(self, p: usize) -> Vec<Vec<usize>> {
+        let mut by_node: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for r in 0..p {
+            by_node.entry(node_of(self, r)).or_default().push(r);
+        }
+        by_node.into_values().collect()
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +86,23 @@ mod tests {
         assert_eq!(node_of(m, 37), 1);
         assert!(m.same_node(1, 37));
         assert!(!m.same_node(1, 2));
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        // block, ragged tail: 10 ranks over nodes of 4
+        let m = Mapping::Block { ranks_per_node: 4 };
+        let s = m.shards(10);
+        assert_eq!(s, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        // round robin interleaves
+        let m = Mapping::RoundRobin { nodes: 3 };
+        let s = m.shards(7);
+        assert_eq!(s, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+        // more nodes than ranks: only populated nodes appear
+        let m = Mapping::RoundRobin { nodes: 8 };
+        assert_eq!(m.shards(3).len(), 3);
+        // empty world
+        assert!(Mapping::Block { ranks_per_node: 4 }.shards(0).is_empty());
     }
 
     #[test]

@@ -4,14 +4,15 @@
 //! order-preserving algorithms.
 
 use dpdr::buffer::DataBuf;
-use dpdr::collectives::{allreduce, run_allreduce_i32, scan_pipelined, RunSpec};
+use dpdr::collectives::{allreduce_on, run_allreduce_i32, scan_pipelined, RunSpec};
 use dpdr::comm::{run_world, Timing};
 use dpdr::model::AlgoKind;
 use dpdr::ops::{Mat2, Mat2Op, MaxOp, MinOp, ProdOp, ReduceOp, SeqCheckOp, Span, SumOp};
 use dpdr::pipeline::Blocks;
+use dpdr::topo::Mapping;
 use dpdr::util::XorShift64;
 
-const ALL_ALGOS: [AlgoKind; 9] = [
+const ALL_ALGOS: [AlgoKind; 10] = [
     AlgoKind::Dpdr,
     AlgoKind::DpdrSingle,
     AlgoKind::PipeTree,
@@ -21,14 +22,23 @@ const ALL_ALGOS: [AlgoKind; 9] = [
     AlgoKind::Ring,
     AlgoKind::RecursiveDoubling,
     AlgoKind::Rabenseifner,
+    AlgoKind::Hier,
 ];
+
+/// Node layout the battery hands `AlgoKind::Hier` (other algorithms
+/// ignore it): nodes of 4, so the world sizes above cover single-node,
+/// uniform power-of-two, and ragged-tail hierarchies.
+const BATTERY_MAPPING: Mapping = Mapping::Block { ranks_per_node: 4 };
 
 #[test]
 fn i32_sum_battery() {
     for algo in ALL_ALGOS {
         for p in [1usize, 2, 3, 4, 5, 6, 7, 8, 11, 14, 16, 20, 30] {
             for m in [0usize, 1, 7, 64, 1000] {
-                let spec = RunSpec::new(p, m).block_elems(16).seed(p as u64 * 31 + m as u64);
+                let spec = RunSpec::new(p, m)
+                    .block_elems(16)
+                    .seed(p as u64 * 31 + m as u64)
+                    .mapping(BATTERY_MAPPING);
                 let expected = spec.expected_sum_i32();
                 let report = run_allreduce_i32(algo, &spec, Timing::Real)
                     .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
@@ -58,7 +68,7 @@ where
         use dpdr::comm::Comm;
         let rank = comm.rank();
         let x = DataBuf::real((0..m).map(|i| gen(rank, i)).collect());
-        allreduce(algo, comm, x, &op2, &blocks)
+        allreduce_on(algo, comm, x, &op2, &blocks, BATTERY_MAPPING)
     })
     .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
     // oracle: fold in rank order
@@ -129,7 +139,7 @@ fn seqcheck_span_witness_all_order_preserving() {
             let report = run_world::<Span, _, _>(p, Timing::Real, move |comm| {
                 use dpdr::comm::Comm;
                 let x = DataBuf::real(vec![Span::rank(comm.rank() as u32); m]);
-                allreduce(algo, comm, x, &SeqCheckOp, &blocks)
+                allreduce_on(algo, comm, x, &SeqCheckOp, &blocks, BATTERY_MAPPING)
             })
             .unwrap();
             for buf in report.results {
@@ -190,11 +200,11 @@ fn repeated_collectives_share_one_world() {
             let x = DataBuf::real(vec![comm.rank() as i32 + round; m]);
             let algo = [
                 AlgoKind::Dpdr,
-                AlgoKind::PipeTree,
+                AlgoKind::Hier,
                 AlgoKind::TwoTree,
                 AlgoKind::Ring,
             ][round as usize];
-            let y = allreduce(algo, comm, x, &SumOp, &blocks)?;
+            let y = allreduce_on(algo, comm, x, &SumOp, &blocks, BATTERY_MAPPING)?;
             results.push(y.into_vec()?[0]);
             comm.barrier()?;
         }

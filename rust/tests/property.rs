@@ -4,13 +4,13 @@
 //! real-vs-phantom virtual-time equivalence.
 
 use dpdr::buffer::DataBuf;
-use dpdr::collectives::{allreduce, run_allreduce_i32, RunSpec};
+use dpdr::collectives::{allreduce_on, run_allreduce_i32, RunSpec};
 use dpdr::comm::{run_world, Timing};
 use dpdr::model::{lemma, AlgoKind, ComputeCost, CostModel, LinkCost};
 use dpdr::ops::SumOp;
 use dpdr::pipeline::Blocks;
 use dpdr::proptest::{forall, Gen};
-use dpdr::topo::{DualRootForest, PostOrderTree};
+use dpdr::topo::{DualRootForest, Mapping, PostOrderTree};
 
 fn random_algo(g: &mut Gen) -> AlgoKind {
     *g.choose(&[
@@ -23,6 +23,7 @@ fn random_algo(g: &mut Gen) -> AlgoKind {
         AlgoKind::Ring,
         AlgoKind::RecursiveDoubling,
         AlgoKind::Rabenseifner,
+        AlgoKind::Hier,
     ])
 }
 
@@ -371,13 +372,14 @@ fn prop_repeated_use_of_world_is_clean() {
         let algo1 = random_algo(g);
         let algo2 = random_algo(g);
         let blocks = Blocks::by_count(m, 4);
+        let mapping = Mapping::Block { ranks_per_node: 4 };
         let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
             use dpdr::comm::Comm;
             let x1 = DataBuf::real(vec![1i32; m]);
-            let y1 = allreduce(algo1, comm, x1, &SumOp, &blocks)?;
+            let y1 = allreduce_on(algo1, comm, x1, &SumOp, &blocks, mapping)?;
             comm.barrier()?;
             let x2 = DataBuf::real(vec![2i32; m]);
-            let y2 = allreduce(algo2, comm, x2, &SumOp, &blocks)?;
+            let y2 = allreduce_on(algo2, comm, x2, &SumOp, &blocks, mapping)?;
             Ok((y1.into_vec()?, y2.into_vec()?))
         })
         .map_err(|e| format!("{}+{}: {e}", algo1.name(), algo2.name()))?;
