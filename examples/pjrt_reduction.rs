@@ -1,88 +1,84 @@
 //! The three-layer stack end to end: the Rust coordinator runs the
 //! paper's collective while the block-wise ⊙ on the hot path executes the
-//! **AOT-compiled JAX/Pallas kernel** through PJRT (Python is never
-//! invoked at runtime — `make artifacts` compiled the kernels once).
+//! **AOT-compiled JAX/Pallas kernel** through the PJRT reduce backend
+//! (Python is never invoked at runtime — `make artifacts` compiled the
+//! kernels once).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example pjrt_reduction
 //! ```
+//!
+//! Without artifacts the example still runs: the backend layer degrades
+//! gracefully (pjrt → simd → scalar) and the dispatch counters show which
+//! kernel actually served the reduction.
 
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use dpdr::buffer::DataBuf;
-use dpdr::collectives::allreduce;
-use dpdr::comm::{run_world, Comm, Timing};
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
 use dpdr::model::AlgoKind;
-use dpdr::ops::{OpKind, ReduceOp, Side};
-use dpdr::pipeline::Blocks;
-use dpdr::runtime::{EngineCell, PjrtOp, ReduceBackend, ReduceEngine};
+use dpdr::ops::{backend, OpKind, ReduceBackend};
+use dpdr::runtime::{artifact_name, ReduceEngine};
 use dpdr::util::XorShift64;
 
 fn main() -> Result<(), dpdr::error::Error> {
-    let engine = ReduceEngine::with_default_dir()?;
+    let mut engine = ReduceEngine::with_default_dir()?;
+    println!("artifact dir: {}", engine.dir().display());
+    let probe = artifact_name(2, OpKind::Sum, "int32", 16_384);
+    let have_artifacts = engine.has_artifact(&probe);
     println!(
-        "PJRT CPU engine up; artifacts from {}",
-        engine.dir().display()
-    );
-
-    // 1. single-kernel numerics: Pallas combine2 vs the native loop
-    let mut engine = engine;
-    let mut rng = XorShift64::new(5);
-    let t = rng.small_i32_vec(16_000);
-    let y = rng.small_i32_vec(16_000);
-    let mut out = vec![0i32; 16_000];
-    engine.combine2_i32(OpKind::Sum, &t, &y, &mut out)?;
-    let native = PjrtOp::new(OpKind::Sum, ReduceBackend::Native);
-    let mut expect = y.clone();
-    native.reduce_into(&mut expect, &t, Side::Left);
-    assert_eq!(out, expect);
-    println!("combine2 kernel (16000-int block): matches native loop ✓");
-
-    // 2. the whole collective with the PJRT backend on the hot path
-    let backend = ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(engine))));
-    let (p, m) = (8usize, 64_000usize);
-    let blocks = Blocks::by_size(m, 16_000)?;
-    let op = PjrtOp::new(OpKind::Sum, backend.clone());
-    let start = Instant::now();
-    let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
-        let x = DataBuf::real(XorShift64::new(comm.rank() as u64).small_i32_vec(m));
-        allreduce(AlgoKind::Dpdr, comm, x, &op, &blocks)
-    })?;
-    let pjrt_wall = start.elapsed().as_secs_f64() * 1e3;
-    let mut expected = vec![0i32; m];
-    for r in 0..p {
-        for (e, v) in expected
-            .iter_mut()
-            .zip(XorShift64::new(r as u64).small_i32_vec(m))
-        {
-            *e = e.wrapping_add(v);
+        "artifact {probe}: {}",
+        if have_artifacts {
+            "present"
+        } else {
+            "MISSING (run `make artifacts`; continuing with the SIMD fallback)"
         }
-    }
-    assert!(report
-        .results
-        .iter()
-        .all(|buf| buf.as_slice().unwrap() == &expected[..]));
-    println!(
-        "allreduce (p={p}, m={m}) with PJRT ⊙ hot path: correct, {pjrt_wall:.1} ms wall"
     );
 
-    // 3. same run on the native backend for comparison
-    let op = PjrtOp::new(OpKind::Sum, ReduceBackend::Native);
-    let start = Instant::now();
-    let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
-        let x = DataBuf::real(XorShift64::new(comm.rank() as u64).small_i32_vec(m));
-        allreduce(AlgoKind::Dpdr, comm, x, &op, &blocks)
-    })?;
-    let native_wall = start.elapsed().as_secs_f64() * 1e3;
-    assert!(report
-        .results
-        .iter()
-        .all(|buf| buf.as_slice().unwrap() == &expected[..]));
-    println!("same run, native ⊙: correct, {native_wall:.1} ms wall");
+    // 1. single-kernel numerics: the compiled combine2 vs the scalar loop
+    if have_artifacts {
+        let mut rng = XorShift64::new(5);
+        let t = rng.small_i32_vec(16_000);
+        let y = rng.small_i32_vec(16_000);
+        let mut out = vec![0i32; 16_000];
+        engine.combine2::<i32>(OpKind::Sum, &t, &y, &mut out)?;
+        let expect: Vec<i32> = t.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b)).collect();
+        assert_eq!(out, expect);
+        println!("combine2 kernel (16000-int block): matches the scalar loop ✓");
+    }
+
+    // 2. the whole collective, once per backend, on the same inputs
+    let spec = RunSpec::new(8, 256 * 1024).block_elems(16_000);
+    let expected = spec.expected_sum_i32();
+    for choice in [
+        ReduceBackend::Scalar,
+        ReduceBackend::Simd,
+        ReduceBackend::Pjrt,
+    ] {
+        let spec = spec.reduce_backend(choice);
+        let start = Instant::now();
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real)?;
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        for buf in &report.results {
+            assert_eq!(buf.as_slice().unwrap(), &expected[..]);
+        }
+        let totals = report.total_metrics();
+        println!(
+            "{:>6}: {wall_ms:.1} ms  (hits: scalar={} simd={} pjrt={}, elems_reduced={})",
+            choice.name(),
+            totals.backend_hits.scalar,
+            totals.backend_hits.simd,
+            totals.backend_hits.pjrt,
+            totals.elems_reduced
+        );
+    }
     println!(
-        "(PJRT pays per-call literal copies + dispatch — see the reduce_backend bench \
-         and EXPERIMENTS.md §Perf for the crossover discussion)"
+        "(the pjrt row falls back to simd when artifacts are missing; \
+         see the reduce_backend bench for the crossover discussion)"
     );
+
+    // 3. the thread-local selection API the collectives use internally
+    let _guard = backend::scope(ReduceBackend::Simd);
+    println!("thread-local backend now: {}", backend::current().name());
     Ok(())
 }

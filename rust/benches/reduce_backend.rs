@@ -1,57 +1,141 @@
 //! **P1 — reduce-backend hot path**: the block-wise ⊙ (`MPI_Reduce_local`)
-//! executed by (a) the native auto-vectorized Rust loop and (b) the
-//! AOT-compiled JAX/Pallas kernel via PJRT, over the paper's 16000-element
-//! blocks. Reports per-block latency and effective bandwidth; feeds the
-//! §Perf discussion of PJRT call overhead vs kernel quality.
+//! executed by each backend of the pluggable reduce layer —
+//! (a) the scalar reference loop, (b) the chunk-unrolled SIMD kernels,
+//! (c) the AOT-compiled JAX/Pallas kernel via PJRT — over the compiled
+//! block sizes. Reports per-call latency and effective bandwidth, and
+//! writes `BENCH_reduce.json` so `bench_check` can gate the SIMD
+//! large-block throughput from PR to PR.
 //!
-//! Run: `cargo bench --bench reduce_backend` (skips PJRT if artifacts are
-//! missing).
+//! Run: `cargo bench --bench reduce_backend` (the pjrt column reads 0 and
+//! is skipped when artifacts are missing).
 
 use std::time::Instant;
 
-use dpdr::ops::{OpKind, ReduceOp, Side};
-use dpdr::runtime::{artifact_name, PjrtOp, ReduceBackend, ReduceEngine};
+use dpdr::ops::backend::{self, reduce_arith, ReduceBackend};
+use dpdr::ops::{ArithElem, OpKind, Side};
+use dpdr::runtime::{artifact_name, ReduceEngine};
 use dpdr::util::XorShift64;
 
-fn bench_backend(op: &PjrtOp, n: usize, iters: usize) -> (f64, f64) {
-    let mut rng = XorShift64::new(99);
-    let inc = rng.small_i32_vec(n);
-    let mut acc = rng.small_i32_vec(n);
-    // warmup
-    op.reduce_into(&mut acc, &inc, Side::Left);
+/// (per-call µs, effective MB/s) of `reduce_arith` under `choice`.
+/// Bandwidth counts 2 reads + 1 write per element.
+fn bench_case<E: ArithElem>(
+    choice: ReduceBackend,
+    kind: OpKind,
+    base: &[E],
+    inc: &[E],
+    iters: usize,
+) -> (f64, f64) {
+    let _g = backend::scope(choice);
+    let mut acc = base.to_vec();
+    // warmup (also faults pages and, for pjrt, compiles the kernel)
+    reduce_arith(kind, &mut acc, inc, Side::Left);
     let start = Instant::now();
     for _ in 0..iters {
-        op.reduce_into(&mut acc, &inc, Side::Left);
+        reduce_arith(kind, &mut acc, inc, Side::Left);
     }
     let total = start.elapsed().as_secs_f64();
     let per_call_us = total * 1e6 / iters as f64;
-    // 2 reads + 1 write of n i32
-    let gbps = (3.0 * n as f64 * 4.0 * iters as f64) / total / 1e9;
-    (per_call_us, gbps)
+    let bytes = 3.0 * base.len() as f64 * std::mem::size_of::<E>() as f64;
+    let mb_per_sec = bytes * iters as f64 / total / 1e6;
+    (per_call_us, mb_per_sec)
+}
+
+/// Cheap presence probe for the f32-sum artifacts the pjrt rows need.
+/// Only a hint: the measurement itself re-checks `pjrt_hits`, so a
+/// present-but-unloadable artifact set still reports 0 rather than
+/// passing SIMD-fallback numbers off as PJRT.
+fn pjrt_available() -> bool {
+    match ReduceEngine::with_default_dir() {
+        Ok(engine) => engine.has_artifact(&artifact_name(2, OpKind::Sum, "float32", 1_024)),
+        Err(_) => false,
+    }
+}
+
+/// [`bench_case`] under the Pjrt backend, returning zeros unless the PJRT
+/// engine actually served every timed call (no silent SIMD fallback).
+fn bench_pjrt_case(kind: OpKind, base: &[f32], inc: &[f32], iters: usize) -> (f64, f64) {
+    let _ = backend::take_stats();
+    let result = bench_case(ReduceBackend::Pjrt, kind, base, inc, iters);
+    let stats = backend::take_stats();
+    if stats.pjrt_hits as usize == iters + 1 {
+        result
+    } else {
+        (0.0, 0.0)
+    }
+}
+
+struct Case {
+    label: &'static str,
+    n: usize,
 }
 
 fn main() {
-    println!("#backend\tblock_elems\tper_call_us\teff_GB/s");
-    for n in [1_024usize, 16_000, 131_072] {
-        let iters = (2_000_000 / n).max(10);
-        let native = PjrtOp::new(OpKind::Sum, ReduceBackend::Native);
-        let (us, gb) = bench_backend(&native, n, iters);
-        println!("native\t{n}\t{us:.2}\t{gb:.2}");
+    let sizes = [
+        Case { label: "small", n: 1_024 },
+        Case { label: "paper", n: 16_000 },
+        Case { label: "large", n: 131_072 },
+    ];
+    let have_pjrt = pjrt_available();
+    let mut json: Vec<String> = Vec::new();
+    println!("#op\tblock_elems\tbackend\tper_call_us\teff_MB/s");
+
+    for case in &sizes {
+        let n = case.n;
+        let iters = (4_000_000 / n).max(10);
+        let mut rng = XorShift64::new(99);
+
+        // f32 sum — the headline row the bench gate watches
+        let basef = rng.small_f32_vec(n);
+        let incf = rng.small_f32_vec(n);
+        let (s_us, s_mb) = bench_case(ReduceBackend::Scalar, OpKind::Sum, &basef, &incf, iters);
+        let (v_us, v_mb) = bench_case(ReduceBackend::Simd, OpKind::Sum, &basef, &incf, iters);
+        let (p_us, p_mb) = if have_pjrt {
+            bench_pjrt_case(OpKind::Sum, &basef, &incf, iters.clamp(5, 200))
+        } else {
+            (0.0, 0.0)
+        };
+        println!("f32_sum\t{n}\tscalar\t{s_us:.3}\t{s_mb:.0}");
+        println!("f32_sum\t{n}\tsimd\t{v_us:.3}\t{v_mb:.0}");
+        println!("f32_sum\t{n}\tpjrt\t{p_us:.3}\t{p_mb:.0}");
+        json.push(format!(
+            "  \"reduce_f32_sum_{}\": {{\"elems\": {n}, \"scalar_mb_s\": {s_mb:.1}, \
+             \"simd_mb_s\": {v_mb:.1}, \"pjrt_mb_s\": {p_mb:.1}, \"simd_speedup\": {:.3}}}",
+            case.label,
+            v_mb / s_mb.max(1e-9)
+        ));
+
+        // f32 max — the branchy NaN-stable combine is where the vector
+        // kernels pay off most
+        let (ms_us, ms_mb) = bench_case(ReduceBackend::Scalar, OpKind::Max, &basef, &incf, iters);
+        let (mv_us, mv_mb) = bench_case(ReduceBackend::Simd, OpKind::Max, &basef, &incf, iters);
+        println!("f32_max\t{n}\tscalar\t{ms_us:.3}\t{ms_mb:.0}");
+        println!("f32_max\t{n}\tsimd\t{mv_us:.3}\t{mv_mb:.0}");
+        json.push(format!(
+            "  \"reduce_f32_max_{}\": {{\"elems\": {n}, \"scalar_mb_s\": {ms_mb:.1}, \
+             \"simd_mb_s\": {mv_mb:.1}, \"simd_speedup\": {:.3}}}",
+            case.label,
+            mv_mb / ms_mb.max(1e-9)
+        ));
+
+        // i32 sum — the paper's MPI_INT element type
+        let basei = rng.small_i32_vec(n);
+        let inci = rng.small_i32_vec(n);
+        let (is_us, is_mb) = bench_case(ReduceBackend::Scalar, OpKind::Sum, &basei, &inci, iters);
+        let (iv_us, iv_mb) = bench_case(ReduceBackend::Simd, OpKind::Sum, &basei, &inci, iters);
+        println!("i32_sum\t{n}\tscalar\t{is_us:.3}\t{is_mb:.0}");
+        println!("i32_sum\t{n}\tsimd\t{iv_us:.3}\t{iv_mb:.0}");
+        json.push(format!(
+            "  \"reduce_i32_sum_{}\": {{\"elems\": {n}, \"scalar_mb_s\": {is_mb:.1}, \
+             \"simd_mb_s\": {iv_mb:.1}, \"simd_speedup\": {:.3}}}",
+            case.label,
+            iv_mb / is_mb.max(1e-9)
+        ));
     }
-    match ReduceEngine::with_default_dir() {
-        Ok(engine) if engine.has_artifact(&artifact_name(2, OpKind::Sum, "int32", 1024)) => {
-            let backend = ReduceBackend::Pjrt(std::sync::Arc::new(std::sync::Mutex::new(
-                dpdr::runtime::EngineCell(engine),
-            )));
-            for n in [1_024usize, 16_000, 131_072] {
-                let iters = (400_000 / n).max(5);
-                let pjrt = PjrtOp::new(OpKind::Sum, backend.clone());
-                let (us, gb) = bench_backend(&pjrt, n, iters);
-                println!("pjrt\t{n}\t{us:.2}\t{gb:.2}");
-            }
-            println!("# note: PJRT path pays literal-copy + dispatch overhead per call;");
-            println!("# the native loop is the production default (see EXPERIMENTS.md §Perf).");
-        }
-        _ => println!("# pjrt: SKIPPED (run `make artifacts` first)"),
+
+    if !have_pjrt {
+        println!("# pjrt: artifacts missing (run `make artifacts`) — column reads 0");
     }
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    std::fs::write("BENCH_reduce.json", &body).expect("write BENCH_reduce.json");
+    eprintln!("wrote BENCH_reduce.json");
 }

@@ -405,9 +405,11 @@ impl<E: Elem> DataBuf<E> {
     /// `self[lo..] ← incoming ⊙ self[lo..]` (Side::Left) or the mirror.
     ///
     /// This is `MPI_Reduce_local` restricted to one pipeline block — on the
-    /// zero-copy path it reads straight out of the sender's slab. For
-    /// phantom buffers it is a no-op (the virtual clock charges γ·n at the
-    /// call site).
+    /// zero-copy path it reads straight out of the sender's slab, and the
+    /// arithmetic operators dispatch the element loop through the pluggable
+    /// reduce-backend layer (scalar / SIMD / PJRT — see
+    /// [`crate::ops::backend`]). For phantom buffers it is a no-op (the
+    /// virtual clock charges γ·n at the call site).
     pub fn reduce_at<O: ReduceOp<E> + ?Sized>(
         &mut self,
         lo: usize,

@@ -32,7 +32,7 @@ use crate::buffer::DataBuf;
 use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
 use crate::error::{Error, Result};
 use crate::model::AlgoKind;
-use crate::ops::{Elem, ReduceOp, SumOp};
+use crate::ops::{Elem, ReduceBackend, ReduceOp, SumOp};
 use crate::pipeline::Blocks;
 use crate::topo::Mapping;
 use crate::util::XorShift64;
@@ -99,6 +99,10 @@ pub struct RunSpec {
     /// Rank → node layout, used by the node-aware `AlgoKind::Hier` (other
     /// algorithms ignore it). Defaults to the paper's 8 ranks per node.
     pub mapping: Mapping,
+    /// Which kernel executes the block-wise ⊙ on every rank (scalar /
+    /// SIMD / PJRT; see [`crate::ops::backend`]). All backends are bitwise
+    /// identical, so this is a pure performance knob.
+    pub reduce_backend: ReduceBackend,
 }
 
 impl RunSpec {
@@ -110,11 +114,17 @@ impl RunSpec {
             phantom: false,
             seed: 0xD7D2,
             mapping: Mapping::Block { ranks_per_node: 8 },
+            reduce_backend: ReduceBackend::Auto,
         }
     }
 
     pub fn mapping(mut self, mapping: Mapping) -> RunSpec {
         self.mapping = mapping;
+        self
+    }
+
+    pub fn reduce_backend(mut self, backend: ReduceBackend) -> RunSpec {
+        self.reduce_backend = backend;
         self
     }
 
@@ -166,6 +176,9 @@ pub fn run_allreduce_i32(
     let spec = *spec;
     let blocks = spec.blocks()?;
     run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
+        // every rank dispatches its block reductions through the spec's
+        // backend (scoped: the rank thread returns to `Auto` afterwards)
+        let _backend = crate::ops::backend::scope(spec.reduce_backend);
         let x = if spec.phantom {
             DataBuf::phantom(spec.m)
         } else {

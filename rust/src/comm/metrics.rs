@@ -1,5 +1,26 @@
 //! Per-rank traffic and work counters.
 
+/// Per-backend dispatch counts of the reduce layer: which kernel (scalar
+/// loop, SIMD, PJRT) served each `reduce_into` call on this rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendHits {
+    /// Calls served by the plain scalar loop (includes the default path of
+    /// non-arithmetic operators such as `Mat2Op`).
+    pub scalar: u64,
+    /// Calls served by the chunk-unrolled SIMD kernels.
+    pub simd: u64,
+    /// Calls served by the PJRT engine.
+    pub pjrt: u64,
+}
+
+impl BackendHits {
+    fn merge(&mut self, other: &BackendHits) {
+        self.scalar += other.scalar;
+        self.simd += other.simd;
+        self.pjrt += other.pjrt;
+    }
+}
+
 /// Counters accumulated by one rank across a collective run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RankMetrics {
@@ -30,6 +51,12 @@ pub struct RankMetrics {
     pub allocs: u64,
     /// Slab allocations served from the rank's receive-side free list.
     pub pool_recycled: u64,
+    /// Elements fed through ⊙ by the reduce-backend layer (real-mode only:
+    /// phantom reductions are charged to the virtual clock as `reduce_bytes`
+    /// but never executed).
+    pub elems_reduced: u64,
+    /// Which reduce backend served each `reduce_into` call.
+    pub backend_hits: BackendHits,
 }
 
 impl RankMetrics {
@@ -47,6 +74,8 @@ impl RankMetrics {
         self.bytes_copied += other.bytes_copied;
         self.allocs += other.allocs;
         self.pool_recycled += other.pool_recycled;
+        self.elems_reduced += other.elems_reduced;
+        self.backend_hits.merge(&other.backend_hits);
     }
 
     /// Fold one rank's buffer-layer counters (thread-local, harvested when
@@ -55,6 +84,15 @@ impl RankMetrics {
         self.bytes_copied += stats.bytes_copied;
         self.allocs += stats.allocs;
         self.pool_recycled += stats.pool_recycled;
+    }
+
+    /// Fold one rank's reduce-backend counters (thread-local, harvested
+    /// when the rank thread finishes) into this record.
+    pub fn absorb_backend_stats(&mut self, stats: &crate::ops::BackendStats) {
+        self.elems_reduced += stats.elems_reduced;
+        self.backend_hits.scalar += stats.scalar_hits;
+        self.backend_hits.simd += stats.simd_hits;
+        self.backend_hits.pjrt += stats.pjrt_hits;
     }
 }
 
@@ -75,6 +113,12 @@ mod tests {
             bytes_copied: 7,
             allocs: 3,
             pool_recycled: 1,
+            elems_reduced: 9,
+            backend_hits: BackendHits {
+                scalar: 1,
+                simd: 2,
+                pjrt: 3,
+            },
         };
         let b = a.clone();
         a.merge(&b);
@@ -87,6 +131,15 @@ mod tests {
         assert_eq!(a.bytes_copied, 14);
         assert_eq!(a.allocs, 6);
         assert_eq!(a.pool_recycled, 2);
+        assert_eq!(a.elems_reduced, 18);
+        assert_eq!(
+            a.backend_hits,
+            BackendHits {
+                scalar: 2,
+                simd: 4,
+                pjrt: 6,
+            }
+        );
     }
 
     #[test]
@@ -100,5 +153,20 @@ mod tests {
         assert_eq!(m.allocs, 2);
         assert_eq!(m.pool_recycled, 5);
         assert_eq!(m.bytes_copied, 128);
+    }
+
+    #[test]
+    fn absorb_backend_stats_folds_counters() {
+        let mut m = RankMetrics::default();
+        m.absorb_backend_stats(&crate::ops::BackendStats {
+            elems_reduced: 1000,
+            scalar_hits: 1,
+            simd_hits: 2,
+            pjrt_hits: 3,
+        });
+        assert_eq!(m.elems_reduced, 1000);
+        assert_eq!(m.backend_hits.scalar, 1);
+        assert_eq!(m.backend_hits.simd, 2);
+        assert_eq!(m.backend_hits.pjrt, 3);
     }
 }

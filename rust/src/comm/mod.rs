@@ -45,7 +45,7 @@ pub mod thread;
 pub mod world;
 
 pub use group::{Group, SubComm};
-pub use metrics::RankMetrics;
+pub use metrics::{BackendHits, RankMetrics};
 pub use thread::{ThreadComm, Timing};
 pub use world::{run_world, run_world_sharded, WorldReport};
 

@@ -146,9 +146,11 @@ where
                 }
                 let guard = PoisonOnUnwind(Arc::clone(&registry));
                 // rank threads are fresh per world, but reset the buffer
-                // counters anyway so harvested stats cover exactly this run
+                // and reduce-backend counters anyway so harvested stats
+                // cover exactly this run
                 let _ = crate::buffer::pool::take_stats();
                 let _ = crate::buffer::pool::take_cow_log();
+                let _ = crate::ops::backend::take_stats();
                 crate::buffer::pool::bind_shard_pool(Some(pool));
                 let mut comm = ThreadComm::new(rank, p, Arc::clone(&registry), barrier, timing);
                 let result = match f(&mut comm) {
@@ -161,6 +163,7 @@ where
                 drop(guard);
                 let mut metrics = comm.metrics().clone();
                 metrics.absorb_buffer_stats(&crate::buffer::pool::take_stats());
+                metrics.absorb_backend_stats(&crate::ops::backend::take_stats());
                 let cow = crate::buffer::pool::take_cow_log();
                 Ok::<_, Error>((result, comm.vtime(), metrics, cow))
             })

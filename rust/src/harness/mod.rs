@@ -11,7 +11,7 @@ pub use table::{render_markdown, render_tsv, Row};
 
 use crate::buffer::DataBuf;
 use crate::collectives::{allreduce_on, RunSpec};
-use crate::comm::{run_world, Comm, ThreadComm, Timing};
+use crate::comm::{run_world, Comm, RankMetrics, ThreadComm, Timing};
 use crate::error::Result;
 use crate::model::AlgoKind;
 use crate::ops::SumOp;
@@ -49,10 +49,24 @@ pub fn measure(
     timing: Timing,
     rounds: usize,
 ) -> Result<Measurement> {
+    Ok(measure_with_metrics(algo, spec, timing, rounds)?.0)
+}
+
+/// [`measure`], additionally returning the world's aggregated
+/// [`RankMetrics`] (accumulated over all `rounds`) — so callers can report
+/// traffic and reduce-backend dispatch counts for the *same* run the
+/// timing came from, instead of paying for a second instrumented run.
+pub fn measure_with_metrics(
+    algo: AlgoKind,
+    spec: &RunSpec,
+    timing: Timing,
+    rounds: usize,
+) -> Result<(Measurement, RankMetrics)> {
     let spec = *spec;
     let rounds = rounds.max(1);
     let blocks = spec.blocks()?;
     let report = run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
+        let _backend = crate::ops::backend::scope(spec.reduce_backend);
         let mut times = Vec::with_capacity(rounds);
         for _ in 0..rounds {
             let x = if spec.phantom {
@@ -77,12 +91,16 @@ pub fn measure(
             .fold(f64::NEG_INFINITY, f64::max);
         best = best.min(slowest);
     }
-    Ok(Measurement {
-        algo,
-        count: spec.m,
-        time_us: best,
-        rounds,
-    })
+    let totals = report.total_metrics();
+    Ok((
+        Measurement {
+            algo,
+            count: spec.m,
+            time_us: best,
+            rounds,
+        },
+        totals,
+    ))
 }
 
 /// Measure a whole count series for several algorithms (one Table-2-style

@@ -44,6 +44,6 @@ pub mod prelude {
     pub use crate::comm::{Comm, Group, RankMetrics, SubComm, ThreadComm, Timing, WorldReport};
     pub use crate::error::{Error, Result};
     pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
-    pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceOp, Side, SumOp};
+    pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceBackend, ReduceOp, Side, SumOp};
     pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};
 }

@@ -20,7 +20,9 @@ use dpdr::cli::Args;
 use dpdr::collectives::RunSpec;
 use dpdr::comm::Timing;
 use dpdr::error::{Error, Result};
-use dpdr::harness::{measure, measure_series, render_markdown, render_tsv, TABLE2_COUNTS};
+use dpdr::harness::{
+    measure, measure_series, measure_with_metrics, render_markdown, render_tsv, TABLE2_COUNTS,
+};
 use dpdr::model::{
     paper_h, predicted_time_us, AlgoKind, ComputeCost, CostModel, LinkCost,
 };
@@ -67,6 +69,8 @@ subcommands:
   run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier}}
              --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
              [--mapping block:K|rr:N]  (node layout for --algo hier / --hier cost model)
+             [--reduce-backend auto|scalar|simd|pjrt]  (kernel for the block-wise reduction;
+             pjrt needs AOT artifacts — set DPDR_ARTIFACTS — and falls back simd -> scalar)
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -99,7 +103,10 @@ fn timing_of(args: &Args) -> Result<Timing> {
     let gamma = args.get("gamma", 0.25e-9)?;
     let model = if args.switch("hier") {
         CostModel::Hierarchical {
-            intra: LinkCost::new(args.get("alpha-intra", 0.3e-6)?, args.get("beta-intra", 0.08e-9)?),
+            intra: LinkCost::new(
+                args.get("alpha-intra", 0.3e-6)?,
+                args.get("beta-intra", 0.08e-9)?,
+            ),
             inter: LinkCost::new(alpha, beta),
             mapping: mapping_of(args)?,
         }
@@ -116,21 +123,39 @@ fn cmd_run(args: &Args) -> Result<()> {
     let m = args.get("m", 1_000_000usize)?;
     let block = args.get("block", dpdr::pipeline::PAPER_BLOCK_ELEMS)?;
     let rounds = args.get("rounds", 1usize)?;
+    let backend = args.get_parsed(
+        "reduce-backend",
+        dpdr::ops::ReduceBackend::Auto,
+        dpdr::ops::ReduceBackend::parse,
+    )?;
     let spec = RunSpec::new(p, m)
         .block_elems(block)
         .phantom(args.switch("phantom"))
-        .mapping(mapping_of(args)?);
+        .mapping(mapping_of(args)?)
+        .reduce_backend(backend);
     let timing = timing_of(args)?;
-    let meas = measure(algo, &spec, timing, rounds)?;
+    let (meas, totals) = measure_with_metrics(algo, &spec, timing, rounds)?;
     println!(
-        "algo={} p={} m={} block={} rounds={} time_us={:.2}",
+        "algo={} p={} m={} block={} rounds={} backend={} time_us={:.2}",
         algo.name(),
         p,
         m,
         block,
         rounds,
+        backend.name(),
         meas.time_us
     );
+    if !spec.phantom {
+        // which kernels actually served the block reductions (same run as
+        // the timing above, accumulated over all rounds)
+        println!(
+            "reduce_backend_hits: scalar={} simd={} pjrt={} elems_reduced={}",
+            totals.backend_hits.scalar,
+            totals.backend_hits.simd,
+            totals.backend_hits.pjrt,
+            totals.elems_reduced
+        );
+    }
     if let Timing::Virtual(model, _) = timing {
         let b = Blocks::by_size(m, block)?.count();
         if algo == AlgoKind::Hier {
@@ -192,7 +217,9 @@ fn cmd_fig1(args: &Args) -> Result<()> {
     match args.raw("tsv") {
         Some(path) => {
             std::fs::write(path, &tsv)?;
-            eprintln!("# wrote {path} (plot: gnuplot> set logscale xy; plot for [i=2:5] '{path}' u 1:i w lp)");
+            eprintln!(
+                "# wrote {path} (plot: gnuplot> set logscale xy; plot for [i=2:5] '{path}' u 1:i w lp)"
+            );
         }
         None => println!("{tsv}"),
     }
@@ -327,14 +354,21 @@ fn cmd_sysinfo() -> Result<()> {
         println!("uniform link: alpha={:.2e} s, beta={:.2e} s/B", l.alpha, l.beta);
     }
     println!("paper h for p=288: {}", paper_h(288));
-    println!("threads available: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
     match dpdr::runtime::ReduceEngine::with_default_dir() {
         Ok(engine) => {
             println!("PJRT: cpu client OK; artifacts dir: {}", engine.dir().display());
             let stem = dpdr::runtime::artifact_name(2, dpdr::ops::OpKind::Sum, "int32", 16_384);
             println!(
                 "artifact {stem}: {}",
-                if engine.has_artifact(&stem) { "present" } else { "MISSING (run `make artifacts`)" }
+                if engine.has_artifact(&stem) {
+                    "present"
+                } else {
+                    "MISSING (run `make artifacts`)"
+                }
             );
         }
         Err(e) => println!("PJRT: unavailable ({e})"),

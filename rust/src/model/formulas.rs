@@ -113,7 +113,13 @@ impl AlgoKind {
 /// Predicted time in **microseconds** for `m_bytes` payload over `p` ranks
 /// with `b` pipeline blocks (ignored by non-pipelined algorithms), under
 /// uniform link cost `link`.
-pub fn predicted_time_us(algo: AlgoKind, p: usize, m_bytes: usize, b: usize, link: LinkCost) -> f64 {
+pub fn predicted_time_us(
+    algo: AlgoKind,
+    p: usize,
+    m_bytes: usize,
+    b: usize,
+    link: LinkCost,
+) -> f64 {
     if p <= 1 {
         return 0.0;
     }

@@ -1,0 +1,585 @@
+//! Pluggable reduce backends for the arithmetic operators.
+//!
+//! With the transport copy-free (PR 1) and the hierarchy sharded (PR 2),
+//! the `3βm` compute term of the paper's bound lives almost entirely in the
+//! block-wise `⊙` of [`ReduceOp::reduce_into`]. This module makes that hot
+//! loop *pluggable*: every `reduce_into` of `SumOp` / `ProdOp` / `MaxOp` /
+//! `MinOp` over `i32` / `i64` / `f32` / `f64` routes through
+//! [`reduce_arith`], which dispatches to one of three kernels:
+//!
+//! * [`ReduceBackend::Scalar`] — the plain reference loop;
+//! * [`ReduceBackend::Simd`] — chunked 16-lane unrolled loops with scalar
+//!   tails (stable Rust; fixed-size array chunks give LLVM clean vector
+//!   bodies without `portable_simd`);
+//! * [`ReduceBackend::Pjrt`] — the AOT-compiled JAX/Pallas kernels via
+//!   [`ReduceEngine`](crate::runtime::ReduceEngine), chunked at the
+//!   compiled block sizes.
+//!
+//! Every backend is **bitwise identical** to the scalar path: the kernels
+//! are element-wise (lanes never interact), and the float `Max`/`Min`
+//! combine is the NaN-propagating, order-stable [`fmax_f32`]-family — so a
+//! backend can be swapped under a running collective without perturbing
+//! the hier≡dpdr equivalence guarantees (`tests/property.rs` pins this).
+//!
+//! Selection is per rank thread via [`scope`] (the collectives install the
+//! [`RunSpec`](crate::collectives::RunSpec) choice; default
+//! [`ReduceBackend::Auto`]), and the fallback order is always
+//! Pjrt → Simd → Scalar: an explicitly selected backend that cannot serve
+//! a call (missing artifacts, unsupported dtype) degrades to the next one
+//! instead of failing. Dispatch outcomes are counted per thread
+//! ([`stats`] / [`take_stats`]) and harvested into
+//! [`RankMetrics`](crate::comm::RankMetrics) by `run_world`.
+
+use std::cell::{Cell, RefCell};
+use std::path::PathBuf;
+
+use super::reduce::{OpKind, Side};
+use crate::runtime::{PjrtElem, ReduceEngine};
+
+/// Which kernel executes the block-wise ⊙ of the arithmetic operators.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum ReduceBackend {
+    /// Policy default: SIMD, with PJRT taking over blocks of at least
+    /// [`PJRT_AUTO_MIN_ELEMS`] elements when its artifacts are present.
+    #[default]
+    Auto,
+    /// The plain per-element reference loop.
+    Scalar,
+    /// Chunk-unrolled stable-Rust vector loops.
+    Simd,
+    /// AOT-compiled JAX/Pallas kernels through the PJRT engine.
+    Pjrt,
+}
+
+impl ReduceBackend {
+    pub fn parse(s: &str) -> Option<ReduceBackend> {
+        match s {
+            "auto" => Some(ReduceBackend::Auto),
+            "scalar" => Some(ReduceBackend::Scalar),
+            "simd" => Some(ReduceBackend::Simd),
+            "pjrt" => Some(ReduceBackend::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceBackend::Auto => "auto",
+            ReduceBackend::Scalar => "scalar",
+            ReduceBackend::Simd => "simd",
+            ReduceBackend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Smallest block the `Auto` policy hands to PJRT (the largest compiled
+/// kernel size): below this the per-call literal-copy + dispatch overhead
+/// of the engine outweighs kernel quality, and the SIMD loops win.
+pub const PJRT_AUTO_MIN_ELEMS: usize = 131_072;
+
+/// Per-thread dispatch counters (one record per rank thread; `run_world`
+/// folds them into that rank's [`RankMetrics`](crate::comm::RankMetrics)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    /// Elements fed through ⊙ by any backend.
+    pub elems_reduced: u64,
+    /// `reduce_into` calls served by the scalar loop.
+    pub scalar_hits: u64,
+    /// Calls served by the SIMD kernels.
+    pub simd_hits: u64,
+    /// Calls served by the PJRT engine.
+    pub pjrt_hits: u64,
+}
+
+thread_local! {
+    /// The backend this rank thread currently dispatches to.
+    static CHOICE: Cell<ReduceBackend> = const { Cell::new(ReduceBackend::Auto) };
+    /// Dispatch counters, harvested per world run.
+    static STATS: Cell<BackendStats> = const { Cell::new(BackendStats::new()) };
+    /// Artifact directory override for this thread's engine (tests use
+    /// this instead of the process-wide `DPDR_ARTIFACTS`).
+    static PJRT_DIR: RefCell<Option<PathBuf>> = const { RefCell::new(None) };
+    /// Lazily created PJRT engine: `None` = not yet tried,
+    /// `Some(None)` = unavailable, `Some(Some(_))` = ready.
+    static ENGINE: RefCell<Option<Option<ReduceEngine>>> = const { RefCell::new(None) };
+}
+
+impl BackendStats {
+    const fn new() -> BackendStats {
+        BackendStats {
+            elems_reduced: 0,
+            scalar_hits: 0,
+            simd_hits: 0,
+            pjrt_hits: 0,
+        }
+    }
+}
+
+/// Select `choice` for this thread until the returned guard drops (the
+/// previous selection is restored — scopes nest).
+pub fn scope(choice: ReduceBackend) -> BackendGuard {
+    BackendGuard {
+        prev: CHOICE.with(|c| c.replace(choice)),
+    }
+}
+
+/// Scope guard of [`scope`].
+pub struct BackendGuard {
+    prev: ReduceBackend,
+}
+
+impl Drop for BackendGuard {
+    fn drop(&mut self) {
+        CHOICE.with(|c| c.set(self.prev));
+    }
+}
+
+/// The backend currently selected on this thread.
+pub fn current() -> ReduceBackend {
+    CHOICE.with(Cell::get)
+}
+
+/// Read this thread's dispatch counters without resetting them.
+pub fn stats() -> BackendStats {
+    STATS.with(Cell::get)
+}
+
+/// Read and reset this thread's dispatch counters.
+pub fn take_stats() -> BackendStats {
+    STATS.with(|s| s.replace(BackendStats::new()))
+}
+
+fn record(which: ReduceBackend, elems: usize) {
+    STATS.with(|s| {
+        let mut v = s.get();
+        v.elems_reduced += elems as u64;
+        match which {
+            ReduceBackend::Scalar => v.scalar_hits += 1,
+            ReduceBackend::Simd => v.simd_hits += 1,
+            ReduceBackend::Pjrt => v.pjrt_hits += 1,
+            ReduceBackend::Auto => {}
+        }
+        s.set(v);
+    });
+}
+
+/// Count a reduction that ran through the default (scalar) `reduce_into`
+/// of a non-arithmetic operator, so `elems_reduced` covers every ⊙.
+pub(crate) fn record_scalar(elems: usize) {
+    record(ReduceBackend::Scalar, elems);
+}
+
+/// Point this thread's lazily created PJRT engine at `dir` (`None`
+/// restores the `DPDR_ARTIFACTS` / `./artifacts` default). Drops the
+/// cached engine so the next PJRT dispatch re-initializes.
+pub fn set_pjrt_dir(dir: Option<PathBuf>) {
+    PJRT_DIR.with(|d| *d.borrow_mut() = dir);
+    ENGINE.with(|e| *e.borrow_mut() = None);
+}
+
+/// Run `f` on this thread's engine, creating it on first use. `None` when
+/// the engine cannot be constructed (the graceful-fallback signal).
+fn with_engine<R>(f: impl FnOnce(&mut ReduceEngine) -> R) -> Option<R> {
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let engine = match PJRT_DIR.with(|d| d.borrow().clone()) {
+                Some(dir) => ReduceEngine::new(dir),
+                None => ReduceEngine::with_default_dir(),
+            };
+            *slot = Some(engine.ok());
+        }
+        slot.as_mut().unwrap().as_mut().map(f)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Order-stable float max/min
+// ---------------------------------------------------------------------------
+
+macro_rules! nan_stable_minmax {
+    ($fmax:ident, $fmin:ident, $t:ty) => {
+        /// IEEE-754 `maximum` semantics: any NaN operand yields the
+        /// canonical NaN (never `std`'s NaN-dropping `max`), and
+        /// `+0.0 > -0.0` — so the result is bitwise independent of combine
+        /// order and the hier≡dpdr equivalence holds on NaN-laced inputs.
+        #[inline(always)]
+        pub fn $fmax(a: $t, b: $t) -> $t {
+            if a.is_nan() || b.is_nan() {
+                <$t>::NAN
+            } else if a > b {
+                a
+            } else if b > a {
+                b
+            } else if a.is_sign_positive() {
+                a
+            } else {
+                b
+            }
+        }
+
+        /// IEEE-754 `minimum` semantics; see the matching maximum.
+        #[inline(always)]
+        pub fn $fmin(a: $t, b: $t) -> $t {
+            if a.is_nan() || b.is_nan() {
+                <$t>::NAN
+            } else if a < b {
+                a
+            } else if b < a {
+                b
+            } else if a.is_sign_negative() {
+                a
+            } else {
+                b
+            }
+        }
+    };
+}
+
+nan_stable_minmax!(fmax_f32, fmin_f32, f32);
+nan_stable_minmax!(fmax_f64, fmin_f64, f64);
+
+// ---------------------------------------------------------------------------
+// SIMD kernels
+// ---------------------------------------------------------------------------
+
+/// Unroll width of the vector kernels, in elements.
+const LANES: usize = 16;
+
+/// Apply `acc[i] ← f(incoming[i], acc[i])` over `LANES`-wide fixed-size
+/// array chunks with a scalar tail. The arrays give LLVM loop bodies of
+/// known trip count over independent lanes, which vectorize on stable
+/// Rust; bitwise parity with the scalar path is structural (same `f` per
+/// element, lanes never interact).
+#[inline(always)]
+fn chunked<E: Copy, F: Fn(E, E) -> E>(acc: &mut [E], incoming: &[E], f: F) {
+    assert_eq!(
+        acc.len(),
+        incoming.len(),
+        "simd reduce length mismatch: acc {} vs incoming {}",
+        acc.len(),
+        incoming.len()
+    );
+    let mut a_chunks = acc.chunks_exact_mut(LANES);
+    let mut t_chunks = incoming.chunks_exact(LANES);
+    for (a, t) in (&mut a_chunks).zip(&mut t_chunks) {
+        let a: &mut [E; LANES] = a.try_into().unwrap();
+        let t: &[E; LANES] = t.try_into().unwrap();
+        for (x, y) in a.iter_mut().zip(t.iter()) {
+            *x = f(*y, *x);
+        }
+    }
+    for (x, y) in a_chunks
+        .into_remainder()
+        .iter_mut()
+        .zip(t_chunks.remainder())
+    {
+        *x = f(*y, *x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-element-type backend stacks
+// ---------------------------------------------------------------------------
+
+/// Element types with the full backend stack (scalar / SIMD / PJRT) for
+/// the four arithmetic operators.
+pub trait ArithElem: PjrtElem {
+    /// `a ⊙ b` — the scalar reference semantics every backend must
+    /// reproduce bitwise.
+    fn scalar_combine(kind: OpKind, a: Self, b: Self) -> Self;
+
+    /// Chunk-unrolled in-place kernel: `acc ← incoming ⊙ acc` (Left) or
+    /// `acc ← acc ⊙ incoming` (Right).
+    fn simd_reduce(kind: OpKind, acc: &mut [Self], incoming: &[Self], side: Side);
+}
+
+macro_rules! arith_elem_int {
+    ($t:ty) => {
+        impl ArithElem for $t {
+            #[inline(always)]
+            fn scalar_combine(kind: OpKind, a: $t, b: $t) -> $t {
+                match kind {
+                    OpKind::Sum => a.wrapping_add(b),
+                    OpKind::Prod => a.wrapping_mul(b),
+                    OpKind::Max => a.max(b),
+                    OpKind::Min => a.min(b),
+                }
+            }
+
+            fn simd_reduce(kind: OpKind, acc: &mut [$t], incoming: &[$t], side: Side) {
+                match (kind, side) {
+                    (OpKind::Sum, Side::Left) => chunked(acc, incoming, |t, a| t.wrapping_add(a)),
+                    (OpKind::Sum, Side::Right) => chunked(acc, incoming, |t, a| a.wrapping_add(t)),
+                    (OpKind::Prod, Side::Left) => chunked(acc, incoming, |t, a| t.wrapping_mul(a)),
+                    (OpKind::Prod, Side::Right) => chunked(acc, incoming, |t, a| a.wrapping_mul(t)),
+                    (OpKind::Max, Side::Left) => chunked(acc, incoming, |t, a| t.max(a)),
+                    (OpKind::Max, Side::Right) => chunked(acc, incoming, |t, a| a.max(t)),
+                    (OpKind::Min, Side::Left) => chunked(acc, incoming, |t, a| t.min(a)),
+                    (OpKind::Min, Side::Right) => chunked(acc, incoming, |t, a| a.min(t)),
+                }
+            }
+        }
+    };
+}
+
+macro_rules! arith_elem_float {
+    ($t:ty, $fmax:ident, $fmin:ident) => {
+        impl ArithElem for $t {
+            #[inline(always)]
+            fn scalar_combine(kind: OpKind, a: $t, b: $t) -> $t {
+                match kind {
+                    OpKind::Sum => a + b,
+                    OpKind::Prod => a * b,
+                    OpKind::Max => $fmax(a, b),
+                    OpKind::Min => $fmin(a, b),
+                }
+            }
+
+            fn simd_reduce(kind: OpKind, acc: &mut [$t], incoming: &[$t], side: Side) {
+                match (kind, side) {
+                    (OpKind::Sum, Side::Left) => chunked(acc, incoming, |t, a| t + a),
+                    (OpKind::Sum, Side::Right) => chunked(acc, incoming, |t, a| a + t),
+                    (OpKind::Prod, Side::Left) => chunked(acc, incoming, |t, a| t * a),
+                    (OpKind::Prod, Side::Right) => chunked(acc, incoming, |t, a| a * t),
+                    (OpKind::Max, Side::Left) => chunked(acc, incoming, |t, a| $fmax(t, a)),
+                    (OpKind::Max, Side::Right) => chunked(acc, incoming, |t, a| $fmax(a, t)),
+                    (OpKind::Min, Side::Left) => chunked(acc, incoming, |t, a| $fmin(t, a)),
+                    (OpKind::Min, Side::Right) => chunked(acc, incoming, |t, a| $fmin(a, t)),
+                }
+            }
+        }
+    };
+}
+
+arith_elem_int!(i32);
+arith_elem_int!(i64);
+arith_elem_float!(f32, fmax_f32, fmin_f32);
+arith_elem_float!(f64, fmax_f64, fmin_f64);
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Element-wise `acc ← incoming ⊙ acc` (Left) / `acc ← acc ⊙ incoming`
+/// (Right) for an arithmetic operator, routed through the backend selected
+/// by [`scope`]. This is the hot path behind every
+/// `DataBuf::reduce_at` of the collectives.
+pub fn reduce_arith<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], side: Side) {
+    assert_eq!(
+        acc.len(),
+        incoming.len(),
+        "reduce length mismatch: acc {} vs incoming {}",
+        acc.len(),
+        incoming.len()
+    );
+    let n = acc.len();
+    if n == 0 {
+        // void blocks: nothing to dispatch (and no engine probe)
+        return;
+    }
+    match current() {
+        ReduceBackend::Scalar => scalar_reduce(kind, acc, incoming, side),
+        ReduceBackend::Simd => {
+            E::simd_reduce(kind, acc, incoming, side);
+            record(ReduceBackend::Simd, n);
+        }
+        ReduceBackend::Pjrt => {
+            if pjrt_reduce(kind, acc, incoming, side) {
+                record(ReduceBackend::Pjrt, n);
+            } else {
+                E::simd_reduce(kind, acc, incoming, side);
+                record(ReduceBackend::Simd, n);
+            }
+        }
+        ReduceBackend::Auto => {
+            if n >= PJRT_AUTO_MIN_ELEMS && pjrt_reduce(kind, acc, incoming, side) {
+                record(ReduceBackend::Pjrt, n);
+            } else {
+                E::simd_reduce(kind, acc, incoming, side);
+                record(ReduceBackend::Simd, n);
+            }
+        }
+    }
+}
+
+fn scalar_reduce<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], side: Side) {
+    match side {
+        Side::Left => {
+            for (a, t) in acc.iter_mut().zip(incoming) {
+                *a = E::scalar_combine(kind, *t, *a);
+            }
+        }
+        Side::Right => {
+            for (a, t) in acc.iter_mut().zip(incoming) {
+                *a = E::scalar_combine(kind, *a, *t);
+            }
+        }
+    }
+    record(ReduceBackend::Scalar, acc.len());
+}
+
+/// Blockwise ⊙ through this thread's PJRT engine. `false` when the engine
+/// or the needed artifacts are unavailable, or execution fails — `acc` is
+/// untouched and the caller falls back to the SIMD kernel.
+fn pjrt_reduce<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], side: Side) -> bool {
+    let n = acc.len();
+    with_engine(|engine| {
+        if !engine.supports::<E>(2, kind, n) {
+            return false;
+        }
+        let mut out = vec![E::zero(); n];
+        let res = match side {
+            Side::Left => engine.combine2::<E>(kind, incoming, acc, &mut out),
+            Side::Right => engine.combine2::<E>(kind, acc, incoming, &mut out),
+        };
+        match res {
+            Ok(()) => {
+                acc.copy_from_slice(&out);
+                true
+            }
+            Err(_) => false,
+        }
+    })
+    .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for b in [
+            ReduceBackend::Auto,
+            ReduceBackend::Scalar,
+            ReduceBackend::Simd,
+            ReduceBackend::Pjrt,
+        ] {
+            assert_eq!(ReduceBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ReduceBackend::parse("gpu"), None);
+        assert_eq!(ReduceBackend::default(), ReduceBackend::Auto);
+    }
+
+    #[test]
+    fn scope_nests_and_restores() {
+        assert_eq!(current(), ReduceBackend::Auto);
+        {
+            let _a = scope(ReduceBackend::Scalar);
+            assert_eq!(current(), ReduceBackend::Scalar);
+            {
+                let _b = scope(ReduceBackend::Simd);
+                assert_eq!(current(), ReduceBackend::Simd);
+            }
+            assert_eq!(current(), ReduceBackend::Scalar);
+        }
+        assert_eq!(current(), ReduceBackend::Auto);
+    }
+
+    #[test]
+    fn stats_count_dispatches() {
+        let _ = take_stats();
+        let _g = scope(ReduceBackend::Simd);
+        let mut acc = vec![1i32; 100];
+        let inc = vec![2i32; 100];
+        reduce_arith(OpKind::Sum, &mut acc, &inc, Side::Left);
+        let s = take_stats();
+        assert_eq!(s.elems_reduced, 100);
+        assert_eq!(s.simd_hits, 1);
+        assert_eq!(s.scalar_hits, 0);
+        assert_eq!(stats(), BackendStats::default()); // reset
+    }
+
+    #[test]
+    fn simd_matches_scalar_all_ops_int() {
+        let mut vals = Vec::new();
+        for i in 0..97i64 {
+            vals.push((i * 37 % 41) - 20);
+        }
+        let inc: Vec<i64> = vals.iter().map(|v| v * 3 - 7).collect();
+        for kind in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+            for side in [Side::Left, Side::Right] {
+                let mut a = vals.clone();
+                let mut b = vals.clone();
+                i64::simd_reduce(kind, &mut a, &inc, side);
+                {
+                    let _g = scope(ReduceBackend::Scalar);
+                    reduce_arith(kind, &mut b, &inc, side);
+                }
+                assert_eq!(a, b, "{kind:?} {side:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_f32_bitwise_with_nans() {
+        let specials = [
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+            1.5,
+            -2.25,
+        ];
+        let base: Vec<f32> = (0..83).map(|i| specials[i % specials.len()]).collect();
+        let inc: Vec<f32> = (0..83).map(|i| specials[(i * 5 + 3) % specials.len()]).collect();
+        for kind in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+            for side in [Side::Left, Side::Right] {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                f32::simd_reduce(kind, &mut a, &inc, side);
+                {
+                    let _g = scope(ReduceBackend::Scalar);
+                    reduce_arith(kind, &mut b, &inc, side);
+                }
+                let abits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bbits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(abits, bbits, "{kind:?} {side:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_stable_max_min_laws() {
+        // NaN propagates regardless of side or payload
+        assert!(fmax_f32(f32::NAN, 1.0).is_nan());
+        assert!(fmax_f32(1.0, f32::NAN).is_nan());
+        assert!(fmin_f64(f64::NAN, f64::NEG_INFINITY).is_nan());
+        // canonical NaN: bitwise order-independent
+        let ab = fmax_f32(-f32::NAN, f32::NAN);
+        let ba = fmax_f32(f32::NAN, -f32::NAN);
+        assert_eq!(ab.to_bits(), ba.to_bits());
+        // signed zero ordering
+        assert_eq!(fmax_f32(0.0, -0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(fmax_f32(-0.0, 0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(fmin_f32(0.0, -0.0).to_bits(), (-0.0f32).to_bits());
+        // plain ordering still works
+        assert_eq!(fmax_f64(2.0, 3.0), 3.0);
+        assert_eq!(fmin_f64(2.0, 3.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "reduce length mismatch")]
+    fn length_mismatch_panics_in_release_too() {
+        let mut acc = vec![1i32; 4];
+        reduce_arith(OpKind::Sum, &mut acc, &[1, 2, 3], Side::Left);
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_falls_back_to_simd() {
+        set_pjrt_dir(Some(std::path::PathBuf::from("/nonexistent/artifacts")));
+        let _ = take_stats();
+        let _g = scope(ReduceBackend::Pjrt);
+        let mut acc = vec![1.0f64; 33];
+        let inc = vec![2.0f64; 33];
+        reduce_arith(OpKind::Sum, &mut acc, &inc, Side::Left);
+        assert_eq!(acc, vec![3.0f64; 33]);
+        let s = take_stats();
+        assert_eq!(s.pjrt_hits, 0);
+        assert_eq!(s.simd_hits, 1);
+        set_pjrt_dir(None);
+    }
+}

@@ -13,9 +13,11 @@
 //!   the result if two non-adjacent rank intervals are ever combined, i.e.
 //!   it is an executable witness of "reduced exactly in rank order".
 
+pub mod backend;
 pub mod elem;
 pub mod reduce;
 
+pub use backend::{ArithElem, BackendStats, ReduceBackend};
 pub use elem::{Elem, Mat2, Span};
 pub use reduce::{MaxOp, MinOp, OpKind, ProdOp, ReduceOp, SeqCheckOp, Side, SumOp};
 

@@ -35,13 +35,24 @@ pub trait ReduceOp<E: Elem>: Send + Sync {
 
     /// Element-wise in-place reduction of `incoming` into `acc`.
     ///
-    /// Hot path: the default implementation is a plain loop; `SumOp` etc.
-    /// override nothing because LLVM auto-vectorizes the loop given the
-    /// concrete element type after monomorphization. The PJRT runtime
-    /// backend (see `runtime::ReduceEngine`) substitutes an XLA executable
-    /// for this call when enabled.
+    /// Hot path: the default implementation is a plain loop; the four
+    /// arithmetic operators override it per concrete element type to
+    /// dispatch through the pluggable backend layer
+    /// ([`backend::reduce_arith`](super::backend::reduce_arith) — scalar /
+    /// SIMD / PJRT kernels, all bitwise identical).
+    ///
+    /// The length check is a hard `assert_eq!`, not a `debug_assert`: a
+    /// mismatch would make `zip` silently drop the longer tail and corrupt
+    /// results — in `--release` benches of all places — so it must fail
+    /// loudly in every profile.
     fn reduce_into(&self, acc: &mut [E], incoming: &[E], side: Side) {
-        debug_assert_eq!(acc.len(), incoming.len());
+        assert_eq!(
+            acc.len(),
+            incoming.len(),
+            "reduce_into length mismatch: acc {} vs incoming {}",
+            acc.len(),
+            incoming.len()
+        );
         match side {
             Side::Left => {
                 for (a, t) in acc.iter_mut().zip(incoming) {
@@ -54,6 +65,7 @@ pub trait ReduceOp<E: Elem>: Send + Sync {
                 }
             }
         }
+        super::backend::record_scalar(acc.len());
     }
 }
 
@@ -107,65 +119,57 @@ pub struct MaxOp;
 #[derive(Clone, Copy, Default, Debug)]
 pub struct MinOp;
 
+/// Implement one arithmetic operator over one concrete element type, with
+/// `reduce_into` routed through the pluggable backend layer (scalar / SIMD
+/// / PJRT kernels — see [`super::backend`]).
+macro_rules! arith_op_impl {
+    ($op:ty, $kind:expr, $name:literal, $t:ty, $ident:expr, $combine:expr) => {
+        impl ReduceOp<$t> for $op {
+            fn identity(&self) -> $t {
+                $ident
+            }
+            fn combine(&self, a: $t, b: $t) -> $t {
+                const F: fn($t, $t) -> $t = $combine;
+                F(a, b)
+            }
+            fn commutative(&self) -> bool {
+                true
+            }
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn reduce_into(&self, acc: &mut [$t], incoming: &[$t], side: Side) {
+                super::backend::reduce_arith($kind, acc, incoming, side);
+            }
+        }
+    };
+}
+
 macro_rules! arith_ops_int {
     ($($t:ty),*) => {$(
-        impl ReduceOp<$t> for SumOp {
-            fn identity(&self) -> $t { 0 }
-            fn combine(&self, a: $t, b: $t) -> $t { a.wrapping_add(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "sum" }
-        }
-        impl ReduceOp<$t> for ProdOp {
-            fn identity(&self) -> $t { 1 }
-            fn combine(&self, a: $t, b: $t) -> $t { a.wrapping_mul(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "prod" }
-        }
-        impl ReduceOp<$t> for MaxOp {
-            fn identity(&self) -> $t { <$t>::MIN }
-            fn combine(&self, a: $t, b: $t) -> $t { a.max(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "max" }
-        }
-        impl ReduceOp<$t> for MinOp {
-            fn identity(&self) -> $t { <$t>::MAX }
-            fn combine(&self, a: $t, b: $t) -> $t { a.min(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "min" }
-        }
+        arith_op_impl!(SumOp, OpKind::Sum, "sum", $t, 0, |a, b| a.wrapping_add(b));
+        arith_op_impl!(ProdOp, OpKind::Prod, "prod", $t, 1, |a, b| a.wrapping_mul(b));
+        arith_op_impl!(MaxOp, OpKind::Max, "max", $t, <$t>::MIN, |a, b| a.max(b));
+        arith_op_impl!(MinOp, OpKind::Min, "min", $t, <$t>::MAX, |a, b| a.min(b));
     )*};
 }
 arith_ops_int!(i32, i64);
 
+// Float Max/Min use the NaN-propagating, order-stable IEEE-754
+// maximum/minimum (`backend::fmax_f32` family), NOT `f32::max`/`min`:
+// std's max/min silently *drop* NaN operands, which makes the reduction
+// result depend on combine order and breaks the hier≡dpdr bitwise
+// equivalence on NaN-laced inputs.
 macro_rules! arith_ops_float {
-    ($($t:ty),*) => {$(
-        impl ReduceOp<$t> for SumOp {
-            fn identity(&self) -> $t { 0.0 }
-            fn combine(&self, a: $t, b: $t) -> $t { a + b }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "sum" }
-        }
-        impl ReduceOp<$t> for ProdOp {
-            fn identity(&self) -> $t { 1.0 }
-            fn combine(&self, a: $t, b: $t) -> $t { a * b }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "prod" }
-        }
-        impl ReduceOp<$t> for MaxOp {
-            fn identity(&self) -> $t { <$t>::NEG_INFINITY }
-            fn combine(&self, a: $t, b: $t) -> $t { a.max(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "max" }
-        }
-        impl ReduceOp<$t> for MinOp {
-            fn identity(&self) -> $t { <$t>::INFINITY }
-            fn combine(&self, a: $t, b: $t) -> $t { a.min(b) }
-            fn commutative(&self) -> bool { true }
-            fn name(&self) -> &'static str { "min" }
-        }
-    )*};
+    ($t:ty, $fmax:path, $fmin:path) => {
+        arith_op_impl!(SumOp, OpKind::Sum, "sum", $t, 0.0, |a, b| a + b);
+        arith_op_impl!(ProdOp, OpKind::Prod, "prod", $t, 1.0, |a, b| a * b);
+        arith_op_impl!(MaxOp, OpKind::Max, "max", $t, <$t>::NEG_INFINITY, $fmax);
+        arith_op_impl!(MinOp, OpKind::Min, "min", $t, <$t>::INFINITY, $fmin);
+    };
 }
-arith_ops_float!(f32, f64);
+arith_ops_float!(f32, super::backend::fmax_f32, super::backend::fmin_f32);
+arith_ops_float!(f64, super::backend::fmax_f64, super::backend::fmin_f64);
 
 // ---------------------------------------------------------------------------
 // Non-commutative test operators
@@ -245,6 +249,36 @@ mod tests {
         assert_eq!(ReduceOp::<f32>::combine(&SumOp, 1.5, 2.5), 4.0);
         assert_eq!(ReduceOp::<f64>::combine(&MinOp, 1.5, 2.5), 1.5);
         assert_eq!(ReduceOp::<f64>::combine(&ProdOp, 3.0, 2.0), 6.0);
+    }
+
+    #[test]
+    fn float_max_min_propagate_nan_order_stably() {
+        // std's f32::max silently drops NaN; ours must propagate it from
+        // either side, with canonical bits, so combine order cannot leak
+        // into the result.
+        for (a, b) in [(f32::NAN, 1.0f32), (1.0, f32::NAN), (f32::NAN, f32::NAN)] {
+            assert!(ReduceOp::<f32>::combine(&MaxOp, a, b).is_nan());
+            assert!(ReduceOp::<f32>::combine(&MinOp, a, b).is_nan());
+            assert_eq!(
+                ReduceOp::<f32>::combine(&MaxOp, a, b).to_bits(),
+                ReduceOp::<f32>::combine(&MaxOp, b, a).to_bits()
+            );
+        }
+        assert!(ReduceOp::<f64>::combine(&MaxOp, f64::NAN, f64::INFINITY).is_nan());
+        assert!(ReduceOp::<f64>::combine(&MinOp, f64::NEG_INFINITY, f64::NAN).is_nan());
+        // non-NaN behavior unchanged
+        assert_eq!(ReduceOp::<f32>::combine(&MaxOp, 2.0, 3.0), 3.0);
+        assert_eq!(ReduceOp::<f64>::combine(&MinOp, 2.0, 3.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn reduce_into_length_mismatch_is_a_hard_error() {
+        // the guard must be a hard assert (not debug_assert): a silent zip
+        // truncation in --release corrupts results
+        let op = Mat2Op;
+        let mut acc = [Mat2::IDENT, Mat2::IDENT];
+        op.reduce_into(&mut acc, &[Mat2::IDENT], Side::Left);
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! PJRT engine: artifact loading, compilation caching, execution.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use super::xla;
 use crate::error::{Error, Result};
-use crate::ops::OpKind;
+use crate::ops::{Elem, OpKind};
 
 /// Block sizes the AOT pipeline compiles kernels for (elements). Must stay
-/// in sync with `python/compile/aot.py::SIZES`; ascending.
+/// in sync with `python/compile/aot.py::SIZES` (ascending) — pinned by the
+/// `compiled_sizes_match_python_aot_pipeline` test in
+/// `tests/pjrt_runtime.rs`.
 pub const COMPILED_SIZES: [usize; 3] = [1_024, 16_384, 131_072];
 
 /// Canonical artifact stem for a kernel variant, e.g.
@@ -16,22 +20,70 @@ pub fn artifact_name(arity: usize, op: OpKind, dtype: &str, n: usize) -> String 
     format!("combine{arity}_{}_{dtype}_{n}", op.name())
 }
 
+/// Element types the engine can feed through compiled kernels: the
+/// artifact dtype is `Elem::DTYPE`, and `op_identity` provides the padding
+/// value for partial blocks.
+pub trait PjrtElem: Elem + xla::NativeType {
+    /// The identity of ⊙ (used to pad a partial block up to the compiled
+    /// size without perturbing the result).
+    fn op_identity(op: OpKind) -> Self;
+}
+
+macro_rules! pjrt_elem_int {
+    ($t:ty) => {
+        impl PjrtElem for $t {
+            fn op_identity(op: OpKind) -> $t {
+                match op {
+                    OpKind::Sum => 0,
+                    OpKind::Prod => 1,
+                    OpKind::Max => <$t>::MIN,
+                    OpKind::Min => <$t>::MAX,
+                }
+            }
+        }
+    };
+}
+
+macro_rules! pjrt_elem_float {
+    ($t:ty) => {
+        impl PjrtElem for $t {
+            fn op_identity(op: OpKind) -> $t {
+                match op {
+                    OpKind::Sum => 0.0,
+                    OpKind::Prod => 1.0,
+                    OpKind::Max => <$t>::NEG_INFINITY,
+                    OpKind::Min => <$t>::INFINITY,
+                }
+            }
+        }
+    };
+}
+
+pjrt_elem_int!(i32);
+pjrt_elem_int!(i64);
+pjrt_elem_float!(f32);
+pjrt_elem_float!(f64);
+
 /// A PJRT CPU client plus a cache of compiled executables.
 pub struct ReduceEngine {
     client: xla::PjRtClient,
     dir: PathBuf,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Artifact-file presence, stat'd at most once per stem — the backend
+    /// layer probes availability on the hot path.
+    present: HashMap<String, bool>,
 }
 
 impl ReduceEngine {
     /// Create an engine reading artifacts from `dir`.
     pub fn new<P: AsRef<Path>>(dir: P) -> Result<ReduceEngine> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
         Ok(ReduceEngine {
             client,
             dir: dir.as_ref().to_path_buf(),
             cache: HashMap::new(),
+            present: HashMap::new(),
         })
     }
 
@@ -51,6 +103,35 @@ impl ReduceEngine {
         self.dir.join(format!("{stem}.hlo.txt")).is_file()
     }
 
+    /// [`ReduceEngine::has_artifact`] with the answer memoized, so the
+    /// per-call availability probe of the backend layer costs a map lookup
+    /// instead of a stat.
+    fn artifact_present(&mut self, stem: &str) -> bool {
+        if let Some(&p) = self.present.get(stem) {
+            return p;
+        }
+        let p = self.has_artifact(stem);
+        self.present.insert(stem.to_string(), p);
+        p
+    }
+
+    /// True when every chunk of a length-`len`, arity-`arity` combine for
+    /// `E` has its compiled artifact present — the backend layer's
+    /// graceful-fallback probe.
+    pub fn supports<E: PjrtElem>(&mut self, arity: usize, op: OpKind, len: usize) -> bool {
+        let max = *COMPILED_SIZES.last().unwrap();
+        let mut lo = 0;
+        while lo < len {
+            let hi = (lo + max).min(len);
+            let stem = artifact_name(arity, op, E::DTYPE, ReduceEngine::pick_size(hi - lo));
+            if !self.artifact_present(&stem) {
+                return false;
+            }
+            lo = hi;
+        }
+        true
+    }
+
     /// The smallest compiled size ≥ `len`, or the largest available if
     /// `len` exceeds them all (callers then chunk).
     pub fn pick_size(len: usize) -> usize {
@@ -62,18 +143,29 @@ impl ReduceEngine {
         *COMPILED_SIZES.last().unwrap()
     }
 
-    /// Load (and cache) the executable for `stem`.
+    /// Load (and cache) the executable for `stem`. A load *failure* is
+    /// memoized as the artifact being unusable (`supports` turns false),
+    /// so a present-but-rejected artifact — e.g. real Pallas output under
+    /// the offline stand-in — costs one file read, not one per reduce
+    /// call on the hot path.
     pub fn load(&mut self, stem: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(stem) {
             let path = self.dir.join(format!("{stem}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-                Error::Runtime(format!("loading {}: {e}", path.display()))
-            })?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| Error::Runtime(format!("compiling {stem}: {e}")))?;
+            let loaded = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::Runtime(format!("loading {}: {e}", path.display())))
+                .and_then(|proto| {
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    self.client
+                        .compile(&comp)
+                        .map_err(|e| Error::Runtime(format!("compiling {stem}: {e}")))
+                });
+            let exe = match loaded {
+                Ok(exe) => exe,
+                Err(e) => {
+                    self.present.insert(stem.to_string(), false);
+                    return Err(e);
+                }
+            };
             self.cache.insert(stem.to_string(), exe);
         }
         Ok(self.cache.get(stem).unwrap())
@@ -84,57 +176,31 @@ impl ReduceEngine {
         self.cache.len()
     }
 
-    /// Execute `acc ← lhs ⊙ rhs` element-wise over i32 blocks via the
-    /// compiled `combine2` kernel, padding to the compiled size with the
-    /// operator identity. `lhs`/`rhs` must have equal length; the result is
-    /// written into `out` (same length).
-    pub fn combine2_i32(
+    /// Execute `out ← lhs ⊙ rhs` element-wise via the compiled `combine2`
+    /// kernel for `E`, chunking at the largest compiled size and padding
+    /// partial chunks with the operator identity. `lhs`/`rhs`/`out` must
+    /// have equal length.
+    pub fn combine2<E: PjrtElem>(
         &mut self,
         op: OpKind,
-        lhs: &[i32],
-        rhs: &[i32],
-        out: &mut [i32],
+        lhs: &[E],
+        rhs: &[E],
+        out: &mut [E],
     ) -> Result<()> {
-        debug_assert_eq!(lhs.len(), rhs.len());
-        debug_assert_eq!(lhs.len(), out.len());
-        let ident = identity_i32(op);
-        self.run_chunks(op, "int32", lhs.len(), |eng, lo, hi, n| {
-            let a = padded_i32(&lhs[lo..hi], n, ident);
-            let b = padded_i32(&rhs[lo..hi], n, ident);
-            let stem = artifact_name(2, op, "int32", n);
-            let exe = eng.load(&stem)?;
-            let la = xla::Literal::vec1(&a);
-            let lb = xla::Literal::vec1(&b);
-            let result = exec1(exe, &[la, lb])?;
+        assert_eq!(lhs.len(), rhs.len(), "combine2 operand length mismatch");
+        assert_eq!(lhs.len(), out.len(), "combine2 output length mismatch");
+        let ident = E::op_identity(op);
+        run_chunks(lhs.len(), |lo, hi, n| {
+            let a = padded(&lhs[lo..hi], n, ident);
+            let b = padded(&rhs[lo..hi], n, ident);
+            let stem = artifact_name(2, op, E::DTYPE, n);
+            let exe = self.load(&stem)?;
+            let result = exec1(
+                exe,
+                &[xla::Literal::vec1(a.as_ref()), xla::Literal::vec1(b.as_ref())],
+            )?;
             let v = result
-                .to_vec::<i32>()
-                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
-            out[lo..hi].copy_from_slice(&v[..hi - lo]);
-            Ok(())
-        })
-    }
-
-    /// Same for f32.
-    pub fn combine2_f32(
-        &mut self,
-        op: OpKind,
-        lhs: &[f32],
-        rhs: &[f32],
-        out: &mut [f32],
-    ) -> Result<()> {
-        debug_assert_eq!(lhs.len(), rhs.len());
-        debug_assert_eq!(lhs.len(), out.len());
-        let ident = identity_f32(op);
-        self.run_chunks(op, "float32", lhs.len(), |eng, lo, hi, n| {
-            let a = padded_f32(&lhs[lo..hi], n, ident);
-            let b = padded_f32(&rhs[lo..hi], n, ident);
-            let stem = artifact_name(2, op, "float32", n);
-            let exe = eng.load(&stem)?;
-            let la = xla::Literal::vec1(&a);
-            let lb = xla::Literal::vec1(&b);
-            let result = exec1(exe, &[la, lb])?;
-            let v = result
-                .to_vec::<f32>()
+                .to_vec::<E>()
                 .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
             out[lo..hi].copy_from_slice(&v[..hi - lo]);
             Ok(())
@@ -142,59 +208,60 @@ impl ReduceEngine {
     }
 
     /// The fused 3-input kernel `t1 ⊙ (t0 ⊙ y)` of the inner tree node
-    /// (one XLA call instead of two).
-    pub fn combine3_i32(
+    /// (one kernel call instead of two).
+    pub fn combine3<E: PjrtElem>(
         &mut self,
         op: OpKind,
-        t1: &[i32],
-        t0: &[i32],
-        y: &[i32],
-        out: &mut [i32],
+        t1: &[E],
+        t0: &[E],
+        y: &[E],
+        out: &mut [E],
     ) -> Result<()> {
-        debug_assert_eq!(t0.len(), y.len());
-        debug_assert_eq!(t1.len(), y.len());
-        debug_assert_eq!(out.len(), y.len());
-        let ident = identity_i32(op);
-        self.run_chunks(op, "int32", y.len(), |eng, lo, hi, n| {
-            let a = padded_i32(&t1[lo..hi], n, ident);
-            let b = padded_i32(&t0[lo..hi], n, ident);
-            let c = padded_i32(&y[lo..hi], n, ident);
-            let stem = artifact_name(3, op, "int32", n);
-            let exe = eng.load(&stem)?;
+        assert_eq!(t0.len(), y.len(), "combine3 operand length mismatch");
+        assert_eq!(t1.len(), y.len(), "combine3 operand length mismatch");
+        assert_eq!(out.len(), y.len(), "combine3 output length mismatch");
+        let ident = E::op_identity(op);
+        run_chunks(y.len(), |lo, hi, n| {
+            let a = padded(&t1[lo..hi], n, ident);
+            let b = padded(&t0[lo..hi], n, ident);
+            let c = padded(&y[lo..hi], n, ident);
+            let stem = artifact_name(3, op, E::DTYPE, n);
+            let exe = self.load(&stem)?;
             let result = exec1(
                 exe,
                 &[
-                    xla::Literal::vec1(&a),
-                    xla::Literal::vec1(&b),
-                    xla::Literal::vec1(&c),
+                    xla::Literal::vec1(a.as_ref()),
+                    xla::Literal::vec1(b.as_ref()),
+                    xla::Literal::vec1(c.as_ref()),
                 ],
             )?;
             let v = result
-                .to_vec::<i32>()
+                .to_vec::<E>()
                 .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
             out[lo..hi].copy_from_slice(&v[..hi - lo]);
             Ok(())
         })
     }
+}
 
-    /// Drive `f` over chunks of at most the largest compiled size.
-    fn run_chunks<F>(&mut self, _op: OpKind, _dtype: &str, len: usize, mut f: F) -> Result<()>
-    where
-        F: FnMut(&mut ReduceEngine, usize, usize, usize) -> Result<()>,
-    {
-        if len == 0 {
-            return Ok(());
-        }
-        let max = *COMPILED_SIZES.last().unwrap();
-        let mut lo = 0;
-        while lo < len {
-            let hi = (lo + max).min(len);
-            let n = ReduceEngine::pick_size(hi - lo);
-            f(self, lo, hi, n)?;
-            lo = hi;
-        }
-        Ok(())
+/// Drive `f(lo, hi, compiled_size)` over chunks of at most the largest
+/// compiled size.
+fn run_chunks<F>(len: usize, mut f: F) -> Result<()>
+where
+    F: FnMut(usize, usize, usize) -> Result<()>,
+{
+    if len == 0 {
+        return Ok(());
     }
+    let max = *COMPILED_SIZES.last().unwrap();
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + max).min(len);
+        let n = ReduceEngine::pick_size(hi - lo);
+        f(lo, hi, n)?;
+        lo = hi;
+    }
+    Ok(())
 }
 
 /// Execute and unwrap the single tupled output as a Literal.
@@ -210,47 +277,18 @@ fn exec1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::
         .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))
 }
 
-fn identity_i32(op: OpKind) -> i32 {
-    match op {
-        OpKind::Sum => 0,
-        OpKind::Prod => 1,
-        OpKind::Max => i32::MIN,
-        OpKind::Min => i32::MAX,
-    }
-}
-
-fn identity_f32(op: OpKind) -> f32 {
-    match op {
-        OpKind::Sum => 0.0,
-        OpKind::Prod => 1.0,
-        OpKind::Max => f32::NEG_INFINITY,
-        OpKind::Min => f32::INFINITY,
-    }
-}
-
 /// Borrow the slice when it already matches the compiled size; otherwise
 /// pad a copy with the operator identity (perf: the exact-size case — the
 /// steady state for full pipeline blocks — skips one buffer copy per
 /// operand per call).
-fn padded_i32<'a>(src: &'a [i32], n: usize, ident: i32) -> std::borrow::Cow<'a, [i32]> {
+fn padded<E: Elem>(src: &[E], n: usize, ident: E) -> Cow<'_, [E]> {
     if src.len() == n {
-        std::borrow::Cow::Borrowed(src)
+        Cow::Borrowed(src)
     } else {
         let mut v = Vec::with_capacity(n);
         v.extend_from_slice(src);
         v.resize(n, ident);
-        std::borrow::Cow::Owned(v)
-    }
-}
-
-fn padded_f32<'a>(src: &'a [f32], n: usize, ident: f32) -> std::borrow::Cow<'a, [f32]> {
-    if src.len() == n {
-        std::borrow::Cow::Borrowed(src)
-    } else {
-        let mut v = Vec::with_capacity(n);
-        v.extend_from_slice(src);
-        v.resize(n, ident);
-        std::borrow::Cow::Owned(v)
+        Cow::Owned(v)
     }
 }
 
@@ -281,19 +319,28 @@ mod tests {
 
     #[test]
     fn identities() {
-        assert_eq!(identity_i32(OpKind::Sum), 0);
-        assert_eq!(identity_i32(OpKind::Min), i32::MAX);
-        assert_eq!(identity_f32(OpKind::Max), f32::NEG_INFINITY);
+        assert_eq!(<i32 as PjrtElem>::op_identity(OpKind::Sum), 0);
+        assert_eq!(<i32 as PjrtElem>::op_identity(OpKind::Min), i32::MAX);
+        assert_eq!(<i64 as PjrtElem>::op_identity(OpKind::Max), i64::MIN);
+        assert_eq!(<f32 as PjrtElem>::op_identity(OpKind::Max), f32::NEG_INFINITY);
+        assert_eq!(<f64 as PjrtElem>::op_identity(OpKind::Prod), 1.0);
     }
 
     #[test]
     fn padding() {
-        assert_eq!(padded_i32(&[1, 2], 4, 0).as_ref(), &[1, 2, 0, 0]);
-        assert_eq!(padded_f32(&[1.0], 2, 9.0).as_ref(), &[1.0, 9.0]);
+        assert_eq!(padded(&[1, 2], 4, 0).as_ref(), &[1, 2, 0, 0]);
+        assert_eq!(padded(&[1.0f32], 2, 9.0).as_ref(), &[1.0, 9.0]);
         // exact size borrows (no copy)
-        assert!(matches!(
-            padded_i32(&[1, 2], 2, 0),
-            std::borrow::Cow::Borrowed(_)
-        ));
+        assert!(matches!(padded(&[1, 2], 2, 0), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn supports_is_false_without_artifacts() {
+        let mut engine = ReduceEngine::new("/nonexistent/artifact/dir").unwrap();
+        assert!(!engine.supports::<i32>(2, OpKind::Sum, 1_000));
+        // zero-length combines need no artifact at all
+        assert!(engine.supports::<i32>(2, OpKind::Sum, 0));
+        // and the probe is memoized
+        assert!(!engine.supports::<i32>(2, OpKind::Sum, 1_000));
     }
 }

@@ -6,10 +6,21 @@
 //! algorithm — `combine2(x, y) = x ⊙ y` element-wise over a fixed-size
 //! block — for each (arity, op, dtype, block size) variant. Arbitrary
 //! block lengths are handled by padding with the operator identity up to
-//! the smallest compiled size (see [`ReduceEngine::pick_size`]).
+//! the smallest compiled size (see [`ReduceEngine::pick_size`]) and
+//! chunking at the largest.
+//!
+//! The engine is wired into the collectives through the pluggable backend
+//! layer ([`ops::backend`](crate::ops::backend)): select it with
+//! `--reduce-backend pjrt` (or `RunSpec::reduce_backend`), and it serves
+//! large blocks under the `auto` policy whenever its artifacts are
+//! present, falling back to the SIMD kernels otherwise.
+//!
+//! The [`xla`] module is a self-contained stand-in for the `xla` crate
+//! (the offline build cannot link the real PJRT C++ client): it interprets
+//! the combine-kernel HLO text with bitwise-identical semantics. Swapping
+//! the real crate back in is a dependency change only.
 
 pub mod engine;
-pub mod ops;
+pub mod xla;
 
-pub use engine::{artifact_name, ReduceEngine, COMPILED_SIZES};
-pub use ops::{EngineCell, PjrtOp, ReduceBackend};
+pub use engine::{artifact_name, PjrtElem, ReduceEngine, COMPILED_SIZES};

@@ -1,0 +1,442 @@
+//! Self-contained stand-in for the `xla` crate's PJRT CPU client.
+//!
+//! The build environment is offline by design, so the real PJRT C++
+//! client cannot be linked. This module implements the minimal API surface
+//! [`ReduceEngine`](super::ReduceEngine) uses — client, HLO-text module
+//! loading, "compilation", executable execution, literals — as a tiny
+//! interpreter over the only programs the AOT pipeline
+//! (`python/compile/aot.py`) exports: element-wise combine kernels
+//! `combine2 = p0 ⊙ p1` and `combine3 = p0 ⊙ (p1 ⊙ p2)` over one
+//! fixed-size 1-D operand shape.
+//!
+//! The HLO **text** artifact stays the interchange format: it is parsed
+//! for its parameter count, element type, block length, and combine op,
+//! then executed with exactly the scalar semantics of
+//! [`ops::backend`](crate::ops::backend) — including the NaN-propagating
+//! `maximum`/`minimum` — so results are bitwise identical to the scalar
+//! and SIMD reduce paths. Loading rejects anything that is not the
+//! canonical elementwise combine form, which keeps the contract honest:
+//! an artifact the stand-in cannot faithfully execute fails loudly at
+//! load time instead of being silently misinterpreted. In particular,
+//! `make artifacts` output from the *Pallas* lowering (a tiled while-loop
+//! program with `select`/loop-counter ops, not a bare combine) is beyond
+//! this stand-in — it is rejected at load and the reduce backend falls
+//! back to SIMD; executing those artifacts requires the real `xla` crate.
+//!
+//! Swapping the real `xla` crate back in is a dependency change, not an
+//! engine change: the type and method shapes here mirror the crate the
+//! engine was written against.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+use crate::ops::backend::{fmax_f32, fmax_f64, fmin_f32, fmin_f64};
+
+/// Error type standing in for the `xla` crate's.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, XlaError> {
+    Err(XlaError(msg.into()))
+}
+
+/// Element type of a kernel, from the HLO shape token.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Dtype {
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl Dtype {
+    fn token(self) -> &'static str {
+        match self {
+            Dtype::S32 => "s32[",
+            Dtype::S64 => "s64[",
+            Dtype::F32 => "f32[",
+            Dtype::F64 => "f64[",
+        }
+    }
+}
+
+/// The element-wise combine of a kernel, from the HLO instruction name.
+/// Public only because it appears in [`NativeType::combine`]'s signature;
+/// not part of the supported API.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Comb {
+    Add,
+    Mul,
+    Max,
+    Min,
+}
+
+impl Comb {
+    fn token(self) -> &'static str {
+        match self {
+            Comb::Add => " add(",
+            Comb::Mul => " multiply(",
+            Comb::Max => " maximum(",
+            Comb::Min => " minimum(",
+        }
+    }
+}
+
+/// What an artifact computes: `p0 ⊙ p1` (arity 2) or `p0 ⊙ (p1 ⊙ p2)`
+/// (arity 3) element-wise over `n`-element vectors of `dtype`.
+#[derive(Clone, Copy, Debug)]
+struct KernelSpec {
+    arity: usize,
+    dtype: Dtype,
+    n: usize,
+    op: Comb,
+}
+
+fn parse_hlo(text: &str) -> Result<KernelSpec, XlaError> {
+    let arity = text.matches("parameter(").count();
+    if !(2..=3).contains(&arity) {
+        return err(format!("expected a combine2/combine3 kernel, found {arity} parameters"));
+    }
+    let mut dtype = None;
+    for d in [Dtype::S32, Dtype::S64, Dtype::F32, Dtype::F64] {
+        if text.contains(d.token()) && dtype.replace(d).is_some() {
+            return err("mixed element types in kernel");
+        }
+    }
+    let Some(dtype) = dtype else {
+        return err("no supported element type (s32/s64/f32/f64) in kernel");
+    };
+    let mut op = None;
+    for c in [Comb::Add, Comb::Mul, Comb::Max, Comb::Min] {
+        if text.contains(c.token()) && op.replace(c).is_some() {
+            return err("mixed combine ops in kernel");
+        }
+    }
+    let Some(op) = op else {
+        return err("no supported combine op (add/multiply/maximum/minimum) in kernel");
+    };
+    // the operand length from the first shape token, e.g. `s32[16384]{0}`
+    let shape_at = text
+        .find(dtype.token())
+        .expect("dtype token was found above");
+    let digits: String = text[shape_at + dtype.token().len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    let n: usize = match digits.parse() {
+        Ok(n) if n > 0 => n,
+        _ => return err("cannot parse operand length from kernel shape"),
+    };
+    Ok(KernelSpec { arity, dtype, n, op })
+}
+
+/// Stand-in for `xla::HloModuleProto`: a parsed combine-kernel spec.
+pub struct HloModuleProto {
+    spec: KernelSpec,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact.
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("{}: {e}", path.display())))?;
+        Ok(HloModuleProto {
+            spec: parse_hlo(&text)?,
+        })
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation {
+    spec: KernelSpec,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { spec: proto.spec }
+    }
+}
+
+/// Stand-in for `xla::PjRtClient` (CPU).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient)
+    }
+
+    /// "Compile" a computation: validation happened at parse time, so this
+    /// just seals the spec into an executable.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Ok(PjRtLoadedExecutable { spec: comp.spec })
+    }
+}
+
+/// A dtype-tagged host literal (1-D, or a tuple of literals).
+#[derive(Clone, Debug)]
+pub enum Literal {
+    S32(Vec<i32>),
+    S64(Vec<i64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Rust element types that convert to/from [`Literal`] vectors.
+pub trait NativeType: Copy {
+    fn to_literal(v: &[Self]) -> Literal;
+    fn from_literal(lit: &Literal) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn combine(op: Comb, a: Self, b: Self) -> Self;
+}
+
+macro_rules! native_type {
+    ($t:ty, $variant:ident, $add:expr, $mul:expr, $max:expr, $min:expr) => {
+        impl NativeType for $t {
+            fn to_literal(v: &[$t]) -> Literal {
+                Literal::$variant(v.to_vec())
+            }
+            fn from_literal(lit: &Literal) -> Option<Vec<$t>> {
+                match lit {
+                    Literal::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            fn combine(op: Comb, a: $t, b: $t) -> $t {
+                const ADD: fn($t, $t) -> $t = $add;
+                const MUL: fn($t, $t) -> $t = $mul;
+                const MAX: fn($t, $t) -> $t = $max;
+                const MIN: fn($t, $t) -> $t = $min;
+                match op {
+                    Comb::Add => ADD(a, b),
+                    Comb::Mul => MUL(a, b),
+                    Comb::Max => MAX(a, b),
+                    Comb::Min => MIN(a, b),
+                }
+            }
+        }
+    };
+}
+
+native_type!(
+    i32,
+    S32,
+    |a, b| a.wrapping_add(b),
+    |a, b| a.wrapping_mul(b),
+    |a, b| a.max(b),
+    |a, b| a.min(b)
+);
+native_type!(
+    i64,
+    S64,
+    |a, b| a.wrapping_add(b),
+    |a, b| a.wrapping_mul(b),
+    |a, b| a.max(b),
+    |a, b| a.min(b)
+);
+native_type!(f32, F32, |a, b| a + b, |a, b| a * b, fmax_f32, fmin_f32);
+native_type!(f64, F64, |a, b| a + b, |a, b| a * b, fmax_f64, fmin_f64);
+
+impl Literal {
+    /// A 1-D literal from a native slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::to_literal(v)
+    }
+
+    /// Copy out as a native vector; errors on dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::from_literal(self).ok_or_else(|| XlaError("literal dtype mismatch".into()))
+    }
+
+    /// Unwrap a 1-tuple (the AOT pipeline lowers with `return_tuple=True`).
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        match self {
+            Literal::Tuple(mut v) if v.len() == 1 => Ok(v.pop().unwrap()),
+            Literal::Tuple(v) => err(format!("expected a 1-tuple, got {} elements", v.len())),
+            _ => err("expected a tuple literal"),
+        }
+    }
+
+    fn dtype(&self) -> Option<Dtype> {
+        match self {
+            Literal::S32(_) => Some(Dtype::S32),
+            Literal::S64(_) => Some(Dtype::S64),
+            Literal::F32(_) => Some(Dtype::F32),
+            Literal::F64(_) => Some(Dtype::F64),
+            Literal::Tuple(_) => None,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Literal::S32(v) => v.len(),
+            Literal::S64(v) => v.len(),
+            Literal::F32(v) => v.len(),
+            Literal::F64(v) => v.len(),
+            Literal::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Stand-in for a device buffer holding an execution result.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`: interprets the combine kernel.
+pub struct PjRtLoadedExecutable {
+    spec: KernelSpec,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over host literals; returns per-device, per-output buffers
+    /// (always 1×1 here) like the real client.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let spec = self.spec;
+        if args.len() != spec.arity {
+            return err(format!(
+                "kernel expects {} operands, got {}",
+                spec.arity,
+                args.len()
+            ));
+        }
+        for (i, a) in args.iter().enumerate() {
+            let a = a.borrow();
+            if a.dtype() != Some(spec.dtype) || a.len() != spec.n {
+                return err(format!("operand {i} does not match kernel shape"));
+            }
+        }
+        let out = match spec.dtype {
+            Dtype::S32 => run_typed::<i32, L>(spec, args)?,
+            Dtype::S64 => run_typed::<i64, L>(spec, args)?,
+            Dtype::F32 => run_typed::<f32, L>(spec, args)?,
+            Dtype::F64 => run_typed::<f64, L>(spec, args)?,
+        };
+        Ok(vec![vec![PjRtBuffer {
+            lit: Literal::Tuple(vec![out]),
+        }]])
+    }
+}
+
+/// `p0 ⊙ p1` (arity 2) or `p0 ⊙ (p1 ⊙ p2)` (arity 3), element-wise.
+fn run_typed<T: NativeType, L: Borrow<Literal>>(
+    spec: KernelSpec,
+    args: &[L],
+) -> Result<Literal, XlaError> {
+    let p0 = args[0].borrow().to_vec::<T>()?;
+    let p1 = args[1].borrow().to_vec::<T>()?;
+    let out: Vec<T> = if spec.arity == 2 {
+        p0.iter()
+            .zip(&p1)
+            .map(|(&a, &b)| T::combine(spec.op, a, b))
+            .collect()
+    } else {
+        let p2 = args[2].borrow().to_vec::<T>()?;
+        p0.iter()
+            .zip(&p1)
+            .zip(&p2)
+            .map(|((&a, &b), &c)| T::combine(spec.op, a, T::combine(spec.op, b, c)))
+            .collect()
+    };
+    Ok(T::to_literal(&out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE2: &str = "\
+HloModule combine2_sum_int32_4, entry_computation_layout={(s32[4]{0}, s32[4]{0})->(s32[4]{0})}
+
+ENTRY main.4 {
+  Arg_0.1 = s32[4]{0} parameter(0)
+  Arg_1.2 = s32[4]{0} parameter(1)
+  add.3 = s32[4]{0} add(Arg_0.1, Arg_1.2)
+  ROOT tuple.4 = (s32[4]{0}) tuple(add.3)
+}
+";
+
+    const SAMPLE3: &str = "\
+HloModule combine3_max_float32_4
+
+ENTRY main.6 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[4]{0} parameter(1)
+  Arg_2.3 = f32[4]{0} parameter(2)
+  maximum.4 = f32[4]{0} maximum(Arg_1.2, Arg_2.3)
+  maximum.5 = f32[4]{0} maximum(Arg_0.1, maximum.4)
+  ROOT tuple.6 = (f32[4]{0}) tuple(maximum.5)
+}
+";
+
+    #[test]
+    fn parses_combine2() {
+        let spec = parse_hlo(SAMPLE2).unwrap();
+        assert_eq!(spec.arity, 2);
+        assert_eq!(spec.dtype, Dtype::S32);
+        assert_eq!(spec.n, 4);
+        assert_eq!(spec.op, Comb::Add);
+    }
+
+    #[test]
+    fn rejects_non_combine_programs() {
+        assert!(parse_hlo("ENTRY { ROOT c = s32[] constant(1) }").is_err());
+        assert!(parse_hlo(SAMPLE2.replace("add", "subtract").as_str()).is_err());
+    }
+
+    #[test]
+    fn executes_combine2_elementwise() {
+        let spec = parse_hlo(SAMPLE2).unwrap();
+        let exe = PjRtLoadedExecutable { spec };
+        let a = Literal::vec1(&[1i32, 2, 3, 4]);
+        let b = Literal::vec1(&[10i32, 20, 30, 40]);
+        let outs = exe.execute(&[a, b]).unwrap();
+        let lit = outs[0][0].to_literal_sync().unwrap().to_tuple1().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![11, 22, 33, 44]);
+    }
+
+    #[test]
+    fn executes_combine3_with_nan_propagation() {
+        let spec = parse_hlo(SAMPLE3).unwrap();
+        let exe = PjRtLoadedExecutable { spec };
+        let t1 = Literal::vec1(&[1.0f32, f32::NAN, 3.0, 4.0]);
+        let t0 = Literal::vec1(&[5.0f32, 1.0, f32::NAN, 2.0]);
+        let y = Literal::vec1(&[2.0f32, 2.0, 2.0, 9.0]);
+        let outs = exe.execute(&[t1, t0, y]).unwrap();
+        let lit = outs[0][0].to_literal_sync().unwrap().to_tuple1().unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v[0], 5.0);
+        assert!(v[1].is_nan());
+        assert!(v[2].is_nan());
+        assert_eq!(v[3], 9.0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let spec = parse_hlo(SAMPLE2).unwrap();
+        let exe = PjRtLoadedExecutable { spec };
+        let short = Literal::vec1(&[1i32]);
+        let ok = Literal::vec1(&[1i32, 2, 3, 4]);
+        assert!(exe.execute(&[short, ok.clone()]).is_err());
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(exe.execute(&[f, ok]).is_err());
+    }
+}

@@ -99,6 +99,97 @@ fn f32_and_f64_ops() {
     }
 }
 
+/// NaN-laced float Max/Min: the reduction uses NaN-propagating IEEE-754
+/// `maximum`/`minimum` with canonical NaN bits, so every algorithm — and
+/// every combine order — must produce the *bitwise identical* vector.
+/// (With `f32::max`'s NaN-dropping semantics this battery fails: the
+/// result depends on which rank's NaN met which value first.)
+#[test]
+fn nan_laced_max_min_bitwise_identical_across_algos() {
+    let algos = [
+        AlgoKind::Dpdr,
+        AlgoKind::Hier,
+        AlgoKind::RecursiveDoubling,
+        AlgoKind::TwoTree,
+    ];
+    let (p, m, b) = (8usize, 66usize, 7usize);
+    // rank r contributes a NaN at positions where (r*31 + i) % 13 == 0, so
+    // some positions are NaN on a single rank only, some on several, and
+    // the rest never — covering propagation from any tree position.
+    let gen_f32 = move |r: usize, i: usize| -> f32 {
+        if (r * 31 + i) % 13 == 0 {
+            f32::NAN
+        } else {
+            ((r * 7 + i * 3) % 29) as f32 - 14.0
+        }
+    };
+    // oracle: rank-order fold with the operator's own combine
+    let fold_oracle = |op: &MaxOp| -> Vec<u32> {
+        let mut acc: Vec<f32> = (0..m).map(|i| gen_f32(0, i)).collect();
+        for r in 1..p {
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a = op.combine(*a, gen_f32(r, i));
+            }
+        }
+        acc.iter().map(|v| v.to_bits()).collect()
+    };
+    let expected = fold_oracle(&MaxOp);
+    assert!(expected.iter().any(|&bits| f32::from_bits(bits).is_nan()));
+    for algo in algos {
+        let blocks = Blocks::by_count(m, b);
+        let report = run_world::<f32, _, _>(p, Timing::Real, move |comm| {
+            use dpdr::comm::Comm;
+            let rank = comm.rank();
+            let x = DataBuf::real((0..m).map(|i| gen_f32(rank, i)).collect());
+            allreduce_on(algo, comm, x, &MaxOp, &blocks, BATTERY_MAPPING)
+        })
+        .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            let got: Vec<u32> = buf
+                .into_vec()
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(got, expected, "{} rank={rank}", algo.name());
+        }
+    }
+    // and the f64 Min mirror
+    let gen_f64 = move |r: usize, i: usize| -> f64 {
+        if (r * 17 + i) % 11 == 0 {
+            f64::NAN
+        } else {
+            ((r * 5 + i) % 23) as f64 - 11.0
+        }
+    };
+    let mut expected64: Vec<f64> = (0..m).map(|i| gen_f64(0, i)).collect();
+    for r in 1..p {
+        for (i, a) in expected64.iter_mut().enumerate() {
+            *a = MinOp.combine(*a, gen_f64(r, i));
+        }
+    }
+    let expected64: Vec<u64> = expected64.iter().map(|v| v.to_bits()).collect();
+    for algo in algos {
+        let blocks = Blocks::by_count(m, b);
+        let report = run_world::<f64, _, _>(p, Timing::Real, move |comm| {
+            use dpdr::comm::Comm;
+            let rank = comm.rank();
+            let x = DataBuf::real((0..m).map(|i| gen_f64(rank, i)).collect());
+            allreduce_on(algo, comm, x, &MinOp, &blocks, BATTERY_MAPPING)
+        })
+        .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            let got: Vec<u64> = buf
+                .into_vec()
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(got, expected64, "{} rank={rank}", algo.name());
+        }
+    }
+}
+
 #[test]
 fn prod_op_i64() {
     // ±1 values keep products in range

@@ -1,0 +1,90 @@
+//! Shared helpers for integration tests: a synthetic AOT artifact set.
+//!
+//! The offline CI has no JAX, so tests generate the same HLO-text shape
+//! `python/compile/aot.py` exports (parameters, an element-wise combine
+//! chain, a 1-tuple root) into a per-process temp directory. Pointing
+//! `DPDR_ARTIFACTS` at a real `make artifacts` output exercises the
+//! identical engine code path.
+
+// not every test binary that includes this module uses every helper
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use dpdr::ops::OpKind;
+use dpdr::runtime::{artifact_name, COMPILED_SIZES};
+
+fn hlo_op(op: OpKind) -> &'static str {
+    match op {
+        OpKind::Sum => "add",
+        OpKind::Prod => "multiply",
+        OpKind::Max => "maximum",
+        OpKind::Min => "minimum",
+    }
+}
+
+fn hlo_dtype(dtype: &str) -> &'static str {
+    match dtype {
+        "int32" => "s32",
+        "int64" => "s64",
+        "float32" => "f32",
+        "float64" => "f64",
+        other => panic!("unknown dtype {other}"),
+    }
+}
+
+/// The HLO text `aot.py` exports for one combine variant.
+pub fn hlo_text(arity: usize, op: OpKind, dtype: &str, n: usize) -> String {
+    let t = hlo_dtype(dtype);
+    let o = hlo_op(op);
+    let stem = artifact_name(arity, op, dtype, n);
+    if arity == 2 {
+        format!(
+            "HloModule {stem}, entry_computation_layout={{({t}[{n}]{{0}}, {t}[{n}]{{0}})->({t}[{n}]{{0}})}}\n\
+             \n\
+             ENTRY main.4 {{\n\
+             \x20 Arg_0.1 = {t}[{n}]{{0}} parameter(0)\n\
+             \x20 Arg_1.2 = {t}[{n}]{{0}} parameter(1)\n\
+             \x20 {o}.3 = {t}[{n}]{{0}} {o}(Arg_0.1, Arg_1.2)\n\
+             \x20 ROOT tuple.4 = ({t}[{n}]{{0}}) tuple({o}.3)\n\
+             }}\n"
+        )
+    } else {
+        format!(
+            "HloModule {stem}\n\
+             \n\
+             ENTRY main.6 {{\n\
+             \x20 Arg_0.1 = {t}[{n}]{{0}} parameter(0)\n\
+             \x20 Arg_1.2 = {t}[{n}]{{0}} parameter(1)\n\
+             \x20 Arg_2.3 = {t}[{n}]{{0}} parameter(2)\n\
+             \x20 {o}.4 = {t}[{n}]{{0}} {o}(Arg_1.2, Arg_2.3)\n\
+             \x20 {o}.5 = {t}[{n}]{{0}} {o}(Arg_0.1, {o}.4)\n\
+             \x20 ROOT tuple.6 = ({t}[{n}]{{0}}) tuple({o}.5)\n\
+             }}\n"
+        )
+    }
+}
+
+/// Write the full artifact set once per test process and return its
+/// directory (the `OnceLock` also serializes concurrent test threads).
+pub fn artifact_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("dpdr_test_artifacts_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create artifact dir");
+        for arity in [2usize, 3] {
+            for op in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+                for dtype in ["int32", "int64", "float32", "float64"] {
+                    for n in COMPILED_SIZES {
+                        let stem = artifact_name(arity, op, dtype, n);
+                        let path = dir.join(format!("{stem}.hlo.txt"));
+                        std::fs::write(&path, hlo_text(arity, op, dtype, n))
+                            .expect("write artifact");
+                    }
+                }
+            }
+        }
+        dir
+    })
+}

@@ -1,191 +1,278 @@
-//! PJRT runtime integration: load the AOT artifacts (HLO text produced by
-//! `make artifacts` from the JAX/Pallas kernels), execute them, and check
-//! they agree with the native Rust reduction — including running a whole
-//! allreduce with the PJRT backend on the hot path.
+//! PJRT runtime integration: load HLO-text artifacts, execute them, and
+//! check the engine agrees bitwise with the scalar/SIMD reduce backends —
+//! including running whole allreduces with the PJRT backend on the hot
+//! path.
 //!
-//! These tests skip (with a note) when `artifacts/` has not been built.
+//! The tests generate their own artifact set (the same HLO-text shape
+//! `python/compile/aot.py` exports) into a per-process temp directory, so
+//! they run in the offline CI without JAX; pointing `DPDR_ARTIFACTS` at a
+//! real `make artifacts` output exercises the identical code path.
 
-use std::sync::{Arc, Mutex};
+mod common;
 
-use dpdr::buffer::DataBuf;
-use dpdr::collectives::allreduce;
-use dpdr::comm::{run_world, Timing};
+use common::artifact_dir;
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
 use dpdr::model::AlgoKind;
-use dpdr::ops::{OpKind, ReduceOp, Side};
-use dpdr::pipeline::Blocks;
-use dpdr::runtime::{artifact_name, EngineCell, PjrtOp, ReduceBackend, ReduceEngine};
+use dpdr::ops::backend::{self, reduce_arith};
+use dpdr::ops::{ArithElem, OpKind, ReduceBackend, Side};
+use dpdr::runtime::{ReduceEngine, COMPILED_SIZES};
 use dpdr::util::XorShift64;
 
-fn engine_or_skip() -> Option<ReduceEngine> {
-    let engine = match ReduceEngine::with_default_dir() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("SKIP: no PJRT client ({e})");
-            return None;
-        }
-    };
-    let probe = artifact_name(2, OpKind::Sum, "int32", 1024);
-    if !engine.has_artifact(&probe) {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(engine)
+fn engine() -> ReduceEngine {
+    ReduceEngine::new(artifact_dir()).expect("engine")
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: cross-language kernel-size drift
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compiled_sizes_match_python_aot_pipeline() {
+    // COMPILED_SIZES claims to stay in sync with aot.py::SIZES; parse the
+    // Python source and hold it to that.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../python/compile/aot.py");
+    let text = std::fs::read_to_string(path).expect("read python/compile/aot.py");
+    // anchor on the assignment itself — the module docstring mentions
+    // COMPILED_SIZES, which contains the bare word SIZES
+    let at = text.find("SIZES = (").expect("aot.py defines SIZES");
+    let rest = &text[at..];
+    let open = rest.find('(').expect("SIZES is a tuple");
+    let close = rest.find(')').expect("SIZES tuple closes");
+    let sizes: Vec<usize> = rest[open + 1..close]
+        .split(',')
+        .map(|tok| tok.trim().replace('_', ""))
+        .filter(|tok| !tok.is_empty())
+        .map(|tok| tok.parse().expect("SIZES entries are integers"))
+        .collect();
+    assert_eq!(
+        sizes,
+        COMPILED_SIZES.to_vec(),
+        "rust COMPILED_SIZES and python aot.py SIZES have drifted"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level semantics
+// ---------------------------------------------------------------------------
+
+/// Scalar oracle for `lhs ⊙ rhs` (Side::Right: acc on the left).
+fn oracle<E: ArithElem>(op: OpKind, lhs: &[E], rhs: &[E]) -> Vec<E> {
+    lhs.iter()
+        .zip(rhs)
+        .map(|(&a, &b)| E::scalar_combine(op, a, b))
+        .collect()
 }
 
 #[test]
-fn combine2_matches_native_all_ops() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+fn combine2_matches_scalar_all_ops_i32() {
+    let mut engine = engine();
     let mut rng = XorShift64::new(42);
     for op in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
         for n in [1usize, 5, 1024, 1025, 16_000, 20_000] {
             let lhs = rng.small_i32_vec(n);
             let rhs = rng.small_i32_vec(n);
             let mut out = vec![0i32; n];
-            engine.combine2_i32(op, &lhs, &rhs, &mut out).unwrap();
-            let native = PjrtOp::new(op, ReduceBackend::Native);
-            let mut expected = rhs.clone();
-            native.reduce_into(&mut expected, &lhs, Side::Left);
-            assert_eq!(out, expected, "op={op:?} n={n}");
+            engine.combine2::<i32>(op, &lhs, &rhs, &mut out).unwrap();
+            assert_eq!(out, oracle(op, &lhs, &rhs), "op={op:?} n={n}");
         }
     }
 }
 
 #[test]
-fn combine2_f32() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+fn combine2_matches_scalar_i64_f32_f64() {
+    let mut engine = engine();
     let mut rng = XorShift64::new(7);
-    let n = 2048;
-    let lhs = rng.small_f32_vec(n);
-    let rhs = rng.small_f32_vec(n);
-    let mut out = vec![0f32; n];
-    engine
-        .combine2_f32(OpKind::Max, &lhs, &rhs, &mut out)
-        .unwrap();
-    for i in 0..n {
-        assert_eq!(out[i], lhs[i].max(rhs[i]), "i={i}");
-    }
+    let n = 2_048usize;
+    let a64: Vec<i64> = (0..n).map(|_| rng.small_i32() as i64).collect();
+    let b64: Vec<i64> = (0..n).map(|_| rng.small_i32() as i64).collect();
+    let mut out64 = vec![0i64; n];
+    engine.combine2::<i64>(OpKind::Min, &a64, &b64, &mut out64).unwrap();
+    assert_eq!(out64, oracle(OpKind::Min, &a64, &b64));
+
+    let af = rng.small_f32_vec(n);
+    let bf = rng.small_f32_vec(n);
+    let mut outf = vec![0f32; n];
+    engine.combine2::<f32>(OpKind::Max, &af, &bf, &mut outf).unwrap();
+    assert_eq!(outf, oracle(OpKind::Max, &af, &bf));
+
+    let ad: Vec<f64> = af.iter().map(|&v| v as f64).collect();
+    let bd: Vec<f64> = bf.iter().map(|&v| v as f64).collect();
+    let mut outd = vec![0f64; n];
+    engine.combine2::<f64>(OpKind::Sum, &ad, &bd, &mut outd).unwrap();
+    assert_eq!(outd, oracle(OpKind::Sum, &ad, &bd));
+}
+
+#[test]
+fn combine2_f32_max_propagates_nan_bitwise() {
+    // the kernel must implement the same NaN-propagating, order-stable
+    // maximum as the scalar path — bitwise
+    let mut engine = engine();
+    let lhs = vec![f32::NAN, 1.0, -0.0, f32::NEG_INFINITY, 2.5];
+    let rhs = vec![1.0, f32::NAN, 0.0, f32::NAN, -2.5];
+    let mut out = vec![0f32; lhs.len()];
+    engine.combine2::<f32>(OpKind::Max, &lhs, &rhs, &mut out).unwrap();
+    let want = oracle(OpKind::Max, &lhs, &rhs);
+    let out_bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(out_bits, want_bits);
+    assert!(out[0].is_nan() && out[1].is_nan() && out[3].is_nan());
+    assert_eq!(out[2].to_bits(), 0.0f32.to_bits()); // +0 > -0
 }
 
 #[test]
 fn combine3_fused_matches_two_step() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+    let mut engine = engine();
     let mut rng = XorShift64::new(11);
     let n = 16_000;
     let t1 = rng.small_i32_vec(n);
     let t0 = rng.small_i32_vec(n);
     let y = rng.small_i32_vec(n);
     let mut fused = vec![0i32; n];
-    engine
-        .combine3_i32(OpKind::Sum, &t1, &t0, &y, &mut fused)
-        .unwrap();
+    engine.combine3::<i32>(OpKind::Sum, &t1, &t0, &y, &mut fused).unwrap();
     // two-step: t0 ⊙ y, then t1 ⊙ (...)
     let mut two = vec![0i32; n];
-    engine.combine2_i32(OpKind::Sum, &t0, &y, &mut two).unwrap();
+    engine.combine2::<i32>(OpKind::Sum, &t0, &y, &mut two).unwrap();
     let snapshot = two.clone();
-    engine
-        .combine2_i32(OpKind::Sum, &t1, &snapshot, &mut two)
-        .unwrap();
+    engine.combine2::<i32>(OpKind::Sum, &t1, &snapshot, &mut two).unwrap();
     assert_eq!(fused, two);
 }
 
 #[test]
 fn executable_cache_reuses_compilations() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+    let mut engine = engine();
     assert_eq!(engine.cached(), 0);
     let a = vec![1i32; 1024];
     let mut out = vec![0i32; 1024];
-    engine.combine2_i32(OpKind::Sum, &a, &a, &mut out).unwrap();
+    engine.combine2::<i32>(OpKind::Sum, &a, &a, &mut out).unwrap();
     assert_eq!(engine.cached(), 1);
-    engine.combine2_i32(OpKind::Sum, &a, &a, &mut out).unwrap();
+    engine.combine2::<i32>(OpKind::Sum, &a, &a, &mut out).unwrap();
     assert_eq!(engine.cached(), 1); // cache hit
-    engine.combine2_i32(OpKind::Max, &a, &a, &mut out).unwrap();
+    engine.combine2::<i32>(OpKind::Max, &a, &a, &mut out).unwrap();
     assert_eq!(engine.cached(), 2);
 }
 
 #[test]
 fn chunking_covers_lengths_beyond_largest_kernel() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+    let mut engine = engine();
     let n = 300_000; // > 131072, forces chunked execution
     let lhs: Vec<i32> = (0..n as i32).collect();
     let rhs: Vec<i32> = (0..n as i32).rev().collect();
     let mut out = vec![0i32; n];
-    engine.combine2_i32(OpKind::Sum, &lhs, &rhs, &mut out).unwrap();
+    engine.combine2::<i32>(OpKind::Sum, &lhs, &rhs, &mut out).unwrap();
     assert!(out.iter().all(|&v| v == n as i32 - 1));
 }
 
 #[test]
-fn full_allreduce_with_pjrt_hot_path() {
-    // the paper's algorithm with the blockwise ⊙ executed by the compiled
-    // JAX/Pallas kernel via PJRT — Python is not involved at runtime.
-    let Some(engine) = engine_or_skip() else {
-        return;
-    };
-    let backend = ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(engine))));
-    let p = 6;
-    let m = 40_000;
-    let blocks = Blocks::by_size(m, 16_000).unwrap();
-    let op = PjrtOp::new(OpKind::Sum, backend);
-    let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
-        use dpdr::comm::Comm;
-        let rank = comm.rank();
-        let x = DataBuf::real(XorShift64::new(rank as u64).small_i32_vec(m));
-        allreduce(AlgoKind::Dpdr, comm, x, &op, &blocks)
-    })
-    .unwrap();
-    // oracle
-    let mut expected = vec![0i32; m];
-    for r in 0..p {
-        for (e, v) in expected.iter_mut().zip(XorShift64::new(r as u64).small_i32_vec(m)) {
-            *e = e.wrapping_add(v);
-        }
-    }
-    for buf in report.results {
-        assert_eq!(buf.into_vec().unwrap(), expected);
-    }
-}
-
-#[test]
-fn backend_equality_native_vs_pjrt() {
-    let Some(engine) = engine_or_skip() else {
-        return;
-    };
-    let backend = ReduceBackend::Pjrt(Arc::new(Mutex::new(EngineCell(engine))));
-    for op_kind in [OpKind::Sum, OpKind::Min] {
-        let pjrt_op = PjrtOp::new(op_kind, backend.clone());
-        let native_op = PjrtOp::new(op_kind, ReduceBackend::Native);
-        let mut rng = XorShift64::new(3);
-        let inc = rng.small_i32_vec(5000);
-        let base = rng.small_i32_vec(5000);
-        let mut a = base.clone();
-        let mut b = base.clone();
-        pjrt_op.reduce_into(&mut a, &inc, Side::Left);
-        native_op.reduce_into(&mut b, &inc, Side::Left);
-        assert_eq!(a, b, "{op_kind:?} left");
-        let mut a = base.clone();
-        let mut b = base;
-        pjrt_op.reduce_into(&mut a, &inc, Side::Right);
-        native_op.reduce_into(&mut b, &inc, Side::Right);
-        assert_eq!(a, b, "{op_kind:?} right");
-    }
-}
-
-#[test]
 fn missing_artifact_is_a_clean_error() {
-    let Some(mut engine) = engine_or_skip() else {
-        return;
-    };
+    let mut engine = engine();
     let err = engine.load("no_such_kernel_9999");
     assert!(err.is_err());
     let msg = format!("{}", err.err().unwrap());
     assert!(msg.contains("no_such_kernel_9999"), "{msg}");
+}
+
+#[test]
+fn malformed_artifact_is_rejected_at_load() {
+    let dir = std::env::temp_dir().join(format!("dpdr_bad_artifact_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("combine2_sum_int32_64.hlo.txt"), "ENTRY { not a kernel }").unwrap();
+    let mut engine = ReduceEngine::new(&dir).unwrap();
+    assert!(engine.load("combine2_sum_int32_64").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Backend-layer dispatch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backend_pjrt_scope_dispatches_and_matches_scalar() {
+    backend::set_pjrt_dir(Some(artifact_dir().clone()));
+    let _ = backend::take_stats();
+    let mut rng = XorShift64::new(3);
+    let base = rng.small_f32_vec(20_000);
+    let inc = rng.small_f32_vec(20_000);
+    for side in [Side::Left, Side::Right] {
+        let mut via_pjrt = base.clone();
+        {
+            let _g = backend::scope(ReduceBackend::Pjrt);
+            reduce_arith(OpKind::Sum, &mut via_pjrt, &inc, side);
+        }
+        let mut via_scalar = base.clone();
+        {
+            let _g = backend::scope(ReduceBackend::Scalar);
+            reduce_arith(OpKind::Sum, &mut via_scalar, &inc, side);
+        }
+        let a: Vec<u32> = via_pjrt.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = via_scalar.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "{side:?}");
+    }
+    let stats = backend::take_stats();
+    assert_eq!(stats.pjrt_hits, 2, "pjrt path must actually serve the calls");
+    assert_eq!(stats.scalar_hits, 2);
+    backend::set_pjrt_dir(None);
+}
+
+#[test]
+fn backend_auto_uses_pjrt_only_for_large_blocks() {
+    backend::set_pjrt_dir(Some(artifact_dir().clone()));
+    let _ = backend::take_stats();
+    let _g = backend::scope(ReduceBackend::Auto);
+    let mut small = vec![1i32; 4_096];
+    let inc_small = vec![2i32; 4_096];
+    reduce_arith(OpKind::Sum, &mut small, &inc_small, Side::Left);
+    let mut large = vec![1i32; backend::PJRT_AUTO_MIN_ELEMS];
+    let inc_large = vec![2i32; backend::PJRT_AUTO_MIN_ELEMS];
+    reduce_arith(OpKind::Sum, &mut large, &inc_large, Side::Left);
+    let stats = backend::take_stats();
+    assert_eq!(stats.simd_hits, 1, "small block stays on simd");
+    assert_eq!(stats.pjrt_hits, 1, "large block goes to pjrt");
+    assert!(small.iter().all(|&v| v == 3));
+    assert!(large.iter().all(|&v| v == 3));
+    backend::set_pjrt_dir(None);
+}
+
+// ---------------------------------------------------------------------------
+// Whole collectives on the PJRT hot path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_allreduce_with_pjrt_hot_path() {
+    // every rank thread builds its engine from DPDR_ARTIFACTS (the value
+    // is identical for all tests of this binary, so the set is benign)
+    std::env::set_var("DPDR_ARTIFACTS", artifact_dir());
+    let spec = RunSpec::new(6, 40_000)
+        .block_elems(16_000)
+        .reduce_backend(ReduceBackend::Pjrt);
+    let expected = spec.expected_sum_i32();
+    let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+    for buf in &report.results {
+        assert_eq!(buf.as_slice().unwrap(), &expected[..]);
+    }
+    let totals = report.total_metrics();
+    assert!(
+        totals.backend_hits.pjrt > 0,
+        "the compiled kernels must have served the block reductions: {totals:?}"
+    );
+    assert!(totals.elems_reduced > 0);
+}
+
+#[test]
+fn backend_choice_is_invisible_in_results() {
+    // same spec, all four backends: identical result vectors
+    std::env::set_var("DPDR_ARTIFACTS", artifact_dir());
+    let base = RunSpec::new(5, 10_000).block_elems(1_000).seed(77);
+    let expected = base.expected_sum_i32();
+    for choice in [
+        ReduceBackend::Auto,
+        ReduceBackend::Scalar,
+        ReduceBackend::Simd,
+        ReduceBackend::Pjrt,
+    ] {
+        let spec = base.reduce_backend(choice);
+        let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::Real).unwrap();
+        for buf in &report.results {
+            assert_eq!(buf.as_slice().unwrap(), &expected[..], "{}", choice.name());
+        }
+    }
 }

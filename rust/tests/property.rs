@@ -3,11 +3,14 @@
 //! oracle, structural tree invariants, cost-model laws, and
 //! real-vs-phantom virtual-time equivalence.
 
+mod common;
+
 use dpdr::buffer::DataBuf;
 use dpdr::collectives::{allreduce_on, run_allreduce_i32, RunSpec};
 use dpdr::comm::{run_world, Timing};
 use dpdr::model::{lemma, AlgoKind, ComputeCost, CostModel, LinkCost};
-use dpdr::ops::SumOp;
+use dpdr::ops::backend::{self, reduce_arith};
+use dpdr::ops::{ArithElem, OpKind, ReduceBackend, Side, SumOp};
 use dpdr::pipeline::Blocks;
 use dpdr::proptest::{forall, Gen};
 use dpdr::topo::{DualRootForest, Mapping, PostOrderTree};
@@ -122,6 +125,102 @@ fn prop_zero_copy_allocs_flat_in_epochs() {
         }
         Ok(())
     });
+}
+
+/// View an element as raw, comparable bits (floats compare bitwise so NaN
+/// canonicalization and signed zeros are pinned, not just numeric value).
+trait BitsOf: ArithElem {
+    type Bits: PartialEq + std::fmt::Debug;
+    fn bits(self) -> Self::Bits;
+}
+
+macro_rules! bits_of {
+    ($t:ty, $b:ty, $conv:expr) => {
+        impl BitsOf for $t {
+            type Bits = $b;
+            fn bits(self) -> $b {
+                const C: fn($t) -> $b = $conv;
+                C(self)
+            }
+        }
+    };
+}
+
+bits_of!(i32, i32, |v| v);
+bits_of!(i64, i64, |v| v);
+bits_of!(f32, u32, f32::to_bits);
+bits_of!(f64, u64, f64::to_bits);
+
+/// One parity case: the same (kind, side, inputs) through all three
+/// backends must produce identical bits. Returns the per-backend results'
+/// divergence, if any.
+fn backend_parity_case<E: BitsOf>(
+    gen: impl Fn(&mut Gen) -> E,
+    g: &mut Gen,
+    kind: OpKind,
+    side: Side,
+    len: usize,
+) -> Result<(), String> {
+    let base: Vec<E> = (0..len).map(|_| gen(g)).collect();
+    let inc: Vec<E> = (0..len).map(|_| gen(g)).collect();
+    let mut run = |b: ReduceBackend| -> Vec<E::Bits> {
+        let _s = backend::scope(b);
+        let mut acc = base.clone();
+        reduce_arith(kind, &mut acc, &inc, side);
+        acc.into_iter().map(E::bits).collect()
+    };
+    let scalar = run(ReduceBackend::Scalar);
+    let simd = run(ReduceBackend::Simd);
+    let _ = backend::take_stats();
+    let pjrt = run(ReduceBackend::Pjrt);
+    let pjrt_served = backend::take_stats().pjrt_hits == 1;
+    if simd != scalar {
+        return Err(format!("simd diverges from scalar: {kind:?} {side:?} len={len}"));
+    }
+    if pjrt != scalar {
+        return Err(format!("pjrt diverges from scalar: {kind:?} {side:?} len={len}"));
+    }
+    if !pjrt_served {
+        return Err(format!(
+            "pjrt path did not serve the call (artifacts present): {kind:?} len={len}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_backend_bitwise_parity() {
+    // Scalar ≡ Simd ≡ Pjrt for every ArithElem × OpKind × Side over odd /
+    // prime / tail-heavy lengths — pins the SIMD tail handling and the
+    // PJRT padding. The PJRT engine runs against the generated artifact
+    // set, so the kernel path genuinely executes.
+    backend::set_pjrt_dir(Some(common::artifact_dir().clone()));
+    forall("backend bitwise parity", 80, 0xBAC0, |g| {
+        let kind = *g.choose(&[OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min]);
+        let side = if g.bool() { Side::Left } else { Side::Right };
+        let len = *g.choose(&[1usize, 3, 17, 1023, 16385]);
+        match g.usize_in(0, 3) {
+            0 => backend_parity_case(|g: &mut Gen| g.u64() as i32, g, kind, side, len),
+            1 => backend_parity_case(|g: &mut Gen| g.u64() as i64, g, kind, side, len),
+            2 => backend_parity_case(special_f32, g, kind, side, len),
+            _ => backend_parity_case(|g: &mut Gen| special_f32(g) as f64, g, kind, side, len),
+        }
+    });
+    backend::set_pjrt_dir(None);
+}
+
+/// Floats laced with the order-sensitive cases: NaNs of both signs,
+/// infinities, signed zeros.
+fn special_f32(g: &mut Gen) -> f32 {
+    match g.usize_in(0, 9) {
+        0 => f32::NAN,
+        1 => f32::from_bits(f32::NAN.to_bits() | 0x8000_0000), // -NaN payload
+        2 => f32::INFINITY,
+        3 => f32::NEG_INFINITY,
+        4 => 0.0,
+        5 => -0.0,
+        _ => (g.u64() as i32 % 1000) as f32 / 8.0,
+    }
 }
 
 #[test]
