@@ -10,7 +10,10 @@ cleanly (see /opt/xla-example/README.md).
 Usage: python -m compile.aot [--out ../artifacts] [--quick]
 Produces artifacts/<stem>.hlo.txt for every (arity, op, dtype, size)
 variant plus a MANIFEST.txt. Sizes must stay in sync with
-rust/src/runtime/engine.rs::COMPILED_SIZES.
+rust/src/runtime/engine.rs::COMPILED_SIZES. The dtype set covers the
+Rust engine's full PjrtElem range (int32/int64/float32/float64); the
+lowering entrypoints switch jax_enable_x64 on (`ensure_x64`), so the
+64-bit variants lower at their true width.
 """
 
 import argparse
@@ -41,7 +44,19 @@ def to_hlo_text(lowered):
     return comp.as_hlo_text()
 
 
+def ensure_x64():
+    """Enable 64-bit dtypes for the AOT pipeline (idempotent).
+
+    Called at the lowering entrypoints rather than at import: the int64 /
+    float64 variants must lower at their true width (otherwise the
+    artifacts would be mislabeled), but importing this module for `SIZES`
+    or `stem` must not flip process-wide JAX numerics.
+    """
+    jax.config.update("jax_enable_x64", True)
+
+
 def lower_variant(arity, op, dtype_name, n):
+    ensure_x64()
     dtype = DTYPES[dtype_name]
     fn = model.combine2_fn(op) if arity == 2 else model.combine3_fn(op)
     args = model.example_args(arity, n, dtype)

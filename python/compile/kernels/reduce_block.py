@@ -40,8 +40,19 @@ MAX_SINGLE_TILE = 131_072
 #: rest cover the MPI_Allreduce op set our Rust ops module mirrors).
 OPS = ("sum", "prod", "max", "min")
 
-#: dtypes compiled into artifacts (MPI_INT is the paper's element type).
-DTYPES = {"int32": jnp.int32, "float32": jnp.float32}
+#: dtypes compiled into artifacts (MPI_INT is the paper's element type;
+#: the 64-bit forms mirror the Rust engine's PjrtElem set). Callers that
+#: *create* 64-bit arrays must run with ``jax_enable_x64`` — the AOT
+#: entrypoint (``compile.aot``) and the test suite's conftest switch it
+#: on; without it jax silently downcasts to the 32-bit forms. The flag is
+#: deliberately NOT set here: importing a kernel table must not change
+#: process-wide JAX numerics.
+DTYPES = {
+    "int32": jnp.int32,
+    "int64": jnp.int64,
+    "float32": jnp.float32,
+    "float64": jnp.float64,
+}
 
 
 def combine(op, a, b):

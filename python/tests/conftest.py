@@ -1,0 +1,12 @@
+"""Test-suite-wide JAX configuration.
+
+The kernel/AOT tests create int64/float64 arrays (the full PjrtElem set
+of the Rust engine); enable 64-bit dtypes before any test module builds
+an array. The library modules deliberately do not set this flag on
+import — it is an application/pipeline decision (see
+``compile.aot.ensure_x64``).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -42,12 +42,15 @@ def test_lowered_semantics_match_ref(dtype_name):
     dtype = DTYPES[dtype_name]
     fn = jax.jit(model.combine2_fn("sum"))
     rng = np.random.default_rng(11)
-    if dtype_name == "int32":
-        t = jnp.asarray(rng.integers(-100, 100, size=n, dtype=np.int32))
-        y = jnp.asarray(rng.integers(-100, 100, size=n, dtype=np.int32))
+    np_dtype = np.dtype(dtype_name)
+    if np_dtype.kind == "i":
+        t = jnp.asarray(rng.integers(-100, 100, size=n, dtype=np_dtype))
+        y = jnp.asarray(rng.integers(-100, 100, size=n, dtype=np_dtype))
     else:
-        t = jnp.asarray(rng.standard_normal(n).astype(np.float32))
-        y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        t = jnp.asarray(rng.standard_normal(n).astype(np_dtype))
+        y = jnp.asarray(rng.standard_normal(n).astype(np_dtype))
+    # jax_enable_x64 keeps the 64-bit inputs 64-bit end to end
+    assert t.dtype == dtype
     (got,) = fn(t, y)
     want = ref.combine2_ref(t, y, op="sum")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
@@ -63,7 +66,8 @@ def test_all_variant_stems_unique():
                     s = aot.stem(arity, op, dt, n)
                     assert s not in stems
                     stems.add(s)
-    assert len(stems) == 2 * 4 * 2 * len(aot.SIZES)
+    # 2 arities x 4 ops x 4 dtypes (int32/int64/float32/float64) x sizes
+    assert len(stems) == 2 * 4 * 4 * len(aot.SIZES)
 
 
 def test_manifest_and_artifacts_if_built():

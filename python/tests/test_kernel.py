@@ -1,7 +1,9 @@
 """L1 correctness: the Pallas kernels vs the pure-jnp oracle.
 
 hypothesis sweeps shapes (tile multiples), tiles, dtypes and operators;
-numpy assertions are exact for int32 and allclose for float32.
+numpy assertions are exact for the integer dtypes and allclose for the
+floats (int64/float64 ride on jax_enable_x64, switched on by the test
+suite's conftest).
 """
 
 import jax.numpy as jnp
@@ -17,18 +19,23 @@ DTYPES = list(k.DTYPES)
 
 
 def make_operands(rng, n, dtype, count):
-    if dtype == "int32":
-        return [
-            jnp.asarray(rng.integers(-1000, 1000, size=n, dtype=np.int32))
+    np_dtype = np.dtype(dtype)
+    if np_dtype.kind == "i":
+        out = [
+            jnp.asarray(rng.integers(-1000, 1000, size=n, dtype=np_dtype))
             for _ in range(count)
         ]
-    return [
-        jnp.asarray(rng.standard_normal(n).astype(np.float32)) for _ in range(count)
-    ]
+    else:
+        out = [
+            jnp.asarray(rng.standard_normal(n).astype(np_dtype)) for _ in range(count)
+        ]
+    for a in out:
+        assert a.dtype == k.DTYPES[dtype], "x64 must keep declared widths"
+    return out
 
 
 def assert_matches(got, want, dtype):
-    if dtype == "int32":
+    if np.dtype(dtype).kind == "i":
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     else:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -74,4 +74,15 @@ def test_sizes_are_tile_multiples():
 
 
 def test_dtypes_table():
-    assert set(DTYPES) == {"int32", "float32"}
+    # the full PjrtElem set of the Rust engine (64-bit via jax_enable_x64)
+    assert set(DTYPES) == {"int32", "int64", "float32", "float64"}
+
+
+def test_x64_dtypes_survive_array_creation():
+    # without jax_enable_x64 these would silently downcast and the
+    # artifacts would be mislabeled
+    import jax.numpy as jnp
+
+    for name, dtype in DTYPES.items():
+        x = jnp.zeros(8, dtype=dtype)
+        assert x.dtype == dtype, name

@@ -31,7 +31,7 @@ pub use twotree::allreduce_twotree;
 use crate::buffer::DataBuf;
 use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
 use crate::error::{Error, Result};
-use crate::model::AlgoKind;
+use crate::model::{AlgoKind, NetParams};
 use crate::ops::{Elem, ReduceBackend, ReduceOp, SumOp};
 use crate::pipeline::Blocks;
 use crate::topo::Mapping;
@@ -103,6 +103,13 @@ pub struct RunSpec {
     /// SIMD / PJRT; see [`crate::ops::backend`]). All backends are bitwise
     /// identical, so this is a pure performance knob.
     pub reduce_backend: ReduceBackend,
+    /// Shared network resources for virtual timing (NIC ports per node,
+    /// per-level edge capacities). Non-dedicated values upgrade the
+    /// run's cost model to [`CostModel::Congested`](crate::model) over
+    /// `mapping` (overriding the model's own net params); the default
+    /// dedicated value leaves the timing exactly as given. Ignored under
+    /// real timing.
+    pub net: NetParams,
 }
 
 impl RunSpec {
@@ -115,12 +122,26 @@ impl RunSpec {
             seed: 0xD7D2,
             mapping: Mapping::Block { ranks_per_node: 8 },
             reduce_backend: ReduceBackend::Auto,
+            net: NetParams::dedicated(),
         }
     }
 
     pub fn mapping(mut self, mapping: Mapping) -> RunSpec {
         self.mapping = mapping;
         self
+    }
+
+    pub fn net(mut self, net: NetParams) -> RunSpec {
+        self.net = net;
+        self
+    }
+
+    /// The effective timing of a run under this spec: `timing` upgraded
+    /// to the congestion-aware model when the spec carries non-dedicated
+    /// [`NetParams`] (the spec's `mapping` supplies the node layout if
+    /// the model has none).
+    pub fn effective_timing(&self, timing: Timing) -> Timing {
+        timing.with_net(self.net, self.mapping)
     }
 
     pub fn reduce_backend(mut self, backend: ReduceBackend) -> RunSpec {
@@ -174,6 +195,7 @@ pub fn run_allreduce_i32(
     timing: Timing,
 ) -> Result<WorldReport<DataBuf<i32>>> {
     let spec = *spec;
+    let timing = spec.effective_timing(timing);
     let blocks = spec.blocks()?;
     run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
         // every rank dispatches its block reductions through the spec's

@@ -57,6 +57,17 @@ pub struct RankMetrics {
     pub elems_reduced: u64,
     /// Which reduce backend served each `reduce_into` call.
     pub backend_hits: BackendHits,
+    /// Virtual µs this rank's clock was pushed forward by *shared*
+    /// network resources: backpressure on full edge queues plus NIC port
+    /// contention (egress and ingress). Always 0 under a dedicated model.
+    pub stall_us: f64,
+    /// Posts that found their edge's virtual injection queue still full
+    /// at the sender's post time (each advanced the clock to the drain).
+    pub queue_full_events: u64,
+    /// Peak posted-but-undrained depth observed across this rank's
+    /// outgoing edges (tracked only while the congestion fabric is
+    /// active; `merge` takes the max, not the sum).
+    pub max_queue_depth: u64,
 }
 
 impl RankMetrics {
@@ -76,6 +87,9 @@ impl RankMetrics {
         self.pool_recycled += other.pool_recycled;
         self.elems_reduced += other.elems_reduced;
         self.backend_hits.merge(&other.backend_hits);
+        self.stall_us += other.stall_us;
+        self.queue_full_events += other.queue_full_events;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
     }
 
     /// Fold one rank's buffer-layer counters (thread-local, harvested when
@@ -119,8 +133,14 @@ mod tests {
                 simd: 2,
                 pjrt: 3,
             },
+            stall_us: 1.5,
+            queue_full_events: 4,
+            max_queue_depth: 6,
         };
-        let b = a.clone();
+        let b = RankMetrics {
+            max_queue_depth: 9,
+            ..a.clone()
+        };
         a.merge(&b);
         assert_eq!(a.shard_id, 3); // label, not summed
         assert_eq!(a.exchanges, 2);
@@ -140,6 +160,9 @@ mod tests {
                 pjrt: 6,
             }
         );
+        assert!((a.stall_us - 3.0).abs() < 1e-12);
+        assert_eq!(a.queue_full_events, 8);
+        assert_eq!(a.max_queue_depth, 9); // max, not sum
     }
 
     #[test]

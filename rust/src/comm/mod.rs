@@ -23,6 +23,18 @@
 //! for real; only *time* is modelled — and the model is exactly the one the
 //! paper's analysis (§1.2) is stated in.
 //!
+//! A third timing flavour sits between the two: **congestion-aware
+//! virtual** ([`CostModel::Congested`](crate::model::CostModel)). The
+//! scalar-clock scheme above assumes every link is dedicated; the
+//! congested model routes virtual timing through a shared
+//! network-resource layer ([`net`]) — per-node NIC port timelines that
+//! serialize concurrent inter-node transfers from one node, and bounded
+//! per-edge injection queues whose backpressure advances the sender's
+//! clock to the drain time of the slot it reuses. With unlimited
+//! resources the fabric is inert and the clocks are the scalar scheme
+//! bit for bit; see `tests/congestion.rs` and
+//! `benches/congestion_ablation.rs`.
+//!
 //! The transport itself is zero-copy: a posted block is a reference-counted
 //! view of the sender's slab (see [`crate::buffer`]), channels live in a
 //! sharded lock-free edge table (one dense arena per node group plus a
@@ -41,11 +53,13 @@
 pub mod barrier;
 pub mod group;
 pub mod metrics;
+pub mod net;
 pub mod thread;
 pub mod world;
 
 pub use group::{Group, SubComm};
 pub use metrics::{BackendHits, RankMetrics};
+pub use net::LinkOccupancy;
 pub use thread::{ThreadComm, Timing};
 pub use world::{run_world, run_world_sharded, WorldReport};
 

@@ -1,0 +1,510 @@
+//! The shared network-resource layer under the transport: per-node NIC
+//! port timelines and bounded per-edge virtual injection queues.
+//!
+//! The decentralized scalar-clock scheme (each message carries its
+//! sender's clock, the receiver takes a `max`) models every link as
+//! dedicated: a rank's transfer can never be delayed by *third-party*
+//! traffic. The [`Fabric`] closes that gap. Under a
+//! [`CostModel::Congested`](crate::model::CostModel) model:
+//!
+//! * every **node** owns two port timelines (egress and ingress, a
+//!   full-duplex NIC) with `ports_per_node` ports each. An inter-node
+//!   transfer reserves the earliest-free port at or after its request
+//!   time, so `k` ranks of one node doing simultaneous inter-node
+//!   transfers serialize when `k > ports`. Intra-node transfers bypass
+//!   the NIC (they are memory traffic).
+//! * every directed **edge** has a virtual injection queue of finite
+//!   capacity. A message occupies its slot from post until the receiver
+//!   finishes receiving it; posting to a full queue advances the
+//!   sender's clock to the drain time of the message whose slot it
+//!   reuses — finite-NIC-queue backpressure. Because the drain time is
+//!   computed by the receiver, the *simulating* sender thread
+//!   wall-blocks until that value exists; the wait is bounded by the
+//!   same poison polling and watchdog as a blocking receive.
+//!
+//! With unlimited resources ([`NetParams::is_dedicated`]) the fabric is
+//! inert and the transport's timing formulas are the scalar scheme,
+//! bit for bit (pinned by `tests/congestion.rs`).
+//!
+//! **Determinism.** Port reservations are resolved in arrival order
+//! under a mutex. Reservation *outcomes* are deterministic functions of
+//! the request sequence, but when two ranks race to the same NIC at the
+//! same wall instant the sequence itself can vary run to run, so
+//! congested virtual times carry scheduling noise of the contention
+//! resolution (dedicated runs stay exactly deterministic, and payload
+//! *results* are always bitwise deterministic). The congestion bench
+//! gate therefore compares against a deliberately conservative
+//! baseline.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::model::NetParams;
+use crate::topo::{node_of, Mapping};
+
+/// Aggregate occupancy of one simulated node's NIC timelines over a
+/// world run (µs of reserved transfer time and transfer counts, per
+/// direction). Collected into
+/// [`WorldReport::net_occupancy`](super::WorldReport) — empty under a
+/// dedicated (non-congested) model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkOccupancy {
+    /// Node id under the cost model's mapping.
+    pub node: usize,
+    /// Total egress transfer time reserved on this node's NIC, µs.
+    pub egress_busy_us: f64,
+    /// Total ingress transfer time reserved on this node's NIC, µs.
+    pub ingress_busy_us: f64,
+    /// Number of inter-node transfers leaving this node.
+    pub egress_transfers: u64,
+    /// Number of inter-node transfers arriving at this node.
+    pub ingress_transfers: u64,
+}
+
+/// One direction of a node's NIC: `ports` independent timelines; a
+/// reservation takes the earliest-free port at or after its request.
+struct PortTimeline {
+    /// Next-free virtual time per port.
+    free: Vec<f64>,
+    /// Accumulated reserved transfer seconds.
+    busy: f64,
+    transfers: u64,
+}
+
+impl PortTimeline {
+    fn new(ports: usize) -> PortTimeline {
+        PortTimeline {
+            free: vec![0.0; ports],
+            busy: 0.0,
+            transfers: 0,
+        }
+    }
+
+    /// Reserve the earliest-free port: the transfer starts at
+    /// `max(request, earliest free)` and occupies that port for `dur`.
+    fn reserve(&mut self, request: f64, dur: f64) -> f64 {
+        let mut idx = 0;
+        for (i, &f) in self.free.iter().enumerate() {
+            if f < self.free[idx] {
+                idx = i;
+            }
+        }
+        let start = request.max(self.free[idx]);
+        self.free[idx] = start + dur;
+        self.busy += dur;
+        self.transfers += 1;
+        start
+    }
+}
+
+/// One node's full-duplex NIC.
+struct NodeNic {
+    egress: Mutex<PortTimeline>,
+    ingress: Mutex<PortTimeline>,
+}
+
+impl NodeNic {
+    fn new(ports: usize) -> NodeNic {
+        NodeNic {
+            egress: Mutex::new(PortTimeline::new(ports)),
+            ingress: Mutex::new(PortTimeline::new(ports)),
+        }
+    }
+}
+
+/// The world's shared network resources. Inert (`!is_active`) under a
+/// dedicated model: every method is then an identity/no-op and the
+/// transport's hot path pays a single boolean check.
+pub(super) struct Fabric {
+    net: NetParams,
+    /// Rank → node id under the *cost model's* mapping (which may differ
+    /// from the registry's shard layout). Empty when inert.
+    node_of: Box<[u32]>,
+    /// One NIC per node; empty when `ports_per_node` is unlimited.
+    nics: Box<[NodeNic]>,
+}
+
+impl Fabric {
+    /// The inert fabric of a dedicated (or real-time) world.
+    pub(super) fn dedicated() -> Fabric {
+        Fabric {
+            net: NetParams::dedicated(),
+            node_of: Box::new([]),
+            nics: Box::new([]),
+        }
+    }
+
+    /// Build the fabric for a `size`-rank world under `net` with the node
+    /// layout `mapping`. Dedicated `net` yields the inert fabric.
+    pub(super) fn new(size: usize, net: NetParams, mapping: Mapping) -> Fabric {
+        if net.is_dedicated() {
+            return Fabric::dedicated();
+        }
+        let node_of: Box<[u32]> = (0..size)
+            .map(|r| node_of(mapping, r) as u32)
+            .collect();
+        let nodes = node_of.iter().copied().max().map_or(0, |n| n as usize + 1);
+        let nics: Box<[NodeNic]> = if net.ports_per_node > 0 {
+            (0..nodes).map(|_| NodeNic::new(net.ports_per_node)).collect()
+        } else {
+            Box::new([])
+        };
+        Fabric {
+            net,
+            node_of,
+            nics,
+        }
+    }
+
+    /// True when any resource is finite — the transport then routes its
+    /// virtual timing through the fabric.
+    pub(super) fn is_active(&self) -> bool {
+        !self.net.is_dedicated()
+    }
+
+    fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// The injection-queue capacity of edge `src → dst` (0 = unbounded).
+    pub(super) fn edge_capacity(&self, src: usize, dst: usize) -> usize {
+        if !self.is_active() {
+            return 0;
+        }
+        if self.same_node(src, dst) {
+            self.net.edge_capacity_intra
+        } else {
+            self.net.edge_capacity_inter
+        }
+    }
+
+    /// Reserve an egress slot on `src`'s node for a transfer to `dst`:
+    /// returns the transfer's start time `≥ request`. Identity for
+    /// intra-node transfers and unlimited ports.
+    pub(super) fn reserve_egress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
+        if self.nics.is_empty() || self.same_node(src, dst) {
+            return request;
+        }
+        let nic = &self.nics[self.node_of[src] as usize];
+        nic.egress.lock().unwrap().reserve(request, dur)
+    }
+
+    /// Reserve an ingress slot on `dst`'s node for a transfer from `src`.
+    pub(super) fn reserve_ingress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
+        if self.nics.is_empty() || self.same_node(src, dst) {
+            return request;
+        }
+        let nic = &self.nics[self.node_of[dst] as usize];
+        nic.ingress.lock().unwrap().reserve(request, dur)
+    }
+
+    /// Per-node NIC occupancy aggregates (empty when no NICs are
+    /// modelled).
+    pub(super) fn occupancy(&self) -> Vec<LinkOccupancy> {
+        self.nics
+            .iter()
+            .enumerate()
+            .map(|(node, nic)| {
+                let e = nic.egress.lock().unwrap();
+                let i = nic.ingress.lock().unwrap();
+                LinkOccupancy {
+                    node,
+                    egress_busy_us: e.busy * 1e6,
+                    ingress_busy_us: i.busy * 1e6,
+                    egress_transfers: e.transfers,
+                    ingress_transfers: i.transfers,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The sender's view of one post on a bounded edge.
+pub(super) struct SlotGrant {
+    /// Virtual drain time of the message whose FIFO slot this post
+    /// reuses — present once more than `capacity` messages were posted.
+    /// The sender's clock may not run ahead of it (backpressure).
+    pub(super) freed_at: Option<f64>,
+    /// Posted-but-undrained messages at post time, this one included.
+    pub(super) depth: u64,
+}
+
+/// Why a slot acquisition gave up.
+pub(super) enum SlotError {
+    /// The world was poisoned while waiting.
+    Poisoned,
+    /// The watchdog deadline passed — likely protocol deadlock under
+    /// backpressure.
+    TimedOut,
+}
+
+/// Capacities at or above this are treated as unbounded for drain-time
+/// recording: no realistic run posts 2³² messages on one directed edge,
+/// so such a queue can never fill, and recording every drain of an
+/// effectively-unbounded queue would otherwise retain one timestamp per
+/// message for the world's lifetime. `post` and `drain` compare against
+/// the same constant, so the slot bookkeeping stays consistent.
+const EFFECTIVELY_UNBOUNDED: u64 = 1 << 32;
+
+/// True when `capacity` means a queue that records drain times (finite
+/// and small enough to ever fill).
+fn records_drains(capacity: usize) -> bool {
+    capacity > 0 && (capacity as u64) < EFFECTIVELY_UNBOUNDED
+}
+
+#[derive(Default)]
+struct QueueState {
+    posted: u64,
+    drained: u64,
+    /// Drain times of taken messages not yet consumed by a backpressured
+    /// post. FIFO; each post past the capacity pops exactly one front, so
+    /// the front always is drain `#(post_index − capacity)`. Length is
+    /// `drained − max(0, posted − capacity)`, i.e. bounded by the
+    /// capacity once posts outnumber it (and capacities too large to
+    /// ever fill skip recording entirely — see [`EFFECTIVELY_UNBOUNDED`]).
+    drains: VecDeque<f64>,
+}
+
+/// The virtual injection queue of one directed edge. There is exactly
+/// one posting thread (the source rank) and one draining thread (the
+/// destination rank), both touching the state in their own program
+/// order, which is what makes the FIFO slot correspondence exact.
+pub(super) struct EdgeQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl EdgeQueue {
+    pub(super) fn new() -> EdgeQueue {
+        EdgeQueue {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register a post. With `capacity == 0` this only tracks the queue
+    /// depth; otherwise it wall-blocks (in `poll` slices, aborting on
+    /// poison or at `deadline`) until the receiver drained the message
+    /// whose slot this post needs, and returns that drain time.
+    pub(super) fn post(
+        &self,
+        capacity: usize,
+        poisoned: &dyn Fn() -> bool,
+        deadline: Instant,
+        poll: Duration,
+    ) -> Result<SlotGrant, SlotError> {
+        let mut st = self.state.lock().unwrap();
+        let index = st.posted;
+        st.posted += 1;
+        let depth = st.posted - st.drained;
+        if !records_drains(capacity) || index < capacity as u64 {
+            return Ok(SlotGrant {
+                freed_at: None,
+                depth,
+            });
+        }
+        loop {
+            if let Some(t) = st.drains.pop_front() {
+                let depth = st.posted - st.drained;
+                return Ok(SlotGrant {
+                    freed_at: Some(t),
+                    depth,
+                });
+            }
+            if poisoned() {
+                return Err(SlotError::Poisoned);
+            }
+            if Instant::now() > deadline {
+                return Err(SlotError::TimedOut);
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, poll).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Record that the receiver finished receiving the oldest in-flight
+    /// message at virtual time `vtime` (takes happen in FIFO order).
+    pub(super) fn drain(&self, capacity: usize, vtime: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.drained += 1;
+        if records_drains(capacity) {
+            st.drains.push_back(vtime);
+            self.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedicated_fabric_is_inert() {
+        let f = Fabric::dedicated();
+        assert!(!f.is_active());
+        let f = Fabric::new(
+            8,
+            NetParams::dedicated(),
+            Mapping::Block { ranks_per_node: 2 },
+        );
+        assert!(!f.is_active());
+        assert!(f.occupancy().is_empty());
+    }
+
+    #[test]
+    fn port_timeline_serializes() {
+        let mut t = PortTimeline::new(1);
+        assert_eq!(t.reserve(0.0, 10.0), 0.0);
+        // the port is busy until 10: a request at 3 starts at 10
+        assert_eq!(t.reserve(3.0, 5.0), 10.0);
+        // a request after the backlog starts on time
+        assert_eq!(t.reserve(20.0, 1.0), 20.0);
+        assert_eq!(t.transfers, 3);
+        assert!((t.busy - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn port_timeline_picks_earliest_free_port() {
+        let mut t = PortTimeline::new(2);
+        assert_eq!(t.reserve(0.0, 10.0), 0.0); // port 0 busy till 10
+        assert_eq!(t.reserve(1.0, 10.0), 1.0); // port 1 busy till 11
+        // both busy: earliest free is port 0 at 10
+        assert_eq!(t.reserve(2.0, 1.0), 10.0);
+    }
+
+    #[test]
+    fn fabric_reserves_only_inter_node() {
+        let f = Fabric::new(4, NetParams::ports(1), Mapping::Block { ranks_per_node: 2 });
+        assert!(f.is_active());
+        // intra-node: identity, no NIC involvement
+        assert_eq!(f.reserve_egress(0, 1, 5.0, 10.0), 5.0);
+        assert_eq!(f.reserve_ingress(0, 1, 5.0, 10.0), 5.0);
+        // inter-node: serialized through node 0's single egress port
+        assert_eq!(f.reserve_egress(0, 2, 0.0, 10.0), 0.0);
+        assert_eq!(f.reserve_egress(1, 3, 2.0, 10.0), 10.0);
+        // ingress is an independent timeline (full duplex)
+        assert_eq!(f.reserve_ingress(2, 0, 1.0, 4.0), 1.0);
+        let occ = f.occupancy();
+        assert_eq!(occ.len(), 2);
+        assert!((occ[0].egress_busy_us - 20.0 * 1e6).abs() < 1e-3);
+        assert_eq!(occ[0].egress_transfers, 2);
+        assert_eq!(occ[0].ingress_transfers, 1);
+        assert_eq!(occ[1].egress_transfers, 0);
+    }
+
+    #[test]
+    fn edge_capacity_levels() {
+        let net = NetParams {
+            ports_per_node: 0,
+            edge_capacity_intra: 7,
+            edge_capacity_inter: 2,
+        };
+        let f = Fabric::new(4, net, Mapping::Block { ranks_per_node: 2 });
+        assert!(f.is_active());
+        assert_eq!(f.edge_capacity(0, 1), 7);
+        assert_eq!(f.edge_capacity(0, 2), 2);
+        assert_eq!(f.edge_capacity(3, 2), 7);
+        assert_eq!(Fabric::dedicated().edge_capacity(0, 1), 0);
+    }
+
+    #[test]
+    fn edge_queue_fifo_slots() {
+        let q = EdgeQueue::new();
+        let never = || false;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let poll = Duration::from_millis(5);
+        // capacity 2: first two posts are free
+        let g = q.post(2, &never, deadline, poll).unwrap();
+        assert!(g.freed_at.is_none());
+        assert_eq!(g.depth, 1);
+        let g = q.post(2, &never, deadline, poll).unwrap();
+        assert!(g.freed_at.is_none());
+        assert_eq!(g.depth, 2);
+        // drains recorded: post 2 reuses message 0's slot, post 3 message 1's
+        q.drain(2, 11.0);
+        q.drain(2, 22.0);
+        let g = q.post(2, &never, deadline, poll).unwrap();
+        assert_eq!(g.freed_at, Some(11.0));
+        let g = q.post(2, &never, deadline, poll).unwrap();
+        assert_eq!(g.freed_at, Some(22.0));
+    }
+
+    #[test]
+    fn edge_queue_unbounded_tracks_depth_only() {
+        let q = EdgeQueue::new();
+        let never = || false;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let poll = Duration::from_millis(5);
+        for i in 0..10u64 {
+            let g = q.post(0, &never, deadline, poll).unwrap();
+            assert!(g.freed_at.is_none());
+            assert_eq!(g.depth, i + 1);
+        }
+        q.drain(0, 1.0);
+        let g = q.post(0, &never, deadline, poll).unwrap();
+        assert_eq!(g.depth, 10);
+    }
+
+    #[test]
+    fn effectively_unbounded_capacity_skips_drain_recording() {
+        assert!(records_drains(1));
+        assert!(records_drains((1 << 32) - 1));
+        assert!(!records_drains(0));
+        assert!(!records_drains(1 << 32));
+        // a huge capacity behaves like unbounded: posts never wait and
+        // drains retain nothing
+        let q = EdgeQueue::new();
+        let never = || false;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let poll = Duration::from_millis(5);
+        for _ in 0..4 {
+            q.post(1 << 40, &never, deadline, poll).unwrap();
+            q.drain(1 << 40, 9.0);
+        }
+        assert!(q.state.lock().unwrap().drains.is_empty());
+        let g = q.post(1 << 40, &never, deadline, poll).unwrap();
+        assert!(g.freed_at.is_none());
+        assert_eq!(g.depth, 1);
+    }
+
+    #[test]
+    fn edge_queue_blocks_until_drained() {
+        use std::sync::Arc;
+        let q = Arc::new(EdgeQueue::new());
+        let never = || false;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let poll = Duration::from_millis(5);
+        q.post(1, &never, deadline, poll).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.drain(1, 7.5);
+        });
+        // blocks until the drain lands, then returns its time
+        let g = q.post(1, &never, deadline, poll).unwrap();
+        assert_eq!(g.freed_at, Some(7.5));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn edge_queue_post_aborts_on_poison_and_deadline() {
+        let q = EdgeQueue::new();
+        let poll = Duration::from_millis(2);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        q.post(1, &|| false, deadline, poll).unwrap();
+        // poison aborts the wait
+        match q.post(1, &|| true, deadline, poll) {
+            Err(SlotError::Poisoned) => {}
+            _ => panic!("expected poison abort"),
+        }
+        // an expired deadline times out (fresh queue, slot 0 free, slot 1 waits)
+        let q = EdgeQueue::new();
+        q.post(1, &|| false, deadline, poll).unwrap();
+        let past = Instant::now() - Duration::from_millis(1);
+        match q.post(1, &|| false, past, poll) {
+            Err(SlotError::TimedOut) => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+}

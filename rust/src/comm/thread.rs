@@ -6,10 +6,22 @@
 //! cross-shard edges. A flat world is the one-shard special case. Endpoints
 //! cache the `Arc<Edge>` per peer, so after the first touch of an edge a
 //! post is a plain vector index — no registry mutex, no `HashMap` hashing,
-//! and no `Sender` clone per post. Channels are unbounded, so `send` never
-//! blocks and the blocking structure of the algorithms (which the paper
-//! designed for `MPI_Sendrecv`) cannot deadlock as long as every posted
-//! receive is eventually matched.
+//! and no `Sender` clone per post. The mpsc channels are unbounded, so a
+//! post never blocks on transport capacity and the blocking structure of
+//! the algorithms (which the paper designed for `MPI_Sendrecv`) cannot
+//! deadlock as long as every posted receive is eventually matched.
+//!
+//! Under a congestion-aware cost model ([`CostModel::Congested`]) the
+//! *virtual* timing of every operation routes through the world's
+//! [`Fabric`](super::net): edges acquire bounded-injection-queue slots
+//! (backpressure advances the sender's clock to the drain time of the
+//! slot it reuses — and wall-blocks the simulating thread until the
+//! receiver computed that time, bounded by the same poison polling and
+//! watchdog as a blocking receive), and inter-node transfers reserve
+//! start times on the sender node's egress and the receiver node's
+//! ingress NIC port timelines. With a dedicated model the fabric is
+//! inert and every formula below is the decentralized scalar-clock
+//! scheme, bit for bit.
 //!
 //! Sharding matters at scale: the old single dense `p × p` table preallocates
 //! `p²` slots from one arena (256 MiB of slots at p = 4096), while the
@@ -30,10 +42,11 @@ use std::time::Instant;
 use super::barrier::{BarrierTable, VBarrier};
 use super::group::{Group, SubComm};
 use super::metrics::RankMetrics;
+use super::net::{EdgeQueue, Fabric, SlotError};
 use super::Comm;
 use crate::buffer::DataBuf;
 use crate::error::{Error, Result};
-use crate::model::{ComputeCost, CostModel};
+use crate::model::{ComputeCost, CostModel, NetParams};
 use crate::ops::Elem;
 use crate::topo::Mapping;
 
@@ -57,11 +70,28 @@ impl Timing {
     pub fn is_virtual(&self) -> bool {
         matches!(self, Timing::Virtual(..))
     }
+
+    /// Upgrade a virtual timing to the congestion-aware model (see
+    /// [`CostModel::with_net`]); `default_mapping` supplies the node
+    /// layout when the cost model has none. Identity for real timing
+    /// (congestion is a virtual-clock feature — real runs take the time
+    /// they take) and for dedicated `net`.
+    pub fn with_net(self, net: NetParams, default_mapping: Mapping) -> Timing {
+        match self {
+            Timing::Virtual(model, compute) => {
+                Timing::Virtual(model.with_net(net, default_mapping), compute)
+            }
+            Timing::Real => Timing::Real,
+        }
+    }
 }
 
-/// A message on the wire: payload plus the sender's virtual clock at the
-/// time of posting (ignored under real timing). The payload is typically a
-/// zero-copy view of the sender's slab.
+/// A message on the wire: payload plus the virtual time the transfer
+/// leaves the sender (ignored under real timing). Under the dedicated
+/// model this is the sender's clock at the time of posting; under a
+/// congested model it is the fabric-admitted start time (after
+/// backpressure and the egress-port reservation). The payload is
+/// typically a zero-copy view of the sender's slab.
 struct Msg<E: Elem> {
     vtime: f64,
     data: DataBuf<E>,
@@ -72,10 +102,13 @@ struct Msg<E: Elem> {
 /// The `Sender` sits here unguarded: `std::sync::mpsc::Sender` is `Sync`
 /// (Rust ≥ 1.72), so endpoints send through a shared reference without
 /// cloning. The `Receiver` half is claimed exactly once by the destination
-/// rank.
+/// rank. The mpsc channel itself stays unbounded — `queue` is the
+/// *virtual* injection queue of the congestion model, touched only when
+/// the world's fabric is active.
 struct Edge<E: Elem> {
     sender: Sender<Msg<E>>,
     receiver: Mutex<Option<Receiver<Msg<E>>>>,
+    queue: EdgeQueue,
 }
 
 fn new_edge<E: Elem>() -> Arc<Edge<E>> {
@@ -83,6 +116,7 @@ fn new_edge<E: Elem>() -> Arc<Edge<E>> {
     Arc::new(Edge {
         sender: s,
         receiver: Mutex::new(Some(r)),
+        queue: EdgeQueue::new(),
     })
 }
 
@@ -159,6 +193,9 @@ pub(super) struct ShardedRegistry<E: Elem> {
     local_of: Box<[u32]>,
     shards: Box<[ShardTable<E>]>,
     inter: InterTable<E>,
+    /// The world's shared network resources (NIC port timelines, edge
+    /// capacities) — inert unless the cost model is congestion-aware.
+    fabric: Fabric,
     /// Per-group barriers for sub-communicators (see [`BarrierTable`]).
     barriers: BarrierTable,
     /// Set when any rank fails; blocked receivers notice within
@@ -171,22 +208,49 @@ pub(super) struct ShardedRegistry<E: Elem> {
 /// Poll interval for poison detection on blocked receives.
 const POISON_POLL: std::time::Duration = std::time::Duration::from_millis(20);
 
-/// How long a receive may block before we declare a protocol deadlock.
-/// Override with `DPDR_RECV_TIMEOUT_SECS` (legitimate waits in heavily
-/// oversubscribed real-time worlds can be long).
-fn recv_watchdog() -> std::time::Duration {
-    static SECS: OnceLock<u64> = OnceLock::new();
-    let secs = *SECS.get_or_init(|| {
-        std::env::var("DPDR_RECV_TIMEOUT_SECS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(60)
-    });
-    std::time::Duration::from_secs(secs)
+/// The watchdog never exceeds this (~136 years — effectively disabled):
+/// `Instant + Duration` panics on overflow for huge durations, and an
+/// operator setting an enormous `DPDR_RECV_TIMEOUT_SECS` means "never
+/// fire", not "panic on the first blocking wait".
+const MAX_WATCHDOG_SECS: u64 = 1 << 32;
+
+/// Watchdog budget in seconds: the env-configurable base, scaled up with
+/// the world size — a p = 1152 world legitimately has protocol phases
+/// (and, under bounded edges, backpressure stalls) that outlast a small
+/// world's budget on a loaded CI machine. The base covers worlds up to
+/// 512 ranks; every further 512 ranks add another base's worth.
+fn watchdog_secs(base: u64, world: usize) -> u64 {
+    base.saturating_mul(1 + world as u64 / 512)
+        .min(MAX_WATCHDOG_SECS)
+}
+
+/// How long a blocked receive (or a backpressured post) may wall-block
+/// before we declare a protocol deadlock. The base (default 60 s) comes
+/// from `DPDR_RECV_TIMEOUT_SECS` — read per endpoint construction, so
+/// tests and operators can adjust it between worlds — and is scaled with
+/// the world size by [`watchdog_secs`].
+fn recv_watchdog(world: usize) -> std::time::Duration {
+    let base = std::env::var("DPDR_RECV_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    std::time::Duration::from_secs(watchdog_secs(base, world))
 }
 
 impl<E: Elem> ShardedRegistry<E> {
+    /// A registry with the inert (dedicated) fabric — the idealized
+    /// transport of the paper's model.
     pub(super) fn new(size: usize, mapping: Option<Mapping>) -> ShardedRegistry<E> {
+        ShardedRegistry::with_fabric(size, mapping, Fabric::dedicated())
+    }
+
+    /// A registry whose virtual timing routes through `fabric` (built by
+    /// `run_world` from the cost model's [`NetParams`]).
+    pub(super) fn with_fabric(
+        size: usize,
+        mapping: Option<Mapping>,
+        fabric: Fabric,
+    ) -> ShardedRegistry<E> {
         let groups: Vec<Vec<usize>> = match mapping {
             Some(m) => m.shards(size),
             None => vec![(0..size).collect()],
@@ -207,9 +271,15 @@ impl<E: Elem> ShardedRegistry<E> {
             local_of: local_of.into_boxed_slice(),
             shards: shards.into_boxed_slice(),
             inter: InterTable::new(),
+            fabric,
             barriers: BarrierTable::new(),
             poisoned: std::sync::atomic::AtomicBool::new(false),
         }
+    }
+
+    /// The world's network-resource fabric.
+    pub(super) fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 
     /// Number of shards (node groups) backing this world.
@@ -277,9 +347,20 @@ pub struct ThreadComm<E: Elem> {
     tx: Vec<Option<Arc<Edge<E>>>>,
     /// Claimed incoming channels, indexed by source rank.
     rx: Vec<Option<Receiver<Msg<E>>>>,
+    /// Cached incoming edges (for drain recording on the congested
+    /// fabric), indexed by source rank. Only populated when the fabric is
+    /// active.
+    rx_edges: Vec<Option<Arc<Edge<E>>>>,
     timing: Timing,
+    /// The absolute virtual clock. Never rewound: [`Comm::reset_time`]
+    /// moves `origin` instead, so fabric reservations (absolute times)
+    /// stay consistent across harness rounds.
     vtime: f64,
+    /// Subtracted by [`Comm::time_us`]; set by [`Comm::reset_time`].
+    origin: f64,
     start: Instant,
+    /// Watchdog budget for blocking waits, scaled to this world's size.
+    watchdog: std::time::Duration,
     metrics: RankMetrics,
 }
 
@@ -299,9 +380,12 @@ impl<E: Elem> ThreadComm<E> {
             barrier,
             tx: (0..size).map(|_| None).collect(),
             rx: (0..size).map(|_| None).collect(),
+            rx_edges: (0..size).map(|_| None).collect(),
             timing,
             vtime: 0.0,
+            origin: 0.0,
             start: Instant::now(),
+            watchdog: recv_watchdog(size),
             metrics: RankMetrics {
                 shard_id,
                 ..RankMetrics::default()
@@ -341,12 +425,84 @@ impl<E: Elem> ThreadComm<E> {
         Ok(())
     }
 
-    fn post(&mut self, peer: usize, data: DataBuf<E>) -> Result<usize> {
+    /// Sender-side fabric admission of one outgoing transfer of duration
+    /// `dur`: virtual backpressure on the edge's bounded injection queue
+    /// (the *simulating* thread wall-blocks until the needed slot's drain
+    /// time exists), then an egress-port reservation on this rank's node
+    /// NIC. Returns the transfer's start time — exactly the current
+    /// clock when the fabric is inert, so the dedicated timing formulas
+    /// are unchanged bit for bit.
+    fn admit_send(&mut self, peer: usize, dur: f64) -> Result<f64> {
+        if !self.registry.fabric().is_active() {
+            return Ok(self.vtime);
+        }
+        let registry = Arc::clone(&self.registry);
+        let fabric = registry.fabric();
+        let rank = self.rank;
+        let edge = Arc::clone(self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer)));
+        let cap = fabric.edge_capacity(rank, peer);
+        let deadline = Instant::now() + self.watchdog;
+        let grant = edge
+            .queue
+            .post(cap, &|| registry.is_poisoned(), deadline, POISON_POLL)
+            .map_err(|e| match e {
+                SlotError::Poisoned => Error::Disconnected { rank, peer },
+                SlotError::TimedOut => {
+                    registry.poison();
+                    Error::Protocol(format!(
+                        "rank {rank} post to {peer} stalled on a full edge queue — \
+                         likely protocol deadlock under backpressure"
+                    ))
+                }
+            })?;
+        self.metrics.max_queue_depth = self.metrics.max_queue_depth.max(grant.depth);
+        let mut t = self.vtime;
+        if let Some(freed) = grant.freed_at {
+            if freed > t {
+                // genuine backpressure: the queue was still full at this
+                // rank's virtual post time
+                self.metrics.queue_full_events += 1;
+                self.metrics.stall_us += (freed - t) * 1e6;
+                t = freed;
+            }
+        }
+        let start = fabric.reserve_egress(rank, peer, t, dur);
+        if start > t {
+            self.metrics.stall_us += (start - t) * 1e6;
+        }
+        Ok(start)
+    }
+
+    /// Receiver-side fabric completion of one incoming transfer that is
+    /// ready (message posted and this rank free) at `ready`: an
+    /// ingress-port reservation on this rank's node NIC, then the edge
+    /// drain record that releases the sender's injection-queue slot.
+    /// Returns the transfer's completion time — `ready + dur` exactly
+    /// when the fabric is inert.
+    fn finish_recv(&mut self, peer: usize, ready: f64, dur: f64) -> f64 {
+        if !self.registry.fabric().is_active() {
+            return ready + dur;
+        }
+        let registry = Arc::clone(&self.registry);
+        let fabric = registry.fabric();
+        let rank = self.rank;
+        let start = fabric.reserve_ingress(peer, rank, ready, dur);
+        if start > ready {
+            self.metrics.stall_us += (start - ready) * 1e6;
+        }
+        let done = start + dur;
+        let edge =
+            Arc::clone(self.rx_edges[peer].get_or_insert_with(|| registry.edge(peer, rank)));
+        edge.queue.drain(fabric.edge_capacity(peer, rank), done);
+        done
+    }
+
+    /// Post `data` to `peer`, stamped with the transfer's virtual start
+    /// time (fabric-admitted by the caller; the current clock under real
+    /// timing).
+    fn post(&mut self, peer: usize, data: DataBuf<E>, stamp: f64) -> Result<()> {
         let bytes = data.bytes();
-        let msg = Msg {
-            vtime: self.vtime,
-            data,
-        };
+        let msg = Msg { vtime: stamp, data };
         let (rank, registry) = (self.rank, &self.registry);
         let edge = self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer));
         edge.sender.send(msg).map_err(|_| Error::Disconnected {
@@ -354,7 +510,7 @@ impl<E: Elem> ThreadComm<E> {
             peer,
         })?;
         self.metrics.bytes_sent += bytes as u64;
-        Ok(bytes)
+        Ok(())
     }
 
     fn take(&mut self, peer: usize) -> Result<Msg<E>> {
@@ -364,7 +520,7 @@ impl<E: Elem> ThreadComm<E> {
         // of hanging on receives whose sender died (the registry keeps the
         // unclaimed Sender half alive, so disconnect alone is not enough),
         // and so protocol deadlocks surface as errors instead of hangs.
-        let deadline = std::time::Instant::now() + recv_watchdog();
+        let deadline = std::time::Instant::now() + self.watchdog;
         let msg = loop {
             match rx.recv_timeout(POISON_POLL) {
                 Ok(msg) => break msg,
@@ -395,7 +551,10 @@ impl<E: Elem> ThreadComm<E> {
         Ok(msg)
     }
 
-    /// The virtual clock (0 under real timing).
+    /// The *absolute* virtual clock (0 under real timing). Unlike
+    /// [`Comm::time_us`] this is never rewound by `reset_time`: fabric
+    /// reservations live on absolute timelines, so the clock only moves
+    /// forward and the harness measures intervals against `origin`.
     pub fn vtime(&self) -> f64 {
         self.vtime
     }
@@ -417,14 +576,26 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
 
     fn sendrecv(&mut self, peer: usize, send: DataBuf<E>) -> Result<DataBuf<E>> {
         self.check_peer(peer)?;
-        let sent_bytes = self.post(peer, send)?;
+        let sent_bytes = send.bytes();
+        let stamp = match self.timing {
+            Timing::Virtual(cost, _) => {
+                let out_dur = cost.xfer(self.rank, peer, sent_bytes);
+                self.admit_send(peer, out_dur)?
+            }
+            Timing::Real => self.vtime,
+        };
+        self.post(peer, send, stamp)?;
         let msg = self.take(peer)?;
         if let Timing::Virtual(cost, _) = self.timing {
             // Telephone model: both directions complete together; the cost
             // is driven by the larger payload, and both endpoints compute
-            // the identical completion time max(t_a, t_b) + α + β·n.
+            // the completion time max(t_a, t_b) + α + β·n (from the
+            // fabric-admitted start times t_a, t_b; the ingress port may
+            // push the shared transfer later still).
             let bytes = sent_bytes.max(msg.data.bytes());
-            self.vtime = self.vtime.max(msg.vtime) + cost.xfer(self.rank, peer, bytes);
+            let dur = cost.xfer(self.rank, peer, bytes);
+            let ready = stamp.max(msg.vtime);
+            self.vtime = self.finish_recv(peer, ready, dur);
         }
         self.metrics.exchanges += 1;
         self.metrics.sendrecvs += 1;
@@ -442,15 +613,25 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
         }
         self.check_peer(send_to)?;
         self.check_peer(recv_from)?;
-        let sent_bytes = self.post(send_to, send)?;
+        let sent_bytes = send.bytes();
+        let (stamp, out_dur) = match self.timing {
+            Timing::Virtual(cost, _) => {
+                let out_dur = cost.xfer(self.rank, send_to, sent_bytes);
+                (self.admit_send(send_to, out_dur)?, out_dur)
+            }
+            Timing::Real => (self.vtime, 0.0),
+        };
+        self.post(send_to, send, stamp)?;
         let msg = self.take(recv_from)?;
         if let Timing::Virtual(cost, _) = self.timing {
             // Full duplex: the outgoing and incoming transfers overlap; the
             // step ends when the longer of the two is done, and the incoming
-            // one cannot start before the remote sender posted.
-            let out = cost.xfer(self.rank, send_to, sent_bytes);
-            let inc = cost.xfer(self.rank, recv_from, msg.data.bytes());
-            self.vtime = (self.vtime + out).max(self.vtime.max(msg.vtime) + inc);
+            // one cannot start before the remote sender's transfer left.
+            let out_done = stamp + out_dur;
+            let inc_dur = cost.xfer(self.rank, recv_from, msg.data.bytes());
+            let ready = stamp.max(msg.vtime);
+            let in_done = self.finish_recv(recv_from, ready, inc_dur);
+            self.vtime = out_done.max(in_done);
         }
         self.metrics.exchanges += 1;
         self.metrics.sendrecvs += 1;
@@ -459,10 +640,18 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
 
     fn send(&mut self, peer: usize, data: DataBuf<E>) -> Result<()> {
         self.check_peer(peer)?;
-        let bytes = self.post(peer, data)?;
-        if let Timing::Virtual(cost, _) = self.timing {
+        let bytes = data.bytes();
+        let (stamp, dur) = match self.timing {
+            Timing::Virtual(cost, _) => {
+                let dur = cost.xfer(self.rank, peer, bytes);
+                (self.admit_send(peer, dur)?, dur)
+            }
+            Timing::Real => (self.vtime, 0.0),
+        };
+        self.post(peer, data, stamp)?;
+        if self.timing.is_virtual() {
             // The sender's port is busy for the full transfer.
-            self.vtime += cost.xfer(self.rank, peer, bytes);
+            self.vtime = stamp + dur;
         }
         self.metrics.exchanges += 1;
         Ok(())
@@ -472,10 +661,12 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
         self.check_peer(peer)?;
         let msg = self.take(peer)?;
         if let Timing::Virtual(cost, _) = self.timing {
-            // Transfer starts when the sender posted and the receiver is
-            // ready: max(t_r, t_s) + α + β·n.
-            let bytes = msg.data.bytes();
-            self.vtime = self.vtime.max(msg.vtime) + cost.xfer(self.rank, peer, bytes);
+            // Transfer starts when the sender's transfer left and the
+            // receiver is ready — max(t_r, t_s) + α + β·n — possibly
+            // pushed later by the ingress port.
+            let dur = cost.xfer(self.rank, peer, msg.data.bytes());
+            let ready = self.vtime.max(msg.vtime);
+            self.vtime = self.finish_recv(peer, ready, dur);
         }
         self.metrics.exchanges += 1;
         Ok(msg.data)
@@ -500,12 +691,17 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
     fn time_us(&self) -> f64 {
         match self.timing {
             Timing::Real => self.start.elapsed().as_secs_f64() * 1e6,
-            Timing::Virtual(..) => self.vtime * 1e6,
+            Timing::Virtual(..) => (self.vtime - self.origin) * 1e6,
         }
     }
 
     fn reset_time(&mut self) {
-        self.vtime = 0.0;
+        // The virtual clock is not rewound — shared fabric timelines hold
+        // absolute times, and after the harness's barrier every rank's
+        // clock equals the same world maximum, so measuring from `origin`
+        // is exactly the old reset-to-zero semantics (translation by a
+        // common offset).
+        self.origin = self.vtime;
         self.start = Instant::now();
     }
 
@@ -700,5 +896,119 @@ mod tests {
         let reg: ShardedRegistry<i32> = ShardedRegistry::new(2, None);
         let _r = reg.receiver(0, 1);
         let _r2 = reg.receiver(0, 1);
+    }
+
+    #[test]
+    fn watchdog_scales_with_world_size() {
+        assert_eq!(watchdog_secs(60, 2), 60);
+        assert_eq!(watchdog_secs(60, 511), 60);
+        assert_eq!(watchdog_secs(60, 512), 120);
+        assert_eq!(watchdog_secs(60, 1152), 180);
+        assert_eq!(watchdog_secs(2, 8), 2); // env-shrunk base stays small
+        // huge bases mean "never fire": clamped so Instant + Duration
+        // cannot overflow, not propagated
+        assert_eq!(watchdog_secs(u64::MAX, 4096), MAX_WATCHDOG_SECS);
+        assert_eq!(watchdog_secs(MAX_WATCHDOG_SECS, 10_000), MAX_WATCHDOG_SECS);
+    }
+
+    /// A congested pair: same formulas as the dedicated path when
+    /// resources never contend, plus stall accounting when they do.
+    fn congested_pair(
+        net: NetParams,
+        mapping: Mapping,
+        timing: Timing,
+    ) -> (ThreadComm<i32>, ThreadComm<i32>) {
+        let fabric = Fabric::new(2, net, mapping);
+        let reg = Arc::new(ShardedRegistry::with_fabric(2, None, fabric));
+        let bar = Arc::new(VBarrier::new(2));
+        (
+            ThreadComm::new(0, 2, Arc::clone(&reg), Arc::clone(&bar), timing),
+            ThreadComm::new(1, 2, reg, bar, timing),
+        )
+    }
+
+    #[test]
+    fn backpressure_advances_sender_clock_to_drain_time() {
+        // two ranks on two nodes, inter edge capacity 1, no ports:
+        // α = 1µs, β = 0. Rank 1 is busy (clock at 10µs) before receiving.
+        let net = NetParams::dedicated().edge_capacity(1);
+        let mapping = Mapping::Block { ranks_per_node: 1 };
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0)).with_net(net, mapping);
+        let timing = Timing::Virtual(cost, ComputeCost::new(1e-6)); // 1 µs/byte γ
+        let (mut a, mut b) = congested_pair(net, mapping, timing);
+        let h = thread::spawn(move || {
+            b.charge_compute(10); // clock → 10 µs before draining anything
+            let mut times = Vec::new();
+            for _ in 0..3 {
+                b.recv(0).unwrap();
+                times.push(b.vtime());
+            }
+            (times, b.metrics().clone())
+        });
+        for _ in 0..3 {
+            a.send(1, DataBuf::real(vec![1i32])).unwrap();
+        }
+        // post 0: free slot, starts at 0, a's clock → 1µs.
+        // post 1: needs drain 0 = max(10, 0) + 1 = 11 → stall to 11, clock 12.
+        // post 2: needs drain 1 = max(11, 11) + 1 = 12 → no stall (clock
+        //         already 12), clock 13.
+        assert!((a.vtime() - 13e-6).abs() < 1e-12, "a at {}", a.vtime());
+        assert_eq!(a.metrics().queue_full_events, 1);
+        assert!((a.metrics().stall_us - 10.0).abs() < 1e-9);
+        assert!(a.metrics().max_queue_depth >= 1);
+        let (times, bm) = h.join().unwrap();
+        let expect = [11e-6, 12e-6, 13e-6];
+        for (t, e) in times.iter().zip(expect) {
+            assert!((t - e).abs() < 1e-12, "recv times {times:?}");
+        }
+        assert_eq!(bm.queue_full_events, 0);
+    }
+
+    #[test]
+    fn congested_with_unlimited_resources_matches_dedicated_bitwise() {
+        // active fabric (effectively-unbounded queues), unlimited ports:
+        // the sendrecv completion must equal the scalar scheme bit for bit
+        let link = LinkCost::new(1e-6, 1e-9);
+        let mapping = Mapping::Block { ranks_per_node: 1 };
+        let net = NetParams::dedicated().edge_capacity(1 << 40);
+        let base = CostModel::Uniform(link);
+        let run = |timing: Timing, net: Option<NetParams>| -> (f64, f64) {
+            let (mut a, mut b) = match net {
+                Some(n) => congested_pair(n, mapping, timing),
+                None => pair(timing),
+            };
+            a.vtime = 5e-6;
+            b.vtime = 2e-6;
+            let h = thread::spawn(move || {
+                b.sendrecv(0, DataBuf::real(vec![0i32; 100])).unwrap();
+                b.vtime()
+            });
+            a.sendrecv(1, DataBuf::real(vec![0i32; 250])).unwrap();
+            (a.vtime(), h.join().unwrap())
+        };
+        let dedicated = run(Timing::Virtual(base, ComputeCost::new(0.0)), None);
+        let congested = run(
+            Timing::Virtual(base.with_net(net, mapping), ComputeCost::new(0.0)),
+            Some(net),
+        );
+        assert_eq!(dedicated.0.to_bits(), congested.0.to_bits());
+        assert_eq!(dedicated.1.to_bits(), congested.1.to_bits());
+        // both: max(5µs, 2µs) + 1µs + 1000B·1e-9 = 7µs
+        assert!((dedicated.0 - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_time_measures_from_origin_without_rewinding() {
+        let cost = CostModel::Uniform(crate::model::LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(2e-9));
+        let (mut a, _b) = pair(timing);
+        a.charge_compute(500); // 1 µs
+        assert!((a.time_us() - 1.0).abs() < 1e-9);
+        a.reset_time();
+        assert!((a.time_us() - 0.0).abs() < 1e-12);
+        assert!((a.vtime() - 1e-6).abs() < 1e-15); // absolute clock kept
+        a.charge_compute(500);
+        assert!((a.time_us() - 1.0).abs() < 1e-9);
+        assert!((a.vtime() - 2e-6).abs() < 1e-15);
     }
 }

@@ -14,6 +14,7 @@ use std::thread;
 
 use super::barrier::VBarrier;
 use super::metrics::RankMetrics;
+use super::net::{Fabric, LinkOccupancy};
 use super::thread::{ShardedRegistry, ThreadComm, Timing};
 use super::Comm;
 use crate::buffer::pool::{CowEvent, ShardPool};
@@ -35,6 +36,11 @@ pub struct WorldReport<R> {
     /// Per-rank copy-attribution events — empty unless the crate is built
     /// with the `debug-cow` feature (see `buffer::pool::take_cow_log`).
     pub cow_events: Vec<Vec<CowEvent>>,
+    /// Per-node NIC occupancy (reserved transfer time and transfer counts
+    /// per direction), indexed by node id under the cost model's mapping.
+    /// Empty unless the run used a congestion-aware model with finite
+    /// ports.
+    pub net_occupancy: Vec<LinkOccupancy>,
 }
 
 impl<R> WorldReport<R> {
@@ -71,13 +77,32 @@ impl<R> WorldReport<R> {
     }
 }
 
-/// The shard layout implied by a timing mode: a hierarchical cost model
-/// shards by its node mapping, everything else runs one flat shard.
+/// The shard layout implied by a timing mode: a hierarchical (or
+/// congestion-aware) cost model shards by its node mapping, everything
+/// else runs one flat shard.
 fn implied_mapping(timing: Timing) -> Option<Mapping> {
     match timing {
         Timing::Virtual(model, _) => model.mapping(),
         Timing::Real => None,
     }
+}
+
+/// The network-resource fabric implied by a timing mode: inert unless
+/// the virtual cost model carries finite [`NetParams`](crate::model).
+/// Real timing always gets the inert fabric — congestion is a
+/// virtual-clock feature (a real run takes the time it takes), and an
+/// active fabric would otherwise wait on drain times no real-mode
+/// receiver records.
+fn implied_fabric(p: usize, timing: Timing) -> Fabric {
+    if let Timing::Virtual(model, _) = timing {
+        let net = model.net_params();
+        if !net.is_dedicated() {
+            if let Some(mapping) = model.mapping() {
+                return Fabric::new(p, net, mapping);
+            }
+        }
+    }
+    Fabric::dedicated()
 }
 
 /// Run `f(rank_endpoint)` on `p` threads and collect results, sharding the
@@ -113,7 +138,11 @@ where
     if p == 0 {
         return Err(Error::Config("world size must be >= 1".into()));
     }
-    let registry = Arc::new(ShardedRegistry::new(p, mapping));
+    let registry = Arc::new(ShardedRegistry::with_fabric(
+        p,
+        mapping,
+        implied_fabric(p, timing),
+    ));
     let barrier = Arc::new(VBarrier::new(p));
     // one shared overflow arena per shard: storage a rank's thread-local
     // free list cannot hold is donated to (and reclaimed from) its node
@@ -215,6 +244,7 @@ where
         wall_us: start.elapsed().as_secs_f64() * 1e6,
         metrics,
         cow_events,
+        net_occupancy: registry.fabric().occupancy(),
     })
 }
 

@@ -63,6 +63,9 @@ pub fn measure_with_metrics(
     rounds: usize,
 ) -> Result<(Measurement, RankMetrics)> {
     let spec = *spec;
+    // a spec carrying non-dedicated NetParams upgrades the cost model to
+    // the congestion-aware form
+    let timing = spec.effective_timing(timing);
     let rounds = rounds.max(1);
     let blocks = spec.blocks()?;
     let report = run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {

@@ -41,9 +41,11 @@ pub mod util;
 pub mod prelude {
     pub use crate::buffer::DataBuf;
     pub use crate::collectives::RunSpec;
-    pub use crate::comm::{Comm, Group, RankMetrics, SubComm, ThreadComm, Timing, WorldReport};
+    pub use crate::comm::{
+        Comm, Group, LinkOccupancy, RankMetrics, SubComm, ThreadComm, Timing, WorldReport,
+    };
     pub use crate::error::{Error, Result};
-    pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost};
+    pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
     pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceBackend, ReduceOp, Side, SumOp};
     pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};
 }

@@ -24,7 +24,8 @@ use dpdr::harness::{
     measure, measure_series, measure_with_metrics, render_markdown, render_tsv, TABLE2_COUNTS,
 };
 use dpdr::model::{
-    paper_h, predicted_time_us, AlgoKind, ComputeCost, CostModel, LinkCost,
+    paper_h, predicted_time_us, predicted_time_us_net, AlgoKind, ComputeCost, CostModel,
+    LinkCost, NetParams,
 };
 use dpdr::pipeline::Blocks;
 
@@ -69,6 +70,10 @@ subcommands:
   run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier}}
              --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
              [--mapping block:K|rr:N]  (node layout for --algo hier / --hier cost model)
+             [--ports-per-node N]      (congestion-aware timing: concurrent inter-node
+             transfers per node and direction serialize through N NIC ports; 0 = dedicated)
+             [--edge-capacity N] [--edge-capacity-intra N]  (virtual injection-queue depth
+             per directed edge; posting to a full queue stalls the sender's clock; 0 = unbounded)
              [--reduce-backend auto|scalar|simd|pjrt]  (kernel for the block-wise reduction;
              pjrt needs AOT artifacts — set DPDR_ARTIFACTS — and falls back simd -> scalar)
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
@@ -116,6 +121,18 @@ fn timing_of(args: &Args) -> Result<Timing> {
     Ok(Timing::Virtual(model, ComputeCost::new(gamma)))
 }
 
+/// The shared-network parameters from `--ports-per-node` /
+/// `--edge-capacity` / `--edge-capacity-intra` (all default 0 =
+/// unlimited, i.e. the dedicated model).
+fn net_of(args: &Args) -> Result<NetParams> {
+    let inter = args.get("edge-capacity", 0usize)?;
+    Ok(NetParams {
+        ports_per_node: args.get("ports-per-node", 0usize)?,
+        edge_capacity_inter: inter,
+        edge_capacity_intra: args.get("edge-capacity-intra", inter)?,
+    })
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let algo = AlgoKind::parse(args.raw("algo").unwrap_or("dpdr"))
         .ok_or_else(|| Error::Cli("bad --algo".into()))?;
@@ -128,12 +145,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         dpdr::ops::ReduceBackend::Auto,
         dpdr::ops::ReduceBackend::parse,
     )?;
+    let net = net_of(args)?;
     let spec = RunSpec::new(p, m)
         .block_elems(block)
         .phantom(args.switch("phantom"))
         .mapping(mapping_of(args)?)
-        .reduce_backend(backend);
-    let timing = timing_of(args)?;
+        .reduce_backend(backend)
+        .net(net);
+    // the effective timing (the harness applies the same upgrade, so the
+    // analytic printouts below see the model the run actually used)
+    let timing = spec.effective_timing(timing_of(args)?);
     let (meas, totals) = measure_with_metrics(algo, &spec, timing, rounds)?;
     println!(
         "algo={} p={} m={} block={} rounds={} backend={} time_us={:.2}",
@@ -156,9 +177,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             totals.elems_reduced
         );
     }
+    if !net.is_dedicated() {
+        // how much third-party traffic cost this run (summed over ranks
+        // and rounds)
+        println!(
+            "congestion: stall_us={:.2} queue_full_events={} max_queue_depth={}",
+            totals.stall_us, totals.queue_full_events, totals.max_queue_depth
+        );
+    }
     if let Timing::Virtual(model, _) = timing {
         let b = Blocks::by_size(m, block)?.count();
-        if algo == AlgoKind::Hier {
+        if !model.net_params().is_dedicated() {
+            let pred = predicted_time_us_net(algo, p, m * 4, b, &model);
+            println!("analytic_us={pred:.2} (congestion-aware: dedicated form vs NIC floor)");
+        } else if algo == AlgoKind::Hier {
             // two-level closed form over the actual link levels
             if let dpdr::topo::Mapping::Block { ranks_per_node } = spec.mapping {
                 let (intra, inter) = model.link_levels();

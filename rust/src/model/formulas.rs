@@ -2,7 +2,7 @@
 //! algorithm we implement; the A1/A2 benches compare these against the
 //! virtual-clock measurements.
 
-use super::{lemma, paper_h, LinkCost};
+use super::{lemma, paper_h, CostModel, LinkCost};
 use crate::util::log2_ceil;
 
 /// The algorithms of the evaluation (plus extensions).
@@ -198,6 +198,72 @@ pub fn predicted_time_us_hier(
     intra_secs * 1e6 + cross_us
 }
 
+/// Estimated inter-node bytes the *busiest* node injects per direction,
+/// as a multiple of the per-rank payload `m` — the numerator of the NIC
+/// serialization floor. Rough, structure-derived constants (validated
+/// against `benches/congestion_ablation.rs`):
+///
+/// * flat pipelined trees (dpdr, dpsingle, pipetree, twotree): the node
+///   hosting the top of the post-order tree terminates several large
+///   subtrees' cross-node edges, each carrying the full `m` up and the
+///   full result down → `≈ 4m`;
+/// * the node-aware hierarchical algorithm: `k` segment-dpdr's at `m/k`
+///   each, with the node's ranks in an inner tree position → `≈ 3m`;
+/// * ring with a block mapping: one boundary edge per direction → `≈ 2m`.
+///
+/// `None` when we have no estimate (the caller falls back to the
+/// dedicated prediction).
+fn inter_streams_per_node(algo: AlgoKind) -> Option<f64> {
+    match algo {
+        AlgoKind::Dpdr | AlgoKind::DpdrSingle | AlgoKind::PipeTree | AlgoKind::TwoTree => {
+            Some(4.0)
+        }
+        AlgoKind::Hier => Some(3.0),
+        AlgoKind::Ring => Some(2.0),
+        _ => None,
+    }
+}
+
+/// Predicted time in **microseconds** under a (possibly congestion-aware)
+/// cost model: the dedicated-link closed form of the underlying two-level
+/// model, floored by the busiest node's NIC serialization bound —
+/// `streams · β_inter · m / ports` for the algorithm's estimated per-node
+/// inter-node byte volume (see [`inter_streams_per_node`]). With
+/// unlimited ports (or for algorithms without an estimate) this *is* the
+/// dedicated prediction. Bounded edge capacities are not modelled here:
+/// backpressure shifts *when* bytes move, not how many cross the NIC.
+pub fn predicted_time_us_net(
+    algo: AlgoKind,
+    p: usize,
+    m_bytes: usize,
+    b: usize,
+    model: &CostModel,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let (intra, inter) = model.link_levels();
+    let ppn = model
+        .mapping()
+        .map(|mp| mp.shards(p).iter().map(Vec::len).max().unwrap_or(p))
+        .unwrap_or(p);
+    let base = match algo {
+        AlgoKind::Hier => predicted_time_us_hier(p, ppn, m_bytes, b, intra, inter),
+        _ => predicted_time_us(algo, p, m_bytes, b, inter),
+    };
+    let ports = model.net_params().ports_per_node;
+    if ports == 0 {
+        return base;
+    }
+    match inter_streams_per_node(algo) {
+        Some(streams) => {
+            let floor_us = streams * inter.beta * m_bytes as f64 / ports as f64 * 1e6;
+            base.max(floor_us)
+        }
+        None => base,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +335,49 @@ mod tests {
         // degenerate cases stay sane
         assert_eq!(predicted_time_us_hier(1, 8, m, 4, intra, inter), 0.0);
         assert!(predicted_time_us_hier(8, 8, m, 4, intra, inter) > 0.0);
+    }
+
+    #[test]
+    fn predicted_net_floors_flat_but_spares_hier() {
+        use crate::model::NetParams;
+        use crate::topo::Mapping;
+        let intra = LinkCost::new(0.3e-6, 0.08e-9);
+        let inter = LinkCost::new(1.0e-6, 0.70e-9);
+        let mapping = Mapping::Block { ranks_per_node: 32 };
+        let model = |ports: usize| CostModel::Congested {
+            intra,
+            inter,
+            mapping,
+            net: NetParams::ports(ports),
+        };
+        let dedicated = CostModel::Hierarchical {
+            intra,
+            inter,
+            mapping,
+        };
+        let (p, m, b) = (1152usize, 10_000_000usize, 157usize);
+        let base_flat = predicted_time_us_net(AlgoKind::Dpdr, p, m, b, &dedicated);
+        // unlimited ports: identical to the dedicated prediction
+        assert_eq!(
+            predicted_time_us_net(AlgoKind::Dpdr, p, m, b, &model(0)),
+            base_flat
+        );
+        // one port: the 4βm floor binds for the flat tree
+        let flat_1 = predicted_time_us_net(AlgoKind::Dpdr, p, m, b, &model(1));
+        assert!(flat_1 > base_flat, "{flat_1} vs base {base_flat}");
+        assert!((flat_1 - 4.0 * inter.beta * m as f64 * 1e6).abs() < 1e-6);
+        // hier's floor (3βm) is lower than flat's, and the prediction is
+        // monotone in the port count
+        let hier_1 = predicted_time_us_net(AlgoKind::Hier, p, m, b, &model(1));
+        assert!(hier_1 < flat_1);
+        let flat_4 = predicted_time_us_net(AlgoKind::Dpdr, p, m, b, &model(4));
+        assert!(flat_4 <= flat_1);
+        // algorithms without a stream estimate fall back to the dedicated form
+        let rb_1 = predicted_time_us_net(AlgoKind::ReduceBcast, p, m, b, &model(1));
+        let rb_0 = predicted_time_us_net(AlgoKind::ReduceBcast, p, m, b, &model(0));
+        assert_eq!(rb_1, rb_0);
+        // degenerate world
+        assert_eq!(predicted_time_us_net(AlgoKind::Dpdr, 1, m, b, &model(1)), 0.0);
     }
 
     #[test]

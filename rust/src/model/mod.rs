@@ -5,10 +5,70 @@
 pub mod formulas;
 pub mod lemma;
 
-pub use formulas::{predicted_time_us, predicted_time_us_hier, AlgoKind};
+pub use formulas::{
+    predicted_time_us, predicted_time_us_hier, predicted_time_us_net, AlgoKind,
+};
 pub use lemma::{optimal_block_count, optimal_time};
 
 use crate::topo::{node_of, Mapping};
+
+/// Shared network-resource parameters of the congestion-aware model: how
+/// many concurrent inter-node transfers a node's NIC sustains per
+/// direction, and how deep each directed edge's virtual injection queue
+/// is. `0` always means *unlimited* — the dedicated-link idealization the
+/// paper's analysis (and [`CostModel::Uniform`] / [`CostModel::Hierarchical`])
+/// assume.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetParams {
+    /// Concurrent inter-node transfers per node and direction (the egress
+    /// and ingress timelines each get this many ports). `0` = a dedicated
+    /// port per rank, exactly the paper's model. Intra-node transfers
+    /// never touch the NIC.
+    pub ports_per_node: usize,
+    /// Virtual injection-queue capacity (messages in flight) of intra-node
+    /// edges; `0` = unbounded. Posting to a full queue advances the
+    /// sender's clock to the time the receiver drained the oldest message.
+    pub edge_capacity_intra: usize,
+    /// Injection-queue capacity of inter-node edges; `0` = unbounded.
+    pub edge_capacity_inter: usize,
+}
+
+impl NetParams {
+    /// The dedicated-link idealization: unlimited everything (the
+    /// congestion layer disengages entirely).
+    pub const DEDICATED: NetParams = NetParams {
+        ports_per_node: 0,
+        edge_capacity_intra: 0,
+        edge_capacity_inter: 0,
+    };
+
+    pub fn dedicated() -> NetParams {
+        NetParams::DEDICATED
+    }
+
+    /// `ports_per_node` ports, unbounded edges.
+    pub fn ports(ports_per_node: usize) -> NetParams {
+        NetParams {
+            ports_per_node,
+            ..NetParams::DEDICATED
+        }
+    }
+
+    /// Set both per-level edge capacities.
+    pub fn edge_capacity(mut self, cap: usize) -> NetParams {
+        self.edge_capacity_intra = cap;
+        self.edge_capacity_inter = cap;
+        self
+    }
+
+    /// True when every resource is unlimited — the fabric then adds no
+    /// accounting at all and virtual clocks are the scalar scheme exactly.
+    pub fn is_dedicated(&self) -> bool {
+        self.ports_per_node == 0
+            && self.edge_capacity_intra == 0
+            && self.edge_capacity_inter == 0
+    }
+}
 
 /// Cost of one link direction: `α + β · bytes` seconds.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,6 +119,20 @@ pub enum CostModel {
         inter: LinkCost,
         mapping: Mapping,
     },
+    /// Congestion-aware clustered machine: two-level links as in
+    /// [`CostModel::Hierarchical`], plus shared network resources
+    /// ([`NetParams`]): every node's inter-node transfers serialize
+    /// through `ports_per_node` NIC ports per direction, and each directed
+    /// edge has a finite virtual injection queue. With
+    /// `NetParams::dedicated()` this is [`CostModel::Hierarchical`]
+    /// exactly (bit-identical virtual clocks — pinned by
+    /// `tests/congestion.rs`).
+    Congested {
+        intra: LinkCost,
+        inter: LinkCost,
+        mapping: Mapping,
+        net: NetParams,
+    },
 }
 
 impl CostModel {
@@ -92,6 +166,14 @@ impl CostModel {
         }
     }
 
+    /// [`Self::hydra_hier32`] with shared network resources: the 36×32
+    /// machine where each node's inter-node transfers contend for
+    /// `ports_per_node` full-duplex NIC ports and every edge has a finite
+    /// injection queue — the setting of the congestion ablation.
+    pub fn hydra_congested32(net: NetParams) -> CostModel {
+        CostModel::hydra_hier32().with_net(net, Mapping::Block { ranks_per_node: 32 })
+    }
+
     /// The rank → node layout, when the model distinguishes one. This is
     /// what `run_world` uses to align the transport's registry/pool shards
     /// with the simulated machine's nodes.
@@ -99,6 +181,7 @@ impl CostModel {
         match *self {
             CostModel::Uniform(_) => None,
             CostModel::Hierarchical { mapping, .. } => Some(mapping),
+            CostModel::Congested { mapping, .. } => Some(mapping),
         }
     }
 
@@ -106,7 +189,36 @@ impl CostModel {
     pub fn link_levels(&self) -> (LinkCost, LinkCost) {
         match *self {
             CostModel::Uniform(l) => (l, l),
-            CostModel::Hierarchical { intra, inter, .. } => (intra, inter),
+            CostModel::Hierarchical { intra, inter, .. }
+            | CostModel::Congested { intra, inter, .. } => (intra, inter),
+        }
+    }
+
+    /// The shared-resource parameters — [`NetParams::dedicated`] for the
+    /// idealized (non-congested) models.
+    pub fn net_params(&self) -> NetParams {
+        match *self {
+            CostModel::Congested { net, .. } => net,
+            _ => NetParams::dedicated(),
+        }
+    }
+
+    /// Upgrade this model to the congestion-aware form with the given
+    /// resource limits. A model without a node layout (uniform links)
+    /// takes `default_mapping` — ports need a node concept even when both
+    /// link levels are equal. A dedicated `net` is the identity: the
+    /// model (and the transport fast path) stay exactly as they are.
+    pub fn with_net(self, net: NetParams, default_mapping: Mapping) -> CostModel {
+        if net.is_dedicated() {
+            return self;
+        }
+        let (intra, inter) = self.link_levels();
+        let mapping = self.mapping().unwrap_or(default_mapping);
+        CostModel::Congested {
+            intra,
+            inter,
+            mapping,
+            net,
         }
     }
 
@@ -118,6 +230,12 @@ impl CostModel {
                 intra,
                 inter,
                 mapping,
+            }
+            | CostModel::Congested {
+                intra,
+                inter,
+                mapping,
+                ..
             } => {
                 if node_of(mapping, a) == node_of(mapping, b) {
                     intra
@@ -198,5 +316,69 @@ mod tests {
     fn compute_cost() {
         let c = ComputeCost::new(2e-10);
         assert!((c.reduce(1000) - 2e-7).abs() < 1e-18);
+    }
+
+    #[test]
+    fn net_params_dedicated_and_builders() {
+        assert!(NetParams::dedicated().is_dedicated());
+        assert!(NetParams::default().is_dedicated());
+        let n = NetParams::ports(2);
+        assert!(!n.is_dedicated());
+        assert_eq!(n.edge_capacity_inter, 0);
+        let n = NetParams::dedicated().edge_capacity(3);
+        assert!(!n.is_dedicated());
+        assert_eq!(n.edge_capacity_intra, 3);
+        assert_eq!(n.edge_capacity_inter, 3);
+        assert_eq!(n.ports_per_node, 0);
+    }
+
+    #[test]
+    fn congested_model_accessors() {
+        let mapping = Mapping::Block { ranks_per_node: 4 };
+        let net = NetParams::ports(1).edge_capacity(2);
+        let intra = LinkCost::new(1e-7, 1e-10);
+        let inter = LinkCost::new(1e-6, 1e-9);
+        let m = CostModel::Congested {
+            intra,
+            inter,
+            mapping,
+            net,
+        };
+        assert_eq!(m.mapping(), Some(mapping));
+        assert_eq!(m.link_levels(), (intra, inter));
+        assert_eq!(m.link(0, 3), intra);
+        assert_eq!(m.link(3, 4), inter);
+        assert_eq!(m.net_params(), net);
+        assert!(m.as_uniform().is_none());
+        // the idealized models report dedicated resources
+        assert!(CostModel::hydra_uniform().net_params().is_dedicated());
+        assert!(CostModel::hydra_hier32().net_params().is_dedicated());
+    }
+
+    #[test]
+    fn with_net_upgrades_and_is_identity_when_dedicated() {
+        let mapping = Mapping::Block { ranks_per_node: 8 };
+        let u = CostModel::hydra_uniform();
+        // dedicated net: identity, the fast path stays engaged
+        assert_eq!(u.with_net(NetParams::dedicated(), mapping), u);
+        // non-dedicated: uniform links become a two-equal-level congested
+        // model over the default mapping
+        let net = NetParams::ports(2);
+        let c = u.with_net(net, mapping);
+        assert_eq!(c.net_params(), net);
+        assert_eq!(c.mapping(), Some(mapping));
+        let (intra, inter) = c.link_levels();
+        assert_eq!(intra, inter);
+        assert_eq!(Some(inter), u.as_uniform());
+        // a hierarchical model keeps its own mapping, not the default
+        let h = CostModel::hydra_hier32().with_net(net, mapping);
+        assert_eq!(h.mapping(), Some(Mapping::Block { ranks_per_node: 32 }));
+        // re-upgrading replaces the net params
+        let c2 = c.with_net(NetParams::ports(7), mapping);
+        assert_eq!(c2.net_params(), NetParams::ports(7));
+        // hydra_congested32 carries the 36×32 links + the given net
+        let hc = CostModel::hydra_congested32(NetParams::ports(1));
+        assert_eq!(hc.net_params(), NetParams::ports(1));
+        assert_eq!(hc.link_levels(), CostModel::hydra_hier32().link_levels());
     }
 }

@@ -1,0 +1,328 @@
+//! Congestion-aware virtual network: the three contracts of the `net`
+//! fabric layer.
+//!
+//! 1. **Regression** — with infinite edge capacity and infinite ports the
+//!    fabric's virtual completion times are *bit-identical* to the
+//!    scalar-clock scheme, for every collective in the battery.
+//! 2. **Deadlock freedom** — the full allreduce battery completes at tiny
+//!    edge capacities (1, 2, 3) with one NIC port per node, and the
+//!    payload results agree bitwise with the unbounded run.
+//! 3. **Congestion semantics** — third-party traffic delays transfers:
+//!    one port serializes concurrent inter-node sends from a node,
+//!    backpressure stalls are metered, and per-node NIC occupancy is
+//!    reported.
+
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::{run_world, Comm, Timing};
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
+use dpdr::topo::Mapping;
+
+const ALL_ALGOS: [AlgoKind; 10] = [
+    AlgoKind::Dpdr,
+    AlgoKind::DpdrSingle,
+    AlgoKind::PipeTree,
+    AlgoKind::ReduceBcast,
+    AlgoKind::NativeSwitch,
+    AlgoKind::TwoTree,
+    AlgoKind::Ring,
+    AlgoKind::RecursiveDoubling,
+    AlgoKind::Rabenseifner,
+    AlgoKind::Hier,
+];
+
+/// The satellite battery the bounded-capacity property test runs.
+const BOUNDED_ALGOS: [AlgoKind; 5] = [
+    AlgoKind::Dpdr,
+    AlgoKind::Hier,
+    AlgoKind::RecursiveDoubling,
+    AlgoKind::TwoTree,
+    AlgoKind::Ring,
+];
+
+const MAPPING: Mapping = Mapping::Block { ranks_per_node: 4 };
+const INTRA: LinkCost = LinkCost {
+    alpha: 0.3e-6,
+    beta: 0.08e-9,
+};
+const INTER: LinkCost = LinkCost {
+    alpha: 1.0e-6,
+    beta: 0.70e-9,
+};
+
+fn hier_timing() -> Timing {
+    Timing::Virtual(
+        CostModel::Hierarchical {
+            intra: INTRA,
+            inter: INTER,
+            mapping: MAPPING,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
+fn congested_timing(net: NetParams) -> Timing {
+    Timing::Virtual(
+        CostModel::Congested {
+            intra: INTRA,
+            inter: INTER,
+            mapping: MAPPING,
+            net,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
+/// Contract 1: an *active* fabric whose resources never bind (finite but
+/// never-full edge queues, unlimited ports) reproduces the scalar-clock
+/// scheme bit for bit, for every collective in the battery. This pins
+/// the re-routed `send`/`recv`/`sendrecv`/`sendrecv_pair` timing paths
+/// to the pre-fabric formulas.
+#[test]
+fn infinite_fabric_bit_identical_to_scalar_clocks() {
+    // two flavours of "never binds": a finite capacity far above any
+    // in-flight count (slots acquired, drains recorded, never waits) and
+    // an effectively-unbounded capacity (≥ 2^32: the fabric is active
+    // but skips drain recording entirely)
+    for cap in [1usize << 20, 1 << 40] {
+        let inert_net = NetParams::dedicated().edge_capacity(cap);
+        for algo in ALL_ALGOS {
+            for (p, m, b) in [(12usize, 2048usize, 64usize), (9, 513, 32)] {
+                let spec = RunSpec::new(p, m)
+                    .block_elems(b)
+                    .phantom(true)
+                    .mapping(MAPPING);
+                let scalar = run_allreduce_i32(algo, &spec, hier_timing())
+                    .unwrap_or_else(|e| panic!("{} scalar p={p}: {e}", algo.name()));
+                let fabric = run_allreduce_i32(algo, &spec, congested_timing(inert_net))
+                    .unwrap_or_else(|e| panic!("{} fabric p={p}: {e}", algo.name()));
+                assert_eq!(
+                    scalar.max_vtime_us.to_bits(),
+                    fabric.max_vtime_us.to_bits(),
+                    "{} cap={cap} p={p} m={m}: scalar {} vs fabric {}",
+                    algo.name(),
+                    scalar.max_vtime_us,
+                    fabric.max_vtime_us
+                );
+                // the never-binding fabric meters no stalls
+                let totals = fabric.total_metrics();
+                assert_eq!(totals.queue_full_events, 0, "{}", algo.name());
+                assert_eq!(totals.stall_us, 0.0, "{}", algo.name());
+            }
+        }
+    }
+}
+
+/// The uniform model upgraded with dedicated resources is the identity:
+/// `RunSpec::net` with `NetParams::dedicated()` must not even change the
+/// model (and therefore not the times).
+#[test]
+fn dedicated_net_params_are_the_identity() {
+    let spec = RunSpec::new(8, 1000)
+        .block_elems(100)
+        .phantom(true)
+        .net(NetParams::dedicated());
+    let base = run_allreduce_i32(AlgoKind::Dpdr, &spec, Timing::hydra()).unwrap();
+    let plain = RunSpec::new(8, 1000).block_elems(100).phantom(true);
+    let reference = run_allreduce_i32(AlgoKind::Dpdr, &plain, Timing::hydra()).unwrap();
+    assert_eq!(
+        base.max_vtime_us.to_bits(),
+        reference.max_vtime_us.to_bits()
+    );
+    assert!(base.net_occupancy.is_empty());
+}
+
+/// Contract 2 (the deadlock-freedom property battery): tiny edge
+/// capacities (1, 2, 3) with a single NIC port per node — the full
+/// battery must complete (no real deadlock: the virtual backpressure
+/// wall-waits are FIFO and acyclic for these protocols) and every
+/// payload must agree bitwise with the unbounded run. Congestion also
+/// never makes a run *faster* than the dedicated model.
+#[test]
+fn bounded_edges_battery_completes_and_agrees_bitwise() {
+    for algo in BOUNDED_ALGOS {
+        for (p, m) in [(5usize, 64usize), (8, 257), (12, 1024)] {
+            let spec = RunSpec::new(p, m)
+                .block_elems(16)
+                .seed(0xC0DE + p as u64)
+                .mapping(MAPPING);
+            let expected = spec.expected_sum_i32();
+            let unbounded = run_allreduce_i32(algo, &spec, hier_timing())
+                .unwrap_or_else(|e| panic!("{} unbounded p={p} m={m}: {e}", algo.name()));
+            for cap in [1usize, 2, 3] {
+                let net = NetParams::ports(1).edge_capacity(cap);
+                let report = run_allreduce_i32(algo, &spec, congested_timing(net))
+                    .unwrap_or_else(|e| {
+                        panic!("{} cap={cap} p={p} m={m}: {e}", algo.name())
+                    });
+                // bitwise agreement with the unbounded run on every rank
+                for (rank, (got, want)) in report
+                    .results
+                    .into_iter()
+                    .zip(unbounded.results.iter())
+                    .enumerate()
+                {
+                    let got = got.into_vec().unwrap();
+                    assert_eq!(
+                        got,
+                        want.as_slice().unwrap(),
+                        "{} cap={cap} p={p} m={m} rank={rank}",
+                        algo.name()
+                    );
+                    assert_eq!(got, expected, "{} vs oracle", algo.name());
+                }
+                // shared resources can only delay, never accelerate
+                assert!(
+                    report.max_vtime_us >= unbounded.max_vtime_us - 1e-9,
+                    "{} cap={cap} p={p} m={m}: congested {} < dedicated {}",
+                    algo.name(),
+                    report.max_vtime_us,
+                    unbounded.max_vtime_us
+                );
+            }
+        }
+    }
+}
+
+/// Contract 3a: a single egress port serializes two concurrent
+/// inter-node transfers from one node, the delayed sender's stall is
+/// metered, and the world report carries the per-node NIC occupancy.
+/// Layout: nodes {0,1} and {2,3}. Contention resolves in wall arrival
+/// order, so the test pins that order with a rendezvous outside the
+/// comm layer (it must not touch virtual clocks): rank 1 sends — with
+/// its virtual clock still 0 — only after rank 0's transfer is fully
+/// reserved on the egress side *and* received (ingress-reserved) by
+/// rank 2, so both of rank 1's reservations are deterministically
+/// second.
+#[test]
+fn single_port_serializes_inter_node_transfers() {
+    let mapping = Mapping::Block { ranks_per_node: 2 };
+    let timing = Timing::Virtual(
+        CostModel::Congested {
+            intra: LinkCost::new(0.0, 0.0),
+            inter: LinkCost::new(10e-6, 0.0),
+            mapping,
+            net: NetParams::ports(1),
+        },
+        ComputeCost::new(0.0),
+    );
+    let rendezvous = std::sync::Arc::new(std::sync::Barrier::new(3));
+    let report = run_world::<i32, _, _>(4, timing, move |comm| {
+        use dpdr::buffer::DataBuf;
+        match comm.rank() {
+            0 => {
+                comm.send(2, DataBuf::real(vec![1]))?;
+                rendezvous.wait();
+            }
+            1 => {
+                rendezvous.wait();
+                comm.send(3, DataBuf::real(vec![2]))?;
+            }
+            2 => {
+                let _ = comm.recv(0)?;
+                rendezvous.wait();
+            }
+            _ => {
+                let _ = comm.recv(1)?;
+            }
+        }
+        Ok(comm.time_us())
+    })
+    .unwrap();
+    let t = &report.results;
+    assert!((t[0] - 10.0).abs() < 1e-6, "rank0 {t:?}");
+    assert!((t[1] - 20.0).abs() < 1e-6, "rank1 {t:?}"); // port-delayed by 10µs
+    assert!((t[2] - 10.0).abs() < 1e-6, "rank2 {t:?}");
+    assert!((t[3] - 20.0).abs() < 1e-6, "rank3 {t:?}"); // ingress also serialized
+    // the delayed sender's stall is metered
+    assert!(
+        (report.metrics[1].stall_us - 10.0).abs() < 1e-6,
+        "stall {:?}",
+        report.metrics[1].stall_us
+    );
+    assert_eq!(report.metrics[0].queue_full_events, 0);
+    // the congested model's mapping shards the registry, like hierarchical
+    let shard_ids: Vec<u32> = report.metrics.iter().map(|m| m.shard_id).collect();
+    assert_eq!(shard_ids, vec![0, 0, 1, 1]);
+    // per-node NIC occupancy: both transfers leave node 0 and land on node 1
+    assert_eq!(report.net_occupancy.len(), 2);
+    let (n0, n1) = (&report.net_occupancy[0], &report.net_occupancy[1]);
+    assert_eq!(n0.node, 0);
+    assert_eq!(n0.egress_transfers, 2);
+    assert!((n0.egress_busy_us - 20.0).abs() < 1e-6);
+    assert_eq!(n0.ingress_transfers, 0);
+    assert_eq!(n1.ingress_transfers, 2);
+    assert!((n1.ingress_busy_us - 20.0).abs() < 1e-6);
+    assert_eq!(n1.egress_transfers, 0);
+}
+
+/// Contract 3b: finite ports make the flat tree measurably slower on a
+/// clustered world — the small-scale version of the congestion ablation.
+/// A round-robin layout puts essentially every tree edge across node
+/// boundaries, so each node's four ranks push ≈ 4 full streams through
+/// one port: the NIC bound dwarfs the dedicated critical path.
+#[test]
+fn one_port_slows_flat_dpdr_on_clustered_world() {
+    let mapping = Mapping::RoundRobin { nodes: 4 };
+    let spec = RunSpec::new(16, 100_000)
+        .block_elems(4_000)
+        .phantom(true)
+        .mapping(mapping);
+    let timing = |net: NetParams| {
+        Timing::Virtual(
+            CostModel::Congested {
+                intra: INTRA,
+                inter: INTER,
+                mapping,
+                net,
+            },
+            ComputeCost::new(0.25e-9),
+        )
+    };
+    let dedicated = run_allreduce_i32(
+        AlgoKind::Dpdr,
+        &spec,
+        Timing::Virtual(
+            CostModel::Hierarchical {
+                intra: INTRA,
+                inter: INTER,
+                mapping,
+            },
+            ComputeCost::new(0.25e-9),
+        ),
+    )
+    .unwrap()
+    .max_vtime_us;
+    let congested = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing(NetParams::ports(1)))
+        .unwrap()
+        .max_vtime_us;
+    assert!(
+        congested > dedicated * 1.3,
+        "one port should visibly slow flat dpdr under round-robin: \
+         {congested} vs {dedicated}"
+    );
+    // and more ports relieve the contention monotonically
+    let relieved = run_allreduce_i32(AlgoKind::Dpdr, &spec, timing(NetParams::ports(8)))
+        .unwrap()
+        .max_vtime_us;
+    assert!(relieved <= congested + 1e-6, "{relieved} vs {congested}");
+}
+
+/// `RunSpec::net` upgrades a plain timing to the congested model — the
+/// CLI path: `--ports-per-node`/`--edge-capacity` land in the spec, not
+/// in the user's `--hier` model.
+#[test]
+fn runspec_net_upgrades_timing() {
+    let net = NetParams::ports(1).edge_capacity(2);
+    let spec = RunSpec::new(8, 10_000)
+        .block_elems(1_000)
+        .phantom(true)
+        .mapping(MAPPING)
+        .net(net);
+    // base timing is hierarchical without net params; the spec upgrades it
+    let report = run_allreduce_i32(AlgoKind::Dpdr, &spec, hier_timing()).unwrap();
+    assert!(!report.net_occupancy.is_empty(), "fabric must be engaged");
+    let plain = RunSpec { net: NetParams::dedicated(), ..spec };
+    let reference = run_allreduce_i32(AlgoKind::Dpdr, &plain, hier_timing()).unwrap();
+    assert!(report.max_vtime_us >= reference.max_vtime_us - 1e-9);
+    assert!(reference.net_occupancy.is_empty());
+}
