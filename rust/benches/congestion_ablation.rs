@@ -152,22 +152,36 @@ fn main() {
         report.max_vtime_us, totals.stall_us, totals.queue_full_events, totals.max_queue_depth
     ));
 
-    // --- per-node NIC occupancy of the 1-port flat run -------------------
-    let report = run_allreduce_i32(
-        AlgoKind::Dpdr,
-        &spec,
-        timing(mapping, NetParams::ports(1)),
-    )
-    .expect("occupancy run");
-    let busiest = report
-        .net_occupancy
-        .iter()
-        .map(|o| o.egress_busy_us)
-        .fold(0.0f64, f64::max);
-    println!("# busiest node egress occupancy: {busiest:.1} us over {} nodes",
-        report.net_occupancy.len());
+    // --- per-node NIC occupancy of the 1-port runs -----------------------
+    let busiest_egress = |algo: AlgoKind| -> f64 {
+        let report = run_allreduce_i32(algo, &spec, timing(mapping, NetParams::ports(1)))
+            .expect("occupancy run");
+        report
+            .net_occupancy
+            .iter()
+            .map(|o| o.egress_busy_us)
+            .fold(0.0f64, f64::max)
+    };
+    let busiest = busiest_egress(AlgoKind::Dpdr);
+    println!("# busiest node egress occupancy (flat dpdr): {busiest:.1} us over {} nodes",
+        p / ppn);
     json.push(format!(
         "  \"flat_ports1_busiest_egress_us\": {busiest:.1}"
+    ));
+    // 1-port assertion for the throttled hier (segment launches capped at
+    // ports_per_node, see collectives::hierarchical): its busiest node
+    // pushes ~3m through the NIC against the flat tree's ~4m, so its peak
+    // egress occupancy must stay strictly below the flat tree's. The
+    // throttle reorders *when* bytes move, never how many.
+    let busiest_hier = busiest_egress(AlgoKind::Hier);
+    assert!(
+        busiest_hier < busiest,
+        "throttled hier peak egress ({busiest_hier:.1} us) must stay below \
+         flat dpdr's ({busiest:.1} us) at 1 port/node"
+    );
+    println!("# busiest node egress occupancy (capped hier): {busiest_hier:.1} us");
+    json.push(format!(
+        "  \"hier_ports1_busiest_egress_us\": {busiest_hier:.1}"
     ));
 
     let body = format!("{{\n{}\n}}\n", json.join(",\n"));

@@ -1,0 +1,176 @@
+//! **Fusion / overlap ablation** — the serving-workload scenario the
+//! blocking harness cannot express: K small allreduces in flight at once.
+//!
+//! Three strategies over the same traffic (K ops of m ints each, virtual
+//! "Hydra" timing):
+//!
+//! * **sequential** — K blocking dpdr's back to back, each at its own
+//!   Pipelining-Lemma block count: the α-chain `(4h − 6)α` is paid K
+//!   times;
+//! * **overlap** — K nonblocking dpdr's on disjoint tag leases: the
+//!   chains run concurrently on the virtual clock (idealized dedicated
+//!   links), so completion tends to one chain's time;
+//! * **fused** — the nbc fusion layer coalesces the K ops into one
+//!   concatenated vector and runs a *single* dpdr at the lemma-optimal
+//!   depth for the fused length: one α-chain, β conserved.
+//!
+//! Also measured: overlap under `CostModel::Congested` with one NIC port
+//! per node — overlapped operations contending for shared ports, the
+//! interaction the tagged transport was built to expose.
+//!
+//! Writes `BENCH_fusion.json`; `bench_check` gates
+//! `fusion_headline.speedup` against the committed conservative baseline.
+//! The bench itself asserts the acceptance floor: fused > sequential for
+//! m ≤ 1024 at K = 8.
+//!
+//! Run: `cargo bench --bench fusion_overlap [-- --p 8 --k 8]`
+
+use dpdr::buffer::DataBuf;
+use dpdr::cli::Args;
+use dpdr::collectives::{allreduce, RunSpec};
+use dpdr::comm::{run_world, Comm, RankMetrics, Timing};
+use dpdr::model::{predicted_fusion_speedup, AlgoKind, LinkCost, NetParams};
+use dpdr::nbc::{driver::concurrent_time_us, run_concurrent_i32, ConcurrentSpec, FusePolicy};
+use dpdr::ops::SumOp;
+use dpdr::pipeline::Blocks;
+use dpdr::topo::Mapping;
+
+/// The uniform "Hydra" link the virtual clock charges.
+const LINK: LinkCost = LinkCost {
+    alpha: 1.0e-6,
+    beta: 0.70e-9,
+};
+
+/// The per-op block size every strategy uses for solo launches: the
+/// Pipelining-Lemma optimal count for one m-element op, expressed as a
+/// block size so the sequential baseline and the engine's `RunSpec`
+/// derive the *identical* partition (a count round-tripped through
+/// `block_elems` changes whenever it does not divide `m`).
+fn op_block_elems(p: usize, m: usize) -> usize {
+    let (a, c) = AlgoKind::Dpdr.step_structure(p).expect("dpdr is pipelined");
+    let b_opt = Blocks::lemma_optimal(m, 4, a, c, LINK).count();
+    m.max(1).div_ceil(b_opt)
+}
+
+/// K blocking dpdr's back to back; returns the slowest rank's time.
+fn sequential_us(p: usize, m: usize, k: usize) -> f64 {
+    let blocks =
+        Blocks::by_size(m, op_block_elems(p, m)).expect("block size is >= 1 by construction");
+    let report = run_world::<i32, _, _>(p, Timing::hydra(), move |comm| {
+        comm.barrier()?;
+        comm.reset_time();
+        for _ in 0..k {
+            let x = DataBuf::phantom(m);
+            allreduce(AlgoKind::Dpdr, comm, x, &SumOp, &blocks)?;
+        }
+        Ok(comm.time_us())
+    })
+    .expect("sequential world");
+    report.results.into_iter().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// K nonblocking dpdr's through the engine (fused or merely overlapped).
+/// Solo ops get the exact per-op partition the sequential baseline uses
+/// (see [`op_block_elems`]), so overlap vs sequential is apples to
+/// apples; the fused path re-blocks at the lemma optimum for the *fused*
+/// length itself.
+fn engine_us(
+    p: usize,
+    m: usize,
+    k: usize,
+    fuse: FusePolicy,
+    net: NetParams,
+    mapping: Mapping,
+) -> (f64, RankMetrics) {
+    let base = RunSpec::new(p, m)
+        .block_elems(op_block_elems(p, m))
+        .phantom(true)
+        .mapping(mapping)
+        .net(net);
+    let cspec = ConcurrentSpec::new(base, k).fuse(fuse);
+    let report = run_concurrent_i32(&cspec, Timing::hydra()).expect("engine world");
+    (concurrent_time_us(&report), report.total_metrics())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 8usize).unwrap();
+    let k = args.get("k", 8usize).unwrap();
+    let mapping = Mapping::Block { ranks_per_node: 2 };
+
+    let mut json: Vec<String> = Vec::new();
+    println!("# fusion/overlap ablation: p={p}, k={k}, hydra virtual timing");
+    println!("#m\tseq_us\toverlap_us\tfused_us\tfused_speedup\tpredicted");
+
+    let mut headline = 0.0f64;
+    for &m in &[64usize, 256, 1024] {
+        let seq = sequential_us(p, m, k);
+        let (ovl, _) = engine_us(p, m, k, FusePolicy::off(), NetParams::dedicated(), mapping);
+        let (fus, totals) =
+            engine_us(p, m, k, FusePolicy::new(m, k), NetParams::dedicated(), mapping);
+        let speedup = seq / fus;
+        let predicted = predicted_fusion_speedup(p, m * 4, k, LINK);
+        println!("{m}\t{seq:.2}\t{ovl:.2}\t{fus:.2}\t{speedup:.2}x\t{predicted:.2}x");
+        json.push(format!(
+            "  \"fusion_m{m}_k{k}\": {{\"seq_us\": {seq:.2}, \"overlap_us\": {ovl:.2}, \
+             \"fused_us\": {fus:.2}, \"speedup\": {speedup:.3}, \
+             \"predicted_speedup\": {predicted:.3}}}"
+        ));
+        // the acceptance floor: fused small-message allreduce must beat
+        // back-to-back sequential ops (m <= 1024, k >= 8 ops)
+        assert!(
+            speedup > 1.0,
+            "fused ({fus:.2} us) must beat sequential ({seq:.2} us) at m={m}, k={k}"
+        );
+        // overlap on dedicated links must also beat the blocking loop
+        assert!(
+            ovl < seq,
+            "overlap ({ovl:.2} us) must beat sequential ({seq:.2} us) at m={m}"
+        );
+        // every op went through the fusion layer
+        assert_eq!(totals.fused_ops, (k * p) as u64);
+        assert_eq!(totals.ops_in_flight_max, k as u64);
+        if m == 1024 {
+            headline = speedup;
+        }
+    }
+
+    // --- overlap under congestion: one NIC port per node -----------------
+    // same K concurrent ops, now contending for shared egress/ingress
+    // ports (p/2 nodes of 2 ranks). Congestion only ever delays; times
+    // carry arrival-order noise, so the check keeps a small slack.
+    let m = 1024usize;
+    let (ovl_dedicated, _) =
+        engine_us(p, m, k, FusePolicy::off(), NetParams::dedicated(), mapping);
+    let (ovl_ports1, totals) =
+        engine_us(p, m, k, FusePolicy::off(), NetParams::ports(1), mapping);
+    assert!(
+        ovl_ports1 >= ovl_dedicated * 0.98,
+        "shared ports cannot accelerate: {ovl_ports1:.2} vs {ovl_dedicated:.2}"
+    );
+    assert!(totals.stall_us >= 0.0 && totals.stall_us.is_finite());
+    println!(
+        "# overlap m={m} k={k}: dedicated {ovl_dedicated:.2} us, 1 port/node {ovl_ports1:.2} us \
+         (x{:.2}, stall {:.0} us)",
+        ovl_ports1 / ovl_dedicated,
+        totals.stall_us
+    );
+    json.push(format!(
+        "  \"overlap_congested_m{m}_k{k}\": {{\"dedicated_us\": {ovl_dedicated:.2}, \
+         \"ports1_us\": {ovl_ports1:.2}, \"slowdown\": {:.3}, \"stall_us\": {:.1}}}",
+        ovl_ports1 / ovl_dedicated,
+        totals.stall_us
+    ));
+
+    // --- headline gate value ---------------------------------------------
+    json.push(format!(
+        "  \"fusion_headline\": {{\"p\": {p}, \"k\": {k}, \"m\": 1024, \"speedup\": {headline:.3}}}"
+    ));
+    println!("# headline: fused speedup at m=1024, k={k}: {headline:.2}x");
+    assert!(headline > 1.0);
+
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    std::fs::write("BENCH_fusion.json", &body).expect("write BENCH_fusion.json");
+    eprintln!("wrote BENCH_fusion.json");
+}

@@ -15,7 +15,11 @@
 //! * `congestion_36x32.hier_speedup_ports1` (`BENCH_congestion.json`,
 //!   written by `cargo bench --bench congestion_ablation`) — the
 //!   node-aware hierarchical allreduce must keep beating flat dpdr at
-//!   one NIC port per node on the 36×32 world.
+//!   one NIC port per node on the 36×32 world;
+//! * `fusion_headline.speedup` (`BENCH_fusion.json`, written by
+//!   `cargo bench --bench fusion_overlap`) — the nbc fusion layer's
+//!   coalesced small-message allreduce must keep beating back-to-back
+//!   sequential ops.
 //!
 //! ```text
 //! cargo run --release --bin bench_check                 # gate against baselines
@@ -23,7 +27,8 @@
 //! ```
 //!
 //! The committed baselines (`BENCH_baseline.json`,
-//! `BENCH_reduce_baseline.json`, `BENCH_congestion_baseline.json`) are
+//! `BENCH_reduce_baseline.json`, `BENCH_congestion_baseline.json`,
+//! `BENCH_fusion_baseline.json`) are
 //! deliberately conservative floors / generous ceilings recorded to
 //! *arm* the gate on any CI hardware; re-record with `--write-baseline`
 //! on a reference machine to tighten them. A missing baseline or fresh
@@ -119,6 +124,14 @@ fn main() {
         .raw("congestion-baseline")
         .unwrap_or("BENCH_congestion_baseline.json")
         .to_string();
+    let fusion_fresh_path = args
+        .raw("fusion-fresh")
+        .unwrap_or("BENCH_fusion.json")
+        .to_string();
+    let fusion_base_path = args
+        .raw("fusion-baseline")
+        .unwrap_or("BENCH_fusion_baseline.json")
+        .to_string();
     // tolerance: flag > env > 10% default, so per-machine tightening needs
     // no code change
     let env_tol = std::env::var("DPDR_BENCH_TOLERANCE")
@@ -133,7 +146,12 @@ fn main() {
         &congestion_fresh_path,
         "run `cargo bench --bench congestion_ablation`",
     );
-    if fresh.is_none() && reduce_fresh.is_none() && congestion_fresh.is_none() {
+    let fusion_fresh = read_report(&fusion_fresh_path, "run `cargo bench --bench fusion_overlap`");
+    if fresh.is_none()
+        && reduce_fresh.is_none()
+        && congestion_fresh.is_none()
+        && fusion_fresh.is_none()
+    {
         eprintln!("bench_check: no fresh reports at all — run the benches first");
         std::process::exit(2);
     }
@@ -152,6 +170,10 @@ fn main() {
             println!(
                 "bench_check: recorded {congestion_base_path} from {congestion_fresh_path}"
             );
+        }
+        if let Some(f) = &fusion_fresh {
+            std::fs::write(&fusion_base_path, f).expect("write fusion baseline");
+            println!("bench_check: recorded {fusion_base_path} from {fusion_fresh_path}");
         }
         return;
     }
@@ -257,6 +279,33 @@ fn main() {
             Err(_) => println!(
                 "bench_check: no baseline at {congestion_base_path} — congestion gate \
                  passes (bootstrap)."
+            ),
+        }
+    }
+
+    if let Some(fresh) = &fusion_fresh {
+        match std::fs::read_to_string(&fusion_base_path) {
+            Ok(base) => {
+                armed += 1;
+                // fused small-message allreduce must keep beating the
+                // back-to-back sequential loop (the committed baseline is
+                // a conservative 1.0 — parity)
+                gate.check_floor(
+                    "fusion_headline.speedup",
+                    pick(fresh, "fusion_headline", "speedup"),
+                    pick(&base, "fusion_headline", "speedup"),
+                    tol,
+                );
+                if let Some(s) = num_after(fresh, "overlap_congested_m1024_k8", "slowdown") {
+                    println!(
+                        "overlap_congested_m1024_k8.slowdown: {s:.2}x at 1 port/node \
+                         (informational)"
+                    );
+                }
+            }
+            Err(_) => println!(
+                "bench_check: no baseline at {fusion_base_path} — fusion gate passes \
+                 (bootstrap)."
             ),
         }
     }

@@ -14,7 +14,10 @@
 //!   doubly-pipelined dual-root allreduce on its segment **concurrently**;
 //!   an intra-node *allgather* reassembles the vector. Inter-node β-cost
 //!   per rank drops from `3βm` to `3βm/k` — the node-aware win — while the
-//!   intra phases add only `≈ 2·β_intra·m`.
+//!   intra phases add only `≈ 2·β_intra·m`. Under a congestion-aware cost
+//!   model with fewer NIC ports than segments, the concurrent launch is
+//!   throttled into waves of `NetParams::ports_per_node` segment groups
+//!   (see the phase-2 comment in `hier_segment_parallel`).
 //! * **Leader-based** (ragged or non-power-of-two groups): intra-node
 //!   binomial reduce to the node leader, dpdr among the leaders, intra-node
 //!   binomial broadcast. Robust for any `p` / layout, including `p` not
@@ -33,7 +36,7 @@
 //! communication is needed to agree on the hierarchy.
 
 use crate::buffer::DataBuf;
-use crate::comm::{Comm, Group, ThreadComm};
+use crate::comm::{Comm, Group, ThreadComm, Timing};
 use crate::error::Result;
 use crate::ops::{Elem, ReduceOp, Side};
 use crate::pipeline::Blocks;
@@ -116,6 +119,43 @@ fn hier_leader<E: Elem, O: ReduceOp<E>>(
     Ok(y)
 }
 
+/// One segment group's cross-node dpdr: the `e`-th rank of every node
+/// reduces the owned element range `[mlo, mhi)` with its peers. Factored
+/// out of [`hier_segment_parallel`] so the congestion-aware wave throttle
+/// can launch it per wave.
+#[allow(clippy::too_many_arguments)]
+fn cross_dpdr<E: Elem, O: ReduceOp<E>>(
+    comm: &mut ThreadComm<E>,
+    y: &mut DataBuf<E>,
+    op: &O,
+    blocks: &Blocks,
+    node_groups: &[Group],
+    e: usize,
+    mlo: usize,
+    mhi: usize,
+) -> Result<()> {
+    // the i-th rank of every node, in node order
+    let cross = Group::new(
+        node_groups
+            .iter()
+            .map(|g| g.members()[e])
+            .collect::<Vec<_>>(),
+    )?;
+    let mut sub = comm.sub(&cross)?;
+    // owned snapshot, not a view: dpdr reduces into the segment it is
+    // handed, and a view would force a whole-vector copy-on-write
+    let _site = crate::buffer::pool::cow_site("hier/cross-dpdr");
+    let seg = y.extract_owned(mlo, mhi)?;
+    // keep the global pipeline *depth* (block count), not block size:
+    // the segment is m/k elements, so same-size blocks would collapse
+    // the cross-node pipeline to b/k stages and squander the overlap
+    // the α-term is paid for
+    let seg_blocks = Blocks::by_count(mhi - mlo, blocks.count());
+    let out = allreduce_dpdr(&mut sub, seg, op, &seg_blocks)?;
+    y.write_at(mlo, &out)?;
+    Ok(())
+}
+
 /// Segment-parallel shape for uniform power-of-two node groups: halving
 /// reduce-scatter inside the node, dpdr across nodes per owned segment
 /// (all `k` segment groups concurrently over disjoint links), doubling
@@ -166,27 +206,39 @@ fn hier_segment_parallel<E: Elem, O: ReduceOp<E>>(
     debug_assert_eq!(shi - slo, 1); // this rank owns one segment
 
     // --- phase 2: dpdr across nodes on the owned segment ------------------
+    //
+    // All k segment groups are *logically* concurrent, but each node's
+    // inter-node transfers share its NIC: under a congestion-aware cost
+    // model with `ports_per_node < k` the segment-parallel launch is
+    // throttled into waves of at most `ports_per_node` concurrent
+    // segment-dpdrs per node (ROADMAP: "congestion-aware hier"). Waves
+    // are separated by intra-node barriers, so a node never *initiates*
+    // more concurrent inter-node streams than it has ports — trading a
+    // little latency (one barrier per wave) for bounded NIC pressure.
+    // With unlimited ports (or real timing) the throttle disengages and
+    // the phase is exactly the previous fully-concurrent launch.
     let (mlo, mhi) = elem_range(&segs, slo, shi);
-    {
-        // the i-th rank of every node, in node order
-        let cross = Group::new(
-            node_groups
-                .iter()
-                .map(|g| g.members()[e])
-                .collect::<Vec<_>>(),
-        )?;
-        let mut sub = comm.sub(&cross)?;
-        // owned snapshot, not a view: dpdr reduces into the segment it is
-        // handed, and a view would force a whole-vector copy-on-write
-        let _site = crate::buffer::pool::cow_site("hier/cross-dpdr");
-        let seg = y.extract_owned(mlo, mhi)?;
-        // keep the global pipeline *depth* (block count), not block size:
-        // the segment is m/k elements, so same-size blocks would collapse
-        // the cross-node pipeline to b/k stages and squander the overlap
-        // the α-term is paid for
-        let seg_blocks = Blocks::by_count(mhi - mlo, blocks.count());
-        let out = allreduce_dpdr(&mut sub, seg, op, &seg_blocks)?;
-        y.write_at(mlo, &out)?;
+    let ports = match comm.timing() {
+        Timing::Virtual(model, _) => model.net_params().ports_per_node,
+        Timing::Real => 0,
+    };
+    let waves = if ports > 0 && ports < k {
+        k.div_ceil(ports)
+    } else {
+        1
+    };
+    if waves == 1 {
+        cross_dpdr(comm, &mut y, op, blocks, node_groups, e, mlo, mhi)?;
+    } else {
+        let my_wave = e / ports;
+        for w in 0..waves {
+            if w == my_wave {
+                cross_dpdr(comm, &mut y, op, blocks, node_groups, e, mlo, mhi)?;
+            }
+            if w + 1 < waves {
+                comm.sub(group)?.barrier()?;
+            }
+        }
     }
 
     // --- phase 3: intra-node allgather (replay the halving in reverse) ---
@@ -303,6 +355,45 @@ mod tests {
                 .max_vtime_us
         };
         assert_eq!(t(false).to_bits(), t(true).to_bits());
+    }
+
+    #[test]
+    fn port_capped_waves_stay_correct_and_never_accelerate() {
+        use crate::model::NetParams;
+        // uniform power-of-two nodes with ports < k: the segment-parallel
+        // launch is throttled into waves. Payloads must stay bitwise
+        // correct and the capped run can only be slower than dedicated.
+        let mapping = Mapping::Block { ranks_per_node: 4 };
+        let base = CostModel::Hierarchical {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping,
+        };
+        let dedicated = Timing::Virtual(base, ComputeCost::new(0.25e-9));
+        let spec = RunSpec::new(8, 96).block_elems(8).mapping(mapping);
+        let expected = spec.expected_sum_i32();
+        let free = run_allreduce_i32(AlgoKind::Hier, &spec, dedicated).unwrap();
+        for ports in [1usize, 2] {
+            let net = NetParams::ports(ports);
+            let capped = Timing::Virtual(
+                base.with_net(net, mapping),
+                ComputeCost::new(0.25e-9),
+            );
+            let report = run_allreduce_i32(AlgoKind::Hier, &spec, capped).unwrap();
+            for (rank, buf) in report.results.into_iter().enumerate() {
+                assert_eq!(
+                    buf.into_vec().unwrap(),
+                    expected,
+                    "ports={ports} rank={rank}"
+                );
+            }
+            assert!(
+                report.max_vtime_us >= free.max_vtime_us - 1e-9,
+                "ports={ports}: capped {} < dedicated {}",
+                report.max_vtime_us,
+                free.max_vtime_us
+            );
+        }
     }
 
     #[test]

@@ -37,9 +37,11 @@ use crate::pipeline::Blocks;
 use crate::topo::Mapping;
 use crate::util::XorShift64;
 
-/// Dispatch a *flat* allreduce by [`AlgoKind`] on any communicator
+/// Dispatch a *flat* collective by [`AlgoKind`] on any communicator
 /// (including a sub-communicator). `AlgoKind::Hier` needs a node layout
 /// and a world endpoint — dispatch it through [`allreduce_on`].
+/// `AlgoKind::Scan` runs the pipelined inclusive prefix scan — rank `r`
+/// gets `x_0 ⊙ … ⊙ x_r`, not the reduction-to-all.
 pub fn allreduce<E: Elem, O: ReduceOp<E>>(
     algo: AlgoKind,
     comm: &mut impl Comm<E>,
@@ -59,6 +61,7 @@ pub fn allreduce<E: Elem, O: ReduceOp<E>>(
         AlgoKind::Ring => allreduce_ring(comm, x, op),
         AlgoKind::RecursiveDoubling => allreduce_recursive_doubling(comm, x, op),
         AlgoKind::Rabenseifner => allreduce_rabenseifner(comm, x, op),
+        AlgoKind::Scan => scan_pipelined(comm, x, op, blocks),
         AlgoKind::Hier => Err(Error::Config(
             "hier is node-aware: dispatch it with allreduce_on(algo, comm, …, mapping)".into(),
         )),
@@ -185,6 +188,53 @@ impl RunSpec {
         }
         acc
     }
+
+    /// All prefix-scan oracles in one O(p·m) pass: entry `r` is the
+    /// element-wise sum over rank inputs `0 ..= r` (what
+    /// [`AlgoKind::Scan`] leaves on rank `r`).
+    pub fn expected_prefixes_i32(&self) -> Vec<Vec<i32>> {
+        let mut acc = vec![0i32; self.m];
+        let mut out = Vec::with_capacity(self.p);
+        for r in 0..self.p {
+            for (a, v) in acc.iter_mut().zip(self.input_i32(r)) {
+                *a = a.wrapping_add(v);
+            }
+            out.push(acc.clone());
+        }
+        out
+    }
+
+    /// The prefix-scan oracle for one `rank`. Checking every rank? Use
+    /// [`RunSpec::expected_prefixes_i32`] (this is O(p·m) per call).
+    pub fn expected_prefix_i32(&self, rank: usize) -> Vec<i32> {
+        if self.p == 0 {
+            return vec![0i32; self.m];
+        }
+        self.expected_prefixes_i32()
+            .swap_remove(rank.min(self.p - 1))
+    }
+
+    /// The per-rank oracles of `algo`, one O(p·m) pass for the whole
+    /// world: the rank prefixes for the scan, the shared allreduce sum
+    /// for every reduction-to-all kind.
+    pub fn expected_i32_per_rank(&self, algo: AlgoKind) -> Vec<Vec<i32>> {
+        let mut prefixes = self.expected_prefixes_i32();
+        if algo != AlgoKind::Scan {
+            let sum = prefixes.pop().unwrap_or_default();
+            prefixes = vec![sum; self.p];
+        }
+        prefixes
+    }
+
+    /// The per-rank oracle for any [`AlgoKind`]: the allreduce sum for
+    /// the reduction-to-all algorithms, the rank prefix for the scan.
+    pub fn expected_i32(&self, algo: AlgoKind, rank: usize) -> Vec<i32> {
+        if algo == AlgoKind::Scan {
+            self.expected_prefix_i32(rank)
+        } else {
+            self.expected_sum_i32()
+        }
+    }
 }
 
 /// Run an i32 `MPI_SUM` allreduce world (the paper's Table 2 setting) and
@@ -221,5 +271,26 @@ mod tests {
         assert_ne!(s2.expected_sum_i32(), s3.expected_sum_i32());
         assert_eq!(s2.input_i32(0), s2.input_i32(0)); // deterministic
         assert_ne!(s2.input_i32(0), s2.input_i32(1)); // distinct per rank
+    }
+
+    #[test]
+    fn scan_dispatches_with_prefix_oracle() {
+        let spec = RunSpec::new(5, 12).block_elems(4);
+        let report = run_allreduce_i32(AlgoKind::Scan, &spec, Timing::Real).unwrap();
+        for (rank, buf) in report.results.into_iter().enumerate() {
+            assert_eq!(
+                buf.into_vec().unwrap(),
+                spec.expected_prefix_i32(rank),
+                "rank {rank}"
+            );
+        }
+        // the last rank's prefix is the full reduction
+        assert_eq!(spec.expected_prefix_i32(4), spec.expected_sum_i32());
+        // the algo-aware oracle branches per kind
+        assert_eq!(
+            spec.expected_i32(AlgoKind::Scan, 2),
+            spec.expected_prefix_i32(2)
+        );
+        assert_eq!(spec.expected_i32(AlgoKind::Dpdr, 2), spec.expected_sum_i32());
     }
 }

@@ -65,16 +65,24 @@ impl VBarrier {
     }
 }
 
-/// Lazily created, shared barriers keyed by a group's exact member list.
+/// Lazily created, shared barriers keyed by a group's exact member list
+/// plus the communication *tag* of the endpoints synchronizing on it.
 ///
 /// All members of a [`Group`](super::Group) that call a group barrier must
 /// agree on the member list (they derive it from the same `Group` value),
 /// so the list itself is the rendezvous key: the first caller creates the
-/// `VBarrier`, everyone else finds it. Entries live for the world's
-/// lifetime — a table entry is ~the member vector plus one barrier, and the
-/// set of distinct groups a run uses is small (node groups, leader group).
+/// `VBarrier`, everyone else finds it. The tag keeps concurrent
+/// nonblocking operations apart: two in-flight collectives over the *same*
+/// group (different tag-space leases — see [`crate::nbc`]) must not share
+/// barrier generations, or their waits would interleave. Entries live for
+/// the world's lifetime — a table entry is ~the member vector plus one
+/// barrier, and the set of distinct `(group, tag)` pairs a run uses is
+/// small (node groups × in-flight operations).
 pub(super) struct BarrierTable {
-    inner: Mutex<HashMap<Vec<usize>, Arc<VBarrier>>>,
+    /// Two-level map (member list → tag → barrier) so the hit path — the
+    /// common case once a group's barrier exists — looks up with the
+    /// borrowed `&[usize]` and allocates nothing.
+    inner: Mutex<HashMap<Vec<usize>, HashMap<u32, Arc<VBarrier>>>>,
 }
 
 impl BarrierTable {
@@ -84,15 +92,22 @@ impl BarrierTable {
         }
     }
 
-    /// The barrier shared by exactly the ranks in `members` (created on
-    /// first touch; `VBarrier` is reusable across generations).
-    pub(super) fn get(&self, members: &[usize]) -> Arc<VBarrier> {
+    /// The barrier shared by exactly the ranks in `members` on `tag`
+    /// (created on first touch; `VBarrier` is reusable across generations).
+    pub(super) fn get(&self, members: &[usize], tag: u32) -> Arc<VBarrier> {
         let mut map = self.inner.lock().unwrap();
-        if let Some(b) = map.get(members) {
-            return Arc::clone(b);
+        if let Some(tags) = map.get_mut(members) {
+            if let Some(b) = tags.get(&tag) {
+                return Arc::clone(b);
+            }
+            let b = Arc::new(VBarrier::new(members.len()));
+            tags.insert(tag, Arc::clone(&b));
+            return b;
         }
         let b = Arc::new(VBarrier::new(members.len()));
-        map.insert(members.to_vec(), Arc::clone(&b));
+        let mut tags = HashMap::new();
+        tags.insert(tag, Arc::clone(&b));
+        map.insert(members.to_vec(), tags);
         b
     }
 }
@@ -125,15 +140,17 @@ mod tests {
     }
 
     #[test]
-    fn table_is_keyed_by_member_list() {
+    fn table_is_keyed_by_member_list_and_tag() {
         let t = BarrierTable::new();
-        let a = t.get(&[0, 2, 4]);
-        let b = t.get(&[0, 2, 4]);
-        assert!(Arc::ptr_eq(&a, &b)); // same group → same barrier
-        let c = t.get(&[0, 2]);
+        let a = t.get(&[0, 2, 4], 0);
+        let b = t.get(&[0, 2, 4], 0);
+        assert!(Arc::ptr_eq(&a, &b)); // same group + tag → same barrier
+        let c = t.get(&[0, 2], 0);
         assert!(!Arc::ptr_eq(&a, &c)); // different group → its own barrier
+        let d = t.get(&[0, 2, 4], 7);
+        assert!(!Arc::ptr_eq(&a, &d)); // different tag → its own barrier
         // a single-member group's barrier never blocks
-        assert_eq!(t.get(&[7]).wait(1.5), 1.5);
+        assert_eq!(t.get(&[7], 0).wait(1.5), 1.5);
     }
 
     #[test]

@@ -68,6 +68,17 @@ pub struct RankMetrics {
     /// outgoing edges (tracked only while the congestion fabric is
     /// active; `merge` takes the max, not the sum).
     pub max_queue_depth: u64,
+    /// Peak number of nonblocking collective operations outstanding at
+    /// once on this rank (submitted through a `crate::nbc::Engine` and
+    /// not yet completed; `merge` takes the max, not the sum). 0 for
+    /// purely blocking runs.
+    pub ops_in_flight_max: u64,
+    /// Number of small allreduce operations that were coalesced into
+    /// fused vectors by the nbc fusion layer on this rank.
+    pub fused_ops: u64,
+    /// Total elements those fused operations contributed (the lengths of
+    /// the concatenated vectors actually reduced).
+    pub fused_elems: u64,
 }
 
 impl RankMetrics {
@@ -90,6 +101,9 @@ impl RankMetrics {
         self.stall_us += other.stall_us;
         self.queue_full_events += other.queue_full_events;
         self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.ops_in_flight_max = self.ops_in_flight_max.max(other.ops_in_flight_max);
+        self.fused_ops += other.fused_ops;
+        self.fused_elems += other.fused_elems;
     }
 
     /// Fold one rank's buffer-layer counters (thread-local, harvested when
@@ -136,9 +150,13 @@ mod tests {
             stall_us: 1.5,
             queue_full_events: 4,
             max_queue_depth: 6,
+            ops_in_flight_max: 3,
+            fused_ops: 2,
+            fused_elems: 100,
         };
         let b = RankMetrics {
             max_queue_depth: 9,
+            ops_in_flight_max: 5,
             ..a.clone()
         };
         a.merge(&b);
@@ -163,6 +181,9 @@ mod tests {
         assert!((a.stall_us - 3.0).abs() < 1e-12);
         assert_eq!(a.queue_full_events, 8);
         assert_eq!(a.max_queue_depth, 9); // max, not sum
+        assert_eq!(a.ops_in_flight_max, 5); // max, not sum
+        assert_eq!(a.fused_ops, 4);
+        assert_eq!(a.fused_elems, 200);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! The thread-backed communicator endpoint.
 //!
 //! Each rank owns a `ThreadComm`. Point-to-point channels (`std::sync::mpsc`,
-//! one per directed pair) live in a [`ShardedRegistry`]: one dense, local
-//! edge table per *node group* (shard) plus a sparse, striped table for the
-//! cross-shard edges. A flat world is the one-shard special case. Endpoints
+//! one per directed pair *and tag*) live in a [`ShardedRegistry`]: one
+//! dense, local edge table per *node group* (shard) for the default tag 0
+//! plus a sparse, striped table for cross-shard and tagged edges. A flat
+//! world is the one-shard special case. Delivery is FIFO per
+//! `(src, dst, tag)`; distinct tags never reorder each other, which is
+//! what lets the nonblocking engine ([`crate::nbc`]) keep several
+//! collectives in flight on one world. Endpoints
 //! cache the `Arc<Edge>` per peer, so after the first touch of an edge a
 //! post is a plain vector index — no registry mutex, no `HashMap` hashing,
 //! and no `Sender` clone per post. The mpsc channels are unbounded, so a
@@ -144,18 +148,19 @@ impl<E: Elem> ShardTable<E> {
     }
 }
 
-/// Lock stripes of the sparse cross-shard edge table.
+/// Lock stripes of the sparse cross-shard / tagged edge table.
 const INTER_STRIPES: usize = 64;
 
-/// One stripe's worth of cross-shard edges, keyed by global `(src, dst)`.
-type InterMap<E> = HashMap<(usize, usize), Arc<Edge<E>>>;
+/// One stripe's worth of sparse edges, keyed by global `(src, dst, tag)`.
+type InterMap<E> = HashMap<(usize, usize, u32), Arc<Edge<E>>>;
 
-/// Cross-shard edges, keyed by global `(src, dst)` and created on first
-/// touch. Sparse by design: tree collectives cross node boundaries on
-/// O(p log p) pairs, a vanishing fraction of the p² a dense table would
-/// preallocate. The stripe lock is only taken on an endpoint's *first*
-/// touch of an edge — after that the endpoint's `Arc` cache serves lookups
-/// without any shared state.
+/// Sparse edges, keyed by global `(src, dst, tag)` and created on first
+/// touch: the cross-shard edges of the default tag 0 plus *every* edge of
+/// a non-zero tag (tagged traffic is nonblocking-collective traffic —
+/// a handful of in-flight operations touching O(p log p) pairs each, so
+/// dense per-tag tables would be pure waste). The stripe lock is only
+/// taken on an endpoint's *first* touch of an edge — after that the
+/// endpoint's `Arc` cache serves lookups without any shared state.
 struct InterTable<E: Elem> {
     stripes: Box<[Mutex<InterMap<E>>]>,
 }
@@ -169,10 +174,13 @@ impl<E: Elem> InterTable<E> {
         }
     }
 
-    fn edge(&self, src: usize, dst: usize) -> Arc<Edge<E>> {
-        let h = src.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(dst);
+    fn edge(&self, src: usize, dst: usize, tag: u32) -> Arc<Edge<E>> {
+        let h = src
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(dst)
+            .wrapping_add((tag as usize).wrapping_mul(0x517C_C1B7_2722_0A95));
         let mut map = self.stripes[h % INTER_STRIPES].lock().unwrap();
-        Arc::clone(map.entry((src, dst)).or_insert_with(new_edge))
+        Arc::clone(map.entry((src, dst, tag)).or_insert_with(new_edge))
     }
 }
 
@@ -302,44 +310,60 @@ impl<E: Elem> ShardedRegistry<E> {
         self.poisoned.load(std::sync::atomic::Ordering::Acquire)
     }
 
-    /// The edge `(src, dst)`, creating its channel on first touch: dense
-    /// shard-local slot when both ends share a node group, sparse striped
-    /// entry otherwise. Endpoints cache the returned `Arc` per peer, so
-    /// this runs once per (endpoint, peer) pair.
-    fn edge(&self, src: usize, dst: usize) -> Arc<Edge<E>> {
+    /// The edge `(src, dst)` on `tag`, creating its channel on first
+    /// touch: dense shard-local slot when both ends share a node group
+    /// *and* the tag is the default 0 (the blocking-collective hot path,
+    /// unchanged), sparse striped entry otherwise. Per-edge delivery is
+    /// FIFO *per tag*: each `(src, dst, tag)` triple owns its own mpsc
+    /// channel, so messages of different tags never reorder each other.
+    /// Endpoints cache the returned `Arc` per peer, so this runs once per
+    /// (endpoint, peer) pair.
+    fn edge(&self, src: usize, dst: usize, tag: u32) -> Arc<Edge<E>> {
         debug_assert!(src < self.size && dst < self.size);
         let (ss, sd) = (self.shard_of[src], self.shard_of[dst]);
-        if ss == sd {
+        if tag == 0 && ss == sd {
             Arc::clone(self.shards[ss as usize].edge(
                 self.local_of[src] as usize,
                 self.local_of[dst] as usize,
             ))
         } else {
-            self.inter.edge(src, dst)
+            self.inter.edge(src, dst, tag)
         }
     }
 
-    /// Claim the receive half of edge `(src, dst)`; each endpoint may do
-    /// this exactly once.
-    fn receiver(&self, src: usize, dst: usize) -> Receiver<Msg<E>> {
-        self.edge(src, dst)
+    /// Claim the receive half of edge `(src, dst)` on `tag`; each
+    /// endpoint may do this exactly once — which is why a tag may never
+    /// be reused by a later operation within one world (see the
+    /// tag-space leasing rules in [`crate::nbc`]).
+    fn receiver(&self, src: usize, dst: usize, tag: u32) -> Receiver<Msg<E>> {
+        self.edge(src, dst, tag)
             .receiver
             .lock()
             .unwrap()
             .take()
-            .expect("receiver claimed twice — one endpoint per rank")
+            .expect("receiver claimed twice — one endpoint per rank and tag")
     }
 
-    /// The barrier shared by exactly the ranks in `members`.
-    fn group_barrier(&self, members: &[usize]) -> Arc<VBarrier> {
-        self.barriers.get(members)
+    /// The barrier shared by exactly the ranks in `members` on `tag`.
+    fn group_barrier(&self, members: &[usize], tag: u32) -> Arc<VBarrier> {
+        self.barriers.get(members, tag)
     }
 }
 
 /// One rank's endpoint.
+///
+/// An endpoint is bound to one message *tag* (default 0). All endpoints of
+/// one rank share the world's registry — and therefore its congestion
+/// fabric: NIC port timelines are per *node*, so concurrent operations on
+/// different tags contend for the same ports — but each tag owns disjoint
+/// channels, receive claims, and injection queues. [`ThreadComm::fork_tagged`]
+/// derives an endpoint for another tag; the nonblocking engine
+/// ([`crate::nbc`]) runs each in-flight collective on its own fork.
 pub struct ThreadComm<E: Elem> {
     rank: usize,
     size: usize,
+    /// The message tag this endpoint sends and receives on.
+    tag: u32,
     registry: Arc<ShardedRegistry<E>>,
     barrier: Arc<VBarrier>,
     /// Cached outgoing edges, indexed by destination rank (first touch
@@ -361,6 +385,11 @@ pub struct ThreadComm<E: Elem> {
     start: Instant,
     /// Watchdog budget for blocking waits, scaled to this world's size.
     watchdog: std::time::Duration,
+    /// Cached world barrier of a tagged fork (`tag != 0` cannot share the
+    /// rank endpoints' `barrier` generations); resolved through the
+    /// group-barrier table on first use so repeated barriers allocate
+    /// nothing.
+    tagged_world_barrier: Option<Arc<VBarrier>>,
     metrics: RankMetrics,
 }
 
@@ -376,6 +405,7 @@ impl<E: Elem> ThreadComm<E> {
         ThreadComm {
             rank,
             size,
+            tag: 0,
             registry,
             barrier,
             tx: (0..size).map(|_| None).collect(),
@@ -386,11 +416,75 @@ impl<E: Elem> ThreadComm<E> {
             origin: 0.0,
             start: Instant::now(),
             watchdog: recv_watchdog(size),
+            tagged_world_barrier: None,
             metrics: RankMetrics {
                 shard_id,
                 ..RankMetrics::default()
             },
         }
+    }
+
+    /// Derive an endpoint for the same rank on another message `tag`.
+    ///
+    /// The fork shares the world's registry (channels are created lazily in
+    /// the tag's own namespace) and congestion fabric, inherits this
+    /// endpoint's timing mode and *current* virtual clock, and starts with
+    /// fresh metrics — the nonblocking engine merges them back with
+    /// [`ThreadComm::absorb_child`] when the operation completes. Each
+    /// `(rank, tag)` pair may claim its receive channels only once, so a
+    /// tag must be forked by at most one operation per world (the engine's
+    /// tag-space leases guarantee this).
+    pub fn fork_tagged(&self, tag: u32) -> ThreadComm<E> {
+        ThreadComm {
+            rank: self.rank,
+            size: self.size,
+            tag,
+            registry: Arc::clone(&self.registry),
+            barrier: Arc::clone(&self.barrier),
+            tx: (0..self.size).map(|_| None).collect(),
+            rx: (0..self.size).map(|_| None).collect(),
+            rx_edges: (0..self.size).map(|_| None).collect(),
+            timing: self.timing,
+            vtime: self.vtime,
+            origin: self.origin,
+            start: Instant::now(),
+            watchdog: self.watchdog,
+            tagged_world_barrier: None,
+            metrics: RankMetrics {
+                shard_id: self.metrics.shard_id,
+                ..RankMetrics::default()
+            },
+        }
+    }
+
+    /// The message tag this endpoint is bound to (0 for world endpoints).
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    /// Fold a completed child operation (a [`ThreadComm::fork_tagged`]
+    /// endpoint that ran on a worker thread) back into this endpoint: its
+    /// traffic counters merge in, and under virtual timing this rank's
+    /// clock advances to the operation's completion time — MPI wait
+    /// semantics: waiting on a request ends no earlier than the request.
+    pub(crate) fn absorb_child(&mut self, metrics: &RankMetrics, child_vtime: f64) {
+        self.metrics.merge(metrics);
+        if self.timing.is_virtual() && child_vtime > self.vtime {
+            self.vtime = child_vtime;
+        }
+    }
+
+    /// Crate-internal mutable access to the metrics record (the nbc layer
+    /// accounts fusion and in-flight peaks here).
+    pub(crate) fn metrics_mut(&mut self) -> &mut RankMetrics {
+        &mut self.metrics
+    }
+
+    /// Mark the whole world failed (a nonblocking worker uses this when
+    /// its collective errors, so peers blocked on the operation abort
+    /// instead of running into the watchdog).
+    pub(crate) fn poison_world(&self) {
+        self.registry.poison();
     }
 
     /// Borrow a sub-communicator scoped to `group` (this rank must be a
@@ -403,10 +497,11 @@ impl<E: Elem> ThreadComm<E> {
     }
 
     /// Synchronize exactly the ranks in `members` (each must call this
-    /// with the same list); under virtual timing the member clocks advance
-    /// to the group maximum, mirroring the world [`Comm::barrier`].
+    /// with the same list, on endpoints of the same tag); under virtual
+    /// timing the member clocks advance to the group maximum, mirroring
+    /// the world [`Comm::barrier`].
     pub(super) fn group_barrier_wait(&mut self, members: &[usize]) -> Result<()> {
-        let bar = self.registry.group_barrier(members);
+        let bar = self.registry.group_barrier(members, self.tag);
         let max = bar.wait(self.vtime);
         if self.timing.is_virtual() {
             self.vtime = max;
@@ -438,8 +533,9 @@ impl<E: Elem> ThreadComm<E> {
         }
         let registry = Arc::clone(&self.registry);
         let fabric = registry.fabric();
-        let rank = self.rank;
-        let edge = Arc::clone(self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer)));
+        let (rank, tag) = (self.rank, self.tag);
+        let edge =
+            Arc::clone(self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer, tag)));
         let cap = fabric.edge_capacity(rank, peer);
         let deadline = Instant::now() + self.watchdog;
         let grant = edge
@@ -491,8 +587,9 @@ impl<E: Elem> ThreadComm<E> {
             self.metrics.stall_us += (start - ready) * 1e6;
         }
         let done = start + dur;
+        let tag = self.tag;
         let edge =
-            Arc::clone(self.rx_edges[peer].get_or_insert_with(|| registry.edge(peer, rank)));
+            Arc::clone(self.rx_edges[peer].get_or_insert_with(|| registry.edge(peer, rank, tag)));
         edge.queue.drain(fabric.edge_capacity(peer, rank), done);
         done
     }
@@ -503,8 +600,8 @@ impl<E: Elem> ThreadComm<E> {
     fn post(&mut self, peer: usize, data: DataBuf<E>, stamp: f64) -> Result<()> {
         let bytes = data.bytes();
         let msg = Msg { vtime: stamp, data };
-        let (rank, registry) = (self.rank, &self.registry);
-        let edge = self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer));
+        let (rank, tag, registry) = (self.rank, self.tag, &self.registry);
+        let edge = self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer, tag));
         edge.sender.send(msg).map_err(|_| Error::Disconnected {
             rank: self.rank,
             peer,
@@ -514,8 +611,8 @@ impl<E: Elem> ThreadComm<E> {
     }
 
     fn take(&mut self, peer: usize) -> Result<Msg<E>> {
-        let (rank, registry) = (self.rank, &self.registry);
-        let rx = self.rx[peer].get_or_insert_with(|| registry.receiver(peer, rank));
+        let (rank, tag, registry) = (self.rank, self.tag, &self.registry);
+        let rx = self.rx[peer].get_or_insert_with(|| registry.receiver(peer, rank, tag));
         // Block in POISON_POLL slices so a failed world tears down instead
         // of hanging on receives whose sender died (the registry keeps the
         // unclaimed Sender half alive, so disconnect alone is not enough),
@@ -673,7 +770,21 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
     }
 
     fn barrier(&mut self) -> Result<()> {
-        let max = self.barrier.wait(self.vtime);
+        // A tagged fork must not share the world barrier's generations
+        // with the rank endpoints (or with forks of other tags): it
+        // synchronizes through a barrier keyed by (world members, tag),
+        // resolved once and cached on the endpoint.
+        let bar = if self.tag == 0 {
+            &self.barrier
+        } else {
+            if self.tagged_world_barrier.is_none() {
+                let members: Vec<usize> = (0..self.size).collect();
+                self.tagged_world_barrier =
+                    Some(self.registry.group_barrier(&members, self.tag));
+            }
+            self.tagged_world_barrier.as_ref().expect("just cached")
+        };
+        let max = bar.wait(self.vtime);
         if self.timing.is_virtual() {
             self.vtime = max;
         }
@@ -823,12 +934,18 @@ mod tests {
     fn edge_table_is_stable_across_posts() {
         // the same Edge must come back on every lookup (no re-init)
         let reg: ShardedRegistry<i32> = ShardedRegistry::new(3, None);
-        let e1 = reg.edge(0, 2);
-        let e2 = reg.edge(0, 2);
+        let e1 = reg.edge(0, 2, 0);
+        let e2 = reg.edge(0, 2, 0);
         assert!(Arc::ptr_eq(&e1, &e2));
         // distinct edges get distinct channels
-        let e3 = reg.edge(2, 0);
+        let e3 = reg.edge(2, 0, 0);
         assert!(!Arc::ptr_eq(&e1, &e3));
+        // distinct tags get distinct channels on the same directed pair,
+        // each stable across lookups
+        let t1 = reg.edge(0, 2, 1);
+        assert!(!Arc::ptr_eq(&e1, &t1));
+        assert!(Arc::ptr_eq(&t1, &reg.edge(0, 2, 1)));
+        assert!(!Arc::ptr_eq(&t1, &reg.edge(0, 2, 2)));
     }
 
     #[test]
@@ -841,13 +958,18 @@ mod tests {
         assert_eq!(reg.shard_of(3), 1);
         assert_eq!(reg.shard_of(4), 2);
         // intra edge is stable and distinct per direction
-        let a = reg.edge(2, 3);
-        assert!(Arc::ptr_eq(&a, &reg.edge(2, 3)));
-        assert!(!Arc::ptr_eq(&a, &reg.edge(3, 2)));
+        let a = reg.edge(2, 3, 0);
+        assert!(Arc::ptr_eq(&a, &reg.edge(2, 3, 0)));
+        assert!(!Arc::ptr_eq(&a, &reg.edge(3, 2, 0)));
         // cross-shard edge resolves through the sparse table, stably
-        let x = reg.edge(1, 4);
-        assert!(Arc::ptr_eq(&x, &reg.edge(1, 4)));
-        assert!(!Arc::ptr_eq(&x, &reg.edge(4, 1)));
+        let x = reg.edge(1, 4, 0);
+        assert!(Arc::ptr_eq(&x, &reg.edge(1, 4, 0)));
+        assert!(!Arc::ptr_eq(&x, &reg.edge(4, 1, 0)));
+        // a tagged intra-shard edge routes through the sparse table too
+        // (the dense arenas stay a tag-0 fast path) and is its own channel
+        let t = reg.edge(2, 3, 5);
+        assert!(!Arc::ptr_eq(&a, &t));
+        assert!(Arc::ptr_eq(&t, &reg.edge(2, 3, 5)));
     }
 
     #[test]
@@ -894,8 +1016,11 @@ mod tests {
     #[should_panic(expected = "claimed twice")]
     fn receiver_single_claim() {
         let reg: ShardedRegistry<i32> = ShardedRegistry::new(2, None);
-        let _r = reg.receiver(0, 1);
-        let _r2 = reg.receiver(0, 1);
+        let _r = reg.receiver(0, 1, 0);
+        // a different tag is a different channel: claiming it is fine...
+        let _rt = reg.receiver(0, 1, 3);
+        // ...but re-claiming the same (src, dst, tag) panics
+        let _r2 = reg.receiver(0, 1, 0);
     }
 
     #[test]
@@ -995,6 +1120,77 @@ mod tests {
         assert_eq!(dedicated.1.to_bits(), congested.1.to_bits());
         // both: max(5µs, 2µs) + 1µs + 1000B·1e-9 = 7µs
         assert!((dedicated.0 - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tagged_forks_are_fifo_per_tag_and_independent() {
+        // Two tags between the same pair: each tag's stream is FIFO and
+        // never observes the other tag's messages, even when the sends
+        // interleave and one side consumes the tags in the opposite order.
+        let (a, b) = pair(Timing::Real);
+        let mut a1 = a.fork_tagged(1);
+        let mut a2 = a.fork_tagged(2);
+        let mut b1 = b.fork_tagged(1);
+        let mut b2 = b.fork_tagged(2);
+        assert_eq!(a1.tag(), 1);
+        a1.send(1, DataBuf::real(vec![10])).unwrap();
+        a2.send(1, DataBuf::real(vec![20])).unwrap();
+        a1.send(1, DataBuf::real(vec![11])).unwrap();
+        a2.send(1, DataBuf::real(vec![21])).unwrap();
+        // consume tag 2 first — tag 1's messages must still be waiting
+        assert_eq!(b2.recv(0).unwrap().into_vec().unwrap(), vec![20]);
+        assert_eq!(b2.recv(0).unwrap().into_vec().unwrap(), vec![21]);
+        assert_eq!(b1.recv(0).unwrap().into_vec().unwrap(), vec![10]);
+        assert_eq!(b1.recv(0).unwrap().into_vec().unwrap(), vec![11]);
+        // forks kept their own metrics
+        assert_eq!(a1.metrics().exchanges, 2);
+        assert_eq!(a2.metrics().exchanges, 2);
+        assert_eq!(a.metrics().exchanges, 0);
+    }
+
+    #[test]
+    fn fork_inherits_clock_and_absorb_child_merges() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(2e-9));
+        let (mut a, _b) = pair(timing);
+        a.charge_compute(500); // clock → 1 µs
+        let mut child = a.fork_tagged(9);
+        assert!((child.vtime() - 1e-6).abs() < 1e-15); // inherited
+        child.charge_compute(1500); // child clock → 4 µs
+        a.charge_compute(500); // parent clock → 2 µs
+        let child_metrics = child.metrics().clone();
+        let child_vtime = child.vtime();
+        a.absorb_child(&child_metrics, child_vtime);
+        // wait semantics: the parent clock advances to the child's
+        assert!((a.vtime() - 4e-6).abs() < 1e-15);
+        assert_eq!(a.metrics().reduce_bytes, 2500);
+        // absorbing an already-passed child never rewinds
+        a.charge_compute(1000); // → 6 µs
+        a.absorb_child(&RankMetrics::default(), 4e-6);
+        assert!((a.vtime() - 6e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tagged_forks_run_concurrent_exchanges() {
+        // two concurrent "operations" (tags) between two ranks, each on
+        // its own worker thread per rank, completing out of order
+        let (a, b) = pair(Timing::Real);
+        let spawn = |comm: &ThreadComm<i32>, tag: u32, val: i32| {
+            let mut c = comm.fork_tagged(tag);
+            thread::spawn(move || {
+                let peer = 1 - c.rank();
+                let got = c.sendrecv(peer, DataBuf::real(vec![val])).unwrap();
+                got.into_vec().unwrap()[0]
+            })
+        };
+        let a1 = spawn(&a, 1, 1);
+        let a2 = spawn(&a, 2, 2);
+        let b2 = spawn(&b, 2, 20);
+        let b1 = spawn(&b, 1, 10);
+        assert_eq!(a1.join().unwrap(), 10);
+        assert_eq!(a2.join().unwrap(), 20);
+        assert_eq!(b1.join().unwrap(), 1);
+        assert_eq!(b2.join().unwrap(), 2);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod error;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod nbc;
 pub mod ops;
 pub mod pipeline;
 pub mod proptest;
@@ -46,6 +47,7 @@ pub mod prelude {
     };
     pub use crate::error::{Error, Result};
     pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
+    pub use crate::nbc::{Engine, FusePolicy, NbcConfig, Request};
     pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceBackend, ReduceOp, Side, SumOp};
     pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};
 }

@@ -1,13 +1,15 @@
 //! `dpdr` — the command-line launcher.
 //!
 //! ```text
-//! dpdr run       --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time]
-//!                [--hier] [--mapping block:8]
-//! dpdr table2    [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]   reproduce Table 2
-//! dpdr fig1      [--tsv out.tsv]                                          Figure 1 series
-//! dpdr latency   [--hmax 12]                                              §1.2 4h−3 check
-//! dpdr blocksize --p 288 --m 1000000                                      Pipelining-Lemma sweep
-//! dpdr validate  [--pmax 16]                                              correctness battery
+//! dpdr run        --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time]
+//!                 [--hier] [--mapping block:8]
+//! dpdr concurrent --p 288 --m 1024 --k 8 [--algos dpdr,ring] [--fuse-threshold 1024]
+//!                 [--fuse-max-ops 8]       K outstanding nonblocking allreduces per rank
+//! dpdr table2     [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]  reproduce Table 2
+//! dpdr fig1       [--tsv out.tsv]                                         Figure 1 series
+//! dpdr latency    [--hmax 12]                                             §1.2 4h−3 check
+//! dpdr blocksize  --p 288 --m 1000000                                     Pipelining-Lemma sweep
+//! dpdr validate   [--pmax 16]                                             correctness battery
 //! dpdr calibrate                                                          thread-transport α/β fit
 //! dpdr sysinfo
 //! ```
@@ -51,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
     }
     match args.subcommand().unwrap() {
         "run" => cmd_run(&args),
+        "concurrent" => cmd_concurrent(&args),
         "table2" => cmd_table2(&args),
         "fig1" => cmd_fig1(&args),
         "latency" => cmd_latency(&args),
@@ -67,7 +70,7 @@ fn print_help() {
         "dpdr — doubly-pipelined dual-root reduction-to-all (Träff 2021 reproduction)
 
 subcommands:
-  run        one allreduce: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier}}
+  run        one collective: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier|scan}}
              --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
              [--mapping block:K|rr:N]  (node layout for --algo hier / --hier cost model)
              [--ports-per-node N]      (congestion-aware timing: concurrent inter-node
@@ -76,6 +79,12 @@ subcommands:
              per directed edge; posting to a full queue stalls the sender's clock; 0 = unbounded)
              [--reduce-backend auto|scalar|simd|pjrt]  (kernel for the block-wise reduction;
              pjrt needs AOT artifacts — set DPDR_ARTIFACTS — and falls back simd -> scalar)
+  concurrent K outstanding nonblocking allreduces per rank through the nbc engine:
+             --p N --m N [--k 8] [--algos dpdr,ring,...] (rotation over the K ops)
+             [--fuse-threshold N]  (ops of <= N elements coalesce into one fused dpdr; 0 = off)
+             [--fuse-max-ops N]    (fused batch size; batches also close on flush()/wait_all)
+             plus the run timing/backend/congestion flags; verifies every op against its
+             oracle and reports overlap/fusion metrics
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -206,6 +215,92 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dpdr concurrent`: every rank keeps `--k` nonblocking allreduces in
+/// flight through an [`dpdr::nbc::Engine`], optionally fusing the small
+/// ones, then verifies every operation against its sequential oracle.
+fn cmd_concurrent(args: &Args) -> Result<()> {
+    use dpdr::nbc::{run_concurrent_i32, ConcurrentSpec, FusePolicy};
+    let p = args.get("p", 8usize)?;
+    let m = args.get("m", 1024usize)?;
+    let k = args.get("k", 8usize)?;
+    let block = args.get("block", dpdr::pipeline::PAPER_BLOCK_ELEMS)?;
+    let fuse_threshold = args.get("fuse-threshold", 0usize)?;
+    let fuse_max_ops = args.get("fuse-max-ops", 8usize)?;
+    let algos: Vec<AlgoKind> = match args.raw("algos") {
+        None => vec![AlgoKind::Dpdr],
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                AlgoKind::parse(s.trim())
+                    .ok_or_else(|| Error::Cli(format!("bad algo '{s}' in --algos")))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let backend = args.get_parsed(
+        "reduce-backend",
+        dpdr::ops::ReduceBackend::Auto,
+        dpdr::ops::ReduceBackend::parse,
+    )?;
+    let base = RunSpec::new(p, m)
+        .block_elems(block)
+        .phantom(args.switch("phantom"))
+        .mapping(mapping_of(args)?)
+        .reduce_backend(backend)
+        .net(net_of(args)?);
+    let fuse = if fuse_threshold > 0 {
+        FusePolicy::new(fuse_threshold, fuse_max_ops)
+    } else {
+        FusePolicy::off()
+    };
+    let cspec = ConcurrentSpec::new(base, k).algos(algos.clone()).fuse(fuse);
+    // the driver applies the spec's net upgrade itself; compute the
+    // effective model here only for the analytic printout below, so the
+    // executed and printed models cannot diverge
+    let report = run_concurrent_i32(&cspec, timing_of(args)?)?;
+    let timing = base.effective_timing(timing_of(args)?);
+    // verify every op on every rank against its oracle (real mode only);
+    // the oracles are O(p·m) each, so compute them once, not per rank
+    let mut verified = 0usize;
+    if !base.phantom {
+        let oracles: Vec<Vec<i32>> = (0..k).map(|i| cspec.op_expected(i)).collect();
+        for (rank, (bufs, _t)) in report.results.iter().enumerate() {
+            for (i, buf) in bufs.iter().enumerate() {
+                let got = buf.as_slice().expect("real payload");
+                if got != &oracles[i][..] {
+                    return Err(Error::Protocol(format!(
+                        "op {i} ({}) wrong on rank {rank}",
+                        cspec.op_algo(i).name()
+                    )));
+                }
+                verified += 1;
+            }
+        }
+    }
+    let totals = report.total_metrics();
+    let time_us = dpdr::nbc::driver::concurrent_time_us(&report);
+    println!(
+        "concurrent: p={p} m={m} k={k} algos={} time_us={time_us:.2} verified={verified}",
+        algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(","),
+    );
+    println!(
+        "nbc: ops_in_flight_max={} fused_ops={} fused_elems={}",
+        totals.ops_in_flight_max, totals.fused_ops, totals.fused_elems
+    );
+    if !base.net.is_dedicated() {
+        println!(
+            "congestion: stall_us={:.2} queue_full_events={} max_queue_depth={}",
+            totals.stall_us, totals.queue_full_events, totals.max_queue_depth
+        );
+    }
+    if let Timing::Virtual(model, _) = timing {
+        // what the model says fusion should buy at this size
+        let link = model.link_levels().1;
+        let speedup = dpdr::model::predicted_fusion_speedup(p, m * 4, k, link);
+        println!("analytic fused speedup (k ops of m, one alpha-chain): {speedup:.2}x");
+    }
+    Ok(())
+}
+
 /// The paper's four evaluation columns.
 fn table2_algos() -> Vec<AlgoKind> {
     vec![
@@ -320,17 +415,19 @@ fn cmd_validate(args: &Args) -> Result<()> {
         AlgoKind::RecursiveDoubling,
         AlgoKind::Rabenseifner,
         AlgoKind::Hier,
+        AlgoKind::Scan,
     ];
     let mut checked = 0usize;
     for algo in algos {
         for p in 1..=pmax {
             for m in [0usize, 1, 7, 64, 1000] {
                 let spec = RunSpec::new(p, m).block_elems(16);
-                let expected = spec.expected_sum_i32();
                 let report = dpdr::collectives::run_allreduce_i32(algo, &spec, Timing::Real)?;
+                // one O(p·m) pass: rank prefixes for scan, the shared
+                // sum for everything else
+                let oracles = spec.expected_i32_per_rank(algo);
                 for (rank, buf) in report.results.into_iter().enumerate() {
-                    let got = buf.into_vec()?;
-                    if got != expected {
+                    if buf.into_vec()? != oracles[rank] {
                         return Err(Error::Protocol(format!(
                             "{} p={p} m={m} rank={rank}: wrong result",
                             algo.name()

@@ -31,6 +31,10 @@ pub enum AlgoKind {
     /// across nodes per segment, intra-node allgather) — see
     /// `collectives::hierarchical`.
     Hier,
+    /// Pipelined inclusive prefix scan (`MPI_Scan`, Sanders/Träff [5]) —
+    /// see `collectives::scan_dp`. Not a reduction-to-all: rank `r` ends
+    /// with `x_0 ⊙ … ⊙ x_r`, so oracles are per rank.
+    Scan,
 }
 
 impl AlgoKind {
@@ -46,6 +50,7 @@ impl AlgoKind {
             "rd" => AlgoKind::RecursiveDoubling,
             "rab" => AlgoKind::Rabenseifner,
             "hier" => AlgoKind::Hier,
+            "scan" => AlgoKind::Scan,
             _ => return None,
         })
     }
@@ -62,6 +67,7 @@ impl AlgoKind {
             AlgoKind::RecursiveDoubling => "rd",
             AlgoKind::Rabenseifner => "rab",
             AlgoKind::Hier => "hier",
+            AlgoKind::Scan => "scan",
         }
     }
 
@@ -78,6 +84,7 @@ impl AlgoKind {
             AlgoKind::RecursiveDoubling => "Recursive doubling",
             AlgoKind::Rabenseifner => "Rabenseifner",
             AlgoKind::Hier => "Hierarchical (node-aware)",
+            AlgoKind::Scan => "Prefix scan (pipelined)",
         }
     }
 
@@ -85,7 +92,8 @@ impl AlgoKind {
     /// operators). Ring's reduce-scatter rotates the product, so it is
     /// commutative-only, matching MPI library practice; the hierarchical
     /// allreduce preserves order only under contiguous (Block) node
-    /// layouts, so it is conservatively commutative-only too.
+    /// layouts, so it is conservatively commutative-only too. The prefix
+    /// scan combines strictly in rank order by construction.
     pub fn order_preserving(self) -> bool {
         !matches!(self, AlgoKind::Ring | AlgoKind::Hier)
     }
@@ -94,7 +102,10 @@ impl AlgoKind {
     /// (`None` for the non-pipelined ones). From §1.2:
     /// dpdr: `4h − 3 + 3(b − 1) = (4h − 6) + 3b`;
     /// pipetree: `2(2h + 2(b − 1)) = (4h − 4) + 4b`;
-    /// twotree (both halves streaming): `≈ (4h) + 2b`.
+    /// twotree (both halves streaming): `≈ (4h) + 2b`;
+    /// scan (coarse): up and down phases of ≤ 3 steps per block each over
+    /// ~h tree levels → `≈ (6h − 6) + 6b` (block-choice estimate only —
+    /// the scan is an extension, not part of the paper's evaluation).
     pub fn step_structure(self, p: usize) -> Option<(f64, f64)> {
         let h = paper_h(p) as f64;
         match self {
@@ -105,6 +116,7 @@ impl AlgoKind {
             AlgoKind::DpdrSingle => Some((4.0 * h - 4.0, 3.0)),
             AlgoKind::PipeTree => Some((4.0 * h - 4.0, 4.0)),
             AlgoKind::TwoTree => Some((4.0 * h, 2.0)),
+            AlgoKind::Scan => Some((6.0 * h - 6.0, 6.0)),
             _ => None,
         }
     }
@@ -128,7 +140,11 @@ pub fn predicted_time_us(
     let logp = log2_ceil(p) as f64;
     let b = b.max(1) as f64;
     let secs = match algo {
-        AlgoKind::Dpdr | AlgoKind::DpdrSingle | AlgoKind::PipeTree | AlgoKind::TwoTree => {
+        AlgoKind::Dpdr
+        | AlgoKind::DpdrSingle
+        | AlgoKind::PipeTree
+        | AlgoKind::TwoTree
+        | AlgoKind::Scan => {
             let (a, c) = algo.step_structure(p).unwrap();
             lemma::time_at(a, c, alpha, beta, m, b)
         }
@@ -264,6 +280,51 @@ pub fn predicted_time_us_net(
     }
 }
 
+/// Predicted time in **microseconds** for one *fused* small-message
+/// allreduce: `n` pending operations of `Σ = total_bytes` combined bytes
+/// coalesced into a single doubly-pipelined dpdr at the Pipelining-Lemma
+/// optimal block count — the whole point of fusion is that the α-chain
+/// `(4h − 6)α` is paid **once** for the batch instead of once per
+/// operation, while the β-term is the same `3β·Σm` either way:
+///
+/// ```text
+/// T_fused(Σ) ≈ (4h − 6)α + 3βΣ + 2√(3(4h − 6)αβΣ)
+/// ```
+pub fn predicted_time_us_fused(p: usize, total_bytes: usize, link: LinkCost) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let (a, c) = AlgoKind::Dpdr
+        .step_structure(p)
+        .expect("dpdr is pipelined");
+    let (_b, secs) = lemma::optimal_time(
+        a,
+        c,
+        link.alpha,
+        link.beta,
+        total_bytes as f64,
+        usize::MAX,
+    );
+    secs * 1e6
+}
+
+/// Predicted speedup of fusing `n_ops` same-sized small allreduces
+/// (`m_bytes` each) over running them back to back, both at their
+/// respective lemma-optimal block counts. Tends to `n_ops` as
+/// `m_bytes → 0` (pure α-amortization) and to 1 as `m_bytes → ∞` (the
+/// β-term dominates and is conserved by fusion).
+pub fn predicted_fusion_speedup(p: usize, m_bytes: usize, n_ops: usize, link: LinkCost) -> f64 {
+    if p <= 1 || n_ops == 0 {
+        return 1.0;
+    }
+    let sequential = n_ops as f64 * predicted_time_us_fused(p, m_bytes, link);
+    let fused = predicted_time_us_fused(p, m_bytes * n_ops, link);
+    if fused <= 0.0 {
+        return 1.0;
+    }
+    sequential / fused
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,10 +377,44 @@ mod tests {
             AlgoKind::RecursiveDoubling,
             AlgoKind::Rabenseifner,
             AlgoKind::Hier,
+            AlgoKind::Scan,
         ] {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn fused_prediction_amortizes_alpha() {
+        let p = 288;
+        // tiny per-op payloads: fusing k ops approaches a k× win
+        let s = predicted_fusion_speedup(p, 64, 8, LINK);
+        assert!(s > 5.0 && s <= 8.0, "s={s}");
+        // huge payloads: β dominates, fusion is a wash
+        let s = predicted_fusion_speedup(p, 40_000_000, 8, LINK);
+        assert!(s > 0.9 && s < 1.2, "s={s}");
+        // monotone in op count for small payloads
+        let s2 = predicted_fusion_speedup(p, 1024, 2, LINK);
+        let s8 = predicted_fusion_speedup(p, 1024, 8, LINK);
+        assert!(s8 > s2, "s2={s2} s8={s8}");
+        // degenerate cases
+        assert_eq!(predicted_fusion_speedup(1, 64, 8, LINK), 1.0);
+        assert_eq!(predicted_fusion_speedup(p, 64, 0, LINK), 1.0);
+        assert_eq!(predicted_time_us_fused(1, 64, LINK), 0.0);
+        // the fused form is exactly the dpdr lemma optimum on Σm
+        let t = predicted_time_us_fused(288, 8 * 1024, LINK);
+        assert!(t > 0.0 && t.is_finite());
+    }
+
+    #[test]
+    fn scan_prediction_reasonable() {
+        // the scan estimate behaves like a pipelined tree: more expensive
+        // than dpdr (more steps per block), finite, monotone in m
+        let t_scan = predicted_time_us(AlgoKind::Scan, 288, 4_000_000, 64, LINK);
+        let t_dpdr = predicted_time_us(AlgoKind::Dpdr, 288, 4_000_000, 64, LINK);
+        assert!(t_scan > t_dpdr, "scan={t_scan} dpdr={t_dpdr}");
+        assert!(t_scan < 100.0 * t_dpdr);
+        assert_eq!(predicted_time_us(AlgoKind::Scan, 1, 100, 4, LINK), 0.0);
     }
 
     #[test]

@@ -6,7 +6,8 @@ pub mod formulas;
 pub mod lemma;
 
 pub use formulas::{
-    predicted_time_us, predicted_time_us_hier, predicted_time_us_net, AlgoKind,
+    predicted_fusion_speedup, predicted_time_us, predicted_time_us_fused,
+    predicted_time_us_hier, predicted_time_us_net, AlgoKind,
 };
 pub use lemma::{optimal_block_count, optimal_time};
 

@@ -1,0 +1,797 @@
+//! Nonblocking collective engine: tag-multiplexed concurrent allreduce
+//! with small-message fusion.
+//!
+//! The paper's performance story is the α-vs-β trade: pipelining amortizes
+//! start-up latency only when `m` is large (§1.2, Pipelining Lemma). Real
+//! serving traffic issues many *small* concurrent reductions — gradient
+//! buckets, per-request aggregates — where α dominates and a blocking,
+//! one-at-a-time allreduce leaves the machine idle between latency chains.
+//! This module adds the two missing levers:
+//!
+//! * **Overlap.** [`Engine::iallreduce`] returns a [`Request`] immediately;
+//!   the operation runs on its own worker thread over a
+//!   [`fork_tagged`](crate::comm::ThreadComm::fork_tagged) endpoint, so any
+//!   number of independent collectives can be in flight on one world.
+//!   Every in-flight operation leases a *disjoint tag* — its own channels,
+//!   receive claims, and virtual injection queues — while sharing the
+//!   world's congestion fabric: under a
+//!   [`CostModel::Congested`](crate::model::CostModel) model, overlapped
+//!   operations contend for the *same* per-node NIC ports, which is
+//!   exactly the contention an overlap measurement is about.
+//! * **Fusion.** Small operations (`m ≤ fuse_threshold`) submitted with
+//!   [`AlgoKind::Dpdr`] are queued instead of launched; at a flush point
+//!   the queue is coalesced into one concatenated vector, reduced by a
+//!   *single* pipelined dpdr at the Pipelining-Lemma optimal block count
+//!   for the fused length, and scattered back to the per-op requests. The
+//!   α-chain is paid once per batch instead of once per op (see
+//!   [`predicted_time_us_fused`](crate::model::predicted_time_us_fused)).
+//!
+//! ## Tag-space leasing rules
+//!
+//! * Each operation leases one fresh tag from the engine's counter
+//!   (starting at [`NbcConfig::tag_base`], default 1; tag 0 is the
+//!   blocking world's). A tag is **never reused** within a world — its
+//!   receive channels are claimed by the operation's endpoints, and a
+//!   second claim would panic by design.
+//! * Tag allocation is **deterministic and local**: ranks agree on an
+//!   operation's tag because they run the same (SPMD) program and submit
+//!   in the same order — no communication, exactly like `MPI_Comm_split`
+//!   agreement. Two engines coexisting on one world must be given
+//!   disjoint `tag_base` ranges.
+//! * Because tags are never reclaimed, a completed operation's channel
+//!   and barrier entries live for the world's lifetime — O(p log p) map
+//!   entries per operation. That is the right trade for worlds that run
+//!   a bounded number of operations (benchmarks, batches); a true
+//!   serving loop submitting forever needs the tag-reclamation
+//!   follow-on recorded in ROADMAP.md.
+//!
+//! ## Flush policy (what makes fusion SPMD-safe)
+//!
+//! Fused batches must be identical on every rank, so batches close only
+//! at points every rank reaches *structurally* the same way: (1) a
+//! submission that fills the queue to `fuse_max_ops`, (2) an explicit
+//! [`Engine::flush`], (3) [`Engine::wait_all`] (including the engine's
+//! join-on-drop). [`Engine::test`] deliberately does *not* flush —
+//! polling frequency may legitimately differ across ranks — and a plain
+//! [`Engine::wait`] on a still-queued request is a contract **error**
+//! rather than a flush point: because wait order is free, a
+//! wait-triggered flush could close different batches on different
+//! ranks once submissions interleave with waits.
+//!
+//! ## Progress and completion
+//!
+//! Operations progress on their worker threads without any call into the
+//! engine ("hardware progress", not test-driven). `wait` joins the worker,
+//! folds its traffic counters into the rank's [`RankMetrics`], and — under
+//! virtual timing — advances the rank's clock to the operation's
+//! completion time (MPI wait semantics). Submission order across ranks
+//! must agree, but **wait order is free**: joining is local.
+
+pub mod driver;
+
+pub use driver::{run_concurrent_i32, ConcurrentSpec};
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::buffer::DataBuf;
+use crate::collectives::allreduce_on;
+use crate::comm::{Comm, RankMetrics, ThreadComm, Timing};
+use crate::error::{Error, Result};
+use crate::model::{AlgoKind, LinkCost};
+use crate::ops::{Elem, ReduceBackend, ReduceOp};
+use crate::pipeline::Blocks;
+use crate::topo::Mapping;
+
+/// When to coalesce queued small operations into one fused vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusePolicy {
+    /// Operations of at most this many elements are queued for fusion
+    /// (`0` disables fusion entirely — every op launches immediately).
+    pub threshold_elems: usize,
+    /// Close the batch when this many operations are queued (≥ 1).
+    pub max_ops: usize,
+}
+
+impl FusePolicy {
+    /// Fusion off: every operation launches on submission.
+    pub fn off() -> FusePolicy {
+        FusePolicy {
+            threshold_elems: 0,
+            max_ops: usize::MAX,
+        }
+    }
+
+    /// Fuse operations of ≤ `threshold_elems` elements, closing batches
+    /// at `max_ops` queued operations.
+    pub fn new(threshold_elems: usize, max_ops: usize) -> FusePolicy {
+        FusePolicy {
+            threshold_elems,
+            max_ops: max_ops.max(1),
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.threshold_elems > 0
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NbcConfig {
+    /// First tag of this engine's lease range (tags `tag_base..` are
+    /// handed to operations in submission order). Two engines on one
+    /// world need disjoint ranges; tag 0 is reserved for blocking
+    /// traffic.
+    pub tag_base: u32,
+    /// Small-message fusion policy.
+    pub fuse: FusePolicy,
+    /// Node layout handed to [`AlgoKind::Hier`] dispatch (other
+    /// algorithms ignore it).
+    pub mapping: Mapping,
+    /// Reduce backend the worker threads dispatch block reductions
+    /// through (worker threads do not inherit the submitting thread's
+    /// scoped backend, so it is part of the config).
+    pub backend: ReduceBackend,
+}
+
+impl Default for NbcConfig {
+    fn default() -> NbcConfig {
+        NbcConfig {
+            tag_base: 1,
+            fuse: FusePolicy::off(),
+            mapping: Mapping::Block { ranks_per_node: 8 },
+            backend: ReduceBackend::Auto,
+        }
+    }
+}
+
+/// One operation's result slot, shared between its worker thread and the
+/// request handle.
+struct OpCell<E: Elem> {
+    result: Mutex<Option<Result<DataBuf<E>>>>,
+}
+
+impl<E: Elem> OpCell<E> {
+    fn new() -> Arc<OpCell<E>> {
+        Arc::new(OpCell {
+            result: Mutex::new(None),
+        })
+    }
+
+    fn put(&self, r: Result<DataBuf<E>>) {
+        *self.result.lock().unwrap() = Some(r);
+    }
+
+    fn ready(&self) -> bool {
+        self.result.lock().unwrap().is_some()
+    }
+
+    fn take(&self) -> Option<Result<DataBuf<E>>> {
+        self.result.lock().unwrap().take()
+    }
+}
+
+/// A handle to one in-flight (or queued) operation. Redeem it with
+/// [`Engine::wait`]; poll with [`Engine::test`].
+pub struct Request<E: Elem> {
+    id: u64,
+    cell: Arc<OpCell<E>>,
+}
+
+impl<E: Elem> Request<E> {
+    /// The engine-local operation id (diagnostics).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// What a worker thread reports back at join time.
+type WorkerOut = (RankMetrics, f64);
+
+/// One spawned worker (a solo op or a fused batch) not yet joined. The
+/// result cells are owned by the request handles and the worker closure;
+/// the flight record only needs to know *which* requests it carries.
+struct InFlight {
+    ids: Vec<u64>,
+    handle: JoinHandle<WorkerOut>,
+}
+
+/// A queued-not-yet-launched fusable operation. Keeps the submitted
+/// block partition so a batch of one launches with exactly the pipeline
+/// depth the caller asked for.
+struct Pending<E: Elem> {
+    id: u64,
+    cell: Arc<OpCell<E>>,
+    x: DataBuf<E>,
+    blocks: Blocks,
+}
+
+/// The per-rank nonblocking collective engine. See the module docs for
+/// the leasing and flush rules; see [`driver`] for a ready-made
+/// concurrent-traffic driver.
+pub struct Engine<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> {
+    comm: &'c mut ThreadComm<E>,
+    op: O,
+    cfg: NbcConfig,
+    next_tag: u32,
+    next_id: u64,
+    in_flight: Vec<InFlight>,
+    pending: Vec<Pending<E>>,
+    /// Operations submitted and not yet delivered to a `wait`.
+    outstanding: u64,
+    outstanding_max: u64,
+}
+
+impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
+    /// An engine over `comm` reducing with `op` under `cfg`.
+    pub fn new(comm: &'c mut ThreadComm<E>, op: O, cfg: NbcConfig) -> Engine<'c, E, O> {
+        let tag_base = cfg.tag_base.max(1); // tag 0 belongs to blocking traffic
+        Engine {
+            comm,
+            op,
+            cfg,
+            next_tag: tag_base,
+            next_id: 0,
+            in_flight: Vec::new(),
+            pending: Vec::new(),
+            outstanding: 0,
+            outstanding_max: 0,
+        }
+    }
+
+    /// The number of operations submitted and not yet waited on.
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// This rank's id (convenience passthrough while the engine holds the
+    /// endpoint borrow).
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Lease the next tag (one per operation, never reused).
+    fn lease_tag(&mut self) -> u32 {
+        let t = self.next_tag;
+        self.next_tag = self
+            .next_tag
+            .checked_add(1)
+            .expect("nbc tag space exhausted");
+        t
+    }
+
+    fn note_submitted(&mut self) {
+        self.outstanding += 1;
+        self.outstanding_max = self.outstanding_max.max(self.outstanding);
+        let m = self.comm.metrics_mut();
+        m.ops_in_flight_max = m.ops_in_flight_max.max(self.outstanding_max);
+    }
+
+    /// Submit a nonblocking allreduce of `x` under `algo` (any flat
+    /// [`AlgoKind`], or [`AlgoKind::Hier`] over the config's mapping;
+    /// [`AlgoKind::Scan`] runs the prefix scan). Returns immediately.
+    ///
+    /// Small [`AlgoKind::Dpdr`] operations (`x.len() ≤
+    /// fuse.threshold_elems`) are queued for fusion instead of launched —
+    /// see the module docs for when queued batches close.
+    pub fn iallreduce(
+        &mut self,
+        algo: AlgoKind,
+        x: DataBuf<E>,
+        blocks: &Blocks,
+    ) -> Result<Request<E>> {
+        let fusable = self.cfg.fuse.enabled()
+            && algo == AlgoKind::Dpdr
+            && x.len() <= self.cfg.fuse.threshold_elems;
+        // reject a real/phantom mode switch against the open batch up
+        // front: concatenation cannot mix modes, and discovering that at
+        // flush time would leave an unfixable batch in the queue
+        let mode_conflict = self
+            .pending
+            .first()
+            .is_some_and(|first| first.x.is_phantom() != x.is_phantom());
+        if fusable && mode_conflict {
+            return Err(Error::Config(
+                "fusion cannot mix real and phantom inputs in one batch — flush() \
+                 before switching payload modes"
+                    .into(),
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let cell = OpCell::new();
+        let req = Request {
+            id,
+            cell: Arc::clone(&cell),
+        };
+        self.note_submitted();
+        if fusable {
+            self.pending.push(Pending {
+                id,
+                cell,
+                x,
+                blocks: *blocks,
+            });
+            if self.pending.len() >= self.cfg.fuse.max_ops {
+                self.flush()?;
+            }
+        } else {
+            self.spawn_solo(algo, x, *blocks, id, cell)?;
+        }
+        Ok(req)
+    }
+
+    /// Launch one operation on its own tagged worker thread.
+    fn spawn_solo(
+        &mut self,
+        algo: AlgoKind,
+        x: DataBuf<E>,
+        blocks: Blocks,
+        id: u64,
+        cell: Arc<OpCell<E>>,
+    ) -> Result<()> {
+        let tag = self.lease_tag();
+        let child = self.comm.fork_tagged(tag);
+        let op = self.op.clone();
+        let mapping = self.cfg.mapping;
+        let backend = self.cfg.backend;
+        let handle = spawn_worker(child, tag, backend, move |comm| {
+            let out = allreduce_on(algo, comm, x, &op, &blocks, mapping);
+            let ok = out.is_ok();
+            cell.put(out);
+            ok
+        })?;
+        self.in_flight.push(InFlight {
+            ids: vec![id],
+            handle,
+        });
+        Ok(())
+    }
+
+    /// Close the current fused batch: concatenate the queued inputs, run
+    /// one pipelined dpdr at the lemma-optimal block count for the fused
+    /// length on a single leased tag, and scatter the result back to the
+    /// per-op requests. A no-op on an empty queue; a queue of one simply
+    /// launches that operation solo (nothing to fuse).
+    pub fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        if self.pending.len() == 1 {
+            // nothing to fuse: launch the lone op exactly as submitted
+            let p = self.pending.pop().unwrap();
+            return self.spawn_solo(AlgoKind::Dpdr, p.x, p.blocks, p.id, p.cell);
+        }
+        let batch: Vec<Pending<E>> = std::mem::take(&mut self.pending);
+        let total: usize = batch.iter().map(|p| p.x.len()).sum();
+        // per-op offsets within the fused vector, in submission order
+        let mut bounds = Vec::with_capacity(batch.len());
+        let mut lo = 0usize;
+        for p in &batch {
+            bounds.push((lo, lo + p.x.len()));
+            lo += p.x.len();
+        }
+        // the batch is mode-uniform: iallreduce rejects a real/phantom
+        // switch against an open batch at submission
+        let fused: DataBuf<E> = if batch[0].x.is_phantom() {
+            DataBuf::phantom(total)
+        } else {
+            let mut v: Vec<E> = Vec::with_capacity(total);
+            for p in &batch {
+                v.extend_from_slice(p.x.as_slice().expect("mode-uniform batch"));
+            }
+            DataBuf::real(v)
+        };
+        // the Pipelining-Lemma optimal depth for the *fused* length under
+        // the run's inter-node link (the level the lemma is stated for)
+        let (a, c) = AlgoKind::Dpdr
+            .step_structure(self.comm.size())
+            .expect("dpdr is pipelined");
+        let blocks = Blocks::lemma_optimal(total, E::BYTES, a, c, self.fuse_link());
+        {
+            let m = self.comm.metrics_mut();
+            m.fused_ops += batch.len() as u64;
+            m.fused_elems += total as u64;
+        }
+        let tag = self.lease_tag();
+        let child = self.comm.fork_tagged(tag);
+        let op = self.op.clone();
+        let mapping = self.cfg.mapping;
+        let backend = self.cfg.backend;
+        let (ids, worker_cells): (Vec<u64>, Vec<Arc<OpCell<E>>>) =
+            batch.into_iter().map(|p| (p.id, p.cell)).unzip();
+        let handle = spawn_worker(child, tag, backend, move |comm| {
+            match allreduce_on(AlgoKind::Dpdr, comm, fused, &op, &blocks, mapping) {
+                Ok(y) => {
+                    // scatter: each request gets its slice of the fused
+                    // result (zero-copy views of the worker's slab)
+                    for (cell, &(lo, hi)) in worker_cells.iter().zip(&bounds) {
+                        cell.put(y.extract(lo, hi));
+                    }
+                    true
+                }
+                Err(e) => {
+                    for cell in &worker_cells {
+                        cell.put(Err(Error::Protocol(format!("fused dpdr failed: {e}"))));
+                    }
+                    false
+                }
+            }
+        })?;
+        self.in_flight.push(InFlight { ids, handle });
+        Ok(())
+    }
+
+    /// The link cost the fusion layer optimizes block counts for: the
+    /// inter-node level of the run's cost model (the paper's default
+    /// "Hydra" link under real timing, where no model exists).
+    fn fuse_link(&self) -> LinkCost {
+        match self.comm.timing() {
+            Timing::Virtual(model, _) => model.link_levels().1,
+            // real timing carries no model: use the canonical Hydra
+            // calibration rather than a private copy of its constants
+            Timing::Real => crate::model::CostModel::hydra_uniform().link_levels().1,
+        }
+    }
+
+    /// Nonblocking completion probe: true once the operation's result is
+    /// delivered to its cell. Deliberately side-effect free — it neither
+    /// flushes a queued batch (see the module docs) nor joins the worker,
+    /// so virtual clocks never depend on how often a rank polls; the
+    /// clock/metrics merge happens at [`Engine::wait`]. A queued request
+    /// therefore tests `false` until a flush point launches it.
+    pub fn test(&self, req: &Request<E>) -> Result<bool> {
+        Ok(req.cell.ready())
+    }
+
+    /// Wait for one operation and return its payload: joins exactly the
+    /// worker carrying the request (other operations keep flying).
+    ///
+    /// Waiting on a request that is still *queued for fusion* is a
+    /// contract error, not a flush point: a flush here would close the
+    /// batch with whatever happens to be queued on *this* rank at *this*
+    /// wait — and since wait order is deliberately free, ranks
+    /// interleaving submissions with waits could close different batches
+    /// and deadlock. Close batches at the SPMD-symmetric points instead:
+    /// `fuse_max_ops`, [`Engine::flush`], or [`Engine::wait_all`].
+    pub fn wait(&mut self, req: Request<E>) -> Result<DataBuf<E>> {
+        if self.pending.iter().any(|p| p.id == req.id) {
+            return Err(Error::Config(
+                "request is still queued for fusion — close the batch with flush() or \
+                 wait_all() first (a wait-triggered flush would depend on rank-local \
+                 wait order and break the SPMD batch contract)"
+                    .into(),
+            ));
+        }
+        // join the worker carrying the request (blocking if it is still
+        // running), so its clock and metrics merge no later than result
+        // delivery; already-reaped workers are simply not found
+        if let Some(i) = self.in_flight.iter().position(|f| f.ids.contains(&req.id)) {
+            self.join_one(i)?;
+        }
+        self.outstanding = self.outstanding.saturating_sub(1);
+        match req.cell.take() {
+            Some(r) => r,
+            None => Err(Error::Protocol(
+                "wait on an unknown or already-waited request".into(),
+            )),
+        }
+    }
+
+    /// Drive everything to completion: flush the queue and join every
+    /// worker. Individual [`Engine::wait`] calls afterwards return
+    /// instantly with the delivered payloads.
+    pub fn wait_all(&mut self) -> Result<()> {
+        self.flush()?;
+        while !self.in_flight.is_empty() {
+            self.join_one(self.in_flight.len() - 1)?;
+        }
+        Ok(())
+    }
+
+    /// Join in-flight entry `i`, folding its metrics and completion time
+    /// into the rank endpoint.
+    fn join_one(&mut self, i: usize) -> Result<()> {
+        let flight = self.in_flight.swap_remove(i);
+        match flight.handle.join() {
+            Ok((metrics, vtime)) => {
+                self.comm.absorb_child(&metrics, vtime);
+                Ok(())
+            }
+            Err(_) => {
+                self.comm.poison_world();
+                Err(Error::Protocol("nbc worker thread panicked".into()))
+            }
+        }
+    }
+}
+
+impl<E: Elem, O: ReduceOp<E> + Clone + 'static> Drop for Engine<'_, E, O> {
+    /// Joining on drop keeps workers from outliving the world teardown;
+    /// prefer an explicit [`Engine::wait_all`], which can also report
+    /// errors.
+    fn drop(&mut self) {
+        let _ = self.wait_all();
+    }
+}
+
+/// Spawn one worker thread running `body` on the forked endpoint, then
+/// harvesting the endpoint's metrics (plus the worker thread's buffer and
+/// backend thread-locals) and final virtual clock. Errors inside `body`
+/// (signalled by returning `false`) land in the op cells; the worker also
+/// poisons the world so peers abort instead of hitting the watchdog.
+fn spawn_worker<E: Elem>(
+    mut child: ThreadComm<E>,
+    tag: u32,
+    backend: ReduceBackend,
+    body: impl FnOnce(&mut ThreadComm<E>) -> bool + Send + 'static,
+) -> Result<JoinHandle<WorkerOut>> {
+    let name = format!("nbc-r{}-t{}", child.rank(), tag);
+    std::thread::Builder::new()
+        .name(name)
+        .stack_size(1 << 20)
+        .spawn(move || {
+            let _backend = crate::ops::backend::scope(backend);
+            // fresh thread: reset the thread-local counters so the
+            // harvest below covers exactly this operation
+            let _ = crate::buffer::pool::take_stats();
+            let _ = crate::ops::backend::take_stats();
+            if !body(&mut child) {
+                child.poison_world();
+            }
+            let mut metrics = child.metrics().clone();
+            metrics.absorb_buffer_stats(&crate::buffer::pool::take_stats());
+            metrics.absorb_backend_stats(&crate::ops::backend::take_stats());
+            (metrics, child.vtime())
+        })
+        .map_err(Error::Io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::RunSpec;
+    use crate::comm::{run_world, Comm};
+    use crate::ops::SumOp;
+
+    fn blocks_of(m: usize, b: usize) -> Blocks {
+        Blocks::by_count(m, b)
+    }
+
+    #[test]
+    fn single_nonblocking_op_roundtrip() {
+        let spec = RunSpec::new(4, 40);
+        let expected = spec.expected_sum_i32();
+        let report = run_world::<i32, _, _>(4, Timing::Real, move |comm| {
+            let x = DataBuf::real(spec.input_i32(comm.rank()));
+            let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+            let req = eng.iallreduce(AlgoKind::Dpdr, x, &blocks_of(40, 4))?;
+            let y = eng.wait(req)?;
+            y.into_vec()
+        })
+        .unwrap();
+        for got in report.results {
+            assert_eq!(got, expected);
+        }
+        let totals = report.total_metrics();
+        assert_eq!(totals.ops_in_flight_max, 1);
+        assert_eq!(totals.fused_ops, 0);
+    }
+
+    #[test]
+    fn overlapped_ops_complete_out_of_order() {
+        // submit 3 ops, wait newest-first: results must match per-op
+        // oracles regardless of wait order
+        let specs: Vec<RunSpec> = (0..3u64).map(|i| RunSpec::new(6, 30).seed(77 + i)).collect();
+        let expected: Vec<Vec<i32>> = specs.iter().map(|s| s.expected_sum_i32()).collect();
+        let specs2 = specs.clone();
+        let report = run_world::<i32, _, _>(6, Timing::Real, move |comm| {
+            let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+            let mut reqs = Vec::new();
+            for s in &specs2 {
+                let x = DataBuf::real(s.input_i32(eng.rank()));
+                reqs.push(eng.iallreduce(AlgoKind::Dpdr, x, &blocks_of(30, 3))?);
+            }
+            let mut out = vec![Vec::new(); 3];
+            for (i, req) in reqs.into_iter().enumerate().rev() {
+                out[i] = eng.wait(req)?.into_vec()?;
+            }
+            Ok(out)
+        })
+        .unwrap();
+        for per_rank in report.results {
+            for (i, got) in per_rank.into_iter().enumerate() {
+                assert_eq!(got, expected[i], "op {i}");
+            }
+        }
+        assert_eq!(report.total_metrics().ops_in_flight_max, 3);
+    }
+
+    #[test]
+    fn fusion_scatters_correct_slices() {
+        // 4 small ops fuse into one dpdr; each request gets its own slice
+        let lens = [5usize, 9, 1, 7];
+        let p = 5usize;
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            let rank = comm.rank() as i32;
+            let cfg = NbcConfig {
+                fuse: FusePolicy::new(16, 4),
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let mut reqs = Vec::new();
+            for (i, &len) in lens.iter().enumerate() {
+                let x = DataBuf::real((0..len).map(|j| rank + (i * 100 + j) as i32).collect());
+                reqs.push(eng.iallreduce(AlgoKind::Dpdr, x, &blocks_of(len, 2))?);
+            }
+            let mut out = Vec::new();
+            for req in reqs {
+                out.push(eng.wait(req)?.into_vec()?);
+            }
+            Ok(out)
+        })
+        .unwrap();
+        let rank_sum: i32 = (0..p as i32).sum();
+        for per_rank in report.results {
+            assert_eq!(per_rank.len(), lens.len());
+            for (i, (got, &len)) in per_rank.into_iter().zip(&lens).enumerate() {
+                let expected: Vec<i32> = (0..len)
+                    .map(|j| rank_sum + p as i32 * (i * 100 + j) as i32)
+                    .collect();
+                assert_eq!(got, expected, "op {i}");
+            }
+        }
+        let totals = report.total_metrics();
+        assert_eq!(totals.fused_ops, 4 * p as u64);
+        assert_eq!(totals.fused_elems, 22 * p as u64);
+    }
+
+    #[test]
+    fn explicit_flush_and_partial_batches() {
+        // threshold splits traffic: the big op launches solo while the
+        // two smalls queue until the explicit flush() closes their batch
+        let report = run_world::<i32, _, _>(3, Timing::Real, move |comm| {
+            let cfg = NbcConfig {
+                fuse: FusePolicy::new(8, 100),
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let rank = eng.rank() as i32;
+            let big = eng.iallreduce(
+                AlgoKind::Dpdr,
+                DataBuf::real(vec![rank; 64]),
+                &blocks_of(64, 4),
+            )?;
+            let s1 = eng.iallreduce(
+                AlgoKind::Dpdr,
+                DataBuf::real(vec![rank + 1; 4]),
+                &blocks_of(4, 1),
+            )?;
+            // still queued: test must not flush, and must report pending
+            assert!(!eng.test(&s1)?);
+            let s2 = eng.iallreduce(
+                AlgoKind::Dpdr,
+                DataBuf::real(vec![rank + 2; 4]),
+                &blocks_of(4, 1),
+            )?;
+            eng.flush()?;
+            let a = eng.wait(big)?.into_vec()?;
+            let b = eng.wait(s1)?.into_vec()?;
+            let c = eng.wait(s2)?.into_vec()?;
+            Ok((a, b, c))
+        })
+        .unwrap();
+        for (a, b, c) in report.results {
+            assert_eq!(a, vec![3i32; 64]); // 0+1+2
+            assert_eq!(b, vec![6i32; 4]); // +1 per rank
+            assert_eq!(c, vec![9i32; 4]); // +2 per rank
+        }
+    }
+
+    #[test]
+    fn wait_on_queued_request_is_a_contract_error_until_flushed() {
+        // wait never flushes (rank-local wait order must not decide batch
+        // composition); an explicit flush launches the batch of one with
+        // exactly the submitted block partition
+        let report = run_world::<i32, _, _>(2, Timing::Real, move |comm| {
+            let cfg = NbcConfig {
+                fuse: FusePolicy::new(8, 100),
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let rank = eng.rank() as i32;
+            let r1 = eng.iallreduce(
+                AlgoKind::Dpdr,
+                DataBuf::real(vec![rank; 3]),
+                &blocks_of(3, 1),
+            )?;
+            let r2 = eng.iallreduce(
+                AlgoKind::Dpdr,
+                DataBuf::real(vec![rank + 1; 3]),
+                &blocks_of(3, 1),
+            )?;
+            // still queued: waiting is refused, nothing launches
+            assert!(eng.wait(r1).is_err());
+            eng.flush()?;
+            eng.wait(r2)?.into_vec()
+        })
+        .unwrap();
+        for got in report.results {
+            assert_eq!(got, vec![3i32; 3]); // (0+1) + 1 per rank
+        }
+    }
+
+    #[test]
+    fn virtual_overlap_beats_sequential_on_the_clock() {
+        // two ops overlap in virtual time under the dedicated model: the
+        // engine finishes in ~one op's time, the blocking loop in two
+        let m = 4_000usize;
+        let blocking = run_world::<i32, _, _>(6, Timing::hydra(), move |comm| {
+            for _ in 0..2 {
+                let x = DataBuf::phantom(m);
+                crate::collectives::allreduce(
+                    AlgoKind::Dpdr,
+                    comm,
+                    x,
+                    &SumOp,
+                    &Blocks::by_count(m, 8),
+                )?;
+            }
+            Ok(())
+        })
+        .unwrap();
+        let overlapped = run_world::<i32, _, _>(6, Timing::hydra(), move |comm| {
+            let blocks = Blocks::by_count(m, 8);
+            let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+            let r1 = eng.iallreduce(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks)?;
+            let r2 = eng.iallreduce(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks)?;
+            eng.wait(r1)?;
+            eng.wait(r2)?;
+            Ok(())
+        })
+        .unwrap();
+        let t_seq = blocking.max_vtime_us;
+        let t_ovl = overlapped.max_vtime_us;
+        assert!(
+            t_ovl < 0.75 * t_seq,
+            "overlap {t_ovl} should beat sequential {t_seq}"
+        );
+    }
+
+    #[test]
+    fn sequential_engines_need_disjoint_tag_bases() {
+        // two engines, one after the other, on the same world: disjoint
+        // leases keep their channels apart
+        let report = run_world::<i32, _, _>(3, Timing::Real, move |comm| {
+            let a = {
+                let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+                let r = eng.iallreduce(
+                    AlgoKind::Dpdr,
+                    DataBuf::real(vec![1i32; 4]),
+                    &blocks_of(4, 1),
+                )?;
+                eng.wait(r)?.into_vec()?
+            };
+            let cfg = NbcConfig {
+                tag_base: 1000,
+                ..NbcConfig::default()
+            };
+            let b = {
+                let mut eng = Engine::new(comm, SumOp, cfg);
+                let r = eng.iallreduce(
+                    AlgoKind::Dpdr,
+                    DataBuf::real(vec![2i32; 4]),
+                    &blocks_of(4, 1),
+                )?;
+                eng.wait(r)?.into_vec()?
+            };
+            Ok((a, b))
+        })
+        .unwrap();
+        for (a, b) in report.results {
+            assert_eq!(a, vec![3i32; 4]);
+            assert_eq!(b, vec![6i32; 4]);
+        }
+    }
+}

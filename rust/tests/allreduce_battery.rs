@@ -12,7 +12,7 @@ use dpdr::pipeline::Blocks;
 use dpdr::topo::Mapping;
 use dpdr::util::XorShift64;
 
-const ALL_ALGOS: [AlgoKind; 10] = [
+const ALL_ALGOS: [AlgoKind; 11] = [
     AlgoKind::Dpdr,
     AlgoKind::DpdrSingle,
     AlgoKind::PipeTree,
@@ -23,6 +23,7 @@ const ALL_ALGOS: [AlgoKind; 10] = [
     AlgoKind::RecursiveDoubling,
     AlgoKind::Rabenseifner,
     AlgoKind::Hier,
+    AlgoKind::Scan,
 ];
 
 /// Node layout the battery hands `AlgoKind::Hier` (other algorithms
@@ -39,13 +40,15 @@ fn i32_sum_battery() {
                     .block_elems(16)
                     .seed(p as u64 * 31 + m as u64)
                     .mapping(BATTERY_MAPPING);
-                let expected = spec.expected_sum_i32();
                 let report = run_allreduce_i32(algo, &spec, Timing::Real)
                     .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
+                // one O(p·m) oracle pass: rank prefixes for the scan,
+                // the shared world sum for everything else
+                let oracles = spec.expected_i32_per_rank(algo);
                 for (rank, buf) in report.results.into_iter().enumerate() {
                     assert_eq!(
                         buf.into_vec().unwrap(),
-                        expected,
+                        oracles[rank],
                         "{} p={p} m={m} rank={rank}",
                         algo.name()
                     );
@@ -55,7 +58,9 @@ fn i32_sum_battery() {
     }
 }
 
-/// Generic oracle-checked run for any element type and operator.
+/// Generic oracle-checked run for any element type and operator. The
+/// oracle folds in rank order — over all ranks for the reduction-to-all
+/// algorithms, over `0..=rank` for the scan's per-rank prefixes.
 fn check_generic<E, O, F>(algo: AlgoKind, p: usize, m: usize, b: usize, op: O, gen: F)
 where
     E: dpdr::ops::Elem,
@@ -71,17 +76,25 @@ where
         allreduce_on(algo, comm, x, &op2, &blocks, BATTERY_MAPPING)
     })
     .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()));
-    // oracle: fold in rank order
-    let mut expected: Vec<E> = (0..m).map(|i| gen(0, i)).collect();
-    for r in 1..p {
-        for (i, e) in expected.iter_mut().enumerate() {
-            *e = op.combine(*e, gen(r, i));
+    // running rank-order fold: after folding rank r it is the scan's
+    // prefix oracle for r, after folding all ranks the allreduce oracle
+    let mut fold: Vec<E> = (0..m).map(|i| gen(0, i)).collect();
+    if algo != AlgoKind::Scan {
+        for r in 1..p {
+            for (i, e) in fold.iter_mut().enumerate() {
+                *e = op.combine(*e, gen(r, i));
+            }
         }
     }
     for (rank, buf) in report.results.into_iter().enumerate() {
+        if algo == AlgoKind::Scan && rank > 0 {
+            for (i, e) in fold.iter_mut().enumerate() {
+                *e = op.combine(*e, gen(rank, i));
+            }
+        }
         assert_eq!(
             buf.into_vec().unwrap(),
-            expected,
+            fold,
             "{} p={p} rank={rank}",
             algo.name()
         );
@@ -233,9 +246,15 @@ fn seqcheck_span_witness_all_order_preserving() {
                 allreduce_on(algo, comm, x, &SeqCheckOp, &blocks, BATTERY_MAPPING)
             })
             .unwrap();
-            for buf in report.results {
+            for (rank, buf) in report.results.into_iter().enumerate() {
+                // the scan's witness is the rank prefix interval
+                let want = if algo == AlgoKind::Scan {
+                    Span::of(0, rank as u32)
+                } else {
+                    Span::of(0, p as u32 - 1)
+                };
                 for s in buf.into_vec().unwrap() {
-                    assert_eq!(s, Span::of(0, p as u32 - 1), "{} p={p}", algo.name());
+                    assert_eq!(s, want, "{} p={p} rank={rank}", algo.name());
                 }
             }
         }

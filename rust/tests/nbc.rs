@@ -1,0 +1,216 @@
+//! Concurrency battery for the nonblocking collective engine: K
+//! outstanding allreduces on mixed algorithms and disjoint tag leases
+//! must produce payloads bitwise identical to sequential execution — on
+//! the dedicated transport and under a congestion-aware model at edge
+//! capacity 1 with a single NIC port per node (no deadlock, sane fabric
+//! metrics) — and the fusion layer must scatter exact per-op results.
+
+use dpdr::collectives::{run_allreduce_i32, RunSpec};
+use dpdr::comm::Timing;
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
+use dpdr::nbc::{run_concurrent_i32, ConcurrentSpec, FusePolicy};
+use dpdr::topo::Mapping;
+
+const MAPPING: Mapping = Mapping::Block { ranks_per_node: 4 };
+
+/// The algorithm rotation of the battery: flat trees, butterfly, ring,
+/// and the node-aware hierarchy — concurrent operations deliberately mix
+/// protocols with different traffic shapes on one world.
+const MIX: [AlgoKind; 5] = [
+    AlgoKind::Dpdr,
+    AlgoKind::RecursiveDoubling,
+    AlgoKind::TwoTree,
+    AlgoKind::Ring,
+    AlgoKind::Hier,
+];
+
+fn congested_timing(net: NetParams) -> Timing {
+    Timing::Virtual(
+        CostModel::Congested {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping: MAPPING,
+            net,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
+/// Sequential reference: run each op's (algo, spec) as a plain blocking
+/// world and collect the per-op result vectors.
+fn sequential_results(cspec: &ConcurrentSpec, timing: Timing) -> Vec<Vec<i32>> {
+    (0..cspec.k)
+        .map(|i| {
+            let spec = cspec.op_spec(i);
+            let report = run_allreduce_i32(cspec.op_algo(i), &spec, timing)
+                .unwrap_or_else(|e| panic!("sequential op {i}: {e}"));
+            report.results[0].as_slice().unwrap().to_vec()
+        })
+        .collect()
+}
+
+fn check_battery(timing: Timing, net: Option<NetParams>) {
+    for k in [2usize, 4, 8] {
+        let base = RunSpec::new(8, 96)
+            .block_elems(16)
+            .seed(0x5EED ^ k as u64)
+            .mapping(MAPPING);
+        let base = match net {
+            Some(n) => base.net(n),
+            None => base,
+        };
+        let cspec = ConcurrentSpec::new(base, k).algos(MIX.to_vec());
+        let sequential = sequential_results(&cspec, timing);
+        let report = run_concurrent_i32(&cspec, timing)
+            .unwrap_or_else(|e| panic!("concurrent k={k}: {e}"));
+        for (rank, (bufs, _t)) in report.results.iter().enumerate() {
+            assert_eq!(bufs.len(), k);
+            for (i, buf) in bufs.iter().enumerate() {
+                assert_eq!(
+                    buf.as_slice().unwrap(),
+                    &sequential[i][..],
+                    "k={k} rank={rank} op={i} ({})",
+                    cspec.op_algo(i).name()
+                );
+                // bitwise identity to the oracle as well
+                assert_eq!(buf.as_slice().unwrap(), &cspec.op_expected(i)[..]);
+            }
+        }
+        let totals = report.total_metrics();
+        assert_eq!(totals.ops_in_flight_max, k as u64, "k={k}");
+        // fabric metrics must be sane in either mode: non-negative, finite
+        assert!(totals.stall_us >= 0.0 && totals.stall_us.is_finite());
+        if net.is_some() {
+            // congested worlds report per-node NIC occupancy for 2 nodes
+            assert_eq!(report.net_occupancy.len(), 2, "k={k}");
+            let busy: f64 = report
+                .net_occupancy
+                .iter()
+                .map(|o| o.egress_busy_us)
+                .sum();
+            assert!(busy > 0.0 && busy.is_finite(), "k={k}: egress {busy}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_matches_sequential_bitwise_real_transport() {
+    check_battery(Timing::Real, None);
+}
+
+#[test]
+fn concurrent_matches_sequential_bitwise_dedicated_virtual() {
+    check_battery(
+        Timing::Virtual(
+            CostModel::Hierarchical {
+                intra: LinkCost::new(0.3e-6, 0.08e-9),
+                inter: LinkCost::new(1.0e-6, 0.70e-9),
+                mapping: MAPPING,
+            },
+            ComputeCost::new(0.25e-9),
+        ),
+        None,
+    );
+}
+
+#[test]
+fn concurrent_survives_edge_capacity_one_with_one_port() {
+    // The acceptance case: overlapped operations at edge capacity 1 and a
+    // single NIC port per node. Per-tag injection queues keep independent
+    // operations' backpressure acyclic, so the battery must complete (no
+    // deadlock) with payloads bitwise identical to sequential execution.
+    let net = NetParams::ports(1).edge_capacity(1);
+    check_battery(congested_timing(net), Some(net));
+}
+
+#[test]
+fn concurrent_survives_capacity_two_and_three() {
+    for cap in [2usize, 3] {
+        let net = NetParams::ports(1).edge_capacity(cap);
+        let base = RunSpec::new(8, 64)
+            .block_elems(8)
+            .seed(0xCAFE + cap as u64)
+            .mapping(MAPPING)
+            .net(net);
+        let cspec = ConcurrentSpec::new(base, 4).algos(MIX.to_vec());
+        let report = run_concurrent_i32(&cspec, congested_timing(net)).unwrap();
+        for (bufs, _t) in &report.results {
+            for (i, buf) in bufs.iter().enumerate() {
+                assert_eq!(buf.as_slice().unwrap(), &cspec.op_expected(i)[..], "cap={cap}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_batch_matches_oracles_and_counts_metrics() {
+    // k small dpdr ops below the threshold fuse into one vector; results
+    // scatter back exactly, and the fusion counters see every op
+    let k = 8usize;
+    let base = RunSpec::new(6, 48).block_elems(8).seed(0xF00D);
+    let cspec = ConcurrentSpec::new(base, k).fuse(FusePolicy::new(48, k));
+    let report = run_concurrent_i32(&cspec, Timing::Real).unwrap();
+    for (rank, (bufs, _t)) in report.results.iter().enumerate() {
+        for (i, buf) in bufs.iter().enumerate() {
+            assert_eq!(
+                buf.as_slice().unwrap(),
+                &cspec.op_expected(i)[..],
+                "rank={rank} op={i}"
+            );
+        }
+    }
+    let totals = report.total_metrics();
+    assert_eq!(totals.fused_ops, (k * 6) as u64);
+    assert_eq!(totals.fused_elems, (k * 48 * 6) as u64);
+}
+
+#[test]
+fn fusion_beats_back_to_back_small_ops_on_the_virtual_clock() {
+    // the α-amortization claim, measured: 8 small ops fused vs sequential
+    let k = 8usize;
+    let m = 256usize;
+    let timing = Timing::hydra();
+    let base = RunSpec::new(8, m).block_elems(m).phantom(true);
+    // sequential: k blocking dpdr's back to back
+    let seq: f64 = (0..k)
+        .map(|i| {
+            let spec = ConcurrentSpec::new(base, k).op_spec(i);
+            run_allreduce_i32(AlgoKind::Dpdr, &spec, timing)
+                .unwrap()
+                .max_vtime_us
+        })
+        .sum();
+    // fused: one engine, one batch
+    let cspec = ConcurrentSpec::new(base, k).fuse(FusePolicy::new(m, k));
+    let report = run_concurrent_i32(&cspec, timing).unwrap();
+    let fused = dpdr::nbc::driver::concurrent_time_us(&report);
+    assert!(
+        fused < seq,
+        "fused {fused} us should beat sequential {seq} us at m={m}, k={k}"
+    );
+    assert!(report.total_metrics().fused_ops > 0);
+}
+
+#[test]
+fn fused_batches_overlap_under_congestion() {
+    // two fused batches in flight at once under a bounded fabric: both
+    // dpdr workers share the single port per node; results stay exact
+    let net = NetParams::ports(1).edge_capacity(2);
+    let base = RunSpec::new(8, 32)
+        .block_elems(8)
+        .seed(0xBEEF)
+        .mapping(MAPPING)
+        .net(net);
+    let cspec = ConcurrentSpec::new(base, 6)
+        .algos(vec![AlgoKind::Dpdr])
+        .fuse(FusePolicy::new(32, 3));
+    let report = run_concurrent_i32(&cspec, congested_timing(net)).unwrap();
+    for (bufs, _t) in &report.results {
+        for (i, buf) in bufs.iter().enumerate() {
+            assert_eq!(buf.as_slice().unwrap(), &cspec.op_expected(i)[..]);
+        }
+    }
+    // two batches of 3 fused ops each
+    let totals = report.total_metrics();
+    assert_eq!(totals.fused_ops, 6 * 8);
+}

@@ -27,6 +27,7 @@ fn random_algo(g: &mut Gen) -> AlgoKind {
         AlgoKind::RecursiveDoubling,
         AlgoKind::Rabenseifner,
         AlgoKind::Hier,
+        AlgoKind::Scan,
     ])
 }
 
@@ -41,12 +42,14 @@ fn prop_allreduce_equals_oracle() {
         let spec = RunSpec::new(p, m)
             .block_elems(m.max(1).div_ceil(b))
             .seed(seed);
-        let expected = spec.expected_sum_i32();
         let report = run_allreduce_i32(algo, &spec, Timing::Real)
             .map_err(|e| format!("{} p={p} m={m} b={b}: {e}", algo.name()))?;
+        // per-(algo, rank) oracles: the allreduce sum for the
+        // reduction-to-all kinds, the rank prefixes for the scan
+        let oracles = spec.expected_i32_per_rank(algo);
         for (rank, buf) in report.results.into_iter().enumerate() {
             let got = buf.into_vec().map_err(|e| e.to_string())?;
-            if got != expected {
+            if got != oracles[rank] {
                 return Err(format!(
                     "{} p={p} m={m} b={b} rank={rank}: wrong result",
                     algo.name()
@@ -71,12 +74,12 @@ fn prop_transport_parity_all_algos() {
         let m = g.usize_in(1, 257);
         let blk = g.odd_usize_in(1, 33);
         let spec = RunSpec::new(p, m).block_elems(blk).seed(g.u64());
-        let expected = spec.expected_sum_i32();
+        let oracles = spec.expected_i32_per_rank(algo);
         for run in 0..2 {
             let report = run_allreduce_i32(algo, &spec, Timing::Real)
                 .map_err(|e| format!("{} p={p} m={m} blk={blk}: {e}", algo.name()))?;
             for (rank, buf) in report.results.into_iter().enumerate() {
-                if buf.as_slice() != Some(&expected[..]) {
+                if buf.as_slice() != Some(&oracles[rank][..]) {
                     return Err(format!(
                         "{} p={p} m={m} blk={blk} rank={rank} run={run}: wrong bytes",
                         algo.name()
@@ -360,6 +363,46 @@ fn prop_lemma_optimum_is_optimal() {
 }
 
 #[test]
+fn prop_lemma_optimal_matches_bruteforce_argmin() {
+    // Blocks::lemma_optimal applies the closed form b* = sqrt(Aβm/(Cα));
+    // pin it to the brute-force argmin of T(b) = (A + Cb)(α + βm/b) over
+    // every feasible integer block count: the chosen count must sit
+    // within ±1 block of the argmin and lose nothing on time (T is
+    // convex, so the integer optimum is a neighbour of b*).
+    forall("lemma_optimal == argmin", 120, 0xB10CC, |g| {
+        let m = g.usize_in(1, 4000);
+        let elem_bytes = *g.choose(&[4usize, 8]);
+        let a = g.usize_in(2, 80) as f64;
+        let c = g.usize_in(1, 6) as f64;
+        let alpha = g.usize_in(1, 500) as f64 * 1e-8; // 10 ns … 5 µs
+        let beta = g.usize_in(1, 900) as f64 * 1e-11; // 0.01 … 9 ns/B
+        let link = LinkCost::new(alpha, beta);
+        let chosen = Blocks::lemma_optimal(m, elem_bytes, a, c, link).count();
+        let m_bytes = (m * elem_bytes) as f64;
+        let (mut best_b, mut best_t) = (1usize, f64::INFINITY);
+        for b in 1..=m {
+            let t = lemma::time_at(a, c, alpha, beta, m_bytes, b as f64);
+            if t < best_t {
+                (best_b, best_t) = (b, t);
+            }
+        }
+        if chosen.abs_diff(best_b) > 1 {
+            return Err(format!(
+                "m={m} eb={elem_bytes} A={a} C={c} α={alpha:e} β={beta:e}: \
+                 chose b={chosen}, brute-force argmin b={best_b}"
+            ));
+        }
+        let t_chosen = lemma::time_at(a, c, alpha, beta, m_bytes, chosen as f64);
+        if t_chosen > best_t * (1.0 + 1e-9) {
+            return Err(format!(
+                "m={m}: chosen b={chosen} costs {t_chosen:e} > optimum {best_t:e} at b={best_b}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_phantom_real_vtime_equivalence() {
     // the virtual clock must not depend on whether payloads are real
     forall("phantom == real vtime", 20, 0xFAA7, |g| {
@@ -482,8 +525,18 @@ fn prop_repeated_use_of_world_is_clean() {
             Ok((y1.into_vec()?, y2.into_vec()?))
         })
         .map_err(|e| format!("{}+{}: {e}", algo1.name(), algo2.name()))?;
-        for (y1, y2) in report.results {
-            if y1 != vec![p as i32; m] || y2 != vec![2 * p as i32; m] {
+        // constant-fill oracle per algo: scan leaves rank r its prefix,
+        // every reduction-to-all kind leaves the world sum
+        let expect = |algo: AlgoKind, rank: usize, fill: i32| -> Vec<i32> {
+            let factor = if algo == AlgoKind::Scan {
+                rank as i32 + 1
+            } else {
+                p as i32
+            };
+            vec![fill * factor; m]
+        };
+        for (rank, (y1, y2)) in report.results.into_iter().enumerate() {
+            if y1 != expect(algo1, rank, 1) || y2 != expect(algo2, rank, 2) {
                 return Err(format!("{}+{} corrupted results", algo1.name(), algo2.name()));
             }
         }
