@@ -5,8 +5,26 @@
 //! communicator *group* its own lazily created barrier, so sub-communicator
 //! barriers have exactly the world barrier's semantics.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Recover a lock even if a participant panicked while holding it — the
+/// barrier's state transitions are all-or-nothing under the guard, so the
+/// data is consistent; the *world*-level poison flag (checked by
+/// [`VBarrier::wait_abortable`]) handles the semantic fallout.
+fn relock<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+/// Why an abortable barrier wait gave up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) enum BarrierAbort {
+    /// The world was poisoned while waiting (a peer died).
+    Poisoned,
+    /// The watchdog deadline elapsed with peers still missing.
+    TimedOut,
+}
 
 struct Inner {
     count: usize,
@@ -45,7 +63,7 @@ impl VBarrier {
     /// returning from generation `g`, so the published result is stable
     /// until everyone has read it.
     pub fn wait(&self, value: f64) -> f64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(self.inner.lock());
         let gen = inner.generation;
         inner.max = inner.max.max(value);
         inner.count += 1;
@@ -58,10 +76,55 @@ impl VBarrier {
             inner.result
         } else {
             while inner.generation == gen {
-                inner = self.cv.wait(inner).unwrap();
+                inner = relock(self.cv.wait(inner));
             }
             inner.result
         }
+    }
+
+    /// [`wait`](VBarrier::wait) that gives up instead of blocking forever:
+    /// polls `poisoned()` every `poll` while waiting and aborts after
+    /// `deadline` with peers still missing. On abort this participant's
+    /// contribution stays registered, so a late-but-alive peer completing
+    /// the generation still unblocks everyone else — the aborting thread
+    /// just stops listening (the world is being torn down anyway).
+    pub(super) fn wait_abortable(
+        &self,
+        value: f64,
+        poisoned: impl Fn() -> bool,
+        poll: Duration,
+        deadline: Duration,
+    ) -> Result<f64, BarrierAbort> {
+        let start = std::time::Instant::now();
+        let mut inner = relock(self.inner.lock());
+        let gen = inner.generation;
+        inner.max = inner.max.max(value);
+        inner.count += 1;
+        if inner.count == self.n {
+            inner.result = inner.max;
+            inner.max = f64::NEG_INFINITY;
+            inner.count = 0;
+            inner.generation += 1;
+            self.cv.notify_all();
+            return Ok(inner.result);
+        }
+        while inner.generation == gen {
+            let (guard, _timeout) = match self.cv.wait_timeout(inner, poll) {
+                Ok(pair) => pair,
+                Err(p) => p.into_inner(),
+            };
+            inner = guard;
+            if inner.generation != gen {
+                break;
+            }
+            if poisoned() {
+                return Err(BarrierAbort::Poisoned);
+            }
+            if start.elapsed() >= deadline {
+                return Err(BarrierAbort::TimedOut);
+            }
+        }
+        Ok(inner.result)
     }
 }
 
@@ -95,7 +158,7 @@ impl BarrierTable {
     /// The barrier shared by exactly the ranks in `members` on `tag`
     /// (created on first touch; `VBarrier` is reusable across generations).
     pub(super) fn get(&self, members: &[usize], tag: u32) -> Arc<VBarrier> {
-        let mut map = self.inner.lock().unwrap();
+        let mut map = relock(self.inner.lock());
         if let Some(tags) = map.get_mut(members) {
             if let Some(b) = tags.get(&tag) {
                 return Arc::clone(b);
@@ -109,6 +172,24 @@ impl BarrierTable {
         tags.insert(tag, Arc::clone(&b));
         map.insert(members.to_vec(), tags);
         b
+    }
+
+    /// Drop every barrier registered on one of `tags` (epoch reclamation:
+    /// all ranks have agreed those tags' endpoints are drained and gone).
+    /// Empty member-list entries are removed too, so the table's footprint
+    /// is bounded by the *live* `(group, tag)` set.
+    pub(super) fn remove_tags(&self, tags: &HashSet<u32>) {
+        let mut map = relock(self.inner.lock());
+        for per_tag in map.values_mut() {
+            per_tag.retain(|t, _| !tags.contains(t));
+        }
+        map.retain(|_, per_tag| !per_tag.is_empty());
+    }
+
+    /// Number of live `(group, tag)` barrier entries (observability for
+    /// the soak harness's memory-flatness checks).
+    pub(super) fn entries(&self) -> usize {
+        relock(self.inner.lock()).values().map(|t| t.len()).sum()
     }
 }
 
@@ -151,6 +232,63 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &d)); // different tag → its own barrier
         // a single-member group's barrier never blocks
         assert_eq!(t.get(&[7], 0).wait(1.5), 1.5);
+    }
+
+    #[test]
+    fn abortable_wait_completes_when_everyone_shows_up() {
+        let n = 4;
+        let b = Arc::new(VBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    b.wait_abortable(
+                        i as f64,
+                        || false,
+                        Duration::from_millis(5),
+                        Duration::from_secs(10),
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), Ok((n - 1) as f64));
+        }
+    }
+
+    #[test]
+    fn abortable_wait_aborts_on_poison_and_timeout() {
+        let b = VBarrier::new(2); // nobody else ever arrives
+        let r = b.wait_abortable(
+            1.0,
+            || true,
+            Duration::from_millis(1),
+            Duration::from_secs(10),
+        );
+        assert_eq!(r, Err(BarrierAbort::Poisoned));
+        let b = VBarrier::new(2);
+        let r = b.wait_abortable(
+            1.0,
+            || false,
+            Duration::from_millis(1),
+            Duration::from_millis(20),
+        );
+        assert_eq!(r, Err(BarrierAbort::TimedOut));
+    }
+
+    #[test]
+    fn remove_tags_reclaims_entries() {
+        let t = BarrierTable::new();
+        let _ = t.get(&[0, 1], 1);
+        let _ = t.get(&[0, 1], 2);
+        let _ = t.get(&[0, 1, 2], 2);
+        let _ = t.get(&[0, 1], 0);
+        assert_eq!(t.entries(), 4);
+        let gone: HashSet<u32> = [1, 2].into_iter().collect();
+        t.remove_tags(&gone);
+        assert_eq!(t.entries(), 1); // only ([0,1], 0) survives
+        // a reclaimed (group, tag) re-creates a fresh, usable barrier
+        assert_eq!(t.get(&[9], 1).wait(2.5), 2.5);
     }
 
     #[test]

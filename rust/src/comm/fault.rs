@@ -1,0 +1,262 @@
+//! Deterministic fault injection for the virtual-clock transport.
+//!
+//! A [`FaultPlan`] sits under [`Comm`](super::Comm): every message post
+//! rolls a seeded hash of `(seed, src, dst, tag, seq, salt)` and may be
+//! delayed, duplicated, reordered (held back one message within its
+//! `(src, dst, tag)` stream), or transiently dropped — in which case the
+//! sender retransmits with bounded backoff. Whole ranks can be slowed
+//! down ("stragglers"). All of it perturbs *virtual time and delivery
+//! order only*: sequence numbers let the receiver deduplicate and
+//! reassemble the exact per-tag FIFO stream, so payloads stay bitwise
+//! identical to the fault-free run — unless retries are exhausted, which
+//! surfaces as [`Error::RetriesExhausted`](crate::error::Error) and
+//! poisons the world (the defined teardown path, never a hang).
+//!
+//! Determinism: the roll depends only on the plan seed and the message
+//! identity, never on wall time or scheduling, so a seeded faulty run is
+//! exactly reproducible (pinned by `tests/serving.rs`).
+
+/// Salt values separating the independent fault decisions per message.
+const SALT_DELAY: u64 = 1;
+const SALT_DELAY_MAG: u64 = 2;
+const SALT_DUP: u64 = 3;
+const SALT_REORDER: u64 = 4;
+const SALT_DROP: u64 = 5;
+
+/// A seeded, deterministic fault-injection plan for one world.
+///
+/// `FaultPlan::none()` (the `Default`) is inert and compiled out of the
+/// transport hot path by a single `is_active()` check.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed mixed into every per-message roll.
+    pub seed: u64,
+    /// Probability a message's virtual arrival is delayed.
+    pub delay_prob: f64,
+    /// Maximum injected delay in virtual µs (actual delay is uniform in
+    /// `[0, delay_us]` per message).
+    pub delay_us: f64,
+    /// Probability a message is delivered twice (same sequence number;
+    /// the receiver drops the duplicate).
+    pub dup_prob: f64,
+    /// Probability a message is held back and delivered after its
+    /// successor within the same `(src, dst, tag)` stream.
+    pub reorder_prob: f64,
+    /// Probability any single transmission attempt is dropped; the
+    /// sender retries with linear backoff up to `max_retries` times.
+    pub drop_prob: f64,
+    /// Retransmit attempts before giving up with `RetriesExhausted`.
+    pub max_retries: u32,
+    /// Virtual µs of backoff per retransmit attempt (linear: attempt `k`
+    /// waits `k · backoff_us`).
+    pub backoff_us: f64,
+    /// Every `stall_every`-th rank (1-based: ranks where
+    /// `(rank + 1) % stall_every == 0`) is a straggler; 0 disables.
+    pub stall_every: usize,
+    /// Virtual µs a straggler rank adds to each of its sends.
+    pub stall_us: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: no faults, zero transport overhead.
+    pub const fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            delay_prob: 0.0,
+            delay_us: 0.0,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            drop_prob: 0.0,
+            max_retries: 6,
+            backoff_us: 5.0,
+            stall_every: 0,
+            stall_us: 0.0,
+        }
+    }
+
+    /// A plan with the given seed and no faults yet (compose with the
+    /// builder methods below).
+    pub const fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            ..FaultPlan::none()
+        }
+    }
+
+    pub const fn delay(mut self, prob: f64, max_us: f64) -> FaultPlan {
+        self.delay_prob = prob;
+        self.delay_us = max_us;
+        self
+    }
+
+    pub const fn duplicate(mut self, prob: f64) -> FaultPlan {
+        self.dup_prob = prob;
+        self
+    }
+
+    pub const fn reorder(mut self, prob: f64) -> FaultPlan {
+        self.reorder_prob = prob;
+        self
+    }
+
+    /// Transient drops with sequence-numbered retransmit.
+    pub const fn transient_drop(mut self, prob: f64, max_retries: u32, backoff_us: f64) -> FaultPlan {
+        self.drop_prob = prob;
+        self.max_retries = max_retries;
+        self.backoff_us = backoff_us;
+        self
+    }
+
+    /// Make every `every`-th rank a straggler adding `us` virtual µs per
+    /// send.
+    pub const fn stall(mut self, every: usize, us: f64) -> FaultPlan {
+        self.stall_every = every;
+        self.stall_us = us;
+        self
+    }
+
+    /// True if any fault mode is enabled — the transport consults this
+    /// once per endpoint and skips all fault bookkeeping when inert.
+    pub fn is_active(&self) -> bool {
+        self.delay_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.drop_prob > 0.0
+            || (self.stall_every > 0 && self.stall_us > 0.0)
+    }
+
+    /// True if `rank` is a designated straggler under this plan.
+    pub fn stalled(&self, rank: usize) -> bool {
+        self.stall_every > 0 && (rank + 1) % self.stall_every == 0
+    }
+
+    /// The deterministic roll in `[0, 1)` for one `(message, decision)`
+    /// pair. splitmix64-style finalizer over the identity tuple: good
+    /// avalanche, no state, identical on every rank.
+    pub fn roll(&self, src: usize, dst: usize, tag: u32, seq: u64, salt: u64) -> f64 {
+        let mut z = self
+            .seed
+            .wrapping_add((src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((dst as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add((tag as u64).wrapping_mul(0x1656_67B1_9E37_79F9))
+            .wrapping_add(seq.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+            .wrapping_add(salt.wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Injected delay in virtual µs for this message (0 if the delay
+    /// roll misses).
+    pub fn delay_for(&self, src: usize, dst: usize, tag: u32, seq: u64) -> f64 {
+        if self.delay_prob > 0.0 && self.roll(src, dst, tag, seq, SALT_DELAY) < self.delay_prob {
+            self.delay_us * self.roll(src, dst, tag, seq, SALT_DELAY_MAG)
+        } else {
+            0.0
+        }
+    }
+
+    /// Should this message be delivered twice?
+    pub fn duplicates(&self, src: usize, dst: usize, tag: u32, seq: u64) -> bool {
+        self.dup_prob > 0.0 && self.roll(src, dst, tag, seq, SALT_DUP) < self.dup_prob
+    }
+
+    /// Should this message be held back behind its successor?
+    pub fn reorders(&self, src: usize, dst: usize, tag: u32, seq: u64) -> bool {
+        self.reorder_prob > 0.0 && self.roll(src, dst, tag, seq, SALT_REORDER) < self.reorder_prob
+    }
+
+    /// Is transmission attempt `attempt` (0-based) of this message
+    /// dropped?
+    pub fn drops(&self, src: usize, dst: usize, tag: u32, seq: u64, attempt: u32) -> bool {
+        self.drop_prob > 0.0
+            && self.roll(src, dst, tag, seq, SALT_DROP.wrapping_add(attempt as u64))
+                < self.drop_prob
+    }
+
+    /// Parse a CLI fault list: comma-separated mode names with preset
+    /// magnitudes — `delay`, `dup`, `reorder`, `transient-drop`, `stall`,
+    /// `all` — e.g. `--faults transient-drop,stall`. Returns `None` on an
+    /// unknown mode.
+    pub fn parse(list: &str, seed: u64) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::seeded(seed);
+        for mode in list.split(',') {
+            match mode.trim() {
+                "" | "none" => {}
+                "delay" => plan = plan.delay(0.05, 20.0),
+                "dup" => plan = plan.duplicate(0.02),
+                "reorder" => plan = plan.reorder(0.02),
+                "transient-drop" => plan = plan.transient_drop(0.01, 6, 5.0),
+                "stall" => plan = plan.stall(4, 50.0),
+                "all" => {
+                    plan = plan
+                        .delay(0.05, 20.0)
+                        .duplicate(0.02)
+                        .reorder(0.02)
+                        .transient_drop(0.01, 6, 5.0)
+                        .stall(4, 50.0)
+                }
+                _ => return None,
+            }
+        }
+        Some(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_by_default() {
+        assert!(!FaultPlan::none().is_active());
+        assert!(!FaultPlan::default().is_active());
+        assert!(FaultPlan::seeded(7).delay(0.1, 5.0).is_active());
+        assert!(FaultPlan::seeded(7).stall(4, 10.0).is_active());
+        // a stall period with zero magnitude is still inert
+        assert!(!FaultPlan::seeded(7).stall(4, 0.0).is_active());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_uniform_ish() {
+        let p = FaultPlan::seeded(42).delay(0.5, 10.0);
+        let a = p.roll(1, 2, 3, 4, 5);
+        let b = p.roll(1, 2, 3, 4, 5);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert!((0.0..1.0).contains(&a));
+        // different identity -> different roll (avalanche sanity)
+        assert_ne!(a.to_bits(), p.roll(1, 2, 3, 5, 5).to_bits());
+        assert_ne!(a.to_bits(), p.roll(2, 1, 3, 4, 5).to_bits());
+        // the empirical rate tracks the probability
+        let hits = (0..10_000)
+            .filter(|&s| p.roll(0, 1, 1, s, SALT_DELAY) < 0.5)
+            .count();
+        assert!((4_000..6_000).contains(&hits), "hits={hits}");
+    }
+
+    #[test]
+    fn stall_marks_every_nth_rank() {
+        let p = FaultPlan::seeded(1).stall(4, 10.0);
+        let stalled: Vec<usize> = (0..8).filter(|&r| p.stalled(r)).collect();
+        assert_eq!(stalled, vec![3, 7]);
+        assert!(!FaultPlan::none().stalled(3));
+    }
+
+    #[test]
+    fn parse_modes() {
+        let p = FaultPlan::parse("transient-drop,stall", 7).unwrap();
+        assert!(p.drop_prob > 0.0 && p.stall_every > 0 && p.is_active());
+        assert_eq!(p.seed, 7);
+        let p = FaultPlan::parse("all", 1).unwrap();
+        assert!(p.delay_prob > 0.0 && p.dup_prob > 0.0 && p.reorder_prob > 0.0);
+        assert!(!FaultPlan::parse("none", 1).unwrap().is_active());
+        assert!(FaultPlan::parse("bogus", 1).is_none());
+    }
+}

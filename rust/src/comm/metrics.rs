@@ -79,6 +79,18 @@ pub struct RankMetrics {
     /// Total elements those fused operations contributed (the lengths of
     /// the concatenated vectors actually reduced).
     pub fused_elems: u64,
+    /// Faults injected by this world's [`FaultPlan`](super::FaultPlan)
+    /// that touched this rank's traffic: delays, duplicates (counted at
+    /// both ends), reorder holds. 0 when the plan is inert.
+    pub fault_events: u64,
+    /// Transmission attempts repeated because the transient-drop fault
+    /// mode discarded them (each added backoff to the sender's clock).
+    pub retransmits: u64,
+    /// Nbc epochs closed on this rank (each quiesce that reclaimed the
+    /// epoch's tags counts once).
+    pub epochs: u64,
+    /// Nbc tags returned to the free pool by epoch reclamation.
+    pub tags_recycled: u64,
 }
 
 impl RankMetrics {
@@ -104,6 +116,10 @@ impl RankMetrics {
         self.ops_in_flight_max = self.ops_in_flight_max.max(other.ops_in_flight_max);
         self.fused_ops += other.fused_ops;
         self.fused_elems += other.fused_elems;
+        self.fault_events += other.fault_events;
+        self.retransmits += other.retransmits;
+        self.epochs += other.epochs;
+        self.tags_recycled += other.tags_recycled;
     }
 
     /// Fold one rank's buffer-layer counters (thread-local, harvested when
@@ -153,6 +169,10 @@ mod tests {
             ops_in_flight_max: 3,
             fused_ops: 2,
             fused_elems: 100,
+            fault_events: 11,
+            retransmits: 3,
+            epochs: 2,
+            tags_recycled: 7,
         };
         let b = RankMetrics {
             max_queue_depth: 9,
@@ -184,6 +204,10 @@ mod tests {
         assert_eq!(a.ops_in_flight_max, 5); // max, not sum
         assert_eq!(a.fused_ops, 4);
         assert_eq!(a.fused_elems, 200);
+        assert_eq!(a.fault_events, 22);
+        assert_eq!(a.retransmits, 6);
+        assert_eq!(a.epochs, 4);
+        assert_eq!(a.tags_recycled, 14);
     }
 
     #[test]

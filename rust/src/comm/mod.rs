@@ -51,17 +51,19 @@
 //! node-aware hierarchical allreduce (`collectives::hierarchical`).
 
 pub mod barrier;
+pub mod fault;
 pub mod group;
 pub mod metrics;
 pub mod net;
 pub mod thread;
 pub mod world;
 
+pub use fault::FaultPlan;
 pub use group::{Group, SubComm};
 pub use metrics::{BackendHits, RankMetrics};
 pub use net::LinkOccupancy;
 pub use thread::{ThreadComm, Timing};
-pub use world::{run_world, run_world_sharded, WorldReport};
+pub use world::{run_world, run_world_faulty, run_world_sharded, WorldReport};
 
 use crate::buffer::DataBuf;
 use crate::error::Result;

@@ -37,11 +37,19 @@
 //! baseline.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::model::NetParams;
 use crate::topo::{node_of, Mapping};
+
+/// Recover a fabric lock even if a rank thread panicked while holding it:
+/// timeline and queue updates are all-or-nothing under the guard, and the
+/// world-level poison flag handles teardown — a secondary panic here would
+/// only mask the root cause.
+fn relock<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
 
 /// Aggregate occupancy of one simulated node's NIC timelines over a
 /// world run (µs of reserved transfer time and transfer counts, per
@@ -187,7 +195,7 @@ impl Fabric {
             return request;
         }
         let nic = &self.nics[self.node_of[src] as usize];
-        nic.egress.lock().unwrap().reserve(request, dur)
+        relock(nic.egress.lock()).reserve(request, dur)
     }
 
     /// Reserve an ingress slot on `dst`'s node for a transfer from `src`.
@@ -196,7 +204,7 @@ impl Fabric {
             return request;
         }
         let nic = &self.nics[self.node_of[dst] as usize];
-        nic.ingress.lock().unwrap().reserve(request, dur)
+        relock(nic.ingress.lock()).reserve(request, dur)
     }
 
     /// Per-node NIC occupancy aggregates (empty when no NICs are
@@ -206,8 +214,8 @@ impl Fabric {
             .iter()
             .enumerate()
             .map(|(node, nic)| {
-                let e = nic.egress.lock().unwrap();
-                let i = nic.ingress.lock().unwrap();
+                let e = relock(nic.egress.lock());
+                let i = relock(nic.ingress.lock());
                 LinkOccupancy {
                     node,
                     egress_busy_us: e.busy * 1e6,
@@ -294,7 +302,7 @@ impl EdgeQueue {
         deadline: Instant,
         poll: Duration,
     ) -> Result<SlotGrant, SlotError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = relock(self.state.lock());
         let index = st.posted;
         st.posted += 1;
         let depth = st.posted - st.drained;
@@ -318,7 +326,10 @@ impl EdgeQueue {
             if Instant::now() > deadline {
                 return Err(SlotError::TimedOut);
             }
-            let (guard, _timeout) = self.cv.wait_timeout(st, poll).unwrap();
+            let (guard, _timeout) = match self.cv.wait_timeout(st, poll) {
+                Ok(pair) => pair,
+                Err(p) => p.into_inner(),
+            };
             st = guard;
         }
     }
@@ -326,7 +337,7 @@ impl EdgeQueue {
     /// Record that the receiver finished receiving the oldest in-flight
     /// message at virtual time `vtime` (takes happen in FIFO order).
     pub(super) fn drain(&self, capacity: usize, vtime: f64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = relock(self.state.lock());
         st.drained += 1;
         if records_drains(capacity) {
             st.drains.push_back(vtime);

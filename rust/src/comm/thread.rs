@@ -38,12 +38,13 @@
 //! the sender's slab, so the steady-state block path moves no payload
 //! bytes at all: the receiver reduces straight out of the sender's memory.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
 
-use super::barrier::{BarrierTable, VBarrier};
+use super::barrier::{BarrierAbort, BarrierTable, VBarrier};
+use super::fault::FaultPlan;
 use super::group::{Group, SubComm};
 use super::metrics::RankMetrics;
 use super::net::{EdgeQueue, Fabric, SlotError};
@@ -90,14 +91,27 @@ impl Timing {
     }
 }
 
+/// Recover a lock even if another endpoint's thread panicked while
+/// holding it: registry tables mutate under the guard all-or-nothing, so
+/// the data is consistent — the world-level poison flag handles the
+/// semantic fallout, and lock recovery keeps teardown itself from
+/// cascading panics.
+fn relock<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
 /// A message on the wire: payload plus the virtual time the transfer
 /// leaves the sender (ignored under real timing). Under the dedicated
 /// model this is the sender's clock at the time of posting; under a
 /// congested model it is the fabric-admitted start time (after
 /// backpressure and the egress-port reservation). The payload is
-/// typically a zero-copy view of the sender's slab.
+/// typically a zero-copy view of the sender's slab. `seq` numbers the
+/// `(src, dst, tag)` stream so a fault-injected transport ([`FaultPlan`])
+/// can duplicate and reorder deliveries while the receiver still
+/// reassembles the exact FIFO stream; always 0 when faults are inert.
 struct Msg<E: Elem> {
     vtime: f64,
+    seq: u64,
     data: DataBuf<E>,
 }
 
@@ -179,8 +193,25 @@ impl<E: Elem> InterTable<E> {
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add(dst)
             .wrapping_add((tag as usize).wrapping_mul(0x517C_C1B7_2722_0A95));
-        let mut map = self.stripes[h % INTER_STRIPES].lock().unwrap();
+        let mut map = relock(self.stripes[h % INTER_STRIPES].lock());
         Arc::clone(map.entry((src, dst, tag)).or_insert_with(new_edge))
+    }
+
+    /// Drop every edge registered on one of `tags`. Sound only after all
+    /// ranks agreed the tags are drained (see
+    /// [`ShardedRegistry::reclaim_tags`]); a later re-touch of a removed
+    /// `(src, dst, tag)` creates a fresh edge with a fresh, claimable
+    /// receiver, which is exactly what tag recycling needs.
+    fn remove_tags(&self, tags: &HashSet<u32>) {
+        for stripe in self.stripes.iter() {
+            relock(stripe.lock()).retain(|k, _| !tags.contains(&k.2));
+        }
+    }
+
+    /// Number of live sparse edges (observability: the soak harness
+    /// checks this stays flat across epochs).
+    fn entries(&self) -> usize {
+        self.stripes.iter().map(|s| relock(s.lock()).len()).sum()
     }
 }
 
@@ -206,6 +237,9 @@ pub(super) struct ShardedRegistry<E: Elem> {
     fabric: Fabric,
     /// Per-group barriers for sub-communicators (see [`BarrierTable`]).
     barriers: BarrierTable,
+    /// The world's fault-injection plan (inert by default); endpoints
+    /// copy it at construction.
+    faults: FaultPlan,
     /// Set when any rank fails; blocked receivers notice within
     /// [`POISON_POLL`] and abort instead of waiting forever (the registry
     /// itself keeps unclaimed `Sender`s alive, so a dead peer would not
@@ -259,6 +293,17 @@ impl<E: Elem> ShardedRegistry<E> {
         mapping: Option<Mapping>,
         fabric: Fabric,
     ) -> ShardedRegistry<E> {
+        ShardedRegistry::with_faults(size, mapping, fabric, FaultPlan::none())
+    }
+
+    /// The fully general registry: fabric plus a fault-injection plan
+    /// applied by every endpoint of this world.
+    pub(super) fn with_faults(
+        size: usize,
+        mapping: Option<Mapping>,
+        fabric: Fabric,
+        faults: FaultPlan,
+    ) -> ShardedRegistry<E> {
         let groups: Vec<Vec<usize>> = match mapping {
             Some(m) => m.shards(size),
             None => vec![(0..size).collect()],
@@ -281,6 +326,7 @@ impl<E: Elem> ShardedRegistry<E> {
             inter: InterTable::new(),
             fabric,
             barriers: BarrierTable::new(),
+            faults,
             poisoned: std::sync::atomic::AtomicBool::new(false),
         }
     }
@@ -333,20 +379,50 @@ impl<E: Elem> ShardedRegistry<E> {
 
     /// Claim the receive half of edge `(src, dst)` on `tag`; each
     /// endpoint may do this exactly once — which is why a tag may never
-    /// be reused by a later operation within one world (see the
-    /// tag-space leasing rules in [`crate::nbc`]).
-    fn receiver(&self, src: usize, dst: usize, tag: u32) -> Receiver<Msg<E>> {
-        self.edge(src, dst, tag)
-            .receiver
-            .lock()
-            .unwrap()
+    /// be reused by a later operation within a world *epoch* (see the
+    /// tag-lifecycle rules in [`crate::nbc`]; after
+    /// [`ShardedRegistry::reclaim_tags`] the edge is gone and a re-touch
+    /// creates a fresh, claimable one). A double claim is a protocol
+    /// error, not a panic: under serving traffic it means a tag was
+    /// recycled before its quiesce point, and the caller surfaces it.
+    fn receiver(&self, src: usize, dst: usize, tag: u32) -> Result<Receiver<Msg<E>>> {
+        relock(self.edge(src, dst, tag).receiver.lock())
             .take()
-            .expect("receiver claimed twice — one endpoint per rank and tag")
+            .ok_or_else(|| {
+                Error::Protocol(format!(
+                    "receiver ({src}, {dst}, tag {tag}) claimed twice — \
+                     one endpoint per rank and tag"
+                ))
+            })
     }
 
     /// The barrier shared by exactly the ranks in `members` on `tag`.
     fn group_barrier(&self, members: &[usize], tag: u32) -> Arc<VBarrier> {
         self.barriers.get(members, tag)
+    }
+
+    /// Drop every sparse edge and every group barrier registered on one
+    /// of `tags`, returning the channel map to its pre-lease footprint.
+    ///
+    /// Soundness contract (enforced by the nbc engine's quiesce): *all*
+    /// ranks have joined the workers of every operation leased on these
+    /// tags and then synchronized on a world barrier — so every message
+    /// on the tags is consumed, no endpoint holds a cached `Arc<Edge>`
+    /// for them (worker forks died with their ops), and no rank can post
+    /// on them again until the tag is re-leased. Removal is idempotent.
+    pub(super) fn reclaim_tags(&self, tags: &HashSet<u32>) {
+        self.inter.remove_tags(tags);
+        self.barriers.remove_tags(tags);
+    }
+
+    /// Live sparse (tagged + cross-shard) edge entries.
+    pub(super) fn tagged_entries(&self) -> usize {
+        self.inter.entries()
+    }
+
+    /// Live `(group, tag)` barrier entries.
+    pub(super) fn barrier_entries(&self) -> usize {
+        self.barriers.entries()
     }
 }
 
@@ -390,6 +466,22 @@ pub struct ThreadComm<E: Elem> {
     /// group-barrier table on first use so repeated barriers allocate
     /// nothing.
     tagged_world_barrier: Option<Arc<VBarrier>>,
+    /// The world's fault plan, copied from the registry. When inert the
+    /// four per-peer fault vectors below stay *empty* (zero footprint,
+    /// one branch on the hot path).
+    faults: FaultPlan,
+    /// Next sequence number per destination peer.
+    tx_seq: Vec<u64>,
+    /// Next expected sequence number per source peer.
+    rx_want: Vec<u64>,
+    /// Early (reordered-ahead) messages parked until their predecessors
+    /// arrive, per source peer.
+    rx_held: Vec<BTreeMap<u64, Msg<E>>>,
+    /// A message held back by the reorder fault, per destination peer —
+    /// sent after its successor, or at the next flush point (blocking
+    /// receive, barrier, endpoint drop) so it can never be lost or
+    /// deadlock a reply cycle.
+    tx_held: Vec<Option<Msg<E>>>,
     metrics: RankMetrics,
 }
 
@@ -402,6 +494,8 @@ impl<E: Elem> ThreadComm<E> {
         timing: Timing,
     ) -> ThreadComm<E> {
         let shard_id = registry.shard_of(rank) as u32;
+        let faults = registry.faults;
+        let fp = if faults.is_active() { size } else { 0 };
         ThreadComm {
             rank,
             size,
@@ -417,6 +511,11 @@ impl<E: Elem> ThreadComm<E> {
             start: Instant::now(),
             watchdog: recv_watchdog(size),
             tagged_world_barrier: None,
+            faults,
+            tx_seq: vec![0; fp],
+            rx_want: vec![0; fp],
+            rx_held: (0..fp).map(|_| BTreeMap::new()).collect(),
+            tx_held: (0..fp).map(|_| None).collect(),
             metrics: RankMetrics {
                 shard_id,
                 ..RankMetrics::default()
@@ -435,6 +534,7 @@ impl<E: Elem> ThreadComm<E> {
     /// tag must be forked by at most one operation per world (the engine's
     /// tag-space leases guarantee this).
     pub fn fork_tagged(&self, tag: u32) -> ThreadComm<E> {
+        let fp = if self.faults.is_active() { self.size } else { 0 };
         ThreadComm {
             rank: self.rank,
             size: self.size,
@@ -450,6 +550,11 @@ impl<E: Elem> ThreadComm<E> {
             start: Instant::now(),
             watchdog: self.watchdog,
             tagged_world_barrier: None,
+            faults: self.faults,
+            tx_seq: vec![0; fp],
+            rx_want: vec![0; fp],
+            rx_held: (0..fp).map(|_| BTreeMap::new()).collect(),
+            tx_held: (0..fp).map(|_| None).collect(),
             metrics: RankMetrics {
                 shard_id: self.metrics.shard_id,
                 ..RankMetrics::default()
@@ -487,6 +592,35 @@ impl<E: Elem> ThreadComm<E> {
         self.registry.poison();
     }
 
+    /// Has this world been poisoned (a rank failed or panicked)?
+    pub(crate) fn world_poisoned(&self) -> bool {
+        self.registry.is_poisoned()
+    }
+
+    /// Return the channel and barrier entries of `tags` to the registry
+    /// (epoch reclamation; see [`ShardedRegistry::reclaim_tags`] for the
+    /// soundness contract the caller must have established).
+    pub(crate) fn reclaim_tags(&self, tags: &[u32]) {
+        let set: HashSet<u32> = tags.iter().copied().collect();
+        self.registry.reclaim_tags(&set);
+    }
+
+    /// Live sparse (tagged + cross-shard) channel entries in this world's
+    /// registry — the quantity epoch reclamation keeps bounded.
+    pub fn tagged_entries(&self) -> usize {
+        self.registry.tagged_entries()
+    }
+
+    /// Live `(group, tag)` barrier entries in this world's registry.
+    pub fn barrier_entries(&self) -> usize {
+        self.registry.barrier_entries()
+    }
+
+    /// The fault-injection plan this world runs under (inert by default).
+    pub fn fault_plan(&self) -> FaultPlan {
+        self.faults
+    }
+
     /// Borrow a sub-communicator scoped to `group` (this rank must be a
     /// member). The sub-communicator relabels ranks to `0..group.size()`
     /// and shares this endpoint's clock, metrics, and channels — it is a
@@ -501,13 +635,42 @@ impl<E: Elem> ThreadComm<E> {
     /// timing the member clocks advance to the group maximum, mirroring
     /// the world [`Comm::barrier`].
     pub(super) fn group_barrier_wait(&mut self, members: &[usize]) -> Result<()> {
+        self.flush_tx_held();
         let bar = self.registry.group_barrier(members, self.tag);
-        let max = bar.wait(self.vtime);
+        let max = self.barrier_wait_abortable(&bar)?;
         if self.timing.is_virtual() {
             self.vtime = max;
         }
         self.metrics.barriers += 1;
         Ok(())
+    }
+
+    /// Wait on `bar`, giving up (with a typed error) if the world is
+    /// poisoned or the watchdog elapses — a barrier must never outlive
+    /// the world it synchronizes.
+    fn barrier_wait_abortable(&self, bar: &VBarrier) -> Result<f64> {
+        let registry = Arc::clone(&self.registry);
+        bar.wait_abortable(
+            self.vtime,
+            || registry.is_poisoned(),
+            POISON_POLL,
+            self.watchdog,
+        )
+        .map_err(|abort| match abort {
+            // secondary casualty: report as a disconnect so the harness's
+            // root-cause preference keeps the originating rank's error
+            BarrierAbort::Poisoned => Error::Disconnected {
+                rank: self.rank,
+                peer: self.rank,
+            },
+            BarrierAbort::TimedOut => {
+                self.registry.poison();
+                Error::PeerStalled {
+                    rank: self.rank,
+                    peer: self.rank,
+                }
+            }
+        })
     }
 
     fn check_peer(&self, peer: usize) -> Result<()> {
@@ -544,11 +707,10 @@ impl<E: Elem> ThreadComm<E> {
             .map_err(|e| match e {
                 SlotError::Poisoned => Error::Disconnected { rank, peer },
                 SlotError::TimedOut => {
+                    // a full edge queue that never drains within the
+                    // watchdog is a stalled consumer, whatever the cause
                     registry.poison();
-                    Error::Protocol(format!(
-                        "rank {rank} post to {peer} stalled on a full edge queue — \
-                         likely protocol deadlock under backpressure"
-                    ))
+                    Error::PeerStalled { rank, peer }
                 }
             })?;
         self.metrics.max_queue_depth = self.metrics.max_queue_depth.max(grant.depth);
@@ -594,58 +756,184 @@ impl<E: Elem> ThreadComm<E> {
         done
     }
 
-    /// Post `data` to `peer`, stamped with the transfer's virtual start
-    /// time (fabric-admitted by the caller; the current clock under real
-    /// timing).
-    fn post(&mut self, peer: usize, data: DataBuf<E>, stamp: f64) -> Result<()> {
-        let bytes = data.bytes();
-        let msg = Msg { vtime: stamp, data };
+    /// Put one message on the wire to `peer` (no fault processing — the
+    /// raw channel send shared by [`ThreadComm::post`] and the held-
+    /// message flush paths).
+    fn raw_send(&mut self, peer: usize, msg: Msg<E>) -> Result<()> {
         let (rank, tag, registry) = (self.rank, self.tag, &self.registry);
         let edge = self.tx[peer].get_or_insert_with(|| registry.edge(rank, peer, tag));
-        edge.sender.send(msg).map_err(|_| Error::Disconnected {
-            rank: self.rank,
-            peer,
-        })?;
-        self.metrics.bytes_sent += bytes as u64;
-        Ok(())
+        edge.sender
+            .send(msg)
+            .map_err(|_| Error::Disconnected { rank, peer })
     }
 
-    fn take(&mut self, peer: usize) -> Result<Msg<E>> {
+    /// Post `data` to `peer`, stamped with the transfer's virtual start
+    /// time (fabric-admitted by the caller; the current clock under real
+    /// timing). Returns the *effective* sender-side stamp: with faults
+    /// inert, exactly `stamp`; under an active [`FaultPlan`], straggler
+    /// stalls and retransmit backoff push the sender's transfer later
+    /// (and the caller's clock math with it), while in-flight delay,
+    /// duplication, and reordering perturb only the message's arrival —
+    /// sequence numbers let the receiver reassemble the exact stream.
+    fn post(&mut self, peer: usize, data: DataBuf<E>, stamp: f64) -> Result<f64> {
+        let bytes = data.bytes();
+        if !self.faults.is_active() {
+            self.raw_send(peer, Msg { vtime: stamp, seq: 0, data })?;
+            self.metrics.bytes_sent += bytes as u64;
+            return Ok(stamp);
+        }
+        let (rank, tag) = (self.rank, self.tag);
+        let seq = self.tx_seq[peer];
+        self.tx_seq[peer] += 1;
+        let mut stamp = stamp;
+        // straggler rank: every one of its sends leaves late
+        if self.faults.stalled(rank) {
+            stamp += self.faults.stall_us * 1e-6;
+        }
+        // transient drop: retransmit with linear backoff until an attempt
+        // goes through; exhausting the budget is a typed teardown
+        let mut attempt = 0u32;
+        while self.faults.drops(rank, peer, tag, seq, attempt) {
+            attempt += 1;
+            if attempt > self.faults.max_retries {
+                self.poison_world();
+                return Err(Error::RetriesExhausted {
+                    rank,
+                    peer,
+                    attempts: attempt,
+                });
+            }
+            stamp += self.faults.backoff_us * attempt as f64 * 1e-6;
+            self.metrics.retransmits += 1;
+        }
+        // in-flight delay pushes the arrival, not the sender
+        let delay = self.faults.delay_for(rank, peer, tag, seq);
+        if delay > 0.0 {
+            self.metrics.fault_events += 1;
+        }
+        let msg = Msg {
+            vtime: stamp + delay * 1e-6,
+            seq,
+            data,
+        };
+        // dup and reorder change what is physically on the channel, which
+        // the congestion fabric's slot accounting assumes matches the
+        // admitted posts — so both apply only on the inert fabric
+        let inert_fabric = !self.registry.fabric().is_active();
+        if inert_fabric
+            && self.tx_held[peer].is_none()
+            && self.faults.reorders(rank, peer, tag, seq)
+        {
+            // hold this message back: its successor (or the next flush
+            // point) carries it out behind newer traffic
+            self.metrics.fault_events += 1;
+            self.tx_held[peer] = Some(msg);
+            self.metrics.bytes_sent += bytes as u64;
+            return Ok(stamp);
+        }
+        let dup = inert_fabric && self.faults.duplicates(rank, peer, tag, seq);
+        let dup_msg = if dup {
+            self.metrics.fault_events += 1;
+            Some(Msg {
+                vtime: msg.vtime,
+                seq,
+                data: msg.data.clone(),
+            })
+        } else {
+            None
+        };
+        self.raw_send(peer, msg)?;
+        if let Some(m) = dup_msg {
+            self.raw_send(peer, m)?;
+        }
+        if let Some(held) = self.tx_held[peer].take() {
+            self.raw_send(peer, held)?;
+        }
+        self.metrics.bytes_sent += bytes as u64;
+        Ok(stamp)
+    }
+
+    /// Send out every reorder-held message. Called before any blocking
+    /// receive or barrier (a held message must not starve a reply cycle
+    /// this rank is about to wait on) and when the endpoint drops.
+    fn flush_tx_held(&mut self) {
+        if self.tx_held.is_empty() {
+            return;
+        }
+        for peer in 0..self.size {
+            if let Some(msg) = self.tx_held[peer].take() {
+                // a dead peer is surfaced by the next blocking call; the
+                // flush itself must never fail teardown
+                let _ = self.raw_send(peer, msg);
+            }
+        }
+    }
+
+    /// One raw message off the wire from `peer` (fault-oblivious): blocks
+    /// in [`POISON_POLL`] slices so a failed world tears down instead of
+    /// hanging on receives whose sender died (the registry keeps the
+    /// unclaimed `Sender` half alive, so disconnect alone is not enough),
+    /// and so protocol deadlocks surface as [`Error::PeerStalled`]
+    /// instead of hangs.
+    fn take_raw(&mut self, peer: usize) -> Result<Msg<E>> {
         let (rank, tag, registry) = (self.rank, self.tag, &self.registry);
-        let rx = self.rx[peer].get_or_insert_with(|| registry.receiver(peer, rank, tag));
-        // Block in POISON_POLL slices so a failed world tears down instead
-        // of hanging on receives whose sender died (the registry keeps the
-        // unclaimed Sender half alive, so disconnect alone is not enough),
-        // and so protocol deadlocks surface as errors instead of hangs.
+        if self.rx[peer].is_none() {
+            self.rx[peer] = Some(registry.receiver(peer, rank, tag)?);
+        }
+        let rx = self.rx[peer].as_ref().expect("just claimed");
         let deadline = std::time::Instant::now() + self.watchdog;
-        let msg = loop {
+        loop {
             match rx.recv_timeout(POISON_POLL) {
-                Ok(msg) => break msg,
+                Ok(msg) => return Ok(msg),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                     if registry.is_poisoned() {
-                        return Err(Error::Disconnected {
-                            rank: self.rank,
-                            peer,
-                        });
+                        return Err(Error::Disconnected { rank, peer });
                     }
                     if std::time::Instant::now() > deadline {
                         registry.poison();
-                        return Err(Error::Protocol(format!(
-                            "rank {} recv from {} timed out — likely protocol deadlock",
-                            self.rank, peer
-                        )));
+                        return Err(Error::PeerStalled { rank, peer });
                     }
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(Error::Disconnected {
-                        rank: self.rank,
-                        peer,
-                    })
+                    return Err(Error::Disconnected { rank, peer })
                 }
             }
-        };
-        self.metrics.bytes_recv += msg.data.bytes() as u64;
-        Ok(msg)
+        }
+    }
+
+    /// The next in-order message from `peer`. With faults inert this is
+    /// [`ThreadComm::take_raw`] plus byte accounting; under an active
+    /// plan it reassembles the sequence-numbered stream — duplicates are
+    /// dropped, early messages parked — so the payload stream the caller
+    /// sees is bitwise identical to the fault-free run.
+    fn take(&mut self, peer: usize) -> Result<Msg<E>> {
+        self.flush_tx_held();
+        if !self.faults.is_active() {
+            let msg = self.take_raw(peer)?;
+            self.metrics.bytes_recv += msg.data.bytes() as u64;
+            return Ok(msg);
+        }
+        let want = self.rx_want[peer];
+        if let Some(msg) = self.rx_held[peer].remove(&want) {
+            self.rx_want[peer] = want + 1;
+            self.metrics.bytes_recv += msg.data.bytes() as u64;
+            return Ok(msg);
+        }
+        loop {
+            let msg = self.take_raw(peer)?;
+            if msg.seq < want {
+                // duplicate of an already-delivered message
+                self.metrics.fault_events += 1;
+                continue;
+            }
+            if msg.seq == want {
+                self.rx_want[peer] = want + 1;
+                self.metrics.bytes_recv += msg.data.bytes() as u64;
+                return Ok(msg);
+            }
+            // early successor: park until its predecessors arrive
+            self.rx_held[peer].insert(msg.seq, msg);
+        }
     }
 
     /// The *absolute* virtual clock (0 under real timing). Unlike
@@ -681,7 +969,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             }
             Timing::Real => self.vtime,
         };
-        self.post(peer, send, stamp)?;
+        let stamp = self.post(peer, send, stamp)?;
         let msg = self.take(peer)?;
         if let Timing::Virtual(cost, _) = self.timing {
             // Telephone model: both directions complete together; the cost
@@ -718,7 +1006,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             }
             Timing::Real => (self.vtime, 0.0),
         };
-        self.post(send_to, send, stamp)?;
+        let stamp = self.post(send_to, send, stamp)?;
         let msg = self.take(recv_from)?;
         if let Timing::Virtual(cost, _) = self.timing {
             // Full duplex: the outgoing and incoming transfers overlap; the
@@ -745,7 +1033,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             }
             Timing::Real => (self.vtime, 0.0),
         };
-        self.post(peer, data, stamp)?;
+        let stamp = self.post(peer, data, stamp)?;
         if self.timing.is_virtual() {
             // The sender's port is busy for the full transfer.
             self.vtime = stamp + dur;
@@ -770,21 +1058,22 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
     }
 
     fn barrier(&mut self) -> Result<()> {
+        self.flush_tx_held();
         // A tagged fork must not share the world barrier's generations
         // with the rank endpoints (or with forks of other tags): it
         // synchronizes through a barrier keyed by (world members, tag),
         // resolved once and cached on the endpoint.
         let bar = if self.tag == 0 {
-            &self.barrier
+            Arc::clone(&self.barrier)
         } else {
             if self.tagged_world_barrier.is_none() {
                 let members: Vec<usize> = (0..self.size).collect();
                 self.tagged_world_barrier =
                     Some(self.registry.group_barrier(&members, self.tag));
             }
-            self.tagged_world_barrier.as_ref().expect("just cached")
+            Arc::clone(self.tagged_world_barrier.as_ref().expect("just cached"))
         };
-        let max = bar.wait(self.vtime);
+        let max = self.barrier_wait_abortable(&bar)?;
         if self.timing.is_virtual() {
             self.vtime = max;
         }
@@ -818,6 +1107,15 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
 
     fn metrics(&self) -> &RankMetrics {
         &self.metrics
+    }
+}
+
+impl<E: Elem> Drop for ThreadComm<E> {
+    fn drop(&mut self) {
+        // a reorder-held message must not vanish with the endpoint: a
+        // peer may still be blocked waiting for it (no-op when the fault
+        // plan is inert — the held vector is empty)
+        self.flush_tx_held();
     }
 }
 
@@ -1013,14 +1311,133 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "claimed twice")]
     fn receiver_single_claim() {
         let reg: ShardedRegistry<i32> = ShardedRegistry::new(2, None);
-        let _r = reg.receiver(0, 1, 0);
+        assert!(reg.receiver(0, 1, 0).is_ok());
         // a different tag is a different channel: claiming it is fine...
-        let _rt = reg.receiver(0, 1, 3);
-        // ...but re-claiming the same (src, dst, tag) panics
-        let _r2 = reg.receiver(0, 1, 0);
+        assert!(reg.receiver(0, 1, 3).is_ok());
+        // ...but re-claiming the same (src, dst, tag) is a typed error
+        let err = reg.receiver(0, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("claimed twice"), "{err}");
+    }
+
+    #[test]
+    fn reclaim_tags_returns_sparse_entries_and_rearms_claims() {
+        let reg: ShardedRegistry<i32> = ShardedRegistry::new(2, None);
+        let _ = reg.edge(0, 1, 5);
+        let _ = reg.edge(1, 0, 5);
+        let _ = reg.edge(0, 1, 6);
+        assert!(reg.receiver(0, 1, 5).is_ok());
+        assert_eq!(reg.tagged_entries(), 3);
+        let tags: HashSet<u32> = [5].into_iter().collect();
+        reg.reclaim_tags(&tags);
+        assert_eq!(reg.tagged_entries(), 1); // only tag 6 survives
+        // a reclaimed (src, dst, tag) comes back as a fresh edge with a
+        // fresh, claimable receiver — exactly what tag recycling needs
+        assert!(reg.receiver(0, 1, 5).is_ok());
+        assert_eq!(reg.tagged_entries(), 2);
+        reg.reclaim_tags(&tags); // idempotent
+        assert_eq!(reg.tagged_entries(), 1);
+    }
+
+    fn faulty_pair(
+        faults: FaultPlan,
+        timing: Timing,
+    ) -> (ThreadComm<i32>, ThreadComm<i32>) {
+        let reg = Arc::new(ShardedRegistry::with_faults(
+            2,
+            None,
+            Fabric::dedicated(),
+            faults,
+        ));
+        let bar = Arc::new(VBarrier::new(2));
+        (
+            ThreadComm::new(0, 2, Arc::clone(&reg), Arc::clone(&bar), timing),
+            ThreadComm::new(1, 2, reg, bar, timing),
+        )
+    }
+
+    #[test]
+    fn faulty_stream_reassembles_fifo() {
+        // heavy duplication + reordering: sequence numbers must hand the
+        // receiver the exact payload stream anyway
+        let plan = FaultPlan::seeded(42).duplicate(0.5).reorder(0.5);
+        let (mut a, mut b) = faulty_pair(plan, Timing::Real);
+        let h = thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..50 {
+                got.push(b.recv(0).unwrap().into_vec().unwrap()[0]);
+            }
+            got
+        });
+        for i in 0..50 {
+            a.send(1, DataBuf::real(vec![i])).unwrap();
+        }
+        drop(a); // the endpoint drop flushes a trailing held message
+        assert_eq!(h.join().unwrap(), (0..50).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn transient_drop_is_deterministic_and_counted() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        let plan = FaultPlan::seeded(9).transient_drop(0.4, 16, 5.0);
+        let run = || {
+            let (mut a, mut b) = faulty_pair(plan, timing);
+            let h = thread::spawn(move || {
+                let mut times = Vec::new();
+                for _ in 0..20 {
+                    b.recv(0).unwrap();
+                    times.push(b.vtime());
+                }
+                times
+            });
+            for i in 0..20 {
+                a.send(1, DataBuf::real(vec![i])).unwrap();
+            }
+            (a.metrics().retransmits, h.join().unwrap())
+        };
+        let (r1, t1) = run();
+        let (r2, t2) = run();
+        assert!(r1 > 0, "drop prob 0.4 over 20 sends should retransmit");
+        assert_eq!(r1, r2); // same seed, same faults
+        for (x, y) in t1.iter().zip(&t2) {
+            assert_eq!(x.to_bits(), y.to_bits()); // bitwise-identical clocks
+        }
+    }
+
+    #[test]
+    fn retries_exhausted_is_typed_and_poisons() {
+        // certain drop: every attempt fails, the sender gives up with a
+        // typed error and tears the world down (never a hang)
+        let plan = FaultPlan::seeded(3).transient_drop(1.0, 2, 5.0);
+        let (mut a, b) = faulty_pair(plan, Timing::Real);
+        let err = a.send(1, DataBuf::real(vec![1])).unwrap_err();
+        assert!(
+            matches!(err, Error::RetriesExhausted { rank: 0, peer: 1, attempts: 3 }),
+            "{err}"
+        );
+        assert!(b.world_poisoned());
+    }
+
+    #[test]
+    fn straggler_rank_is_slow_on_the_virtual_clock() {
+        let cost = CostModel::Uniform(LinkCost::new(1e-6, 0.0));
+        let timing = Timing::Virtual(cost, ComputeCost::new(0.0));
+        // stall_every = 2 marks rank 1 a straggler, +50 µs per send
+        let plan = FaultPlan::seeded(1).stall(2, 50.0);
+        let (mut a, mut b) = faulty_pair(plan, timing);
+        let h = thread::spawn(move || {
+            b.send(0, DataBuf::real(vec![1])).unwrap();
+            b.vtime()
+        });
+        let got = a.recv(1).unwrap();
+        assert_eq!(got.into_vec().unwrap(), vec![1]);
+        let tb = h.join().unwrap();
+        // sender leaves at 50 µs, port busy through 51 µs; receiver:
+        // max(0, 50) + α = 51 µs
+        assert!((tb - 51e-6).abs() < 1e-12, "b at {tb}");
+        assert!((a.vtime() - 51e-6).abs() < 1e-12, "a at {}", a.vtime());
     }
 
     #[test]

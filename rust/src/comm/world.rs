@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::thread;
 
 use super::barrier::VBarrier;
+use super::fault::FaultPlan;
 use super::metrics::RankMetrics;
 use super::net::{Fabric, LinkOccupancy};
 use super::thread::{ShardedRegistry, ThreadComm, Timing};
@@ -121,6 +122,23 @@ where
     run_world_sharded(p, timing, implied_mapping(timing), f)
 }
 
+/// [`run_world`] under a deterministic fault-injection plan: every
+/// endpoint of the world applies `faults` to its traffic (see
+/// [`FaultPlan`]). With an inert plan this is exactly `run_world`.
+pub fn run_world_faulty<E, R, F>(
+    p: usize,
+    timing: Timing,
+    faults: FaultPlan,
+    f: F,
+) -> Result<WorldReport<R>>
+where
+    E: Elem,
+    R: Send + 'static,
+    F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
+{
+    run_world_inner(p, timing, implied_mapping(timing), faults, f)
+}
+
 /// [`run_world`] with an explicit shard layout: `Some(mapping)` backs the
 /// world with one edge-table + buffer-pool shard per node group of the
 /// mapping, `None` runs the flat single-shard world.
@@ -135,13 +153,29 @@ where
     R: Send + 'static,
     F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
 {
+    run_world_inner(p, timing, mapping, FaultPlan::none(), f)
+}
+
+fn run_world_inner<E, R, F>(
+    p: usize,
+    timing: Timing,
+    mapping: Option<Mapping>,
+    faults: FaultPlan,
+    f: F,
+) -> Result<WorldReport<R>>
+where
+    E: Elem,
+    R: Send + 'static,
+    F: Fn(&mut ThreadComm<E>) -> Result<R> + Send + Sync + 'static,
+{
     if p == 0 {
         return Err(Error::Config("world size must be >= 1".into()));
     }
-    let registry = Arc::new(ShardedRegistry::with_fabric(
+    let registry = Arc::new(ShardedRegistry::with_faults(
         p,
         mapping,
         implied_fabric(p, timing),
+        faults,
     ));
     let barrier = Arc::new(VBarrier::new(p));
     // one shared overflow arena per shard: storage a rank's thread-local
@@ -370,6 +404,30 @@ mod tests {
         let total = report.total_metrics();
         let summed: u64 = per_shard.iter().map(|m| m.bytes_sent).sum();
         assert_eq!(summed, total.bytes_sent);
+    }
+
+    #[test]
+    fn faulty_world_payloads_match_fault_free() {
+        // every fault mode at once: delivered payloads must be identical
+        // to the clean run (dedup + reassembly restore the exact streams)
+        let run = |faults: FaultPlan| {
+            run_world_faulty::<i32, _, _>(4, Timing::Real, faults, |comm| {
+                let r = comm.rank();
+                let a = comm.sendrecv(r ^ 1, DataBuf::real(vec![r as i32; 8]))?;
+                let b = comm.sendrecv(r ^ 2, DataBuf::real(vec![(r * 10) as i32; 4]))?;
+                Ok((a.into_vec()?, b.into_vec()?))
+            })
+            .unwrap()
+            .results
+        };
+        let clean = run(FaultPlan::none());
+        let faulty = run(FaultPlan::seeded(11)
+            .delay(0.3, 10.0)
+            .duplicate(0.3)
+            .reorder(0.3)
+            .transient_drop(0.2, 12, 5.0)
+            .stall(3, 20.0));
+        assert_eq!(clean, faulty);
     }
 
     #[test]

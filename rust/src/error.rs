@@ -25,6 +25,31 @@ pub enum Error {
     Cli(String),
     /// I/O errors (artifact files, TSV output).
     Io(std::io::Error),
+    /// The nbc tag counter ran off the end of its `u32` space and the
+    /// free pool was empty (pre-reclamation safety net; with epochs
+    /// enabled, recycled tags make this unreachable in practice).
+    TagsExhausted,
+    /// A nonblocking operation finished after its deadline. The op
+    /// completed (the world is intact); the caller chose not to use a
+    /// result this late.
+    Deadline {
+        op: u64,
+        deadline_us: f64,
+        took_us: f64,
+    },
+    /// A peer made no progress within the receive watchdog — the moral
+    /// equivalent of a deadlock or a dead rank under serving traffic.
+    PeerStalled { rank: usize, peer: usize },
+    /// Admission control: the engine already holds its in-flight budget
+    /// of unwaited operations; quiesce (`wait_all`) and resubmit.
+    Overloaded { in_flight: usize, budget: usize },
+    /// The transient-drop fault mode dropped every retransmit attempt of
+    /// one message (bounded retries with backoff all failed).
+    RetriesExhausted {
+        rank: usize,
+        peer: usize,
+        attempts: u32,
+    },
 }
 
 impl fmt::Display for Error {
@@ -39,6 +64,33 @@ impl fmt::Display for Error {
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
             Error::Cli(s) => write!(f, "cli error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::TagsExhausted => {
+                write!(f, "nbc tag space exhausted (no free tags; enable epoch reclamation)")
+            }
+            Error::Deadline {
+                op,
+                deadline_us,
+                took_us,
+            } => write!(
+                f,
+                "op {op} missed its deadline: took {took_us:.2} us, deadline {deadline_us:.2} us"
+            ),
+            Error::PeerStalled { rank, peer } => write!(
+                f,
+                "rank {rank}: peer {peer} stalled past the watchdog — likely protocol deadlock or dead rank"
+            ),
+            Error::Overloaded { in_flight, budget } => write!(
+                f,
+                "engine overloaded: {in_flight} ops in flight at budget {budget}; wait_all and resubmit"
+            ),
+            Error::RetriesExhausted {
+                rank,
+                peer,
+                attempts,
+            } => write!(
+                f,
+                "rank {rank}: gave up sending to peer {peer} after {attempts} retransmit attempts"
+            ),
         }
     }
 }
@@ -65,6 +117,32 @@ mod tests {
         let e = Error::Disconnected { rank: 3, peer: 7 };
         assert!(e.to_string().contains("rank 3"));
         assert!(e.to_string().contains("peer 7"));
+    }
+
+    #[test]
+    fn serving_variants_format() {
+        // the watchdog keyword contract: stall reports must read as a
+        // deadlock diagnosis (tests/failure_injection.rs matches on it)
+        let e = Error::PeerStalled { rank: 1, peer: 0 };
+        assert!(e.to_string().contains("deadlock"), "{e}");
+        let e = Error::Deadline {
+            op: 7,
+            deadline_us: 10.0,
+            took_us: 25.5,
+        };
+        assert!(e.to_string().contains("deadline"), "{e}");
+        let e = Error::Overloaded {
+            in_flight: 64,
+            budget: 64,
+        };
+        assert!(e.to_string().contains("overloaded"), "{e}");
+        let e = Error::RetriesExhausted {
+            rank: 2,
+            peer: 3,
+            attempts: 6,
+        };
+        assert!(e.to_string().contains("retransmit"), "{e}");
+        assert!(Error::TagsExhausted.to_string().contains("tag space"));
     }
 
     #[test]

@@ -43,11 +43,14 @@ pub mod prelude {
     pub use crate::buffer::DataBuf;
     pub use crate::collectives::RunSpec;
     pub use crate::comm::{
-        Comm, Group, LinkOccupancy, RankMetrics, SubComm, ThreadComm, Timing, WorldReport,
+        Comm, FaultPlan, Group, LinkOccupancy, RankMetrics, SubComm, ThreadComm, Timing,
+        WorldReport,
     };
     pub use crate::error::{Error, Result};
     pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
-    pub use crate::nbc::{Engine, FusePolicy, NbcConfig, Request};
+    pub use crate::nbc::{
+        run_soak, Engine, FusePolicy, NbcConfig, Request, SoakReport, SoakSpec,
+    };
     pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceBackend, ReduceOp, Side, SumOp};
     pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};
 }

@@ -5,6 +5,8 @@
 //!                 [--hier] [--mapping block:8]
 //! dpdr concurrent --p 288 --m 1024 --k 8 [--algos dpdr,ring] [--fuse-threshold 1024]
 //!                 [--fuse-max-ops 8]       K outstanding nonblocking allreduces per rank
+//! dpdr soak       --p 8 --ops 100000 [--faults transient-drop,stall] [--seed 7]
+//!                 [--deadline-us N] [--max-in-flight N]   serving-mode endurance run
 //! dpdr table2     [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]  reproduce Table 2
 //! dpdr fig1       [--tsv out.tsv]                                         Figure 1 series
 //! dpdr latency    [--hmax 12]                                             §1.2 4h−3 check
@@ -31,7 +33,7 @@ use dpdr::model::{
 };
 use dpdr::pipeline::Blocks;
 
-const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help"];
+const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help", "no-fuse"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -54,6 +56,7 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand().unwrap() {
         "run" => cmd_run(&args),
         "concurrent" => cmd_concurrent(&args),
+        "soak" => cmd_soak(&args),
         "table2" => cmd_table2(&args),
         "fig1" => cmd_fig1(&args),
         "latency" => cmd_latency(&args),
@@ -85,6 +88,16 @@ subcommands:
              [--fuse-max-ops N]    (fused batch size; batches also close on flush()/wait_all)
              plus the run timing/backend/congestion flags; verifies every op against its
              oracle and reports overlap/fusion metrics
+  soak       serving-mode endurance run: a long stream of mixed-size nonblocking
+             allreduces on one world, every payload verified against a closed-form
+             oracle, registry memory held flat by epoch tag reclamation:
+             --p N --ops N [--m-min 8] [--m-max 1024] [--batch 64] [--epoch-ops 256]
+             [--max-in-flight N]  (admission budget; excess submissions shed with a
+             typed Overloaded error, then drained and resubmitted)
+             [--deadline-us X]    (per-op completion deadline; misses are counted)
+             [--faults LIST]      (inject transport faults: delay,dup,reorder,
+             transient-drop,stall,all,none — deterministic under --seed)
+             [--seed N] [--window 1024] [--check-every 97] [--no-fuse] [--real-time]
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -297,6 +310,72 @@ fn cmd_concurrent(args: &Args) -> Result<()> {
         let link = model.link_levels().1;
         let speedup = dpdr::model::predicted_fusion_speedup(p, m * 4, k, link);
         println!("analytic fused speedup (k ops of m, one alpha-chain): {speedup:.2}x");
+    }
+    Ok(())
+}
+
+/// `dpdr soak`: the serving-mode endurance run — a seeded stream of
+/// mixed-size nonblocking allreduces on one long-lived world, optionally
+/// under an injected fault plan, with every payload verified in the loop.
+/// Exits nonzero on any corruption, hang-turned-typed-error, or registry
+/// entries leaking past the final quiesce.
+fn cmd_soak(args: &Args) -> Result<()> {
+    use dpdr::comm::FaultPlan;
+    use dpdr::nbc::{run_soak, SoakSpec};
+    let p = args.get("p", 8usize)?;
+    let ops = args.get("ops", 100_000u64)?;
+    let seed = args.get("seed", 1u64)?;
+    let mut spec = SoakSpec::new(p, ops);
+    spec.seed = seed;
+    spec.m_min = args.get("m-min", spec.m_min)?;
+    spec.m_max = args.get("m-max", spec.m_max)?;
+    spec.batch = args.get("batch", spec.batch)?;
+    spec.epoch_ops = args.get("epoch-ops", spec.epoch_ops)?;
+    spec.max_in_flight = args.get("max-in-flight", spec.max_in_flight)?;
+    spec.window = args.get("window", spec.window)?;
+    spec.check_every = args.get("check-every", spec.check_every)?;
+    let dl = args.get("deadline-us", 0.0f64)?;
+    spec.deadline_us = (dl > 0.0).then_some(dl);
+    spec.fuse = !args.switch("no-fuse");
+    spec.timing = timing_of(args)?;
+    let faults = args.raw("faults").unwrap_or("none");
+    spec.faults = FaultPlan::parse(faults, seed).ok_or_else(|| {
+        Error::Cli(format!(
+            "bad --faults '{faults}' (delay,dup,reorder,transient-drop,stall,all,none)"
+        ))
+    })?;
+    eprintln!(
+        "# soak: p={p} ops={ops} m={}..{} batch={} epoch_ops={} faults={faults} seed={seed}",
+        spec.m_min, spec.m_max, spec.batch, spec.epoch_ops
+    );
+    let r = run_soak(&spec)?;
+    println!(
+        "soak: completed={}/{} per rank, deadline_misses={} overload_rejections={}",
+        r.ops_completed, ops, r.deadline_misses, r.overload_rejections
+    );
+    println!(
+        "epochs={} tags_recycled={} entries_high_water={} entries_final={}",
+        r.epochs, r.tags_recycled, r.entries_high_water, r.entries_final
+    );
+    println!(
+        "faults: retransmits={} fault_events={}",
+        r.retransmits, r.fault_events
+    );
+    println!(
+        "latency window: p50_us={:.2} p99_us={:.2}; wall_us={:.0} vtime_us={:.2}",
+        r.p50_us, r.p99_us, r.wall_us, r.max_vtime_us
+    );
+    if r.ops_completed != ops {
+        return Err(Error::Protocol(format!(
+            "soak lost operations: {}/{ops} completed",
+            r.ops_completed
+        )));
+    }
+    if r.entries_final != 0 {
+        return Err(Error::Protocol(format!(
+            "{} registry entries leaked past the final quiesce",
+            r.entries_final
+        )));
     }
     Ok(())
 }

@@ -26,24 +26,54 @@
 //!   α-chain is paid once per batch instead of once per op (see
 //!   [`predicted_time_us_fused`](crate::model::predicted_time_us_fused)).
 //!
-//! ## Tag-space leasing rules
+//! ## Tag lifecycle: lease → epoch → quiesce → recycle
 //!
-//! * Each operation leases one fresh tag from the engine's counter
-//!   (starting at [`NbcConfig::tag_base`], default 1; tag 0 is the
-//!   blocking world's). A tag is **never reused** within a world — its
-//!   receive channels are claimed by the operation's endpoints, and a
-//!   second claim would panic by design.
+//! * Each operation leases one tag from the engine's [`TagPool`]
+//!   (recycled tags first, then the fresh counter starting at
+//!   [`NbcConfig::tag_base`], default 1; tag 0 is the blocking world's).
+//!   Within an *epoch* — the span between two quiesce points — a tag is
+//!   never reused: its receive channels are claimed by the operation's
+//!   endpoints, and a second claim is a typed protocol error.
 //! * Tag allocation is **deterministic and local**: ranks agree on an
 //!   operation's tag because they run the same (SPMD) program and submit
 //!   in the same order — no communication, exactly like `MPI_Comm_split`
-//!   agreement. Two engines coexisting on one world must be given
-//!   disjoint `tag_base` ranges.
-//! * Because tags are never reclaimed, a completed operation's channel
-//!   and barrier entries live for the world's lifetime — O(p log p) map
-//!   entries per operation. That is the right trade for worlds that run
-//!   a bounded number of operations (benchmarks, batches); a true
-//!   serving loop submitting forever needs the tag-reclamation
-//!   follow-on recorded in ROADMAP.md.
+//!   agreement — and the free pool is popped LIFO, so recycled leases
+//!   agree the same way. Two engines coexisting on one world must be
+//!   given disjoint `tag_base` ranges.
+//! * **Quiesce** ([`Engine::quiesce`], run automatically by
+//!   [`Engine::wait_all`] once [`NbcConfig::epoch_ops`] operations have
+//!   leased tags) closes the epoch: after draining every worker it runs
+//!   a world barrier — so *all* ranks have joined *all* epoch workers
+//!   before *any* rank recycles — then drops the epoch's channel and
+//!   barrier entries from the registry and returns the tags to the free
+//!   pool. Memory is therefore bounded by the epoch size, not the
+//!   world's total op count: a serving loop can submit forever (the
+//!   `soak` CLI subcommand drives millions of ops through one world
+//!   this way). With `epoch_ops = 0` (the default) reclamation is off
+//!   and the pre-epoch behavior — entries live for the world's lifetime
+//!   — is preserved exactly.
+//!
+//! ## Serving mode: deadlines, admission control, typed failure
+//!
+//! Under always-on traffic an operation must never hang or panic; it
+//! completes, or it fails *typed* and the caller degrades gracefully:
+//!
+//! * [`NbcConfig::max_in_flight`] caps unwaited submissions;
+//!   [`Engine::iallreduce`] past the budget rejects with
+//!   [`Error::Overloaded`] *before* mutating any engine state, so the
+//!   rejection is SPMD-deterministic — every rank rejects the same op.
+//! * [`Engine::iallreduce_deadline`] (or [`NbcConfig::deadline_us`])
+//!   attaches a completion deadline; [`Engine::wait_timed`] returns the
+//!   op's duration and [`Engine::wait`] surfaces [`Error::Deadline`] for
+//!   an op that finished too late. The deadline is enforced at wait
+//!   time — the collective itself always runs to completion, so peers
+//!   never see a mid-protocol abort.
+//! * Transport faults (a stalled peer, exhausted retransmits — see
+//!   [`FaultPlan`](crate::comm::FaultPlan)) poison the world and surface
+//!   as [`Error::PeerStalled`] / [`Error::RetriesExhausted`] through
+//!   `wait`, bounded by the receive watchdog. Zero hangs by
+//!   construction: every blocking wait in the transport polls the
+//!   poison flag and a wall-clock deadline.
 //!
 //! ## Flush policy (what makes fusion SPMD-safe)
 //!
@@ -68,10 +98,12 @@
 //! must agree, but **wait order is free**: joining is local.
 
 pub mod driver;
+pub mod soak;
 
 pub use driver::{run_concurrent_i32, ConcurrentSpec};
+pub use soak::{run_soak, SoakReport, SoakSpec};
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 use crate::buffer::DataBuf;
@@ -133,6 +165,20 @@ pub struct NbcConfig {
     /// through (worker threads do not inherit the submitting thread's
     /// scoped backend, so it is part of the config).
     pub backend: ReduceBackend,
+    /// Close an epoch (quiesce + tag reclamation) once this many
+    /// operations have leased tags, at the next [`Engine::wait_all`].
+    /// `0` (the default) disables reclamation — entries then live for
+    /// the world's lifetime, the pre-epoch behavior.
+    pub epoch_ops: usize,
+    /// Admission-control budget: submissions past this many unwaited
+    /// operations are rejected with [`Error::Overloaded`]. `0` (the
+    /// default) is unlimited.
+    pub max_in_flight: usize,
+    /// Default completion deadline in µs (virtual under virtual timing,
+    /// wall-clock under real) attached to every submission; `None` (the
+    /// default) means no deadline. Per-op override:
+    /// [`Engine::iallreduce_deadline`].
+    pub deadline_us: Option<f64>,
 }
 
 impl Default for NbcConfig {
@@ -142,14 +188,57 @@ impl Default for NbcConfig {
             fuse: FusePolicy::off(),
             mapping: Mapping::Block { ranks_per_node: 8 },
             backend: ReduceBackend::Auto,
+            epoch_ops: 0,
+            max_in_flight: 0,
+            deadline_us: None,
         }
     }
 }
 
+/// Recover a result-cell lock even if the worker holding it panicked:
+/// the single `Option` assignment under the guard is atomic enough that
+/// the surviving value is always consistent.
+fn relock<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+/// The engine's SPMD-deterministic tag allocator: recycled tags first
+/// (popped LIFO, so every rank draws the same sequence), then a fresh
+/// counter. Exhaustion is a typed error, not a panic.
+struct TagPool {
+    next: u32,
+    free: Vec<u32>,
+}
+
+impl TagPool {
+    fn new(base: u32) -> TagPool {
+        TagPool {
+            next: base,
+            free: Vec::new(),
+        }
+    }
+
+    fn lease(&mut self) -> Result<u32> {
+        if let Some(t) = self.free.pop() {
+            return Ok(t);
+        }
+        let t = self.next;
+        self.next = self.next.checked_add(1).ok_or(Error::TagsExhausted)?;
+        Ok(t)
+    }
+
+    /// Return an epoch's tags to the free pool (drains `tags`).
+    fn release(&mut self, tags: &mut Vec<u32>) {
+        self.free.append(tags);
+    }
+}
+
 /// One operation's result slot, shared between its worker thread and the
-/// request handle.
+/// request handle: the payload (or typed error) plus how long the
+/// operation took in µs (virtual under virtual timing, wall otherwise) —
+/// what [`Engine::wait_timed`] checks deadlines against.
 struct OpCell<E: Elem> {
-    result: Mutex<Option<Result<DataBuf<E>>>>,
+    result: Mutex<Option<(Result<DataBuf<E>>, f64)>>,
 }
 
 impl<E: Elem> OpCell<E> {
@@ -159,30 +248,53 @@ impl<E: Elem> OpCell<E> {
         })
     }
 
-    fn put(&self, r: Result<DataBuf<E>>) {
-        *self.result.lock().unwrap() = Some(r);
+    fn put(&self, r: Result<DataBuf<E>>, took_us: f64) {
+        *relock(self.result.lock()) = Some((r, took_us));
     }
 
     fn ready(&self) -> bool {
-        self.result.lock().unwrap().is_some()
+        relock(self.result.lock()).is_some()
     }
 
-    fn take(&self) -> Option<Result<DataBuf<E>>> {
-        self.result.lock().unwrap().take()
+    fn take(&self) -> Option<(Result<DataBuf<E>>, f64)> {
+        relock(self.result.lock()).take()
     }
 }
 
 /// A handle to one in-flight (or queued) operation. Redeem it with
-/// [`Engine::wait`]; poll with [`Engine::test`].
+/// [`Engine::wait`] / [`Engine::wait_timed`]; poll with [`Engine::test`].
+/// Dropping an unredeemed request discards the operation's result (the
+/// op itself still runs to completion — peers depend on it) and logs a
+/// warning, since a lost handle under serving traffic is almost always
+/// a leak in the caller's bookkeeping.
+#[must_use = "redeem with Engine::wait (dropping discards the op's result)"]
 pub struct Request<E: Elem> {
     id: u64,
     cell: Arc<OpCell<E>>,
+    deadline_us: Option<f64>,
+    redeemed: bool,
 }
 
 impl<E: Elem> Request<E> {
     /// The engine-local operation id (diagnostics).
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The completion deadline attached at submission, if any.
+    pub fn deadline_us(&self) -> Option<f64> {
+        self.deadline_us
+    }
+}
+
+impl<E: Elem> Drop for Request<E> {
+    fn drop(&mut self) {
+        if !self.redeemed && !std::thread::panicking() {
+            eprintln!(
+                "nbc: request {} dropped without wait — its result is discarded",
+                self.id
+            );
+        }
     }
 }
 
@@ -214,13 +326,20 @@ pub struct Engine<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> {
     comm: &'c mut ThreadComm<E>,
     op: O,
     cfg: NbcConfig,
-    next_tag: u32,
+    tags: TagPool,
+    /// Tags leased in the current epoch, reclaimed at the next quiesce.
+    epoch_tags: Vec<u32>,
     next_id: u64,
     in_flight: Vec<InFlight>,
     pending: Vec<Pending<E>>,
     /// Operations submitted and not yet delivered to a `wait`.
     outstanding: u64,
     outstanding_max: u64,
+    /// Operations admitted since the last `wait_all`/`quiesce` — the
+    /// counter [`NbcConfig::max_in_flight`] is checked against. Reset
+    /// only at SPMD-symmetric points (never by rank-local `wait`s), so
+    /// every rank accepts and rejects the identical op sequence.
+    admitted: usize,
 }
 
 impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
@@ -231,12 +350,14 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             comm,
             op,
             cfg,
-            next_tag: tag_base,
+            tags: TagPool::new(tag_base),
+            epoch_tags: Vec::new(),
             next_id: 0,
             in_flight: Vec::new(),
             pending: Vec::new(),
             outstanding: 0,
             outstanding_max: 0,
+            admitted: 0,
         }
     }
 
@@ -245,20 +366,24 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         self.outstanding
     }
 
+    /// Live sparse (tagged) channel entries in the world registry —
+    /// serving loops watch this stay flat across epochs.
+    pub fn tagged_entries(&self) -> usize {
+        self.comm.tagged_entries()
+    }
+
     /// This rank's id (convenience passthrough while the engine holds the
     /// endpoint borrow).
     pub fn rank(&self) -> usize {
         self.comm.rank()
     }
 
-    /// Lease the next tag (one per operation, never reused).
-    fn lease_tag(&mut self) -> u32 {
-        let t = self.next_tag;
-        self.next_tag = self
-            .next_tag
-            .checked_add(1)
-            .expect("nbc tag space exhausted");
-        t
+    /// Lease the next tag (recycled first, then fresh; unique within the
+    /// epoch) and record it for reclamation at the next quiesce.
+    fn lease_tag(&mut self) -> Result<u32> {
+        let t = self.tags.lease()?;
+        self.epoch_tags.push(t);
+        Ok(t)
     }
 
     fn note_submitted(&mut self) {
@@ -281,6 +406,43 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         x: DataBuf<E>,
         blocks: &Blocks,
     ) -> Result<Request<E>> {
+        let deadline = self.cfg.deadline_us;
+        self.submit(algo, x, blocks, deadline)
+    }
+
+    /// [`Engine::iallreduce`] with an explicit per-op completion deadline
+    /// in µs (overriding [`NbcConfig::deadline_us`]; `None` removes it).
+    /// The collective always runs to completion — the deadline is
+    /// enforced when the request is redeemed: [`Engine::wait`] returns
+    /// [`Error::Deadline`] for a result that arrived too late, and
+    /// [`Engine::wait_timed`] hands back the duration for callers that
+    /// want the late payload anyway.
+    pub fn iallreduce_deadline(
+        &mut self,
+        algo: AlgoKind,
+        x: DataBuf<E>,
+        blocks: &Blocks,
+        deadline_us: Option<f64>,
+    ) -> Result<Request<E>> {
+        self.submit(algo, x, blocks, deadline_us)
+    }
+
+    fn submit(
+        &mut self,
+        algo: AlgoKind,
+        x: DataBuf<E>,
+        blocks: &Blocks,
+        deadline_us: Option<f64>,
+    ) -> Result<Request<E>> {
+        // admission control first, before any state mutation: every rank
+        // sees the same submission sequence, so every rank rejects the
+        // same op and the SPMD tag agreement is untouched
+        if self.cfg.max_in_flight > 0 && self.admitted >= self.cfg.max_in_flight {
+            return Err(Error::Overloaded {
+                in_flight: self.admitted,
+                budget: self.cfg.max_in_flight,
+            });
+        }
         let fusable = self.cfg.fuse.enabled()
             && algo == AlgoKind::Dpdr
             && x.len() <= self.cfg.fuse.threshold_elems;
@@ -300,16 +462,13 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         }
         let id = self.next_id;
         self.next_id += 1;
+        self.admitted += 1;
         let cell = OpCell::new();
-        let req = Request {
-            id,
-            cell: Arc::clone(&cell),
-        };
         self.note_submitted();
         if fusable {
             self.pending.push(Pending {
                 id,
-                cell,
+                cell: Arc::clone(&cell),
                 x,
                 blocks: *blocks,
             });
@@ -317,9 +476,17 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                 self.flush()?;
             }
         } else {
-            self.spawn_solo(algo, x, *blocks, id, cell)?;
+            self.spawn_solo(algo, x, *blocks, id, Arc::clone(&cell))?;
         }
-        Ok(req)
+        // the handle is built only once the op is queued or launched, so
+        // a failed submission returns just the typed error — no orphan
+        // request to drop-warn about
+        Ok(Request {
+            id,
+            cell,
+            deadline_us,
+            redeemed: false,
+        })
     }
 
     /// Launch one operation on its own tagged worker thread.
@@ -331,15 +498,18 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         id: u64,
         cell: Arc<OpCell<E>>,
     ) -> Result<()> {
-        let tag = self.lease_tag();
+        let tag = self.lease_tag()?;
         let child = self.comm.fork_tagged(tag);
         let op = self.op.clone();
         let mapping = self.cfg.mapping;
         let backend = self.cfg.backend;
         let handle = spawn_worker(child, tag, backend, move |comm| {
+            let wall0 = std::time::Instant::now();
+            let v0 = comm.vtime();
             let out = allreduce_on(algo, comm, x, &op, &blocks, mapping);
+            let took = op_duration_us(comm, wall0, v0);
             let ok = out.is_ok();
-            cell.put(out);
+            cell.put(out, took);
             ok
         })?;
         self.in_flight.push(InFlight {
@@ -379,7 +549,13 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         } else {
             let mut v: Vec<E> = Vec::with_capacity(total);
             for p in &batch {
-                v.extend_from_slice(p.x.as_slice().expect("mode-uniform batch"));
+                // submit() rejects mode switches against an open batch,
+                // so this is unreachable short of an engine bug — and an
+                // engine bug should fail typed, not panic a worker's rank
+                let s = p.x.as_slice().ok_or_else(|| {
+                    Error::Protocol("fused batch mixed real and phantom inputs".into())
+                })?;
+                v.extend_from_slice(s);
             }
             DataBuf::real(v)
         };
@@ -394,7 +570,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             m.fused_ops += batch.len() as u64;
             m.fused_elems += total as u64;
         }
-        let tag = self.lease_tag();
+        let tag = self.lease_tag()?;
         let child = self.comm.fork_tagged(tag);
         let op = self.op.clone();
         let mapping = self.cfg.mapping;
@@ -402,18 +578,27 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         let (ids, worker_cells): (Vec<u64>, Vec<Arc<OpCell<E>>>) =
             batch.into_iter().map(|p| (p.id, p.cell)).unzip();
         let handle = spawn_worker(child, tag, backend, move |comm| {
-            match allreduce_on(AlgoKind::Dpdr, comm, fused, &op, &blocks, mapping) {
+            let wall0 = std::time::Instant::now();
+            let v0 = comm.vtime();
+            let out = allreduce_on(AlgoKind::Dpdr, comm, fused, &op, &blocks, mapping);
+            // one batch, one duration: every fused op completes when the
+            // shared dpdr does, so each cell gets the batch's time
+            let took = op_duration_us(comm, wall0, v0);
+            match out {
                 Ok(y) => {
                     // scatter: each request gets its slice of the fused
                     // result (zero-copy views of the worker's slab)
                     for (cell, &(lo, hi)) in worker_cells.iter().zip(&bounds) {
-                        cell.put(y.extract(lo, hi));
+                        cell.put(y.extract(lo, hi), took);
                     }
                     true
                 }
                 Err(e) => {
                     for cell in &worker_cells {
-                        cell.put(Err(Error::Protocol(format!("fused dpdr failed: {e}"))));
+                        cell.put(
+                            Err(Error::Protocol(format!("fused dpdr failed: {e}"))),
+                            took,
+                        );
                     }
                     false
                 }
@@ -456,6 +641,27 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
     /// and deadlock. Close batches at the SPMD-symmetric points instead:
     /// `fuse_max_ops`, [`Engine::flush`], or [`Engine::wait_all`].
     pub fn wait(&mut self, req: Request<E>) -> Result<DataBuf<E>> {
+        let op = req.id;
+        let deadline = req.deadline_us;
+        let (y, took_us) = self.wait_timed(req)?;
+        if let Some(deadline_us) = deadline {
+            if took_us > deadline_us {
+                return Err(Error::Deadline {
+                    op,
+                    deadline_us,
+                    took_us,
+                });
+            }
+        }
+        Ok(y)
+    }
+
+    /// [`Engine::wait`] plus the operation's duration in µs (virtual
+    /// under virtual timing, wall-clock otherwise). Unlike `wait` it
+    /// ignores the request's deadline — callers that want a late payload
+    /// anyway redeem through here and judge `took_us` themselves.
+    pub fn wait_timed(&mut self, mut req: Request<E>) -> Result<(DataBuf<E>, f64)> {
+        req.redeemed = true; // handed to a wait: the drop warning is moot
         if self.pending.iter().any(|p| p.id == req.id) {
             return Err(Error::Config(
                 "request is still queued for fusion — close the batch with flush() or \
@@ -472,7 +678,8 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         }
         self.outstanding = self.outstanding.saturating_sub(1);
         match req.cell.take() {
-            Some(r) => r,
+            Some((Ok(y), took_us)) => Ok((y, took_us)),
+            Some((Err(e), _)) => Err(e),
             None => Err(Error::Protocol(
                 "wait on an unknown or already-waited request".into(),
             )),
@@ -481,12 +688,50 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
 
     /// Drive everything to completion: flush the queue and join every
     /// worker. Individual [`Engine::wait`] calls afterwards return
-    /// instantly with the delivered payloads.
+    /// instantly with the delivered payloads. An SPMD-symmetric point:
+    /// the admission budget resets here, and once
+    /// [`NbcConfig::epoch_ops`] tags have been leased the epoch is
+    /// closed by an automatic [`Engine::quiesce`].
     pub fn wait_all(&mut self) -> Result<()> {
         self.flush()?;
         while !self.in_flight.is_empty() {
             self.join_one(self.in_flight.len() - 1)?;
         }
+        self.admitted = 0;
+        if self.cfg.epoch_ops > 0 && self.epoch_tags.len() >= self.cfg.epoch_ops {
+            self.quiesce()?;
+        }
+        Ok(())
+    }
+
+    /// Close the current epoch: drain every worker, then — in lockstep
+    /// with all other ranks (a world barrier, so no rank recycles while
+    /// any rank's workers still hold epoch channels) — drop the epoch
+    /// tags' channel and barrier entries from the registry and return
+    /// the tags to the free pool for the next leases. Must be called at
+    /// the same structural point on every rank, like `wait_all` (which
+    /// calls it automatically under [`NbcConfig::epoch_ops`]). A no-op
+    /// beyond draining when the epoch leased nothing; on a poisoned
+    /// world the barrier and reclamation are skipped — teardown owns the
+    /// entries then, and peers may already be gone.
+    pub fn quiesce(&mut self) -> Result<()> {
+        self.flush()?;
+        while !self.in_flight.is_empty() {
+            self.join_one(self.in_flight.len() - 1)?;
+        }
+        self.admitted = 0;
+        if self.epoch_tags.is_empty() || self.comm.world_poisoned() {
+            return Ok(());
+        }
+        self.comm.barrier()?;
+        self.comm.reclaim_tags(&self.epoch_tags);
+        let n = self.epoch_tags.len() as u64;
+        {
+            let m = self.comm.metrics_mut();
+            m.epochs += 1;
+            m.tags_recycled += n;
+        }
+        self.tags.release(&mut self.epoch_tags);
         Ok(())
     }
 
@@ -513,6 +758,16 @@ impl<E: Elem, O: ReduceOp<E> + Clone + 'static> Drop for Engine<'_, E, O> {
     /// errors.
     fn drop(&mut self) {
         let _ = self.wait_all();
+    }
+}
+
+/// How long a worker's operation took in µs, in the units deadlines are
+/// stated in: virtual-clock advance under virtual timing, wall time under
+/// real (where the clock *is* the wall).
+fn op_duration_us<E: Elem>(comm: &ThreadComm<E>, wall0: std::time::Instant, v0: f64) -> f64 {
+    match comm.timing() {
+        Timing::Virtual(..) => (comm.vtime() - v0) * 1e6,
+        Timing::Real => wall0.elapsed().as_secs_f64() * 1e6,
     }
 }
 
@@ -792,6 +1047,121 @@ mod tests {
         for (a, b) in report.results {
             assert_eq!(a, vec![3i32; 4]);
             assert_eq!(b, vec![6i32; 4]);
+        }
+    }
+
+    #[test]
+    fn tag_pool_exhaustion_is_typed_and_release_revives() {
+        let mut pool = TagPool::new(u32::MAX - 2);
+        assert_eq!(pool.lease().unwrap(), u32::MAX - 2);
+        assert_eq!(pool.lease().unwrap(), u32::MAX - 1);
+        assert!(matches!(pool.lease(), Err(Error::TagsExhausted)));
+        // recycled leases revive an exhausted pool, LIFO
+        let mut epoch = vec![u32::MAX - 2, u32::MAX - 1];
+        pool.release(&mut epoch);
+        assert!(epoch.is_empty());
+        assert_eq!(pool.lease().unwrap(), u32::MAX - 1);
+        assert_eq!(pool.lease().unwrap(), u32::MAX - 2);
+        assert!(matches!(pool.lease(), Err(Error::TagsExhausted)));
+    }
+
+    #[test]
+    fn epoch_quiesce_reclaims_tags_and_keeps_entries_flat() {
+        let rounds = 8i32;
+        let p = 4usize;
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            let cfg = NbcConfig {
+                epoch_ops: 1, // close an epoch at every wait_all
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            for round in 0..rounds {
+                let x = DataBuf::real(vec![round; 8]);
+                let req = eng.iallreduce(AlgoKind::Dpdr, x, &blocks_of(8, 2))?;
+                eng.wait_all()?;
+                let y = eng.wait(req)?.into_vec()?;
+                if y != vec![round * p as i32; 8] {
+                    return Err(Error::Protocol(format!("round {round}: wrong payload")));
+                }
+                // the epoch's sparse channel entries were dropped by the
+                // quiesce inside wait_all — the table never accumulates
+                let live = eng.comm.tagged_entries();
+                if live != 0 {
+                    return Err(Error::Protocol(format!(
+                        "round {round}: {live} tagged entries leaked past quiesce"
+                    )));
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        let totals = report.total_metrics();
+        assert_eq!(totals.epochs, rounds as u64 * p as u64);
+        assert_eq!(totals.tags_recycled, rounds as u64 * p as u64);
+    }
+
+    #[test]
+    fn overload_rejects_spmd_and_wait_all_readmits() {
+        let report = run_world::<i32, _, _>(2, Timing::Real, move |comm| {
+            let cfg = NbcConfig {
+                max_in_flight: 2,
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let mk = |v: i32| DataBuf::real(vec![v; 4]);
+            let r1 = eng.iallreduce(AlgoKind::Dpdr, mk(1), &blocks_of(4, 1))?;
+            let r2 = eng.iallreduce(AlgoKind::Dpdr, mk(2), &blocks_of(4, 1))?;
+            let rejected = matches!(
+                eng.iallreduce(AlgoKind::Dpdr, mk(3), &blocks_of(4, 1)),
+                Err(Error::Overloaded {
+                    in_flight: 2,
+                    budget: 2
+                })
+            );
+            let a = eng.wait(r1)?.into_vec()?;
+            // a rank-local wait must NOT readmit: admission stays SPMD
+            let still_rejected = matches!(
+                eng.iallreduce(AlgoKind::Dpdr, mk(3), &blocks_of(4, 1)),
+                Err(Error::Overloaded { .. })
+            );
+            let _ = eng.wait(r2)?;
+            eng.wait_all()?; // symmetric point: the budget resets
+            let r4 = eng.iallreduce(AlgoKind::Dpdr, mk(4), &blocks_of(4, 1))?;
+            let d = eng.wait(r4)?.into_vec()?;
+            Ok((rejected, still_rejected, a, d))
+        })
+        .unwrap();
+        for (rejected, still_rejected, a, d) in report.results {
+            assert!(rejected, "third submission must overflow the budget");
+            assert!(still_rejected, "rank-local wait must not readmit");
+            assert_eq!(a, vec![2i32; 4]);
+            assert_eq!(d, vec![8i32; 4]);
+        }
+    }
+
+    #[test]
+    fn deadline_miss_is_typed_and_engine_survives() {
+        let m = 4_000usize;
+        let report = run_world::<i32, _, _>(4, Timing::hydra(), move |comm| {
+            let blocks = Blocks::by_count(m, 8);
+            let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+            // an impossible deadline: any exchange costs at least α
+            let r = eng.iallreduce_deadline(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks, Some(1e-3))?;
+            let missed = matches!(eng.wait(r), Err(Error::Deadline { op: 0, .. }));
+            // the op itself completed (peers saw no abort): the engine
+            // and world keep serving after the miss
+            let r2 = eng.iallreduce(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks)?;
+            let after_ok = eng.wait(r2).is_ok();
+            // wait_timed hands back the late payload plus its duration
+            let r3 = eng.iallreduce_deadline(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks, Some(1e-3))?;
+            let (_, took_us) = eng.wait_timed(r3)?;
+            Ok((missed, after_ok, took_us))
+        })
+        .unwrap();
+        for (missed, after_ok, took_us) in report.results {
+            assert!(missed, "1 ns deadline must be missed");
+            assert!(after_ok, "engine must keep serving after a miss");
+            assert!(took_us > 1e-3, "late duration must be reported: {took_us}");
         }
     }
 }

@@ -1,0 +1,414 @@
+//! Serving-mode soak harness: drive one long-lived world through a large
+//! stream of mixed-size nonblocking allreduces — epochs reclaiming tags,
+//! admission control shedding load, deadlines surfacing misses, and an
+//! optional [`FaultPlan`] stressing the transport underneath — while
+//! verifying every payload against an O(m) closed-form oracle and
+//! watching registry memory stay flat.
+//!
+//! This is the always-on counterpart of the one-shot benchmark harness:
+//! correctness is asserted *in the loop* (a soak that silently corrupts
+//! payloads is worse than one that crashes), and the interesting outputs
+//! are the degradation counters — deadline misses, overload rejections,
+//! retransmits — not a single latency number. Reached via the `soak` CLI
+//! subcommand; CI runs a bounded smoke (`soak --ops 50000 --faults
+//! transient-drop,stall --seed 7`).
+//!
+//! Every rank derives the identical op stream from the seed (sizes,
+//! coefficients, submission order), so admission decisions and epoch
+//! boundaries stay SPMD-symmetric by construction — the soak would
+//! deadlock, not silently pass, if they ever diverged.
+
+use std::collections::VecDeque;
+
+use super::{Engine, FusePolicy, NbcConfig, Request};
+use crate::buffer::DataBuf;
+use crate::comm::{run_world_faulty, Comm, FaultPlan, Timing};
+use crate::error::{Error, Result};
+use crate::model::AlgoKind;
+use crate::ops::SumOp;
+use crate::pipeline::Blocks;
+
+/// One soak experiment. Defaults are a serving-shaped workload: small
+/// mixed sizes, fusion on, an epoch every few batches.
+#[derive(Clone, Debug)]
+pub struct SoakSpec {
+    /// World size (ranks).
+    pub p: usize,
+    /// Operations to run per rank.
+    pub ops: u64,
+    /// Smallest payload, in elements (≥ 1).
+    pub m_min: usize,
+    /// Largest payload, in elements (≥ `m_min`).
+    pub m_max: usize,
+    /// Operations submitted between wait_all drain points.
+    pub batch: usize,
+    /// [`NbcConfig::epoch_ops`]: quiesce + reclaim once this many tags
+    /// are leased (0 disables reclamation until the final quiesce).
+    pub epoch_ops: usize,
+    /// [`NbcConfig::max_in_flight`]: admission budget (0 = unlimited).
+    /// Set below `batch` to exercise overload shedding.
+    pub max_in_flight: usize,
+    /// Per-op completion deadline in µs (`None` = no deadline). Misses
+    /// are *counted*, not fatal: the soak redeems through
+    /// [`Engine::wait_timed`] so late payloads are still verified.
+    pub deadline_us: Option<f64>,
+    /// Stream seed: sizes, coefficients, and the fault plan's rolls.
+    pub seed: u64,
+    /// Transport fault plan (see [`FaultPlan::parse`]).
+    pub faults: FaultPlan,
+    /// Timing mode the world runs under.
+    pub timing: Timing,
+    /// Fuse small ops into batched dpdr launches.
+    pub fuse: bool,
+    /// Sliding latency window: the last `window` per-op durations feed
+    /// the report's percentiles.
+    pub window: usize,
+    /// Verify the full payload every `check_every` ops (first and last
+    /// element are checked on every op regardless).
+    pub check_every: u64,
+}
+
+impl SoakSpec {
+    /// A serving-shaped default stream: `ops` operations of 8..=1024
+    /// elements on `p` ranks under virtual Hydra timing, fused, epoch
+    /// every 256 tags, no faults.
+    pub fn new(p: usize, ops: u64) -> SoakSpec {
+        SoakSpec {
+            p,
+            ops,
+            m_min: 8,
+            m_max: 1024,
+            batch: 64,
+            epoch_ops: 256,
+            max_in_flight: 0,
+            deadline_us: None,
+            seed: 1,
+            faults: FaultPlan::none(),
+            timing: Timing::hydra(),
+            fuse: true,
+            window: 1024,
+            check_every: 97,
+        }
+    }
+}
+
+/// What a soak run observed, aggregated over ranks.
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    /// Operations completed *per rank* (every submitted op is redeemed).
+    pub ops_completed: u64,
+    /// Deadline misses summed over ranks (ops whose duration exceeded
+    /// the deadline; their payloads still verified).
+    pub deadline_misses: u64,
+    /// Submissions rejected with [`Error::Overloaded`], summed over
+    /// ranks (each was drained and resubmitted successfully).
+    pub overload_rejections: u64,
+    /// High-water mark of live registry entries (sparse channel + tagged
+    /// barrier tables) observed at the sample points.
+    pub entries_high_water: usize,
+    /// Live registry entries after the final quiesce — flat means 0.
+    pub entries_final: usize,
+    /// Epochs closed (from [`RankMetrics`](crate::comm::RankMetrics)).
+    pub epochs: u64,
+    /// Tags returned to the free pool by reclamation.
+    pub tags_recycled: u64,
+    /// Transmissions repeated by the transient-drop fault mode.
+    pub retransmits: u64,
+    /// Other injected fault events (delays, duplicates, reorder holds).
+    pub fault_events: u64,
+    /// Median per-op duration over rank 0's sliding window, in µs.
+    pub p50_us: f64,
+    /// 99th-percentile per-op duration over rank 0's window, in µs.
+    pub p99_us: f64,
+    /// Wall-clock duration of the whole soak, in µs.
+    pub wall_us: f64,
+    /// Final virtual clock (0 under real timing), in µs.
+    pub max_vtime_us: f64,
+}
+
+/// splitmix64 finalizer — the same stateless generator the fault plan
+/// rolls with, so the op stream is identical on every rank.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Op `i`'s shape: payload length in `m_min..=m_max` and the affine
+/// coefficient of its input.
+fn op_shape(spec: &SoakSpec, i: u64) -> (usize, i32) {
+    let h = mix(spec.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let span = (spec.m_max - spec.m_min + 1) as u64;
+    let m = spec.m_min + (h % span) as usize;
+    let a = 1 + ((h >> 32) % 7) as i32;
+    (m, a)
+}
+
+/// Op `i`'s input on `rank`: `x[j] = a·j + rank`. The allreduce oracle is
+/// closed-form — `y[j] = p·a·j + p(p−1)/2` — so verification is O(m) with
+/// no reference reduction. Magnitudes stay far from i32 overflow for any
+/// plausible `p`/`m_max`.
+fn op_input(rank: usize, m: usize, a: i32) -> Vec<i32> {
+    (0..m).map(|j| a * j as i32 + rank as i32).collect()
+}
+
+/// Check `y` against the oracle; full scan every `check_every` ops, end
+/// points otherwise.
+fn verify(y: &[i32], i: u64, m: usize, a: i32, p: usize, check_every: u64) -> Result<()> {
+    let pa = p as i32 * a;
+    let rank_sum = (p * (p - 1) / 2) as i32;
+    let expect = |j: usize| pa * j as i32 + rank_sum;
+    let mismatch = |j: usize, got: i32| {
+        Err(Error::Protocol(format!(
+            "soak op {i}: payload mismatch at element {j}: got {got}, want {}",
+            expect(j)
+        )))
+    };
+    if y.len() != m {
+        return Err(Error::Protocol(format!(
+            "soak op {i}: length {} != {m}",
+            y.len()
+        )));
+    }
+    if check_every > 0 && i % check_every == 0 {
+        for (j, &got) in y.iter().enumerate() {
+            if got != expect(j) {
+                return mismatch(j, got);
+            }
+        }
+    } else {
+        for j in [0, m - 1] {
+            if y[j] != expect(j) {
+                return mismatch(j, y[j]);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-rank soak outcome, folded into the [`SoakReport`] afterwards.
+struct RankSoak {
+    completed: u64,
+    misses: u64,
+    rejections: u64,
+    high_water: usize,
+    final_entries: usize,
+    window: Vec<f64>,
+}
+
+/// Run the soak and aggregate the report. Any hang would be broken by
+/// the transport watchdog into a typed error; any payload corruption
+/// fails the run immediately.
+pub fn run_soak(spec: &SoakSpec) -> Result<SoakReport> {
+    if spec.p < 2 || spec.ops == 0 || spec.m_min == 0 || spec.m_min > spec.m_max {
+        return Err(Error::Config(
+            "soak needs p >= 2, ops >= 1, and 1 <= m_min <= m_max".into(),
+        ));
+    }
+    let spec = spec.clone();
+    let timing = spec.timing;
+    let faults = spec.faults;
+    let p = spec.p;
+    let report = run_world_faulty::<i32, _, _>(p, timing, faults, move |comm| {
+        let batch = spec.batch.max(1);
+        let cfg = NbcConfig {
+            fuse: if spec.fuse {
+                FusePolicy::new(spec.m_max, batch)
+            } else {
+                FusePolicy::off()
+            },
+            epoch_ops: spec.epoch_ops,
+            max_in_flight: spec.max_in_flight,
+            ..NbcConfig::default()
+        };
+        let rank = comm.rank();
+        let mut eng = Engine::new(comm, SumOp, cfg);
+        let mut stats = RankSoak {
+            completed: 0,
+            misses: 0,
+            rejections: 0,
+            high_water: 0,
+            final_entries: 0,
+            window: Vec::new(),
+        };
+        let mut lat: VecDeque<f64> = VecDeque::with_capacity(spec.window.max(1));
+        let sample_high = |eng: &Engine<'_, i32, SumOp>, high: &mut usize| {
+            let live = eng.comm.tagged_entries() + eng.comm.barrier_entries();
+            *high = (*high).max(live);
+        };
+        let mut next = 0u64;
+        while next < spec.ops {
+            let end = (next + batch as u64).min(spec.ops);
+            let mut reqs = Vec::with_capacity((end - next) as usize);
+            for i in next..end {
+                let (m, a) = op_shape(&spec, i);
+                let blocks = Blocks::by_count(m, m.min(4));
+                let x = DataBuf::real(op_input(rank, m, a));
+                let dl = spec.deadline_us;
+                let req = match eng.iallreduce_deadline(AlgoKind::Dpdr, x, &blocks, dl) {
+                    Ok(r) => r,
+                    Err(Error::Overloaded { .. }) => {
+                        // shed load at the same op on every rank (the
+                        // admission counter is SPMD), drain to the
+                        // symmetric point, then the retry is admitted
+                        stats.rejections += 1;
+                        eng.wait_all()?;
+                        for (j, r) in reqs.drain(..) {
+                            redeem(&mut eng, &spec, p, j, r, &mut stats, &mut lat)?;
+                        }
+                        let x = DataBuf::real(op_input(rank, m, a));
+                        eng.iallreduce_deadline(AlgoKind::Dpdr, x, &blocks, dl)?
+                    }
+                    Err(e) => return Err(e),
+                };
+                reqs.push((i, req));
+            }
+            sample_high(&eng, &mut stats.high_water);
+            eng.wait_all()?;
+            for (i, r) in reqs {
+                redeem(&mut eng, &spec, p, i, r, &mut stats, &mut lat)?;
+            }
+            sample_high(&eng, &mut stats.high_water);
+            next = end;
+        }
+        // final epoch close: with reclamation on this is a formality;
+        // with epoch_ops = 0 it is the run's only reclamation
+        eng.quiesce()?;
+        stats.final_entries = eng.comm.tagged_entries() + eng.comm.barrier_entries();
+        stats.window = lat.into_iter().collect();
+        Ok(stats)
+    })?;
+
+    let totals = report.total_metrics();
+    let mut out = SoakReport {
+        ops_completed: 0,
+        deadline_misses: 0,
+        overload_rejections: 0,
+        entries_high_water: 0,
+        entries_final: 0,
+        epochs: totals.epochs,
+        tags_recycled: totals.tags_recycled,
+        retransmits: totals.retransmits,
+        fault_events: totals.fault_events,
+        p50_us: 0.0,
+        p99_us: 0.0,
+        wall_us: report.wall_us,
+        max_vtime_us: report.max_vtime_us,
+    };
+    for (rank, s) in report.results.iter().enumerate() {
+        if rank == 0 {
+            out.ops_completed = s.completed;
+            let mut w = s.window.clone();
+            if !w.is_empty() {
+                w.sort_by(|a, b| a.total_cmp(b));
+                out.p50_us = w[(w.len() - 1) / 2];
+                out.p99_us = w[(w.len() - 1) * 99 / 100];
+            }
+        }
+        out.deadline_misses += s.misses;
+        out.overload_rejections += s.rejections;
+        out.entries_high_water = out.entries_high_water.max(s.high_water);
+        out.entries_final = out.entries_final.max(s.final_entries);
+    }
+    Ok(out)
+}
+
+/// Redeem one request: verify its payload against the oracle, record its
+/// latency, and count a deadline miss if it came in late.
+fn redeem(
+    eng: &mut Engine<'_, i32, SumOp>,
+    spec: &SoakSpec,
+    p: usize,
+    i: u64,
+    req: Request<i32>,
+    stats: &mut RankSoak,
+    lat: &mut VecDeque<f64>,
+) -> Result<()> {
+    let (y, took_us) = eng.wait_timed(req)?;
+    if let Some(dl) = spec.deadline_us {
+        if took_us > dl {
+            stats.misses += 1;
+        }
+    }
+    let (m, a) = op_shape(spec, i);
+    let ys = y
+        .as_slice()
+        .ok_or_else(|| Error::Protocol("soak payload is not a real buffer".into()))?;
+    verify(ys, i, m, a, p, spec.check_every)?;
+    stats.completed += 1;
+    if spec.window > 0 {
+        if lat.len() == spec.window {
+            lat.pop_front();
+        }
+        lat.push_back(took_us);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soak_smoke_fault_free() {
+        let mut spec = SoakSpec::new(4, 300);
+        spec.m_min = 4;
+        spec.m_max = 64;
+        spec.batch = 16;
+        spec.epoch_ops = 32;
+        let r = run_soak(&spec).unwrap();
+        assert_eq!(r.ops_completed, 300);
+        assert_eq!(r.deadline_misses, 0);
+        assert_eq!(r.overload_rejections, 0);
+        assert_eq!(r.entries_final, 0, "final quiesce must drain the tables");
+        assert!(r.epochs > 0 && r.tags_recycled > 0);
+        assert!(r.p50_us > 0.0 && r.p99_us >= r.p50_us);
+    }
+
+    #[test]
+    fn soak_under_full_fault_plan_is_deterministic() {
+        let mut spec = SoakSpec::new(4, 200);
+        spec.m_min = 4;
+        spec.m_max = 32;
+        spec.batch = 16;
+        spec.epoch_ops = 32;
+        spec.seed = 7;
+        spec.faults = FaultPlan::parse("all", 7).unwrap();
+        let a = run_soak(&spec).unwrap();
+        let b = run_soak(&spec).unwrap();
+        assert_eq!(a.ops_completed, 200);
+        assert!(a.retransmits + a.fault_events > 0, "plan must actually fire");
+        // same seed, same stream: the virtual clock and fault counters
+        // are bitwise reproducible
+        assert_eq!(a.max_vtime_us.to_bits(), b.max_vtime_us.to_bits());
+        assert_eq!(a.retransmits, b.retransmits);
+        assert_eq!(a.fault_events, b.fault_events);
+        assert_eq!(a.entries_final, 0);
+    }
+
+    #[test]
+    fn soak_sheds_load_and_counts_misses() {
+        let mut spec = SoakSpec::new(2, 120);
+        spec.m_min = 4;
+        spec.m_max = 32;
+        spec.batch = 24;
+        spec.max_in_flight = 8; // below batch: forced overload shedding
+        spec.epoch_ops = 16;
+        spec.deadline_us = Some(1e-6); // impossibly tight: every op late
+        let r = run_soak(&spec).unwrap();
+        assert_eq!(r.ops_completed, 120, "shed ops are resubmitted, not lost");
+        assert!(r.overload_rejections > 0, "budget below batch must shed");
+        assert_eq!(r.deadline_misses, 120 * 2, "every op on both ranks is late");
+    }
+
+    #[test]
+    fn soak_rejects_degenerate_specs() {
+        assert!(run_soak(&SoakSpec::new(1, 10)).is_err());
+        assert!(run_soak(&SoakSpec::new(4, 0)).is_err());
+        let mut s = SoakSpec::new(4, 10);
+        s.m_min = 9;
+        s.m_max = 8;
+        assert!(run_soak(&s).is_err());
+    }
+}

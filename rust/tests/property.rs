@@ -130,6 +130,70 @@ fn prop_zero_copy_allocs_flat_in_epochs() {
     });
 }
 
+#[test]
+fn prop_epoch_churn_keeps_registry_flat_and_allocs_linear() {
+    // ≥100 epochs of nbc submit/quiesce churn on p ≥ 8: every quiesce
+    // must return the sparse channel table to empty (recycled tags
+    // re-arm their receive claims each epoch), and allocator traffic may
+    // grow at most linearly in the epoch count — a leak in either the
+    // edge table or the reclamation path would show up as growth here.
+    forall("epoch churn flat", 3, 0xE90C, |g| {
+        let p = g.usize_in(8, 12);
+        let m = g.usize_in(4, 64);
+        let churn = |epochs: usize| {
+            run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+                use dpdr::nbc::{Engine, NbcConfig};
+                let cfg = NbcConfig {
+                    epoch_ops: 1, // quiesce at every wait_all
+                    ..NbcConfig::default()
+                };
+                let mut eng = Engine::new(comm, SumOp, cfg);
+                let mut peak = 0usize;
+                for e in 0..epochs {
+                    let x = DataBuf::real(vec![e as i32; m]);
+                    let req = eng.iallreduce(AlgoKind::Dpdr, x, &Blocks::by_count(m, 2))?;
+                    eng.wait_all()?;
+                    let y = eng.wait(req)?.into_vec()?;
+                    if y != vec![e as i32 * p as i32; m] {
+                        return Err(dpdr::error::Error::Protocol(format!(
+                            "epoch {e}: wrong sum"
+                        )));
+                    }
+                    peak = peak.max(eng.tagged_entries());
+                }
+                Ok(peak)
+            })
+            .map_err(|e| e.to_string())
+        };
+        let large = churn(120)?;
+        for (rank, peak) in large.results.iter().enumerate() {
+            if *peak != 0 {
+                return Err(format!(
+                    "p={p} m={m} rank {rank}: {peak} sparse entries survived quiesce"
+                ));
+            }
+        }
+        let t = large.total_metrics();
+        if t.epochs < (120 * p) as u64 || t.tags_recycled < (120 * p) as u64 {
+            return Err(format!(
+                "p={p}: epochs={} tags_recycled={} (want >= {})",
+                t.epochs,
+                t.tags_recycled,
+                120 * p
+            ));
+        }
+        let small = churn(40)?;
+        let (a, b) = (small.total_metrics().allocs, t.allocs);
+        // 3x the epochs may cost ~3x the allocs, never superlinear
+        if b > 4 * a.max(8) {
+            return Err(format!(
+                "p={p} m={m}: allocs superlinear in epochs ({a} @40 vs {b} @120)"
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// View an element as raw, comparable bits (floats compare bitwise so NaN
 /// canonicalization and signed zeros are pinned, not just numeric value).
 trait BitsOf: ArithElem {
