@@ -19,7 +19,12 @@
 //! * `fusion_headline.speedup` (`BENCH_fusion.json`, written by
 //!   `cargo bench --bench fusion_overlap`) — the nbc fusion layer's
 //!   coalesced small-message allreduce must keep beating back-to-back
-//!   sequential ops.
+//!   sequential ops;
+//! * `progress_headline.schedule_ops_per_sec` and
+//!   `progress_headline.schedule_worker_peak` (`BENCH_progress.json`,
+//!   written by `cargo bench --bench progress_scaling`) — the
+//!   compiled-schedule engine must sustain the K=256 batch above the
+//!   committed throughput floor while spawning zero worker threads.
 //!
 //! ```text
 //! cargo run --release --bin bench_check                 # gate against baselines
@@ -28,7 +33,7 @@
 //!
 //! The committed baselines (`BENCH_baseline.json`,
 //! `BENCH_reduce_baseline.json`, `BENCH_congestion_baseline.json`,
-//! `BENCH_fusion_baseline.json`) are
+//! `BENCH_fusion_baseline.json`, `BENCH_progress_baseline.json`) are
 //! deliberately conservative floors / generous ceilings recorded to
 //! *arm* the gate on any CI hardware; re-record with `--write-baseline`
 //! on a reference machine to tighten them. A missing baseline or fresh
@@ -132,6 +137,14 @@ fn main() {
         .raw("fusion-baseline")
         .unwrap_or("BENCH_fusion_baseline.json")
         .to_string();
+    let progress_fresh_path = args
+        .raw("progress-fresh")
+        .unwrap_or("BENCH_progress.json")
+        .to_string();
+    let progress_base_path = args
+        .raw("progress-baseline")
+        .unwrap_or("BENCH_progress_baseline.json")
+        .to_string();
     // tolerance: flag > env > 10% default, so per-machine tightening needs
     // no code change
     let env_tol = std::env::var("DPDR_BENCH_TOLERANCE")
@@ -147,10 +160,15 @@ fn main() {
         "run `cargo bench --bench congestion_ablation`",
     );
     let fusion_fresh = read_report(&fusion_fresh_path, "run `cargo bench --bench fusion_overlap`");
+    let progress_fresh = read_report(
+        &progress_fresh_path,
+        "run `cargo bench --bench progress_scaling`",
+    );
     if fresh.is_none()
         && reduce_fresh.is_none()
         && congestion_fresh.is_none()
         && fusion_fresh.is_none()
+        && progress_fresh.is_none()
     {
         eprintln!("bench_check: no fresh reports at all — run the benches first");
         std::process::exit(2);
@@ -174,6 +192,10 @@ fn main() {
         if let Some(f) = &fusion_fresh {
             std::fs::write(&fusion_base_path, f).expect("write fusion baseline");
             println!("bench_check: recorded {fusion_base_path} from {fusion_fresh_path}");
+        }
+        if let Some(f) = &progress_fresh {
+            std::fs::write(&progress_base_path, f).expect("write progress baseline");
+            println!("bench_check: recorded {progress_base_path} from {progress_fresh_path}");
         }
         return;
     }
@@ -305,6 +327,45 @@ fn main() {
             }
             Err(_) => println!(
                 "bench_check: no baseline at {fusion_base_path} — fusion gate passes \
+                 (bootstrap)."
+            ),
+        }
+    }
+
+    if let Some(fresh) = &progress_fresh {
+        match std::fs::read_to_string(&progress_base_path) {
+            Ok(base) => {
+                armed += 1;
+                // the compiled-schedule engine must hold its K=256
+                // throughput floor (the committed baseline is a
+                // conservative 1 op/s — any completing run passes) ...
+                gate.check_floor(
+                    "progress_headline.schedule_ops_per_sec",
+                    pick(fresh, "progress_headline", "schedule_ops_per_sec"),
+                    pick(&base, "progress_headline", "schedule_ops_per_sec"),
+                    tol,
+                );
+                // ... and must never spawn a worker thread: ceiling 0
+                // with sub-1 slack, so any nonzero peak fails the gate
+                gate.check_ceiling(
+                    "progress_headline.schedule_worker_peak",
+                    pick(fresh, "progress_headline", "schedule_worker_peak"),
+                    pick(&base, "progress_headline", "schedule_worker_peak"),
+                    tol,
+                    0.5,
+                );
+                if let (Some(t), Some(s)) = (
+                    num_after(fresh, "progress_k256", "threaded_ops_s"),
+                    num_after(fresh, "progress_k256", "schedule_ops_s"),
+                ) {
+                    println!(
+                        "progress_k256: threaded {t:.0} ops/s vs schedule {s:.0} ops/s \
+                         (informational)"
+                    );
+                }
+            }
+            Err(_) => println!(
+                "bench_check: no baseline at {progress_base_path} — progress gate passes \
                  (bootstrap)."
             ),
         }

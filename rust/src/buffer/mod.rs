@@ -438,6 +438,49 @@ impl<E: Elem> DataBuf<E> {
         }
     }
 
+    /// Fused two-incoming reduction into the sub-range `[lo, lo+n)`:
+    /// `self[lo..] ← t1 ⊙ (t0 ⊙ self[lo..])` — exactly two successive
+    /// [`Side::Left`] [`reduce_at`](DataBuf::reduce_at) calls collapsed
+    /// into one pass (bitwise-identical by construction). This is the
+    /// inner-node shape of the paper's Algorithm 1: a rank with two
+    /// children folds both received blocks into its partial result every
+    /// round. Both incomings are read zero-copy out of their senders'
+    /// slabs; for phantom buffers it is a no-op (the call site charges
+    /// γ·2n to the virtual clock).
+    pub fn reduce_at3<O: ReduceOp<E> + ?Sized>(
+        &mut self,
+        lo: usize,
+        t0: &DataBuf<E>,
+        t1: &DataBuf<E>,
+        op: &O,
+    ) -> Result<()> {
+        let n = t0.len();
+        if t1.len() != n {
+            return Err(Error::Config(format!(
+                "reduce_at3 incoming length mismatch: t0 {} vs t1 {}",
+                n,
+                t1.len()
+            )));
+        }
+        if lo + n > self.len() {
+            return Err(Error::Config(format!(
+                "reduce_at3 [{lo}, {}) out of bounds for len {}",
+                lo + n,
+                self.len()
+            )));
+        }
+        match (self, t0, t1) {
+            (DataBuf::Real(dst), DataBuf::Real(s0), DataBuf::Real(s1)) => {
+                op.reduce_into3(dst.writable(lo, n), s0.as_slice(), s1.as_slice());
+                Ok(())
+            }
+            (DataBuf::Phantom(_), DataBuf::Phantom(_), DataBuf::Phantom(_)) => Ok(()),
+            _ => Err(Error::BufferMode(
+                "reduce_at3 mixing real and phantom buffers".into(),
+            )),
+        }
+    }
+
     /// Whole-buffer in-place reduction (used by the non-pipelined baselines).
     pub fn reduce_all<O: ReduceOp<E> + ?Sized>(
         &mut self,
@@ -556,6 +599,40 @@ mod tests {
         let inc = DataBuf::real(vec![10i32, 20]);
         acc.reduce_at(1, &inc, &SumOp, Side::Left).unwrap();
         assert_eq!(acc.as_slice().unwrap(), &[1, 12, 23, 4]);
+    }
+
+    #[test]
+    fn reduce_at3_matches_two_left_reduces() {
+        // non-commutative witness: fused must be exactly t1 ⊙ (t0 ⊙ y)
+        let y = Mat2([1, 2, 3, 4]);
+        let t0 = Mat2([5, 6, 7, 8]);
+        let t1 = Mat2([9, 10, 11, 12]);
+        let mut two = DataBuf::real(vec![Mat2::IDENT, y, Mat2::IDENT]);
+        two.reduce_at(1, &DataBuf::real(vec![t0]), &Mat2Op, Side::Left)
+            .unwrap();
+        two.reduce_at(1, &DataBuf::real(vec![t1]), &Mat2Op, Side::Left)
+            .unwrap();
+        let mut fused = DataBuf::real(vec![Mat2::IDENT, y, Mat2::IDENT]);
+        fused
+            .reduce_at3(1, &DataBuf::real(vec![t0]), &DataBuf::real(vec![t1]), &Mat2Op)
+            .unwrap();
+        assert_eq!(fused.as_slice().unwrap(), two.as_slice().unwrap());
+
+        // phantom path is a no-op, mixed modes are typed errors
+        let mut ph: DataBuf<i32> = DataBuf::phantom(4);
+        ph.reduce_at3(0, &DataBuf::phantom(2), &DataBuf::phantom(2), &SumOp)
+            .unwrap();
+        let mut real = DataBuf::real(vec![1i32, 2]);
+        assert!(real
+            .reduce_at3(0, &DataBuf::phantom(2), &DataBuf::phantom(2), &SumOp)
+            .is_err());
+        // mismatched incoming lengths and out-of-bounds are typed errors
+        assert!(real
+            .reduce_at3(0, &DataBuf::real(vec![1]), &DataBuf::real(vec![1, 2]), &SumOp)
+            .is_err());
+        assert!(real
+            .reduce_at3(1, &DataBuf::real(vec![1, 2]), &DataBuf::real(vec![3, 4]), &SumOp)
+            .is_err());
     }
 
     #[test]

@@ -113,20 +113,36 @@ fn run_rounds<E: Elem, O: ReduceOp<E>>(
     // activity window are skipped by the per-edge predicates below.
     for j in 0..=(b + d) {
         // --- steps 1 & 2: the two children -------------------------------
-        for child in role.children.into_iter().flatten() {
-            let up_active = j < b; // child's partial block j flows up
-            let down_idx = j as isize - (d as isize + 1); // result block down
-            let down_active = down_idx >= 0 && (down_idx as usize) < b;
-            if !up_active && !down_active {
-                continue; // both directions void — skipped symmetrically
-            }
-            let send = block_or_void(&y, blocks, down_idx)?;
-            let t = comm.sendrecv(child, send)?;
-            if up_active {
-                // post-order reduction: Y[j] ← t ⊙ Y[j]
-                let (lo, _hi) = blocks.range(j);
-                comm.charge_compute(t.bytes());
-                y.reduce_at(lo, &t, op, Side::Left)?;
+        let up_active = j < b; // child's partial block j flows up
+        let down_idx = j as isize - (d as isize + 1); // result block down
+        let down_active = down_idx >= 0 && (down_idx as usize) < b;
+        if let (true, Some(c0), Some(c1)) = (up_active, role.children[0], role.children[1]) {
+            // Fused inner round: both children's partial blocks arrive
+            // this round, so fold them in one pass — Y[j] ← t1 ⊙ (t0 ⊙
+            // Y[j]) via the arity-3 kernel. The sendrecv/charge sequence
+            // is exactly the two-reduce form's (⊙ never touches the
+            // clock), so virtual times are bitwise unchanged; the
+            // down-flowing block j−(d+1) is disjoint from block j, so the
+            // second send reads the same bytes it did before the fusion.
+            let t0 = comm.sendrecv(c0, block_or_void(&y, blocks, down_idx)?)?;
+            comm.charge_compute(t0.bytes());
+            let t1 = comm.sendrecv(c1, block_or_void(&y, blocks, down_idx)?)?;
+            comm.charge_compute(t1.bytes());
+            let (lo, _hi) = blocks.range(j);
+            y.reduce_at3(lo, &t0, &t1, op)?;
+        } else {
+            for child in role.children.into_iter().flatten() {
+                if !up_active && !down_active {
+                    continue; // both directions void — skipped symmetrically
+                }
+                let send = block_or_void(&y, blocks, down_idx)?;
+                let t = comm.sendrecv(child, send)?;
+                if up_active {
+                    // post-order reduction: Y[j] ← t ⊙ Y[j]
+                    let (lo, _hi) = blocks.range(j);
+                    comm.charge_compute(t.bytes());
+                    y.reduce_at(lo, &t, op, Side::Left)?;
+                }
             }
         }
 

@@ -91,6 +91,17 @@ pub struct RankMetrics {
     pub epochs: u64,
     /// Nbc tags returned to the free pool by epoch reclamation.
     pub tags_recycled: u64,
+    /// Schedule-engine steps this rank executed (each send-half,
+    /// recv-half, or fused sendrecv completion counts once). 0 under the
+    /// threaded engine.
+    pub steps_executed: u64,
+    /// Times this rank's progress loop woke up and scanned for ready
+    /// steps while driving schedule-engine operations.
+    pub progress_wakeups: u64,
+    /// Peak number of runnable steps observed in one progress scan on
+    /// this rank (`merge` takes the max, not the sum). 0 under the
+    /// threaded engine.
+    pub ready_queue_max: u64,
 }
 
 impl RankMetrics {
@@ -120,6 +131,9 @@ impl RankMetrics {
         self.retransmits += other.retransmits;
         self.epochs += other.epochs;
         self.tags_recycled += other.tags_recycled;
+        self.steps_executed += other.steps_executed;
+        self.progress_wakeups += other.progress_wakeups;
+        self.ready_queue_max = self.ready_queue_max.max(other.ready_queue_max);
     }
 
     /// Fold one rank's buffer-layer counters (thread-local, harvested when
@@ -173,10 +187,14 @@ mod tests {
             retransmits: 3,
             epochs: 2,
             tags_recycled: 7,
+            steps_executed: 12,
+            progress_wakeups: 30,
+            ready_queue_max: 4,
         };
         let b = RankMetrics {
             max_queue_depth: 9,
             ops_in_flight_max: 5,
+            ready_queue_max: 8,
             ..a.clone()
         };
         a.merge(&b);
@@ -208,6 +226,9 @@ mod tests {
         assert_eq!(a.retransmits, 6);
         assert_eq!(a.epochs, 4);
         assert_eq!(a.tags_recycled, 14);
+        assert_eq!(a.steps_executed, 24);
+        assert_eq!(a.progress_wakeups, 60);
+        assert_eq!(a.ready_queue_max, 8); // max, not sum
     }
 
     #[test]

@@ -124,7 +124,7 @@ impl NodeNic {
 /// The world's shared network resources. Inert (`!is_active`) under a
 /// dedicated model: every method is then an identity/no-op and the
 /// transport's hot path pays a single boolean check.
-pub(super) struct Fabric {
+pub(crate) struct Fabric {
     net: NetParams,
     /// Rank → node id under the *cost model's* mapping (which may differ
     /// from the registry's shard layout). Empty when inert.
@@ -167,7 +167,7 @@ impl Fabric {
 
     /// True when any resource is finite — the transport then routes its
     /// virtual timing through the fabric.
-    pub(super) fn is_active(&self) -> bool {
+    pub(crate) fn is_active(&self) -> bool {
         !self.net.is_dedicated()
     }
 
@@ -176,7 +176,7 @@ impl Fabric {
     }
 
     /// The injection-queue capacity of edge `src → dst` (0 = unbounded).
-    pub(super) fn edge_capacity(&self, src: usize, dst: usize) -> usize {
+    pub(crate) fn edge_capacity(&self, src: usize, dst: usize) -> usize {
         if !self.is_active() {
             return 0;
         }
@@ -190,7 +190,7 @@ impl Fabric {
     /// Reserve an egress slot on `src`'s node for a transfer to `dst`:
     /// returns the transfer's start time `≥ request`. Identity for
     /// intra-node transfers and unlimited ports.
-    pub(super) fn reserve_egress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
+    pub(crate) fn reserve_egress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
         if self.nics.is_empty() || self.same_node(src, dst) {
             return request;
         }
@@ -199,7 +199,7 @@ impl Fabric {
     }
 
     /// Reserve an ingress slot on `dst`'s node for a transfer from `src`.
-    pub(super) fn reserve_ingress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
+    pub(crate) fn reserve_ingress(&self, src: usize, dst: usize, request: f64, dur: f64) -> f64 {
         if self.nics.is_empty() || self.same_node(src, dst) {
             return request;
         }

@@ -38,6 +38,7 @@
 //! the sender's slab, so the steady-state block path moves no payload
 //! bytes at all: the receiver reduces straight out of the sender's memory.
 
+use std::any::{Any, TypeId};
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
@@ -224,7 +225,7 @@ impl<E: Elem> InterTable<E> {
 /// `Registry` exactly); `new(p, Some(mapping))` shards by the mapping's
 /// node groups, which is how `run_world` aligns the transport's arenas
 /// with the cost model's node layout.
-pub(super) struct ShardedRegistry<E: Elem> {
+pub(crate) struct ShardedRegistry<E: Elem> {
     size: usize,
     /// Global rank → shard id.
     shard_of: Box<[u32]>,
@@ -245,6 +246,11 @@ pub(super) struct ShardedRegistry<E: Elem> {
     /// itself keeps unclaimed `Sender`s alive, so a dead peer would not
     /// disconnect the channel).
     poisoned: std::sync::atomic::AtomicBool,
+    /// World-shared singletons anchored by type (see
+    /// [`ShardedRegistry::anchored`]): the schedule engine's progress
+    /// core lives here so all ranks of a world drive one shared state
+    /// without threading it through every construction path.
+    anchor: Mutex<HashMap<TypeId, Arc<dyn Any + Send + Sync>>>,
 }
 
 /// Poll interval for poison detection on blocked receives.
@@ -328,12 +334,26 @@ impl<E: Elem> ShardedRegistry<E> {
             barriers: BarrierTable::new(),
             faults,
             poisoned: std::sync::atomic::AtomicBool::new(false),
+            anchor: Mutex::new(HashMap::new()),
         }
     }
 
     /// The world's network-resource fabric.
-    pub(super) fn fabric(&self) -> &Fabric {
+    pub(crate) fn fabric(&self) -> &Fabric {
         &self.fabric
+    }
+
+    /// The world-shared singleton of type `T`, created by `init` on first
+    /// touch. All ranks calling with the same `T` get the same `Arc` —
+    /// the schedule engine anchors its per-world progress core here.
+    pub(crate) fn anchored<T: Any + Send + Sync>(&self, init: impl FnOnce() -> T) -> Arc<T> {
+        let mut map = relock(self.anchor.lock());
+        let entry = map
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Arc::new(init()) as Arc<dyn Any + Send + Sync>);
+        Arc::clone(entry)
+            .downcast::<T>()
+            .expect("anchored entry keyed by TypeId matches its type")
     }
 
     /// Number of shards (node groups) backing this world.
@@ -347,12 +367,12 @@ impl<E: Elem> ShardedRegistry<E> {
     }
 
     /// Mark the world failed (called when a rank errors or panics).
-    pub(super) fn poison(&self) {
+    pub(crate) fn poison(&self) {
         self.poisoned
             .store(true, std::sync::atomic::Ordering::Release);
     }
 
-    pub(super) fn is_poisoned(&self) -> bool {
+    pub(crate) fn is_poisoned(&self) -> bool {
         self.poisoned.load(std::sync::atomic::Ordering::Acquire)
     }
 
@@ -583,6 +603,18 @@ impl<E: Elem> ThreadComm<E> {
     /// accounts fusion and in-flight peaks here).
     pub(crate) fn metrics_mut(&mut self) -> &mut RankMetrics {
         &mut self.metrics
+    }
+
+    /// The world's channel registry (the schedule engine anchors its
+    /// shared progress core there and routes fabric reservations and
+    /// poison checks through it).
+    pub(crate) fn registry(&self) -> &Arc<ShardedRegistry<E>> {
+        &self.registry
+    }
+
+    /// This endpoint's blocking-wait watchdog budget.
+    pub(crate) fn watchdog(&self) -> std::time::Duration {
+        self.watchdog
     }
 
     /// Mark the whole world failed (a nonblocking worker uses this when

@@ -35,6 +35,7 @@ pub mod ops;
 pub mod pipeline;
 pub mod proptest;
 pub mod runtime;
+pub mod schedule;
 pub mod topo;
 pub mod util;
 
@@ -49,7 +50,7 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
     pub use crate::nbc::{
-        run_soak, Engine, FusePolicy, NbcConfig, Request, SoakReport, SoakSpec,
+        run_soak, Engine, EngineKind, FusePolicy, NbcConfig, Request, SoakReport, SoakSpec,
     };
     pub use crate::ops::{Elem, MaxOp, MinOp, OpKind, ProdOp, ReduceBackend, ReduceOp, Side, SumOp};
     pub use crate::topo::{DualRootForest, Mapping, PostOrderTree};

@@ -6,7 +6,8 @@
 //! dpdr concurrent --p 288 --m 1024 --k 8 [--algos dpdr,ring] [--fuse-threshold 1024]
 //!                 [--fuse-max-ops 8]       K outstanding nonblocking allreduces per rank
 //! dpdr soak       --p 8 --ops 100000 [--faults transient-drop,stall] [--seed 7]
-//!                 [--deadline-us N] [--max-in-flight N]   serving-mode endurance run
+//!                 [--deadline-us N] [--max-in-flight N] [--engine threaded|schedule]
+//!                 serving-mode endurance run
 //! dpdr table2     [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]  reproduce Table 2
 //! dpdr fig1       [--tsv out.tsv]                                         Figure 1 series
 //! dpdr latency    [--hmax 12]                                             §1.2 4h−3 check
@@ -98,6 +99,9 @@ subcommands:
              [--faults LIST]      (inject transport faults: delay,dup,reorder,
              transient-drop,stall,all,none — deterministic under --seed)
              [--seed N] [--window 1024] [--check-every 97] [--no-fuse] [--real-time]
+             [--engine threaded|schedule]  (schedule: compile ops to per-rank step
+             programs driven by the shared progress core — no thread per op, true
+             deadline cancellation; implies --no-fuse)
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -337,6 +341,12 @@ fn cmd_soak(args: &Args) -> Result<()> {
     let dl = args.get("deadline-us", 0.0f64)?;
     spec.deadline_us = (dl > 0.0).then_some(dl);
     spec.fuse = !args.switch("no-fuse");
+    spec.engine = args.raw("engine").unwrap_or("threaded").parse()?;
+    if spec.engine == dpdr::nbc::EngineKind::Schedule {
+        // fused batches ride worker threads; the point of --engine
+        // schedule is to drive every op through the progress core
+        spec.fuse = false;
+    }
     spec.timing = timing_of(args)?;
     let faults = args.raw("faults").unwrap_or("none");
     spec.faults = FaultPlan::parse(faults, seed).ok_or_else(|| {
@@ -345,8 +355,13 @@ fn cmd_soak(args: &Args) -> Result<()> {
         ))
     })?;
     eprintln!(
-        "# soak: p={p} ops={ops} m={}..{} batch={} epoch_ops={} faults={faults} seed={seed}",
-        spec.m_min, spec.m_max, spec.batch, spec.epoch_ops
+        "# soak: p={p} ops={ops} m={}..{} batch={} epoch_ops={} faults={faults} seed={seed} \
+         engine={}",
+        spec.m_min,
+        spec.m_max,
+        spec.batch,
+        spec.epoch_ops,
+        spec.engine.name()
     );
     let r = run_soak(&spec)?;
     println!(

@@ -4,7 +4,7 @@
 //! express. Used by the `dpdr concurrent` CLI mode, the concurrency
 //! battery (`tests/nbc.rs`), and `benches/fusion_overlap.rs`.
 
-use super::{Engine, FusePolicy, NbcConfig};
+use super::{Engine, EngineKind, FusePolicy, NbcConfig};
 use crate::buffer::DataBuf;
 use crate::collectives::RunSpec;
 use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
@@ -26,6 +26,9 @@ pub struct ConcurrentSpec {
     pub algos: Vec<AlgoKind>,
     /// Fusion policy for the engines.
     pub fuse: FusePolicy,
+    /// Execution engine: thread-per-op workers or the compiled-schedule
+    /// progress core.
+    pub engine: EngineKind,
 }
 
 impl ConcurrentSpec {
@@ -35,6 +38,7 @@ impl ConcurrentSpec {
             k,
             algos: vec![AlgoKind::Dpdr],
             fuse: FusePolicy::off(),
+            engine: EngineKind::default(),
         }
     }
 
@@ -45,6 +49,11 @@ impl ConcurrentSpec {
 
     pub fn fuse(mut self, fuse: FusePolicy) -> ConcurrentSpec {
         self.fuse = fuse;
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> ConcurrentSpec {
+        self.engine = engine;
         self
     }
 
@@ -97,6 +106,7 @@ pub fn run_concurrent_i32(
             fuse: cspec.fuse,
             mapping: cspec.base.mapping,
             backend: cspec.base.reduce_backend,
+            engine: cspec.engine,
             ..NbcConfig::default()
         };
         comm.barrier()?;

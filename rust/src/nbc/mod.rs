@@ -96,6 +96,34 @@
 //! virtual timing — advances the rank's clock to the operation's
 //! completion time (MPI wait semantics). Submission order across ranks
 //! must agree, but **wait order is free**: joining is local.
+//!
+//! ## Engines: thread-per-op vs the event-driven progress core
+//!
+//! [`NbcConfig::engine`] selects how submitted operations execute:
+//!
+//! * [`EngineKind::Threaded`] (the default, and the semantic oracle) —
+//!   each operation runs the blocking collective on its own worker
+//!   thread, as described above.
+//! * [`EngineKind::Schedule`] — statically-schedulable algorithms
+//!   (`Dpdr`, `DpdrSingle`, `Ring`, `RecursiveDoubling`) are *compiled*
+//!   to per-rank step programs ([`crate::schedule`]) and deposited into
+//!   the world's shared progress core
+//!   ([`crate::schedule::exec`]): no thread is spawned, K outstanding
+//!   operations cost zero extra threads, and whichever ranks are waiting
+//!   multiplex every outstanding op's ready steps. Payloads and virtual
+//!   clocks are bitwise-identical to the threaded engine; under a
+//!   congestion-aware model the core additionally makes the clocks
+//!   run-to-run *deterministic* (committed in virtual-time order behind
+//!   an all-ranks-parked seal) where racing worker threads are not.
+//!   Algorithms without a compiler (`Hier`, `TwoTree`, …) and fused
+//!   batches fall back to a threaded worker transparently. Progress is
+//!   driver-based, so [`Engine::test`] reports `true` only once the op
+//!   has been driven to completion by some wait on this rank. Deadlines
+//!   become *true cancellation*: a virtual-timed op whose clock exceeds
+//!   its deadline is abandoned by **all** ranks symmetrically at a step
+//!   boundary ([`Error::Deadline`] from the wait, `took_us ==
+//!   deadline_us` exactly), and its tag is recycled at the next
+//!   symmetric point instead of after a run to completion.
 
 pub mod driver;
 pub mod soak;
@@ -103,6 +131,7 @@ pub mod soak;
 pub use driver::{run_concurrent_i32, ConcurrentSpec};
 pub use soak::{run_soak, SoakReport, SoakSpec};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
@@ -113,7 +142,64 @@ use crate::error::{Error, Result};
 use crate::model::{AlgoKind, LinkCost};
 use crate::ops::{Elem, ReduceBackend, ReduceOp};
 use crate::pipeline::Blocks;
+use crate::schedule::exec::{Core, Outcome};
 use crate::topo::Mapping;
+
+/// How submitted operations execute (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// One worker thread per operation running the blocking collective
+    /// (the original engine, and the semantic oracle).
+    #[default]
+    Threaded,
+    /// Compile to per-rank step schedules executed by the world's shared
+    /// event-driven progress core — no thread per op, deterministic
+    /// virtual-time ordering, true deadline cancellation. Uncompilable
+    /// algorithms and fused batches fall back to threaded workers.
+    Schedule,
+}
+
+impl EngineKind {
+    /// CLI-stable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Threaded => "threaded",
+            EngineKind::Schedule => "schedule",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<EngineKind> {
+        match s {
+            "threaded" => Ok(EngineKind::Threaded),
+            "schedule" => Ok(EngineKind::Schedule),
+            other => Err(Error::Cli(format!(
+                "unknown engine '{other}' (expected threaded|schedule)"
+            ))),
+        }
+    }
+}
+
+/// Live nbc worker threads across all engines in the process, and the
+/// high-water mark since the last [`reset_worker_peak`]. The schedule
+/// engine's headline resource claim — K outstanding ops without K
+/// threads — is asserted against this gauge.
+static WORKERS_LIVE: AtomicU64 = AtomicU64::new(0);
+static WORKERS_PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Peak number of nbc worker threads alive at once since the last
+/// [`reset_worker_peak`] (process-wide).
+pub fn worker_peak() -> u64 {
+    WORKERS_PEAK.load(Ordering::Relaxed)
+}
+
+/// Restart the [`worker_peak`] high-water mark at the current live count.
+pub fn reset_worker_peak() {
+    WORKERS_PEAK.store(WORKERS_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
 
 /// When to coalesce queued small operations into one fused vector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -177,8 +263,13 @@ pub struct NbcConfig {
     /// Default completion deadline in µs (virtual under virtual timing,
     /// wall-clock under real) attached to every submission; `None` (the
     /// default) means no deadline. Per-op override:
-    /// [`Engine::iallreduce_deadline`].
+    /// [`Engine::iallreduce_deadline`]. Under [`EngineKind::Schedule`]
+    /// with virtual timing the deadline additionally *cancels* the op
+    /// mid-flight (see the module docs).
     pub deadline_us: Option<f64>,
+    /// Execution engine (see the module docs): thread-per-op workers
+    /// (the default) or the compiled-schedule progress core.
+    pub engine: EngineKind,
 }
 
 impl Default for NbcConfig {
@@ -191,6 +282,7 @@ impl Default for NbcConfig {
             epoch_ops: 0,
             max_in_flight: 0,
             deadline_us: None,
+            engine: EngineKind::default(),
         }
     }
 }
@@ -319,6 +411,22 @@ struct Pending<E: Elem> {
     blocks: Blocks,
 }
 
+/// One operation deposited into the schedule progress core and not yet
+/// driven to resolution on this rank (the [`EngineKind::Schedule`]
+/// analogue of [`InFlight`]).
+struct SchedFlight<E: Elem> {
+    tag: u32,
+    /// The carried requests: `(op id, result cell, lo, hi)` — each
+    /// request's slice of the program's final vector (`0..len` for a
+    /// solo op).
+    cells: Vec<(u64, Arc<OpCell<E>>, usize, usize)>,
+    /// Deadline deposited for true cancellation (virtual timing only).
+    deadline_us: Option<f64>,
+    /// This rank's virtual clock at deposit.
+    v0: f64,
+    wall0: std::time::Instant,
+}
+
 /// The per-rank nonblocking collective engine. See the module docs for
 /// the leasing and flush rules; see [`driver`] for a ready-made
 /// concurrent-traffic driver.
@@ -331,6 +439,12 @@ pub struct Engine<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> {
     epoch_tags: Vec<u32>,
     next_id: u64,
     in_flight: Vec<InFlight>,
+    /// Operations living in the schedule progress core, oldest first.
+    sched: Vec<SchedFlight<E>>,
+    /// Tags of deadline-cancelled schedule ops, returned to the pool at
+    /// the next SPMD-symmetric point (cancellation is op-global, so
+    /// every rank collects the identical set).
+    cancelled_tags: Vec<u32>,
     pending: Vec<Pending<E>>,
     /// Operations submitted and not yet delivered to a `wait`.
     outstanding: u64,
@@ -354,6 +468,8 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             epoch_tags: Vec::new(),
             next_id: 0,
             in_flight: Vec::new(),
+            sched: Vec::new(),
+            cancelled_tags: Vec::new(),
             pending: Vec::new(),
             outstanding: 0,
             outstanding_max: 0,
@@ -476,7 +592,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                 self.flush()?;
             }
         } else {
-            self.spawn_solo(algo, x, *blocks, id, Arc::clone(&cell))?;
+            self.spawn_solo(algo, x, *blocks, id, Arc::clone(&cell), deadline_us)?;
         }
         // the handle is built only once the op is queued or launched, so
         // a failed submission returns just the typed error — no orphan
@@ -489,7 +605,18 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         })
     }
 
-    /// Launch one operation on its own tagged worker thread.
+    /// The world's shared progress core for this `(element, operator)`
+    /// pair, anchored (created once, then shared) in the channel
+    /// registry so every rank's engine drives the same instance.
+    fn core(&self) -> Arc<Core<E, O>> {
+        let size = self.comm.size();
+        self.comm.registry().anchored(|| Core::new(size))
+    }
+
+    /// Launch one operation: deposit its compiled schedule into the
+    /// progress core ([`EngineKind::Schedule`], when the algorithm
+    /// compiles), or spawn a tagged worker thread running the blocking
+    /// collective (the fallback, and [`EngineKind::Threaded`] always).
     fn spawn_solo(
         &mut self,
         algo: AlgoKind,
@@ -497,7 +624,42 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         blocks: Blocks,
         id: u64,
         cell: Arc<OpCell<E>>,
+        deadline_us: Option<f64>,
     ) -> Result<()> {
+        if self.cfg.engine == EngineKind::Schedule && x.len() == blocks.total() {
+            let (rank, size) = (self.comm.rank(), self.comm.size());
+            if let Some(sched) = crate::schedule::compile(algo, rank, size, &blocks) {
+                let tag = self.lease_tag()?;
+                let v0 = self.comm.vtime();
+                // true cancellation is a virtual-clock construct; under
+                // real timing the threaded post-hoc semantics remain
+                let deadline = match self.comm.timing() {
+                    Timing::Virtual(..) => deadline_us,
+                    Timing::Real => None,
+                };
+                self.core().deposit(
+                    tag,
+                    rank,
+                    size,
+                    sched,
+                    x,
+                    self.op.clone(),
+                    self.cfg.backend,
+                    self.comm.timing(),
+                    self.comm.fault_plan(),
+                    v0,
+                    deadline,
+                );
+                self.sched.push(SchedFlight {
+                    tag,
+                    cells: vec![(id, cell, 0, blocks.total())],
+                    deadline_us: deadline,
+                    v0,
+                    wall0: std::time::Instant::now(),
+                });
+                return Ok(());
+            }
+        }
         let tag = self.lease_tag()?;
         let child = self.comm.fork_tagged(tag);
         let op = self.op.clone();
@@ -530,8 +692,10 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         }
         if self.pending.len() == 1 {
             // nothing to fuse: launch the lone op exactly as submitted
+            // (queued ops are exempt from true cancellation — the
+            // request's deadline still applies post hoc at wait)
             let p = self.pending.pop().unwrap();
-            return self.spawn_solo(AlgoKind::Dpdr, p.x, p.blocks, p.id, p.cell);
+            return self.spawn_solo(AlgoKind::Dpdr, p.x, p.blocks, p.id, p.cell, None);
         }
         let batch: Vec<Pending<E>> = std::mem::take(&mut self.pending);
         let total: usize = batch.iter().map(|p| p.x.len()).sum();
@@ -676,6 +840,16 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         if let Some(i) = self.in_flight.iter().position(|f| f.ids.contains(&req.id)) {
             self.join_one(i)?;
         }
+        // a schedule-core flight instead: drive the core until this
+        // rank's program for the op resolves (progressing every other
+        // outstanding op along the way)
+        if let Some(i) = self
+            .sched
+            .iter()
+            .position(|f| f.cells.iter().any(|c| c.0 == req.id))
+        {
+            self.drive_sched(i)?;
+        }
         self.outstanding = self.outstanding.saturating_sub(1);
         match req.cell.take() {
             Some((Ok(y), took_us)) => Ok((y, took_us)),
@@ -697,6 +871,10 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         while !self.in_flight.is_empty() {
             self.join_one(self.in_flight.len() - 1)?;
         }
+        while !self.sched.is_empty() {
+            self.drive_sched(0)?;
+        }
+        self.recycle_cancelled();
         self.admitted = 0;
         if self.cfg.epoch_ops > 0 && self.epoch_tags.len() >= self.cfg.epoch_ops {
             self.quiesce()?;
@@ -719,6 +897,10 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         while !self.in_flight.is_empty() {
             self.join_one(self.in_flight.len() - 1)?;
         }
+        while !self.sched.is_empty() {
+            self.drive_sched(0)?;
+        }
+        self.recycle_cancelled();
         self.admitted = 0;
         if self.epoch_tags.is_empty() || self.comm.world_poisoned() {
             return Ok(());
@@ -733,6 +915,94 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         }
         self.tags.release(&mut self.epoch_tags);
         Ok(())
+    }
+
+    /// Drive the schedule core until flight `i` resolves on this rank,
+    /// deliver the payload (or typed error) to its request cells, and
+    /// fold the program's metrics and completion clock into the rank
+    /// endpoint — the schedule-core analogue of [`Engine::join_one`].
+    fn drive_sched(&mut self, i: usize) -> Result<()> {
+        let flight = self.sched.remove(i);
+        let core = self.core();
+        let rank = self.comm.rank();
+        let out = core.drive(
+            self.comm.registry(),
+            rank,
+            flight.tag,
+            self.comm.watchdog(),
+        );
+        match out {
+            Outcome::Done {
+                y,
+                metrics,
+                vtime,
+                wall_us,
+            } => {
+                self.comm.absorb_child(&metrics, vtime);
+                let took_us = match self.comm.timing() {
+                    Timing::Virtual(..) => (vtime - flight.v0) * 1e6,
+                    Timing::Real => wall_us,
+                };
+                if let [(_, cell, _, _)] = flight.cells.as_slice() {
+                    cell.put(Ok(y), took_us);
+                } else {
+                    for (_, cell, lo, hi) in &flight.cells {
+                        cell.put(y.extract(*lo, *hi), took_us);
+                    }
+                }
+                Ok(())
+            }
+            Outcome::Cancelled { vtime } => {
+                // symmetric mid-flight abandon: every rank resolves the
+                // op to exactly its deadline, contributes no metrics,
+                // and earmarks the tag for early recycling
+                self.comm.absorb_child(&RankMetrics::default(), vtime);
+                let deadline_us = flight.deadline_us.unwrap_or(0.0);
+                for (id, cell, _, _) in &flight.cells {
+                    cell.put(
+                        Err(Error::Deadline {
+                            op: *id,
+                            deadline_us,
+                            took_us: deadline_us,
+                        }),
+                        deadline_us,
+                    );
+                }
+                self.cancelled_tags.push(flight.tag);
+                Ok(())
+            }
+            Outcome::Failed { err, metrics, vtime } => {
+                self.comm.absorb_child(&metrics, vtime);
+                let took_us = match self.comm.timing() {
+                    Timing::Virtual(..) => (vtime - flight.v0) * 1e6,
+                    Timing::Real => flight.wall0.elapsed().as_secs_f64() * 1e6,
+                };
+                let mut err = Some(err);
+                for (_, cell, _, _) in &flight.cells {
+                    let e = err
+                        .take()
+                        .unwrap_or_else(|| Error::Protocol("schedule op failed".into()));
+                    cell.put(Err(e), took_us);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Return deadline-cancelled tags to the pool. Only called at
+    /// SPMD-symmetric points (`wait_all`/`quiesce`): cancellation is
+    /// op-global, so every rank recycles the identical sorted set and
+    /// the LIFO lease agreement holds.
+    fn recycle_cancelled(&mut self) {
+        if self.cancelled_tags.is_empty() {
+            return;
+        }
+        let mut cancelled = std::mem::take(&mut self.cancelled_tags);
+        cancelled.sort_unstable();
+        // a cancelled tag must not also ride the epoch reclamation —
+        // releasing a lease twice would hand one tag to two future ops
+        self.epoch_tags.retain(|t| !cancelled.contains(t));
+        self.tags.release(&mut cancelled);
     }
 
     /// Join in-flight entry `i`, folding its metrics and completion time
@@ -783,7 +1053,11 @@ fn spawn_worker<E: Elem>(
     body: impl FnOnce(&mut ThreadComm<E>) -> bool + Send + 'static,
 ) -> Result<JoinHandle<WorkerOut>> {
     let name = format!("nbc-r{}-t{}", child.rank(), tag);
-    std::thread::Builder::new()
+    // gauge the thread cost up front (counting inside the thread would
+    // undercount a burst of spawns that have not been scheduled yet)
+    let live = WORKERS_LIVE.fetch_add(1, Ordering::Relaxed) + 1;
+    WORKERS_PEAK.fetch_max(live, Ordering::Relaxed);
+    let spawned = std::thread::Builder::new()
         .name(name)
         .stack_size(1 << 20)
         .spawn(move || {
@@ -798,9 +1072,14 @@ fn spawn_worker<E: Elem>(
             let mut metrics = child.metrics().clone();
             metrics.absorb_buffer_stats(&crate::buffer::pool::take_stats());
             metrics.absorb_backend_stats(&crate::ops::backend::take_stats());
+            WORKERS_LIVE.fetch_sub(1, Ordering::Relaxed);
             (metrics, child.vtime())
         })
-        .map_err(Error::Io)
+        .map_err(Error::Io);
+    if spawned.is_err() {
+        WORKERS_LIVE.fetch_sub(1, Ordering::Relaxed);
+    }
+    spawned
 }
 
 #[cfg(test)]
@@ -1136,6 +1415,111 @@ mod tests {
             assert!(still_rejected, "rank-local wait must not readmit");
             assert_eq!(a, vec![2i32; 4]);
             assert_eq!(d, vec![8i32; 4]);
+        }
+    }
+
+    #[test]
+    fn engine_kind_parses_cli_names() {
+        assert_eq!(
+            "threaded".parse::<EngineKind>().unwrap(),
+            EngineKind::Threaded
+        );
+        assert_eq!(
+            "schedule".parse::<EngineKind>().unwrap(),
+            EngineKind::Schedule
+        );
+        assert!("turbo".parse::<EngineKind>().is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Threaded);
+        assert_eq!(EngineKind::Schedule.name(), "schedule");
+    }
+
+    #[test]
+    fn schedule_engine_roundtrip_matches_oracle() {
+        let spec = RunSpec::new(4, 40);
+        let expected = spec.expected_sum_i32();
+        let report = run_world::<i32, _, _>(4, Timing::Real, move |comm| {
+            let x = DataBuf::real(spec.input_i32(comm.rank()));
+            let cfg = NbcConfig {
+                engine: EngineKind::Schedule,
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let req = eng.iallreduce(AlgoKind::Dpdr, x, &blocks_of(40, 4))?;
+            let y = eng.wait(req)?;
+            y.into_vec()
+        })
+        .unwrap();
+        for got in report.results {
+            assert_eq!(got, expected);
+        }
+    }
+
+    #[test]
+    fn schedule_engine_overlaps_out_of_order_waits() {
+        let specs: Vec<RunSpec> = (0..3u64).map(|i| RunSpec::new(5, 24).seed(19 + i)).collect();
+        let expected: Vec<Vec<i32>> = specs.iter().map(|s| s.expected_sum_i32()).collect();
+        let specs2 = specs.clone();
+        let report = run_world::<i32, _, _>(5, Timing::Real, move |comm| {
+            let cfg = NbcConfig {
+                engine: EngineKind::Schedule,
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let mut reqs = Vec::new();
+            for s in &specs2 {
+                let x = DataBuf::real(s.input_i32(eng.rank()));
+                reqs.push(eng.iallreduce(AlgoKind::Ring, x, &blocks_of(24, 2))?);
+            }
+            let mut out = vec![Vec::new(); 3];
+            for (i, req) in reqs.into_iter().enumerate().rev() {
+                out[i] = eng.wait(req)?.into_vec()?;
+            }
+            Ok(out)
+        })
+        .unwrap();
+        for per_rank in report.results {
+            for (i, got) in per_rank.into_iter().enumerate() {
+                assert_eq!(got, expected[i], "op {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_engine_cancels_at_deadline_symmetrically() {
+        // a deadline no exchange can beat: every rank abandons
+        // mid-flight with took_us pinned to exactly the deadline, and
+        // the engine (and its tag pool) keeps serving afterwards
+        let m = 4_000usize;
+        let report = run_world::<i32, _, _>(4, Timing::hydra(), move |comm| {
+            let blocks = Blocks::by_count(m, 8);
+            let cfg = NbcConfig {
+                engine: EngineKind::Schedule,
+                ..NbcConfig::default()
+            };
+            let mut eng = Engine::new(comm, SumOp, cfg);
+            let r = eng.iallreduce_deadline(
+                AlgoKind::Dpdr,
+                DataBuf::phantom(m),
+                &blocks,
+                Some(1e-3),
+            )?;
+            let cancelled = matches!(
+                eng.wait(r),
+                Err(Error::Deadline {
+                    op: 0,
+                    deadline_us,
+                    took_us,
+                }) if deadline_us == 1e-3 && took_us == 1e-3
+            );
+            let r2 = eng.iallreduce(AlgoKind::Dpdr, DataBuf::phantom(m), &blocks)?;
+            let ok_after = eng.wait(r2).is_ok();
+            eng.wait_all()?;
+            Ok((cancelled, ok_after))
+        })
+        .unwrap();
+        for (cancelled, ok_after) in report.results {
+            assert!(cancelled, "every rank must see the symmetric cancellation");
+            assert!(ok_after, "engine must keep serving after a cancellation");
         }
     }
 

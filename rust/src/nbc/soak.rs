@@ -20,7 +20,7 @@
 
 use std::collections::VecDeque;
 
-use super::{Engine, FusePolicy, NbcConfig, Request};
+use super::{Engine, EngineKind, FusePolicy, NbcConfig, Request};
 use crate::buffer::DataBuf;
 use crate::comm::{run_world_faulty, Comm, FaultPlan, Timing};
 use crate::error::{Error, Result};
@@ -66,6 +66,13 @@ pub struct SoakSpec {
     /// Verify the full payload every `check_every` ops (first and last
     /// element are checked on every op regardless).
     pub check_every: u64,
+    /// Execution engine: thread-per-op workers (default) or the
+    /// compiled-schedule progress core. Under the schedule engine a
+    /// deadline *cancels* late ops mid-flight — those count as misses
+    /// with no payload to verify. Fused batches still ride workers, so
+    /// pair `engine: Schedule` with `fuse: false` to drive every op
+    /// through the core.
+    pub engine: EngineKind,
 }
 
 impl SoakSpec {
@@ -88,6 +95,7 @@ impl SoakSpec {
             fuse: true,
             window: 1024,
             check_every: 97,
+            engine: EngineKind::default(),
         }
     }
 }
@@ -220,6 +228,7 @@ pub fn run_soak(spec: &SoakSpec) -> Result<SoakReport> {
             },
             epoch_ops: spec.epoch_ops,
             max_in_flight: spec.max_in_flight,
+            engine: spec.engine,
             ..NbcConfig::default()
         };
         let rank = comm.rank();
@@ -325,7 +334,24 @@ fn redeem(
     stats: &mut RankSoak,
     lat: &mut VecDeque<f64>,
 ) -> Result<()> {
-    let (y, took_us) = eng.wait_timed(req)?;
+    let (y, took_us) = match eng.wait_timed(req) {
+        Ok(out) => out,
+        // the schedule engine's true cancellation: the op was abandoned
+        // mid-flight at its deadline on every rank — a *counted* miss
+        // (there is no late payload to verify), not a soak failure
+        Err(Error::Deadline { took_us, .. }) => {
+            stats.misses += 1;
+            stats.completed += 1;
+            if spec.window > 0 {
+                if lat.len() == spec.window {
+                    lat.pop_front();
+                }
+                lat.push_back(took_us);
+            }
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     if let Some(dl) = spec.deadline_us {
         if took_us > dl {
             stats.misses += 1;
@@ -400,6 +426,44 @@ mod tests {
         assert_eq!(r.ops_completed, 120, "shed ops are resubmitted, not lost");
         assert!(r.overload_rejections > 0, "budget below batch must shed");
         assert_eq!(r.deadline_misses, 120 * 2, "every op on both ranks is late");
+    }
+
+    #[test]
+    fn soak_under_schedule_engine_matches_counts() {
+        // the whole stream through the progress core (fusion off so no
+        // op falls back to a worker), under the full fault plan
+        let mut spec = SoakSpec::new(4, 200);
+        spec.m_min = 4;
+        spec.m_max = 32;
+        spec.batch = 16;
+        spec.epoch_ops = 32;
+        spec.seed = 7;
+        spec.fuse = false;
+        spec.engine = EngineKind::Schedule;
+        spec.faults = FaultPlan::parse("all", 7).unwrap();
+        let a = run_soak(&spec).unwrap();
+        let b = run_soak(&spec).unwrap();
+        assert_eq!(a.ops_completed, 200);
+        assert!(a.retransmits + a.fault_events > 0, "plan must actually fire");
+        assert_eq!(a.max_vtime_us.to_bits(), b.max_vtime_us.to_bits());
+        assert_eq!(a.retransmits, b.retransmits);
+        assert_eq!(a.fault_events, b.fault_events);
+        assert_eq!(a.entries_final, 0);
+    }
+
+    #[test]
+    fn soak_schedule_engine_cancels_and_counts_misses() {
+        let mut spec = SoakSpec::new(2, 60);
+        spec.m_min = 4;
+        spec.m_max = 32;
+        spec.batch = 12;
+        spec.epoch_ops = 16;
+        spec.fuse = false;
+        spec.engine = EngineKind::Schedule;
+        spec.deadline_us = Some(1e-6); // impossibly tight: every op cancels
+        let r = run_soak(&spec).unwrap();
+        assert_eq!(r.ops_completed, 60, "cancelled ops are redeemed, not lost");
+        assert_eq!(r.deadline_misses, 60 * 2, "every op on both ranks cancels");
     }
 
     #[test]

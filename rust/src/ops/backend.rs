@@ -403,6 +403,64 @@ pub fn reduce_arith<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], s
     }
 }
 
+/// Fused two-incoming `acc ← t1 ⊙ (t0 ⊙ acc)` for an arithmetic operator,
+/// routed through the backend selected by [`scope`]. Semantically exactly
+/// two successive [`Side::Left`] [`reduce_arith`] calls — and bitwise
+/// identical to them on every backend — but one dispatch, and a single
+/// kernel launch on PJRT (the `combine3` artifacts). Counts `2n` elements
+/// so `elems_reduced` matches the two-call accounting.
+pub fn reduce_arith3<E: ArithElem>(kind: OpKind, acc: &mut [E], t0: &[E], t1: &[E]) {
+    assert_eq!(
+        acc.len(),
+        t0.len(),
+        "reduce3 length mismatch: acc {} vs t0 {}",
+        acc.len(),
+        t0.len()
+    );
+    assert_eq!(
+        acc.len(),
+        t1.len(),
+        "reduce3 length mismatch: acc {} vs t1 {}",
+        acc.len(),
+        t1.len()
+    );
+    let n = acc.len();
+    if n == 0 {
+        return;
+    }
+    match current() {
+        ReduceBackend::Scalar => {
+            for ((a, x0), x1) in acc.iter_mut().zip(t0).zip(t1) {
+                *a = E::scalar_combine(kind, *x1, E::scalar_combine(kind, *x0, *a));
+            }
+            record(ReduceBackend::Scalar, 2 * n);
+        }
+        ReduceBackend::Simd => {
+            E::simd_reduce(kind, acc, t0, Side::Left);
+            E::simd_reduce(kind, acc, t1, Side::Left);
+            record(ReduceBackend::Simd, 2 * n);
+        }
+        ReduceBackend::Pjrt => {
+            if pjrt_reduce3(kind, acc, t0, t1) {
+                record(ReduceBackend::Pjrt, 2 * n);
+            } else {
+                E::simd_reduce(kind, acc, t0, Side::Left);
+                E::simd_reduce(kind, acc, t1, Side::Left);
+                record(ReduceBackend::Simd, 2 * n);
+            }
+        }
+        ReduceBackend::Auto => {
+            if n >= PJRT_AUTO_MIN_ELEMS && pjrt_reduce3(kind, acc, t0, t1) {
+                record(ReduceBackend::Pjrt, 2 * n);
+            } else {
+                E::simd_reduce(kind, acc, t0, Side::Left);
+                E::simd_reduce(kind, acc, t1, Side::Left);
+                record(ReduceBackend::Simd, 2 * n);
+            }
+        }
+    }
+}
+
 fn scalar_reduce<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], side: Side) {
     match side {
         Side::Left => {
@@ -434,6 +492,27 @@ fn pjrt_reduce<E: ArithElem>(kind: OpKind, acc: &mut [E], incoming: &[E], side: 
             Side::Right => engine.combine2::<E>(kind, acc, incoming, &mut out),
         };
         match res {
+            Ok(()) => {
+                acc.copy_from_slice(&out);
+                true
+            }
+            Err(_) => false,
+        }
+    })
+    .unwrap_or(false)
+}
+
+/// Fused `acc ← t1 ⊙ (t0 ⊙ acc)` through this thread's PJRT engine via the
+/// arity-3 `combine3` artifacts. `false` when unavailable — `acc` is
+/// untouched and the caller falls back to two SIMD passes.
+fn pjrt_reduce3<E: ArithElem>(kind: OpKind, acc: &mut [E], t0: &[E], t1: &[E]) -> bool {
+    let n = acc.len();
+    with_engine(|engine| {
+        if !engine.supports::<E>(3, kind, n) {
+            return false;
+        }
+        let mut out = vec![E::zero(); n];
+        match engine.combine3::<E>(kind, t1, t0, acc, &mut out) {
             Ok(()) => {
                 acc.copy_from_slice(&out);
                 true
@@ -559,6 +638,47 @@ mod tests {
         // plain ordering still works
         assert_eq!(fmax_f64(2.0, 3.0), 3.0);
         assert_eq!(fmin_f64(2.0, 3.0), 2.0);
+    }
+
+    #[test]
+    fn reduce3_matches_two_left_reduces_all_backends() {
+        let base: Vec<f32> = (0..83).map(|i| (i as f32) * 0.5 - 7.0).collect();
+        let t0: Vec<f32> = (0..83).map(|i| (i as f32) * 1.25 + 1.0).collect();
+        let t1: Vec<f32> = (0..83).map(|i| 11.0 - (i as f32)).collect();
+        for kind in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+            let mut want = base.clone();
+            {
+                let _g = scope(ReduceBackend::Scalar);
+                reduce_arith(kind, &mut want, &t0, Side::Left);
+                reduce_arith(kind, &mut want, &t1, Side::Left);
+            }
+            for backend in [
+                ReduceBackend::Scalar,
+                ReduceBackend::Simd,
+                ReduceBackend::Pjrt, // no artifacts in tests: exercises fallback
+                ReduceBackend::Auto,
+            ] {
+                let mut got = base.clone();
+                {
+                    let _g = scope(backend);
+                    reduce_arith3(kind, &mut got, &t0, &t1);
+                }
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "{kind:?} {backend:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce3_counts_two_call_equivalent_elems() {
+        let _ = take_stats();
+        let _g = scope(ReduceBackend::Simd);
+        let mut acc = vec![1i32; 50];
+        reduce_arith3(OpKind::Sum, &mut acc, &vec![2i32; 50], &vec![3i32; 50]);
+        let s = take_stats();
+        assert_eq!(s.elems_reduced, 100, "2n: same accounting as two calls");
+        assert_eq!(acc, vec![6i32; 50]);
     }
 
     #[test]

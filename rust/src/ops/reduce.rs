@@ -67,6 +67,34 @@ pub trait ReduceOp<E: Elem>: Send + Sync {
         }
         super::backend::record_scalar(acc.len());
     }
+
+    /// Fused two-incoming reduction: `acc ← t1 ⊙ (t0 ⊙ acc)` element-wise —
+    /// exactly two successive [`Side::Left`] `reduce_into` calls collapsed
+    /// into one pass. This is the inner-node shape of Algorithm 1: a rank
+    /// with two children folds both received blocks into its partial result
+    /// every round. Bitwise-identical to the two-call sequence by
+    /// construction (same combines, same order), so collectives may use
+    /// either form freely.
+    fn reduce_into3(&self, acc: &mut [E], t0: &[E], t1: &[E]) {
+        assert_eq!(
+            acc.len(),
+            t0.len(),
+            "reduce_into3 length mismatch: acc {} vs t0 {}",
+            acc.len(),
+            t0.len()
+        );
+        assert_eq!(
+            acc.len(),
+            t1.len(),
+            "reduce_into3 length mismatch: acc {} vs t1 {}",
+            acc.len(),
+            t1.len()
+        );
+        for ((a, x0), x1) in acc.iter_mut().zip(t0).zip(t1) {
+            *a = self.combine(*x1, self.combine(*x0, *a));
+        }
+        super::backend::record_scalar(2 * acc.len());
+    }
 }
 
 /// The operator vocabulary the CLI / harness can name.
@@ -140,6 +168,9 @@ macro_rules! arith_op_impl {
             }
             fn reduce_into(&self, acc: &mut [$t], incoming: &[$t], side: Side) {
                 super::backend::reduce_arith($kind, acc, incoming, side);
+            }
+            fn reduce_into3(&self, acc: &mut [$t], t0: &[$t], t1: &[$t]) {
+                super::backend::reduce_arith3($kind, acc, t0, t1);
             }
         }
     };
@@ -233,6 +264,38 @@ mod tests {
         let mut acc = vec![1i32, 2, 3];
         op.reduce_into(&mut acc, &[10, 20, 30], Side::Left);
         assert_eq!(acc, vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn reduce_into3_matches_two_left_reduces() {
+        // non-commutative witness: the fused form must equal exactly
+        // t1 ⊙ (t0 ⊙ y), i.e. two successive Side::Left reduces
+        let op = Mat2Op;
+        let y = Mat2([1, 2, 3, 4]);
+        let t0 = Mat2([5, 6, 7, 8]);
+        let t1 = Mat2([9, 10, 11, 12]);
+        let mut two = [y];
+        op.reduce_into(&mut two, &[t0], Side::Left);
+        op.reduce_into(&mut two, &[t1], Side::Left);
+        let mut fused = [y];
+        op.reduce_into3(&mut fused, &[t0], &[t1]);
+        assert_eq!(fused, two);
+
+        // arithmetic override path (backend-dispatched)
+        let mut two = vec![1i32, 2, 3];
+        SumOp.reduce_into(&mut two, &[10, 20, 30], Side::Left);
+        SumOp.reduce_into(&mut two, &[100, 200, 300], Side::Left);
+        let mut fused = vec![1i32, 2, 3];
+        SumOp.reduce_into3(&mut fused, &[10, 20, 30], &[100, 200, 300]);
+        assert_eq!(fused, two);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn reduce_into3_length_mismatch_is_a_hard_error() {
+        let op = Mat2Op;
+        let mut acc = [Mat2::IDENT, Mat2::IDENT];
+        op.reduce_into3(&mut acc, &[Mat2::IDENT, Mat2::IDENT], &[Mat2::IDENT]);
     }
 
     #[test]

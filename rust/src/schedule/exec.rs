@@ -1,0 +1,1012 @@
+//! The per-world event-driven progress core.
+//!
+//! One [`Core`] is anchored in each world's channel registry
+//! ([`ShardedRegistry::anchored`]); the nonblocking engine deposits a
+//! compiled [`Schedule`] per `(op, rank)` and every rank that waits on a
+//! schedule-engine operation *drives* the core: a single progress loop
+//! multiplexes the ready steps of **all** outstanding operations of all
+//! ranks, replacing the threaded engine's thread-per-op workers. Payload
+//! movement needs no channels at all — a "send" pushes the buffer into
+//! an in-core per-edge FIFO mailbox, a "receive" pops it.
+//!
+//! # Clock fidelity
+//!
+//! Every virtual-clock formula of the threaded transport
+//! ([`crate::comm::thread`]) is reproduced verbatim: fabric admission
+//! (bounded edge queues + egress ports), the telephone/full-duplex
+//! sendrecv completion rules, ingress reservation and drain recording,
+//! and the whole fault pipeline (straggler stalls, retransmit backoff,
+//! in-flight delay, duplication and reorder **counting** — the payload
+//! stream itself stays in send order, exactly what the threaded
+//! receiver's sequence reassembly delivers). Under `Timing::Real` and
+//! under dedicated virtual models the engine is bitwise-identical to the
+//! threaded path in payloads and clocks (pinned by `tests/nbc.rs`).
+//!
+//! # Deterministic virtual-time order
+//!
+//! Under a congestion-aware model the NIC port timelines are shared
+//! mutable state, so *execution order* is observable in the clocks. The
+//! core makes it deterministic: while the fabric is active, steps only
+//! execute when every rank with unfinished armed work is parked inside
+//! [`Core::drive`] (the *seal*), and each scan executes the single
+//! runnable half with the least `(vtime, rank, tag)` key. Given the
+//! SPMD batch pattern — all ranks submit a batch, then wait in any
+//! per-rank order — the armed set at seal time is the whole batch, so
+//! congested clocks are run-to-run deterministic even under rotated
+//! wait orders (threaded workers race wall-clock for the same
+//! reservations and are not).
+//!
+//! # True deadline cancellation
+//!
+//! An operation deposited with a deadline (virtual timing only) is
+//! checked at every step boundary: once any rank's program clock
+//! exceeds `v0 + deadline`, the whole operation is cancelled — every
+//! rank abandons symmetrically at a step boundary, harvests
+//! `Error::Deadline` with `took_us == deadline_us` exactly, and the
+//! engine releases the operation's tag early instead of carrying the
+//! work to completion first.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::{Schedule, Sink, Src, Step};
+use crate::buffer::{pool, DataBuf};
+use crate::comm::net::Fabric;
+use crate::comm::thread::ShardedRegistry;
+use crate::comm::{FaultPlan, RankMetrics, Timing};
+use crate::error::Error;
+use crate::ops::{backend, Elem, ReduceBackend, ReduceOp};
+
+/// Condvar poll slice while waiting for peers (mirrors the transport's
+/// poison poll).
+const DRIVE_POLL: Duration = Duration::from_millis(20);
+
+/// Mirrors the transport's `EFFECTIVELY_UNBOUNDED`: capacities at or
+/// above this never record drains.
+const EFFECTIVELY_UNBOUNDED: u64 = 1 << 32;
+
+fn records_drains(capacity: usize) -> bool {
+    capacity > 0 && (capacity as u64) < EFFECTIVELY_UNBOUNDED
+}
+
+fn relock<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+/// A cloneable projection of [`Error`] for fan-out to every waiting
+/// rank (the original is not `Clone`; variants that cannot be
+/// reproduced field-for-field degrade to `Protocol`).
+fn clone_error(e: &Error) -> Error {
+    match e {
+        Error::RetriesExhausted { rank, peer, attempts } => Error::RetriesExhausted {
+            rank: *rank,
+            peer: *peer,
+            attempts: *attempts,
+        },
+        Error::PeerStalled { rank, peer } => Error::PeerStalled {
+            rank: *rank,
+            peer: *peer,
+        },
+        Error::Disconnected { rank, peer } => Error::Disconnected {
+            rank: *rank,
+            peer: *peer,
+        },
+        other => Error::Protocol(other.to_string()),
+    }
+}
+
+/// The virtual twin of the transport's per-edge bounded injection queue
+/// (`EdgeQueue`), minus the wall-blocking: a post that would have to
+/// wait for an unknown drain time is simply *not runnable* yet.
+#[derive(Default)]
+pub(crate) struct VirtQueue {
+    posted: u64,
+    drained: u64,
+    drains: VecDeque<f64>,
+}
+
+impl VirtQueue {
+    /// Would a post complete immediately? (Unbounded, under capacity, or
+    /// the reused slot's drain time already recorded.)
+    fn can_post(&self, capacity: usize) -> bool {
+        !records_drains(capacity) || self.posted < capacity as u64 || !self.drains.is_empty()
+    }
+
+    /// Mirrors `EdgeQueue::post`: returns `(freed_at, depth)`. Callers
+    /// must have checked [`VirtQueue::can_post`].
+    fn post(&mut self, capacity: usize) -> (Option<f64>, u64) {
+        let index = self.posted;
+        self.posted += 1;
+        let depth = self.posted - self.drained;
+        if !records_drains(capacity) || index < capacity as u64 {
+            return (None, depth);
+        }
+        let freed = self.drains.pop_front().expect("can_post checked");
+        (Some(freed), self.posted - self.drained)
+    }
+
+    /// Mirrors `EdgeQueue::drain`.
+    fn drain(&mut self, capacity: usize, vtime: f64) {
+        self.drained += 1;
+        if records_drains(capacity) {
+            self.drains.push_back(vtime);
+        }
+    }
+}
+
+/// One in-flight message of one operation's `(src, dst)` edge.
+struct Packet<E: Elem> {
+    /// Virtual arrival stamp (send stamp + in-flight fault delay).
+    vtime: f64,
+    data: DataBuf<E>,
+    /// Duplicate copies the threaded receiver would consume (and count
+    /// as fault events) immediately before delivering this message.
+    dups_before: u32,
+}
+
+/// Per-edge FIFO mailbox. Program sends to a peer happen in sequence
+/// order, so FIFO order here *is* the threaded receiver's reassembled
+/// order.
+struct Mailbox<E: Elem> {
+    fifo: VecDeque<Packet<E>>,
+    /// Duplicate count carried by the next packet pushed (see
+    /// [`Packet::dups_before`] — a trailing duplicate is never consumed,
+    /// hence never counted, exactly like the threaded receiver).
+    pending_dup: u32,
+}
+
+impl<E: Elem> Default for Mailbox<E> {
+    fn default() -> Self {
+        Mailbox {
+            fifo: VecDeque::new(),
+            pending_dup: 0,
+        }
+    }
+}
+
+/// Execution position within the current step.
+#[derive(Clone, Copy)]
+enum Half {
+    /// Nothing of the step has run.
+    Start,
+    /// The send half ran; the step is waiting on its receive.
+    Posted {
+        stamp: f64,
+        out_dur: f64,
+        sent_bytes: usize,
+    },
+}
+
+/// One rank's program state for one operation.
+struct Prog<E: Elem> {
+    steps: Vec<Step>,
+    pc: usize,
+    half: Half,
+    y: DataBuf<E>,
+    /// The charged first child of a fused dpdr inner round
+    /// ([`Sink::StashCharged`] → [`Sink::Reduce3At`]).
+    stash: Option<DataBuf<E>>,
+    /// Virtual clock at submit (the threaded worker inherits the same).
+    v0: f64,
+    vtime: f64,
+    wall0: Instant,
+    done_wall: Option<Instant>,
+    metrics: RankMetrics,
+    /// Next fault sequence number per destination peer.
+    tx_seq: Vec<u64>,
+    /// Reorder-hold emulation per destination peer (counting only — the
+    /// mailbox stays in send order; see [`Mailbox`]).
+    reorder_held: Vec<bool>,
+}
+
+impl<E: Elem> Prog<E> {
+    fn retire(&mut self) {
+        self.pc += 1;
+        self.half = Half::Start;
+    }
+
+    fn charge(&mut self, timing: Timing, bytes: usize) {
+        if let Timing::Virtual(_, compute) = timing {
+            self.vtime += compute.reduce(bytes);
+        }
+        self.metrics.reduce_bytes += bytes as u64;
+    }
+
+    /// Mirrors the transport's `flush_tx_held` at every blocking
+    /// receive: all held flags clear (the held messages are already in
+    /// the mailbox in restored order; only the counting state resets).
+    fn clear_reorder_held(&mut self) {
+        for h in self.reorder_held.iter_mut() {
+            *h = false;
+        }
+    }
+}
+
+/// One outstanding operation: the per-rank programs plus the edge
+/// mailboxes and virtual injection queues they exchange through. Each
+/// operation owns its tag's edges outright — exactly the threaded
+/// transport, where every `(src, dst, tag)` triple has its own channel
+/// and `EdgeQueue`.
+struct OpState<E: Elem, O> {
+    op: O,
+    backend: ReduceBackend,
+    timing: Timing,
+    faults: FaultPlan,
+    /// Cancellation budget in virtual µs from each rank's `v0` (virtual
+    /// timing only; fused and real-timed operations deposit `None` and
+    /// keep the threaded post-hoc deadline semantics).
+    deadline_us: Option<f64>,
+    deposited: usize,
+    cancelled: bool,
+    failed: Option<(usize, Error)>,
+    progs: Vec<Option<Prog<E>>>,
+    done: Vec<bool>,
+    harvested: Vec<bool>,
+    mail: HashMap<(usize, usize), Mailbox<E>>,
+    queues: HashMap<(usize, usize), VirtQueue>,
+}
+
+impl<E: Elem, O: ReduceOp<E>> OpState<E, O> {
+    fn new(
+        size: usize,
+        op: O,
+        backend: ReduceBackend,
+        timing: Timing,
+        faults: FaultPlan,
+        deadline_us: Option<f64>,
+    ) -> Self {
+        OpState {
+            op,
+            backend,
+            timing,
+            faults,
+            deadline_us,
+            deposited: 0,
+            cancelled: false,
+            failed: None,
+            progs: (0..size).map(|_| None).collect(),
+            done: vec![false; size],
+            harvested: vec![false; size],
+            mail: HashMap::new(),
+            queues: HashMap::new(),
+        }
+    }
+
+    fn armed(&self) -> bool {
+        self.deposited == self.progs.len() && !self.cancelled && self.failed.is_none()
+    }
+
+    /// Is rank `r`'s current half executable right now?
+    fn runnable(&self, r: usize, fabric: &Fabric) -> bool {
+        let Some(prog) = self.progs[r].as_ref() else {
+            return false;
+        };
+        if self.done[r] {
+            return false;
+        }
+        let step = prog.steps[prog.pc];
+        match prog.half {
+            Half::Start => match step {
+                Step::Recv { peer, .. } => self.has_mail(peer, r),
+                Step::Send { peer, .. } | Step::SendRecv { peer, .. } => {
+                    self.can_admit(r, peer, fabric)
+                }
+                Step::SendRecvPair { send_to, .. } => self.can_admit(r, send_to, fabric),
+            },
+            Half::Posted { .. } => {
+                let from = step.recv_from().expect("posted step receives");
+                self.has_mail(from, r)
+            }
+        }
+    }
+
+    fn has_mail(&self, src: usize, dst: usize) -> bool {
+        self.mail.get(&(src, dst)).is_some_and(|m| !m.fifo.is_empty())
+    }
+
+    fn can_admit(&self, src: usize, dst: usize, fabric: &Fabric) -> bool {
+        if !fabric.is_active() {
+            return true;
+        }
+        let cap = fabric.edge_capacity(src, dst);
+        self.queues.get(&(src, dst)).map_or(true, |q| q.can_post(cap))
+    }
+
+    /// Execute rank `r`'s current half (the caller checked
+    /// [`OpState::runnable`]). Each half is exactly one threaded
+    /// transport operation's worth of clock math.
+    fn exec_half(&mut self, tag: u32, r: usize, fabric: &Fabric) -> crate::error::Result<()> {
+        let OpState {
+            op,
+            backend,
+            timing,
+            faults,
+            progs,
+            done,
+            mail,
+            queues,
+            ..
+        } = self;
+        let (backend, timing, faults) = (*backend, *timing, *faults);
+        let prog = progs[r].as_mut().expect("runnable prog");
+        let step = prog.steps[prog.pc];
+        match prog.half {
+            Half::Start => match step {
+                Step::Recv { peer, sink } => {
+                    prog.clear_reorder_held();
+                    let pkt = pop_mail(mail, peer, r);
+                    prog.metrics.fault_events += pkt.dups_before as u64;
+                    prog.metrics.bytes_recv += pkt.data.bytes() as u64;
+                    if let Timing::Virtual(cost, _) = timing {
+                        let dur = cost.xfer(r, peer, pkt.data.bytes());
+                        let ready = prog.vtime.max(pkt.vtime);
+                        prog.vtime = finish_recv(fabric, queues, &mut prog.metrics, peer, r, ready, dur);
+                    }
+                    prog.metrics.exchanges += 1;
+                    prog.metrics.steps_executed += 1;
+                    apply_sink(prog, sink, pkt.data, &*op, backend, timing)?;
+                    prog.retire();
+                }
+                Step::SendRecv { peer, send, .. }
+                | Step::SendRecvPair { send_to: peer, send, .. }
+                | Step::Send { peer, send } => {
+                    let data = materialize(&prog.y, send)?;
+                    let sent_bytes = data.bytes();
+                    let (stamp, out_dur) = match timing {
+                        Timing::Virtual(cost, _) => {
+                            let dur = cost.xfer(r, peer, sent_bytes);
+                            let vt = prog.vtime;
+                            (
+                                admit_send(fabric, queues, &mut prog.metrics, vt, r, peer, dur),
+                                dur,
+                            )
+                        }
+                        Timing::Real => (prog.vtime, 0.0),
+                    };
+                    let stamp = post_mail(mail, prog, &faults, fabric, tag, r, peer, data, stamp)?;
+                    prog.metrics.steps_executed += 1;
+                    if matches!(step, Step::Send { .. }) {
+                        if timing.is_virtual() {
+                            prog.vtime = stamp + out_dur;
+                        }
+                        prog.metrics.exchanges += 1;
+                        prog.retire();
+                    } else {
+                        prog.half = Half::Posted {
+                            stamp,
+                            out_dur,
+                            sent_bytes,
+                        };
+                    }
+                }
+            },
+            Half::Posted {
+                stamp,
+                out_dur,
+                sent_bytes,
+            } => {
+                let (from, sink, is_pair) = match step {
+                    Step::SendRecv { peer, sink, .. } => (peer, sink, false),
+                    Step::SendRecvPair {
+                        recv_from, sink, ..
+                    } => (recv_from, sink, true),
+                    _ => unreachable!("only exchanges post"),
+                };
+                prog.clear_reorder_held();
+                let pkt = pop_mail(mail, from, r);
+                prog.metrics.fault_events += pkt.dups_before as u64;
+                prog.metrics.bytes_recv += pkt.data.bytes() as u64;
+                if let Timing::Virtual(cost, _) = timing {
+                    if is_pair {
+                        // full duplex: the two transfers overlap
+                        let out_done = stamp + out_dur;
+                        let inc_dur = cost.xfer(r, from, pkt.data.bytes());
+                        let ready = stamp.max(pkt.vtime);
+                        let in_done =
+                            finish_recv(fabric, queues, &mut prog.metrics, from, r, ready, inc_dur);
+                        prog.vtime = out_done.max(in_done);
+                    } else {
+                        // telephone model: both directions complete together
+                        let bytes = sent_bytes.max(pkt.data.bytes());
+                        let dur = cost.xfer(r, from, bytes);
+                        let ready = stamp.max(pkt.vtime);
+                        prog.vtime =
+                            finish_recv(fabric, queues, &mut prog.metrics, from, r, ready, dur);
+                    }
+                }
+                prog.metrics.exchanges += 1;
+                prog.metrics.sendrecvs += 1;
+                prog.metrics.steps_executed += 1;
+                apply_sink(prog, sink, pkt.data, &*op, backend, timing)?;
+                prog.retire();
+            }
+        }
+        if prog.pc == prog.steps.len() {
+            done[r] = true;
+            prog.done_wall = Some(Instant::now());
+        }
+        Ok(())
+    }
+}
+
+fn materialize<E: Elem>(y: &DataBuf<E>, src: Src) -> crate::error::Result<DataBuf<E>> {
+    match src {
+        Src::Void => Ok(y.empty_like()),
+        Src::Block { lo, hi } => y.block(lo, hi),
+        Src::OwnedBlock { lo, hi } => {
+            let _site = pool::cow_site("dpdr/dual-exchange");
+            y.extract_owned(lo, hi)
+        }
+        Src::Snapshot => {
+            let _site = pool::cow_site("rd/butterfly-snapshot");
+            Ok(y.snapshot())
+        }
+        Src::CloneY => Ok(y.clone()),
+    }
+}
+
+fn apply_sink<E: Elem, O: ReduceOp<E> + ?Sized>(
+    prog: &mut Prog<E>,
+    sink: Sink,
+    data: DataBuf<E>,
+    op: &O,
+    choice: ReduceBackend,
+    timing: Timing,
+) -> crate::error::Result<()> {
+    match sink {
+        Sink::Discard => {}
+        Sink::WriteAt { lo } => prog.y.write_at(lo, &data)?,
+        Sink::ReduceAt { lo, side } => {
+            prog.charge(timing, data.bytes());
+            let _b = backend::scope(choice);
+            prog.y.reduce_at(lo, &data, op, side)?;
+        }
+        Sink::StashCharged => {
+            prog.charge(timing, data.bytes());
+            prog.stash = Some(data);
+        }
+        Sink::Reduce3At { lo } => {
+            prog.charge(timing, data.bytes());
+            let t0 = prog.stash.take().ok_or_else(|| {
+                Error::Protocol("fused reduce3 with no stashed first child".into())
+            })?;
+            let _b = backend::scope(choice);
+            prog.y.reduce_at3(lo, &t0, &data, op)?;
+        }
+        Sink::ReduceAll { side } => {
+            prog.charge(timing, data.bytes());
+            let _b = backend::scope(choice);
+            prog.y.reduce_all(&data, op, side)?;
+        }
+        Sink::ReplaceY => prog.y = data,
+    }
+    Ok(())
+}
+
+/// Verbatim `ThreadComm::admit_send` over the virtual queue twin.
+fn admit_send(
+    fabric: &Fabric,
+    queues: &mut HashMap<(usize, usize), VirtQueue>,
+    metrics: &mut RankMetrics,
+    vtime: f64,
+    src: usize,
+    dst: usize,
+    dur: f64,
+) -> f64 {
+    if !fabric.is_active() {
+        return vtime;
+    }
+    let cap = fabric.edge_capacity(src, dst);
+    let (freed_at, depth) = queues.entry((src, dst)).or_default().post(cap);
+    metrics.max_queue_depth = metrics.max_queue_depth.max(depth);
+    let mut t = vtime;
+    if let Some(freed) = freed_at {
+        if freed > t {
+            metrics.queue_full_events += 1;
+            metrics.stall_us += (freed - t) * 1e6;
+            t = freed;
+        }
+    }
+    let start = fabric.reserve_egress(src, dst, t, dur);
+    if start > t {
+        metrics.stall_us += (start - t) * 1e6;
+    }
+    start
+}
+
+/// Verbatim `ThreadComm::finish_recv`.
+fn finish_recv(
+    fabric: &Fabric,
+    queues: &mut HashMap<(usize, usize), VirtQueue>,
+    metrics: &mut RankMetrics,
+    src: usize,
+    dst: usize,
+    ready: f64,
+    dur: f64,
+) -> f64 {
+    if !fabric.is_active() {
+        return ready + dur;
+    }
+    let start = fabric.reserve_ingress(src, dst, ready, dur);
+    if start > ready {
+        metrics.stall_us += (start - ready) * 1e6;
+    }
+    let done = start + dur;
+    queues
+        .entry((src, dst))
+        .or_default()
+        .drain(fabric.edge_capacity(src, dst), done);
+    done
+}
+
+/// Verbatim `ThreadComm::post` fault pipeline over the mailbox, with
+/// the reorder/duplicate *delivery* protocol replaced by its exact
+/// counting emulation (the mailbox stays in send order, which is the
+/// order the threaded receiver's sequence reassembly delivers).
+#[allow(clippy::too_many_arguments)]
+fn post_mail<E: Elem>(
+    mail: &mut HashMap<(usize, usize), Mailbox<E>>,
+    prog: &mut Prog<E>,
+    faults: &FaultPlan,
+    fabric: &Fabric,
+    tag: u32,
+    src: usize,
+    dst: usize,
+    data: DataBuf<E>,
+    stamp: f64,
+) -> crate::error::Result<f64> {
+    let bytes = data.bytes();
+    let mb = mail.entry((src, dst)).or_default();
+    if !faults.is_active() {
+        mb.fifo.push_back(Packet {
+            vtime: stamp,
+            data,
+            dups_before: 0,
+        });
+        prog.metrics.bytes_sent += bytes as u64;
+        return Ok(stamp);
+    }
+    let seq = prog.tx_seq[dst];
+    prog.tx_seq[dst] += 1;
+    let mut stamp = stamp;
+    if faults.stalled(src) {
+        stamp += faults.stall_us * 1e-6;
+    }
+    let mut attempt = 0u32;
+    while faults.drops(src, dst, tag, seq, attempt) {
+        attempt += 1;
+        if attempt > faults.max_retries {
+            return Err(Error::RetriesExhausted {
+                rank: src,
+                peer: dst,
+                attempts: attempt,
+            });
+        }
+        stamp += faults.backoff_us * attempt as f64 * 1e-6;
+        prog.metrics.retransmits += 1;
+    }
+    let delay = faults.delay_for(src, dst, tag, seq);
+    if delay > 0.0 {
+        prog.metrics.fault_events += 1;
+    }
+    let arrival = stamp + delay * 1e-6;
+    // dup and reorder apply only on the inert fabric (the congestion
+    // fabric's slot accounting assumes the channel matches the admitted
+    // posts) — identical gate to the threaded post
+    let mut dup_pending = 0u32;
+    if !fabric.is_active() {
+        if !prog.reorder_held[dst] && faults.reorders(src, dst, tag, seq) {
+            // held back behind its successor: the sender counts the
+            // event; a held message is never dup-rolled (the threaded
+            // post returns before its duplicate branch)
+            prog.metrics.fault_events += 1;
+            prog.reorder_held[dst] = true;
+        } else {
+            let flushing = prog.reorder_held[dst];
+            prog.reorder_held[dst] = false;
+            if faults.duplicates(src, dst, tag, seq) {
+                prog.metrics.fault_events += 1;
+                // the receiver consumes (and counts) a duplicate only
+                // when it trails the delivered original on the wire; a
+                // copy sent ahead of a flushed hold is absorbed into the
+                // reassembly buffer uncounted
+                if !flushing {
+                    dup_pending = 1;
+                }
+            }
+        }
+    }
+    let dups_before = mb.pending_dup;
+    mb.pending_dup = dup_pending;
+    mb.fifo.push_back(Packet {
+        vtime: arrival,
+        data,
+        dups_before,
+    });
+    prog.metrics.bytes_sent += bytes as u64;
+    Ok(stamp)
+}
+
+fn pop_mail<E: Elem>(
+    mail: &mut HashMap<(usize, usize), Mailbox<E>>,
+    src: usize,
+    dst: usize,
+) -> Packet<E> {
+    mail.get_mut(&(src, dst))
+        .and_then(|m| m.fifo.pop_front())
+        .expect("runnable recv-half has mail")
+}
+
+/// Progress-loop counters accumulated per *driving* rank and folded
+/// into that rank's metrics at its next completed harvest.
+#[derive(Default)]
+struct DriveStats {
+    wakeups: u64,
+    ready_max: u64,
+}
+
+struct CoreState<E: Elem, O> {
+    parked: Vec<bool>,
+    drive_stats: Vec<DriveStats>,
+    /// Outstanding operations keyed by tag (unique per op within a world
+    /// epoch — the engine's tag leases guarantee it).
+    ops: BTreeMap<u32, OpState<E, O>>,
+}
+
+/// What [`Core::drive`] resolves an operation to for one rank.
+pub(crate) enum Outcome<E: Elem> {
+    Done {
+        y: DataBuf<E>,
+        metrics: RankMetrics,
+        vtime: f64,
+        wall_us: f64,
+    },
+    /// Deadline cancellation: the rank's clock is pinned to exactly
+    /// `v0 + deadline` and the operation contributed no metrics.
+    Cancelled { vtime: f64 },
+    Failed {
+        err: Error,
+        metrics: RankMetrics,
+        vtime: f64,
+    },
+}
+
+/// The world-shared progress core (see the module docs). Anchored once
+/// per `(element, operator)` pair in the world's registry.
+pub(crate) struct Core<E: Elem, O> {
+    state: Mutex<CoreState<E, O>>,
+    cv: Condvar,
+}
+
+impl<E: Elem, O: ReduceOp<E>> Core<E, O> {
+    pub(crate) fn new(size: usize) -> Self {
+        Core {
+            state: Mutex::new(CoreState {
+                parked: vec![false; size],
+                drive_stats: (0..size).map(|_| DriveStats::default()).collect(),
+                ops: BTreeMap::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deposit one rank's compiled program for the operation on `tag`.
+    /// The operation arms (becomes executable) when all ranks deposited.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn deposit(
+        &self,
+        tag: u32,
+        rank: usize,
+        size: usize,
+        sched: Schedule,
+        x: DataBuf<E>,
+        op: O,
+        backend: ReduceBackend,
+        timing: Timing,
+        faults: FaultPlan,
+        v0: f64,
+        deadline_us: Option<f64>,
+    ) {
+        let mut st = relock(self.state.lock());
+        let entry = st
+            .ops
+            .entry(tag)
+            .or_insert_with(|| OpState::new(size, op, backend, timing, faults, deadline_us));
+        let done_now = sched.steps.is_empty();
+        let now = Instant::now();
+        entry.progs[rank] = Some(Prog {
+            steps: sched.steps,
+            pc: 0,
+            half: Half::Start,
+            y: x,
+            stash: None,
+            v0,
+            vtime: v0,
+            wall0: now,
+            done_wall: done_now.then_some(now),
+            metrics: RankMetrics::default(),
+            tx_seq: vec![0; size],
+            reorder_held: vec![false; size],
+        });
+        entry.done[rank] = done_now;
+        entry.deposited += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Drive the core until this rank's program for the operation on
+    /// `tag` resolves. Any rank's drive progresses *all* armed
+    /// operations; parked ranks are what the congested-fabric seal
+    /// counts.
+    pub(crate) fn drive(
+        &self,
+        registry: &ShardedRegistry<E>,
+        rank: usize,
+        tag: u32,
+        watchdog: Duration,
+    ) -> Outcome<E> {
+        let mut st = relock(self.state.lock());
+        st.parked[rank] = true;
+        self.cv.notify_all();
+        let mut last_progress = Instant::now();
+        loop {
+            st.drive_stats[rank].wakeups += 1;
+            if let Some(out) = self.harvest(&mut st, rank, tag) {
+                st.parked[rank] = false;
+                drop(st);
+                self.cv.notify_all();
+                return out;
+            }
+            if Self::pump(&mut st, registry, rank) {
+                last_progress = Instant::now();
+                self.cv.notify_all();
+                continue;
+            }
+            if registry.is_poisoned() {
+                let out = Self::harvest_err(
+                    &mut st,
+                    rank,
+                    tag,
+                    Error::Disconnected { rank, peer: rank },
+                );
+                st.parked[rank] = false;
+                drop(st);
+                self.cv.notify_all();
+                return out;
+            }
+            if last_progress.elapsed() >= watchdog {
+                registry.poison();
+                let out =
+                    Self::harvest_err(&mut st, rank, tag, Error::PeerStalled { rank, peer: rank });
+                st.parked[rank] = false;
+                drop(st);
+                self.cv.notify_all();
+                return out;
+            }
+            st = self
+                .cv
+                .wait_timeout(st, DRIVE_POLL)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+    }
+
+    /// Every rank with an unfinished program in an armed op is parked —
+    /// the gate for deterministic execution on the shared fabric.
+    fn sealed(st: &CoreState<E, O>) -> bool {
+        for op in st.ops.values() {
+            if !op.armed() {
+                continue;
+            }
+            for r in 0..op.progs.len() {
+                if op.progs[r].is_some() && !op.done[r] && !st.parked[r] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Execute ready halves until none is runnable: each scan picks the
+    /// least `(vtime, rank, tag)` runnable half across every armed op.
+    /// Returns whether anything ran (or an op was cancelled).
+    fn pump(st: &mut CoreState<E, O>, registry: &ShardedRegistry<E>, stats_rank: usize) -> bool {
+        let fabric = registry.fabric();
+        let mut progressed = false;
+        loop {
+            if fabric.is_active() && !Self::sealed(st) {
+                break;
+            }
+            let mut best: Option<(f64, usize, u32)> = None;
+            let mut ready = 0u64;
+            for (&tag, op) in st.ops.iter() {
+                if !op.armed() {
+                    continue;
+                }
+                for r in 0..op.progs.len() {
+                    if !op.runnable(r, fabric) {
+                        continue;
+                    }
+                    ready += 1;
+                    let vt = op.progs[r].as_ref().expect("runnable prog").vtime;
+                    let better = match best {
+                        None => true,
+                        Some((bv, br, bt)) => match vt.total_cmp(&bv) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => (r, tag) < (br, bt),
+                        },
+                    };
+                    if better {
+                        best = Some((vt, r, tag));
+                    }
+                }
+            }
+            let ds = &mut st.drive_stats[stats_rank];
+            ds.ready_max = ds.ready_max.max(ready);
+            let Some((_, r, tag)) = best else { break };
+            let op = st.ops.get_mut(&tag).expect("selected op exists");
+            if let Some(dl) = op.deadline_us {
+                let prog = op.progs[r].as_ref().expect("selected prog");
+                if (prog.vtime - prog.v0) * 1e6 > dl {
+                    // step-boundary cancellation: the whole op abandons
+                    op.cancelled = true;
+                    progressed = true;
+                    continue;
+                }
+            }
+            if let Err(e) = op.exec_half(tag, r, fabric) {
+                op.failed = Some((r, e));
+                registry.poison();
+            }
+            progressed = true;
+        }
+        progressed
+    }
+
+    /// Resolve this rank's program if it reached a terminal state.
+    fn harvest(&self, st: &mut CoreState<E, O>, rank: usize, tag: u32) -> Option<Outcome<E>> {
+        let out = {
+            let op = st.ops.get_mut(&tag)?;
+            if op.cancelled {
+                let dl = op.deadline_us.unwrap_or(0.0);
+                let v0 = op.progs[rank].take().map_or(0.0, |p| p.v0);
+                Some(Outcome::Cancelled {
+                    vtime: v0 + dl * 1e-6,
+                })
+            } else if op.done[rank]
+                && (op.deadline_us.is_none() || op.done.iter().all(|&d| d))
+            {
+                // a deadline op resolves Done only once the WHOLE op
+                // finished: until then a later step on another rank can
+                // still cancel it, and a rank that already took Ok
+                // while its peers take Err(Deadline) would split the
+                // engines' cancelled-tag recycling (SPMD divergence)
+                let prog = op.progs[rank].take().expect("done prog present");
+                let wall_us = prog
+                    .done_wall
+                    .expect("done prog stamped")
+                    .duration_since(prog.wall0)
+                    .as_secs_f64()
+                    * 1e6;
+                Some(Outcome::Done {
+                    y: prog.y,
+                    metrics: prog.metrics,
+                    vtime: prog.vtime,
+                    wall_us,
+                })
+            } else if let Some((origin, err)) = &op.failed {
+                let e = if *origin == rank {
+                    clone_error(err)
+                } else {
+                    Error::Disconnected { rank, peer: rank }
+                };
+                let (metrics, vtime) = op.progs[rank]
+                    .take()
+                    .map_or((RankMetrics::default(), 0.0), |p| (p.metrics, p.vtime));
+                Some(Outcome::Failed {
+                    err: e,
+                    metrics,
+                    vtime,
+                })
+            } else {
+                None
+            }
+        };
+        let mut out = out?;
+        match &mut out {
+            Outcome::Done { metrics, .. } | Outcome::Failed { metrics, .. } => {
+                let ds = std::mem::take(&mut st.drive_stats[rank]);
+                metrics.progress_wakeups += ds.wakeups;
+                metrics.ready_queue_max = metrics.ready_queue_max.max(ds.ready_max);
+            }
+            Outcome::Cancelled { .. } => {}
+        }
+        Self::release(st, rank, tag);
+        Some(out)
+    }
+
+    /// Resolve this rank's program as failed with `err` (world poison or
+    /// watchdog expiry), salvaging any partial metrics.
+    fn harvest_err(
+        st: &mut CoreState<E, O>,
+        rank: usize,
+        tag: u32,
+        err: Error,
+    ) -> Outcome<E> {
+        let (mut metrics, vtime) = st
+            .ops
+            .get_mut(&tag)
+            .and_then(|op| op.progs[rank].take())
+            .map_or((RankMetrics::default(), 0.0), |p| (p.metrics, p.vtime));
+        let ds = std::mem::take(&mut st.drive_stats[rank]);
+        metrics.progress_wakeups += ds.wakeups;
+        metrics.ready_queue_max = metrics.ready_queue_max.max(ds.ready_max);
+        Self::release(st, rank, tag);
+        Outcome::Failed { err, metrics, vtime }
+    }
+
+    /// Mark this rank's harvest and drop the op once every rank took its
+    /// result.
+    fn release(st: &mut CoreState<E, O>, rank: usize, tag: u32) {
+        if let Some(op) = st.ops.get_mut(&tag) {
+            op.harvested[rank] = true;
+            if op.harvested.iter().all(|&h| h) {
+                st.ops.remove(&tag);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virt_queue_mirrors_edge_queue() {
+        let mut q = VirtQueue::default();
+        // unbounded: always postable, never records drains
+        assert!(q.can_post(0));
+        assert_eq!(q.post(0), (None, 1));
+        q.drain(0, 1.0);
+        assert!(q.drains.is_empty());
+
+        // capacity 2: third post reuses the first slot's drain time
+        let mut q = VirtQueue::default();
+        assert_eq!(q.post(2), (None, 1));
+        assert_eq!(q.post(2), (None, 2));
+        assert!(!q.can_post(2), "full and no drain recorded yet");
+        q.drain(2, 5.0);
+        assert!(q.can_post(2));
+        assert_eq!(q.post(2), (Some(5.0), 2));
+    }
+
+    #[test]
+    fn effectively_unbounded_capacity_never_blocks() {
+        let mut q = VirtQueue::default();
+        let cap = EFFECTIVELY_UNBOUNDED as usize;
+        assert!(!records_drains(cap));
+        assert_eq!(q.post(cap), (None, 1));
+        assert!(q.can_post(cap));
+    }
+
+    #[test]
+    fn clone_error_preserves_typed_variants() {
+        let e = clone_error(&Error::RetriesExhausted {
+            rank: 1,
+            peer: 2,
+            attempts: 7,
+        });
+        assert!(matches!(
+            e,
+            Error::RetriesExhausted {
+                rank: 1,
+                peer: 2,
+                attempts: 7
+            }
+        ));
+        let e = clone_error(&Error::Config("x".into()));
+        assert!(matches!(e, Error::Protocol(_)));
+    }
+}

@@ -1,0 +1,758 @@
+//! Compile collectives to per-rank step schedules.
+//!
+//! The blocking collectives in [`crate::collectives`] are *statically
+//! schedulable*: for a fixed `(algo, rank, p, blocks)` the exact sequence
+//! of point-to-point calls — peers, payload block ranges, reduction
+//! sinks — is known before the first byte moves. This module lowers that
+//! structure into an explicit [`Schedule`]: a linear program of
+//! [`Step`]s whose only dependencies are program order within a rank and
+//! the messages between ranks.
+//!
+//! Schedules are what the event-driven progress core
+//! ([`exec`]) executes: instead of one OS thread per in-flight
+//! nonblocking collective, a single per-rank progress loop multiplexes
+//! the ready steps of *all* outstanding operations. The blocking
+//! implementations stay in place as the oracle — the compiler is
+//! verified step-for-step against them by tracing ([`TraceComm`]) every
+//! communicator call a blocking run makes and comparing against
+//! [`expected_events`] of the compiled schedules.
+//!
+//! Covered algorithms: [`AlgoKind::Dpdr`], [`AlgoKind::DpdrSingle`],
+//! [`AlgoKind::Ring`], [`AlgoKind::RecursiveDoubling`]. Everything else
+//! (`Hier` needs sub-communicators, `TwoTree`/`Scan`/the non-pipelined
+//! baselines are rarely issued through the nonblocking engine) returns
+//! `None` from [`compile`] and falls back to the threaded worker path.
+
+pub mod exec;
+
+use crate::model::AlgoKind;
+use crate::ops::Side;
+use crate::pipeline::Blocks;
+use crate::topo::{DualRootForest, NodeRole, PostOrderTree, TreeId};
+
+/// Where a step's outgoing payload comes from, relative to the rank's
+/// working vector `y`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// A zero-element void block (`y.empty_like()`): the step is a pure
+    /// receive dressed as an exchange.
+    Void,
+    /// Zero-copy view `y[lo..hi]`.
+    Block { lo: usize, hi: usize },
+    /// Owned (pooled) copy of `y[lo..hi]` — the dual-root exchange sends
+    /// an owned block because both roots reduce into the same range in
+    /// the same round (see `collectives::dpdr`).
+    OwnedBlock { lo: usize, hi: usize },
+    /// Send-time snapshot of the whole vector (the recursive-doubling
+    /// butterfly overwrites `y` while the sent copy is in flight).
+    Snapshot,
+    /// Reference-counted clone of the whole vector (pre/post-fold
+    /// forwarding in recursive doubling).
+    CloneY,
+}
+
+/// What happens to a step's received payload `t`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sink {
+    /// Drop it (the receive direction was void or synchronization-only).
+    Discard,
+    /// `y.write_at(lo, &t)` — final result block flowing down, no γ
+    /// charge (matching the blocking implementations).
+    WriteAt { lo: usize },
+    /// Charge γ for `t`, then `y.reduce_at(lo, &t, op, side)`.
+    ReduceAt { lo: usize, side: Side },
+    /// Charge γ for `t`, then stash it as `t0` for the following
+    /// [`Sink::Reduce3At`] — the first half of a fused dpdr inner round.
+    StashCharged,
+    /// Charge γ for `t`, then `y.reduce_at3(lo, &stash, &t, op)` — the
+    /// fused `t1 ⊙ (t0 ⊙ Y[j])` inner round.
+    Reduce3At { lo: usize },
+    /// Charge γ for `t`, then `y.reduce_all(&t, op, side)`.
+    ReduceAll { side: Side },
+    /// Replace the whole vector with `t` (post-fold), no γ charge.
+    ReplaceY,
+}
+
+/// One communicator call of a rank's program. Dependencies are implicit:
+/// steps of one rank run in program order, and a receive waits for the
+/// matching send of the peer's program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Bidirectional exchange with one peer (`Comm::sendrecv`).
+    SendRecv { peer: usize, send: Src, sink: Sink },
+    /// Full-duplex exchange with distinct partners
+    /// (`Comm::sendrecv_pair`). The compiler never emits this with
+    /// `send_to == recv_from` — that case lowers to [`Step::SendRecv`],
+    /// mirroring the transport's own delegation.
+    SendRecvPair {
+        send_to: usize,
+        recv_from: usize,
+        send: Src,
+        sink: Sink,
+    },
+    /// One-directional send.
+    Send { peer: usize, send: Src },
+    /// One-directional receive.
+    Recv { peer: usize, sink: Sink },
+}
+
+impl Step {
+    /// The peer this step receives from, if it receives at all.
+    pub fn recv_from(&self) -> Option<usize> {
+        match *self {
+            Step::SendRecv { peer, .. } => Some(peer),
+            Step::SendRecvPair { recv_from, .. } => Some(recv_from),
+            Step::Recv { peer, .. } => Some(peer),
+            Step::Send { .. } => None,
+        }
+    }
+}
+
+/// One rank's compiled program for one collective operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub rank: usize,
+    pub size: usize,
+    pub steps: Vec<Step>,
+}
+
+/// Lower `(algo, rank, size, blocks)` to a [`Schedule`], or `None` when
+/// the algorithm is not statically compiled (the caller falls back to
+/// the threaded blocking path). `blocks.total()` must equal the payload
+/// length — the nonblocking engine checks this before scheduling.
+pub fn compile(algo: AlgoKind, rank: usize, size: usize, blocks: &Blocks) -> Option<Schedule> {
+    let compiled = matches!(
+        algo,
+        AlgoKind::Dpdr | AlgoKind::DpdrSingle | AlgoKind::Ring | AlgoKind::RecursiveDoubling
+    );
+    if !compiled {
+        return None;
+    }
+    let m = blocks.total();
+    // the blocking implementations all short-circuit to the identity
+    let steps = if size == 1 || m == 0 {
+        Vec::new()
+    } else {
+        match algo {
+            AlgoKind::Dpdr => {
+                let forest = DualRootForest::new(size).ok()?;
+                let role = forest.role(rank).ok()?;
+                dpdr_steps(blocks, &role)
+            }
+            AlgoKind::DpdrSingle => {
+                let tree = PostOrderTree::new(0, size - 1).ok()?;
+                let role = NodeRole {
+                    tree: TreeId::A,
+                    depth: tree.depth(rank),
+                    children: tree.children(rank),
+                    parent: tree.parent(rank),
+                    dual: None,
+                    lower_root: false,
+                };
+                dpdr_steps(blocks, &role)
+            }
+            AlgoKind::Ring => ring_steps(rank, size, m),
+            AlgoKind::RecursiveDoubling => rd_steps(rank, size),
+            _ => unreachable!("guarded above"),
+        }
+    };
+    Some(Schedule { rank, size, steps })
+}
+
+/// The round loop of Algorithm 1 (`collectives::dpdr::run_rounds`),
+/// lowered to steps. Mirrors the blocking code line for line: same round
+/// bound, same activity predicates, same fused inner-round shape.
+fn dpdr_steps(blocks: &Blocks, role: &NodeRole) -> Vec<Step> {
+    let d = role.depth;
+    let b = blocks.count();
+    let src_or_void = |k: isize| -> Src {
+        if k < 0 || k as usize >= b {
+            Src::Void
+        } else {
+            let (lo, hi) = blocks.range(k as usize);
+            Src::Block { lo, hi }
+        }
+    };
+    let mut steps = Vec::new();
+    for j in 0..=(b + d) {
+        // --- steps 1 & 2: the two children ---------------------------
+        let up_active = j < b;
+        let down_idx = j as isize - (d as isize + 1);
+        let down_active = down_idx >= 0 && (down_idx as usize) < b;
+        if let (true, Some(c0), Some(c1)) = (up_active, role.children[0], role.children[1]) {
+            // fused inner round: Y[j] ← t1 ⊙ (t0 ⊙ Y[j])
+            let (lo, _hi) = blocks.range(j);
+            steps.push(Step::SendRecv {
+                peer: c0,
+                send: src_or_void(down_idx),
+                sink: Sink::StashCharged,
+            });
+            steps.push(Step::SendRecv {
+                peer: c1,
+                send: src_or_void(down_idx),
+                sink: Sink::Reduce3At { lo },
+            });
+        } else {
+            for child in role.children.into_iter().flatten() {
+                if !up_active && !down_active {
+                    continue; // both directions void — skipped symmetrically
+                }
+                let sink = if up_active {
+                    let (lo, _hi) = blocks.range(j);
+                    Sink::ReduceAt {
+                        lo,
+                        side: Side::Left,
+                    }
+                } else {
+                    Sink::Discard
+                };
+                steps.push(Step::SendRecv {
+                    peer: child,
+                    send: src_or_void(down_idx),
+                    sink,
+                });
+            }
+        }
+
+        // --- step 3: dual root, or parent ----------------------------
+        if let Some(dual) = role.dual {
+            if j < b {
+                let (lo, hi) = blocks.range(j);
+                let side = if role.lower_root { Side::Right } else { Side::Left };
+                steps.push(Step::SendRecv {
+                    peer: dual,
+                    send: Src::OwnedBlock { lo, hi },
+                    sink: Sink::ReduceAt { lo, side },
+                });
+            }
+        } else if let Some(parent) = role.parent {
+            let up = j < b;
+            let didx = j as isize - d as isize;
+            let dact = didx >= 0 && (didx as usize) < b;
+            if up || dact {
+                let send = if up { src_or_void(j as isize) } else { Src::Void };
+                let sink = if dact {
+                    let (lo, _hi) = blocks.range(didx as usize);
+                    Sink::WriteAt { lo }
+                } else {
+                    Sink::Discard
+                };
+                steps.push(Step::SendRecv { peer: parent, send, sink });
+            }
+        }
+    }
+    steps
+}
+
+/// Ring allreduce (`collectives::ring`): reduce-scatter then allgather
+/// around the ring, `p − 1` full-duplex exchanges each. Ring segments
+/// come from the payload length, not the pipeline blocks — exactly like
+/// the blocking implementation.
+fn ring_steps(rank: usize, p: usize, m: usize) -> Vec<Step> {
+    let right = (rank + 1) % p;
+    let left = (rank + p - 1) % p;
+    let segs = Blocks::segments(m, p);
+    let pair = |send: Src, sink: Sink| -> Step {
+        if right == left {
+            // p == 2: the transport delegates sendrecv_pair with equal
+            // partners to sendrecv, so the compiled form does too
+            Step::SendRecv { peer: right, send, sink }
+        } else {
+            Step::SendRecvPair {
+                send_to: right,
+                recv_from: left,
+                send,
+                sink,
+            }
+        }
+    };
+    let mut steps = Vec::new();
+    // reduce-scatter: after it, rank owns the full product of segment rank
+    for t in 0..p - 1 {
+        let send_seg = (rank + p - t) % p;
+        let recv_seg = (rank + p - t - 1) % p;
+        let (slo, shi) = segs.range(send_seg);
+        let (rlo, _rhi) = segs.range(recv_seg);
+        steps.push(pair(
+            Src::Block { lo: slo, hi: shi },
+            Sink::ReduceAt {
+                lo: rlo,
+                side: Side::Left,
+            },
+        ));
+    }
+    // allgather: circulate the finished segments
+    for t in 0..p - 1 {
+        let send_seg = (rank + 1 + p - t) % p;
+        let recv_seg = (rank + p - t) % p;
+        let (slo, shi) = segs.range(send_seg);
+        let (rlo, _rhi) = segs.range(recv_seg);
+        steps.push(pair(
+            Src::Block { lo: slo, hi: shi },
+            Sink::WriteAt { lo: rlo },
+        ));
+    }
+    steps
+}
+
+/// Recursive doubling (`collectives::recursive_doubling`): fold the
+/// non-power-of-two remainder, butterfly over the 2^k core, unfold.
+fn rd_steps(rank: usize, p: usize) -> Vec<Step> {
+    let k = crate::util::log2_floor(p) as usize;
+    let pow = 1usize << k;
+    let rem = p - pow;
+    let carrier = |e: usize| if e < rem { 2 * e } else { e + rem };
+    let mut steps = Vec::new();
+    let eff = if rank < 2 * rem {
+        if rank % 2 == 0 {
+            steps.push(Step::Recv {
+                peer: rank + 1,
+                sink: Sink::ReduceAll { side: Side::Right },
+            });
+            Some(rank / 2)
+        } else {
+            steps.push(Step::Send {
+                peer: rank - 1,
+                send: Src::CloneY,
+            });
+            None
+        }
+    } else {
+        Some(rank - rem)
+    };
+    if let Some(e) = eff {
+        for bit in 0..k {
+            let pe = e ^ (1 << bit);
+            let partner = carrier(pe);
+            let side = if pe < e { Side::Left } else { Side::Right };
+            steps.push(Step::SendRecv {
+                peer: partner,
+                send: Src::Snapshot,
+                sink: Sink::ReduceAll { side },
+            });
+        }
+    }
+    if rank < 2 * rem {
+        if rank % 2 == 0 {
+            steps.push(Step::Send {
+                peer: rank + 1,
+                send: Src::CloneY,
+            });
+        } else {
+            steps.push(Step::Recv {
+                peer: rank - 1,
+                sink: Sink::ReplaceY,
+            });
+        }
+    }
+    steps
+}
+
+// ---------------------------------------------------------------------
+// Step-for-step verification against the blocking oracles
+// ---------------------------------------------------------------------
+
+/// One logged communicator call (see [`TraceComm`]). Payloads are
+/// summarized by element count — the full payload equivalence is pinned
+/// separately by the engine-level bitwise tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    SendRecv { peer: usize, send_elems: usize },
+    SendRecvPair {
+        send_to: usize,
+        recv_from: usize,
+        send_elems: usize,
+    },
+    Send { peer: usize, send_elems: usize },
+    Recv { peer: usize },
+    Charge { bytes: usize },
+}
+
+/// A [`Comm`](crate::comm::Comm) wrapper that logs every call it
+/// delegates — the oracle side of the step-for-step compiler tests.
+pub struct TraceComm<'a, E: crate::ops::Elem, C: crate::comm::Comm<E>> {
+    inner: &'a mut C,
+    /// The logged call sequence, in program order.
+    pub events: Vec<TraceEvent>,
+    _marker: std::marker::PhantomData<E>,
+}
+
+impl<'a, E: crate::ops::Elem, C: crate::comm::Comm<E>> TraceComm<'a, E, C> {
+    pub fn new(inner: &'a mut C) -> Self {
+        TraceComm {
+            inner,
+            events: Vec::new(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<E: crate::ops::Elem, C: crate::comm::Comm<E>> crate::comm::Comm<E> for TraceComm<'_, E, C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn sendrecv(
+        &mut self,
+        peer: usize,
+        send: crate::buffer::DataBuf<E>,
+    ) -> crate::error::Result<crate::buffer::DataBuf<E>> {
+        self.events.push(TraceEvent::SendRecv {
+            peer,
+            send_elems: send.len(),
+        });
+        self.inner.sendrecv(peer, send)
+    }
+
+    fn sendrecv_pair(
+        &mut self,
+        send_to: usize,
+        send: crate::buffer::DataBuf<E>,
+        recv_from: usize,
+    ) -> crate::error::Result<crate::buffer::DataBuf<E>> {
+        // the transport delegates equal partners to sendrecv — log the
+        // call the same way the compiler lowers it
+        if send_to == recv_from {
+            self.events.push(TraceEvent::SendRecv {
+                peer: send_to,
+                send_elems: send.len(),
+            });
+        } else {
+            self.events.push(TraceEvent::SendRecvPair {
+                send_to,
+                recv_from,
+                send_elems: send.len(),
+            });
+        }
+        self.inner.sendrecv_pair(send_to, send, recv_from)
+    }
+
+    fn send(&mut self, peer: usize, data: crate::buffer::DataBuf<E>) -> crate::error::Result<()> {
+        self.events.push(TraceEvent::Send {
+            peer,
+            send_elems: data.len(),
+        });
+        self.inner.send(peer, data)
+    }
+
+    fn recv(&mut self, peer: usize) -> crate::error::Result<crate::buffer::DataBuf<E>> {
+        self.events.push(TraceEvent::Recv { peer });
+        self.inner.recv(peer)
+    }
+
+    fn barrier(&mut self) -> crate::error::Result<()> {
+        self.inner.barrier()
+    }
+
+    fn charge_compute(&mut self, bytes: usize) {
+        self.events.push(TraceEvent::Charge { bytes });
+        self.inner.charge_compute(bytes)
+    }
+
+    fn time_us(&self) -> f64 {
+        self.inner.time_us()
+    }
+
+    fn reset_time(&mut self) {
+        self.inner.reset_time()
+    }
+
+    fn metrics(&self) -> &crate::comm::RankMetrics {
+        self.inner.metrics()
+    }
+}
+
+/// The per-rank [`TraceEvent`] sequences a set of compiled schedules
+/// *should* produce, derived by a single-threaded lockstep simulation
+/// over message *sizes* (payload contents never influence control flow).
+/// `m` is the per-rank vector length, `elem_bytes` the wire size of one
+/// element (for γ-charge byte counts).
+///
+/// Panics if the schedules deadlock — a compiler bug by construction,
+/// since the blocking algorithms they mirror are deadlock-free.
+pub fn expected_events(scheds: &[Schedule], m: usize, elem_bytes: usize) -> Vec<Vec<TraceEvent>> {
+    use std::collections::{HashMap, VecDeque};
+    let p = scheds.len();
+    let mut pc = vec![0usize; p];
+    // true once the current step's event is logged and its send (if any)
+    // is in flight; the step then only waits on its receive
+    let mut half_done = vec![false; p];
+    let mut events: Vec<Vec<TraceEvent>> = vec![Vec::new(); p];
+    let mut mail: HashMap<(usize, usize), VecDeque<usize>> = HashMap::new();
+    let src_elems = |s: Src| match s {
+        Src::Void => 0,
+        Src::Block { lo, hi } | Src::OwnedBlock { lo, hi } => hi - lo,
+        Src::Snapshot | Src::CloneY => m,
+    };
+    let sink_charge = |sink: Sink, n: usize, log: &mut Vec<TraceEvent>| {
+        match sink {
+            Sink::ReduceAt { .. }
+            | Sink::StashCharged
+            | Sink::Reduce3At { .. }
+            | Sink::ReduceAll { .. } => log.push(TraceEvent::Charge {
+                bytes: n * elem_bytes,
+            }),
+            Sink::Discard | Sink::WriteAt { .. } | Sink::ReplaceY => {}
+        }
+    };
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..p {
+            let steps = &scheds[r].steps;
+            if pc[r] >= steps.len() {
+                continue;
+            }
+            all_done = false;
+            let step = steps[pc[r]];
+            if !half_done[r] {
+                // log the call and launch the send half
+                match step {
+                    Step::SendRecv { peer, send, .. } => {
+                        events[r].push(TraceEvent::SendRecv {
+                            peer,
+                            send_elems: src_elems(send),
+                        });
+                        mail.entry((r, peer)).or_default().push_back(src_elems(send));
+                    }
+                    Step::SendRecvPair {
+                        send_to,
+                        recv_from,
+                        send,
+                        ..
+                    } => {
+                        events[r].push(TraceEvent::SendRecvPair {
+                            send_to,
+                            recv_from,
+                            send_elems: src_elems(send),
+                        });
+                        mail.entry((r, send_to)).or_default().push_back(src_elems(send));
+                    }
+                    Step::Send { peer, send } => {
+                        events[r].push(TraceEvent::Send {
+                            peer,
+                            send_elems: src_elems(send),
+                        });
+                        mail.entry((r, peer)).or_default().push_back(src_elems(send));
+                    }
+                    Step::Recv { peer, .. } => {
+                        events[r].push(TraceEvent::Recv { peer });
+                    }
+                }
+                half_done[r] = true;
+                progressed = true;
+            }
+            // complete the receive half if the message is there
+            let (from, sink) = match step {
+                Step::SendRecv { peer, sink, .. } => (peer, sink),
+                Step::SendRecvPair {
+                    recv_from, sink, ..
+                } => (recv_from, sink),
+                Step::Recv { peer, sink } => (peer, sink),
+                Step::Send { .. } => {
+                    pc[r] += 1;
+                    half_done[r] = false;
+                    continue;
+                }
+            };
+            if let Some(n) = mail.get_mut(&(from, r)).and_then(|q| q.pop_front()) {
+                sink_charge(sink, n, &mut events[r]);
+                pc[r] += 1;
+                half_done[r] = false;
+                progressed = true;
+            }
+        }
+        if all_done {
+            return events;
+        }
+        assert!(progressed, "compiled schedules deadlocked — compiler bug");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::DataBuf;
+    use crate::collectives::{
+        allreduce_dpdr, allreduce_dpdr_single, allreduce_recursive_doubling, allreduce_ring,
+    };
+    use crate::comm::{run_world, Timing};
+    use crate::ops::SumOp;
+
+    const ALGOS: [AlgoKind; 4] = [
+        AlgoKind::Dpdr,
+        AlgoKind::DpdrSingle,
+        AlgoKind::Ring,
+        AlgoKind::RecursiveDoubling,
+    ];
+
+    fn input(rank: usize, m: usize) -> Vec<i32> {
+        (0..m).map(|i| (rank * 31 + i) as i32).collect()
+    }
+
+    /// Run the blocking oracle under a [`TraceComm`] and return the
+    /// per-rank event logs plus the per-rank results.
+    fn trace_blocking(
+        algo: AlgoKind,
+        p: usize,
+        m: usize,
+        block_elems: usize,
+    ) -> Vec<(Vec<TraceEvent>, Vec<i32>)> {
+        let report = run_world::<i32, _, _>(p, Timing::Real, move |comm| {
+            let blocks = Blocks::by_size(m, block_elems)?;
+            let x = DataBuf::real(input(comm.rank(), m));
+            let mut tc = TraceComm::new(comm);
+            let y = match algo {
+                AlgoKind::Dpdr => allreduce_dpdr(&mut tc, x, &SumOp, &blocks)?,
+                AlgoKind::DpdrSingle => allreduce_dpdr_single(&mut tc, x, &SumOp, &blocks)?,
+                AlgoKind::Ring => allreduce_ring(&mut tc, x, &SumOp)?,
+                AlgoKind::RecursiveDoubling => allreduce_recursive_doubling(&mut tc, x, &SumOp)?,
+                _ => unreachable!(),
+            };
+            let events = std::mem::take(&mut tc.events);
+            Ok((events, y.into_vec()?))
+        })
+        .unwrap();
+        report.results
+    }
+
+    fn check_trace(algo: AlgoKind, p: usize, m: usize, block_elems: usize) {
+        let blocks = Blocks::by_size(m, block_elems).unwrap();
+        let scheds: Vec<Schedule> = (0..p)
+            .map(|r| compile(algo, r, p, &blocks).expect("compiled algo"))
+            .collect();
+        let expected = expected_events(&scheds, m, 4);
+        let traced = trace_blocking(algo, p, m, block_elems);
+        let mut want = vec![0i32; m];
+        for r in 0..p {
+            for (a, v) in want.iter_mut().zip(input(r, m)) {
+                *a = a.wrapping_add(v);
+            }
+        }
+        for (r, (events, result)) in traced.into_iter().enumerate() {
+            assert_eq!(
+                events, expected[r],
+                "{} p={p} m={m} be={block_elems} rank={r}: step trace diverged",
+                algo.name()
+            );
+            assert_eq!(result, want, "{} rank {r} payload", algo.name());
+        }
+    }
+
+    #[test]
+    fn compiled_schedules_match_blocking_traces() {
+        for algo in ALGOS {
+            for p in [2usize, 3, 4, 7, 8, 14] {
+                for (m, be) in [(3usize, 1usize), (17, 5), (40, 8)] {
+                    check_trace(algo, p, m, be);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_payload_compiles_to_empty_schedule() {
+        let blocks = Blocks::by_size(0, 4).unwrap();
+        for algo in ALGOS {
+            for r in 0..6 {
+                let s = compile(algo, r, 6, &blocks).unwrap();
+                assert!(s.steps.is_empty(), "{} rank {r}", algo.name());
+            }
+        }
+        // blocking oracles agree: zero calls
+        for algo in ALGOS {
+            for (events, result) in trace_blocking(algo, 6, 0, 4) {
+                assert!(events.is_empty());
+                assert!(result.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let blocks = Blocks::by_size(8, 4).unwrap();
+        for algo in ALGOS {
+            let s = compile(algo, 0, 1, &blocks).unwrap();
+            assert!(s.steps.is_empty());
+        }
+    }
+
+    #[test]
+    fn uncompiled_algos_return_none() {
+        let blocks = Blocks::by_size(16, 4).unwrap();
+        for algo in [
+            AlgoKind::Hier,
+            AlgoKind::TwoTree,
+            AlgoKind::Scan,
+            AlgoKind::PipeTree,
+            AlgoKind::Rabenseifner,
+        ] {
+            assert!(compile(algo, 0, 4, &blocks).is_none(), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn dpdr_inner_rounds_use_fused_sinks() {
+        // p = 14: both trees perfect with inner nodes; an inner node with
+        // two children must emit StashCharged → Reduce3At pairs
+        let blocks = Blocks::by_count(24, 4);
+        let forest = DualRootForest::new(14).unwrap();
+        let mut saw_fused = false;
+        for r in 0..14 {
+            let role = forest.role(r).unwrap();
+            let s = compile(AlgoKind::Dpdr, r, 14, &blocks).unwrap();
+            let stashes = s
+                .steps
+                .iter()
+                .filter(|st| matches!(st, Step::SendRecv { sink: Sink::StashCharged, .. }))
+                .count();
+            let fused = s
+                .steps
+                .iter()
+                .filter(|st| matches!(st, Step::SendRecv { sink: Sink::Reduce3At { .. }, .. }))
+                .count();
+            assert_eq!(stashes, fused, "rank {r}: stash/fuse pairing");
+            if role.children[0].is_some() && role.children[1].is_some() {
+                assert_eq!(fused, blocks.count(), "rank {r}: one fused round per block");
+                saw_fused = true;
+            } else {
+                assert_eq!(fused, 0, "rank {r}: leaf/one-child ranks never fuse");
+            }
+        }
+        assert!(saw_fused);
+    }
+
+    #[test]
+    fn ring_p2_normalizes_to_sendrecv() {
+        let blocks = Blocks::by_size(8, 4).unwrap();
+        for r in 0..2 {
+            let s = compile(AlgoKind::Ring, r, 2, &blocks).unwrap();
+            assert!(!s.steps.is_empty());
+            for st in &s.steps {
+                assert!(
+                    matches!(st, Step::SendRecv { .. }),
+                    "p=2 ring must lower pair calls to sendrecv"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rd_non_power_of_two_folds_remainder() {
+        // p = 7: pow = 4, rem = 3 → ranks 0..6 fold pairwise
+        let s0 = compile(AlgoKind::RecursiveDoubling, 0, 7, &Blocks::by_count(8, 2)).unwrap();
+        assert!(matches!(s0.steps[0], Step::Recv { peer: 1, .. }));
+        assert!(matches!(s0.steps[s0.steps.len() - 1], Step::Send { peer: 1, .. }));
+        let s1 = compile(AlgoKind::RecursiveDoubling, 1, 7, &Blocks::by_count(8, 2)).unwrap();
+        assert!(matches!(s1.steps[0], Step::Send { peer: 0, .. }));
+        assert!(matches!(
+            s1.steps[1],
+            Step::Recv { peer: 0, sink: Sink::ReplaceY }
+        ));
+        assert_eq!(s1.steps.len(), 2, "folded-away rank only forwards");
+    }
+}

@@ -8,7 +8,7 @@
 use dpdr::collectives::{run_allreduce_i32, RunSpec};
 use dpdr::comm::Timing;
 use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
-use dpdr::nbc::{run_concurrent_i32, ConcurrentSpec, FusePolicy};
+use dpdr::nbc::{run_concurrent_i32, ConcurrentSpec, EngineKind, FusePolicy};
 use dpdr::topo::Mapping;
 
 const MAPPING: Mapping = Mapping::Block { ranks_per_node: 4 };
@@ -49,7 +49,7 @@ fn sequential_results(cspec: &ConcurrentSpec, timing: Timing) -> Vec<Vec<i32>> {
         .collect()
 }
 
-fn check_battery(timing: Timing, net: Option<NetParams>) {
+fn check_battery(timing: Timing, net: Option<NetParams>, engine: EngineKind) {
     for k in [2usize, 4, 8] {
         let base = RunSpec::new(8, 96)
             .block_elems(16)
@@ -59,7 +59,9 @@ fn check_battery(timing: Timing, net: Option<NetParams>) {
             Some(n) => base.net(n),
             None => base,
         };
-        let cspec = ConcurrentSpec::new(base, k).algos(MIX.to_vec());
+        let cspec = ConcurrentSpec::new(base, k)
+            .algos(MIX.to_vec())
+            .engine(engine);
         let sequential = sequential_results(&cspec, timing);
         let report = run_concurrent_i32(&cspec, timing)
             .unwrap_or_else(|e| panic!("concurrent k={k}: {e}"));
@@ -80,6 +82,12 @@ fn check_battery(timing: Timing, net: Option<NetParams>) {
         assert_eq!(totals.ops_in_flight_max, k as u64, "k={k}");
         // fabric metrics must be sane in either mode: non-negative, finite
         assert!(totals.stall_us >= 0.0 && totals.stall_us.is_finite());
+        if engine == EngineKind::Schedule {
+            // the compiled ops in the mix really went through the core
+            assert!(totals.steps_executed > 0, "k={k}: no schedule steps ran");
+            assert!(totals.progress_wakeups > 0, "k={k}: no drive wakeups");
+            assert!(totals.ready_queue_max >= 1, "k={k}");
+        }
         if net.is_some() {
             // congested worlds report per-node NIC occupancy for 2 nodes
             assert_eq!(report.net_occupancy.len(), 2, "k={k}");
@@ -93,24 +101,25 @@ fn check_battery(timing: Timing, net: Option<NetParams>) {
     }
 }
 
+fn dedicated_virtual() -> Timing {
+    Timing::Virtual(
+        CostModel::Hierarchical {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping: MAPPING,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
 #[test]
 fn concurrent_matches_sequential_bitwise_real_transport() {
-    check_battery(Timing::Real, None);
+    check_battery(Timing::Real, None, EngineKind::Threaded);
 }
 
 #[test]
 fn concurrent_matches_sequential_bitwise_dedicated_virtual() {
-    check_battery(
-        Timing::Virtual(
-            CostModel::Hierarchical {
-                intra: LinkCost::new(0.3e-6, 0.08e-9),
-                inter: LinkCost::new(1.0e-6, 0.70e-9),
-                mapping: MAPPING,
-            },
-            ComputeCost::new(0.25e-9),
-        ),
-        None,
-    );
+    check_battery(dedicated_virtual(), None, EngineKind::Threaded);
 }
 
 #[test]
@@ -120,7 +129,65 @@ fn concurrent_survives_edge_capacity_one_with_one_port() {
     // operations' backpressure acyclic, so the battery must complete (no
     // deadlock) with payloads bitwise identical to sequential execution.
     let net = NetParams::ports(1).edge_capacity(1);
-    check_battery(congested_timing(net), Some(net));
+    check_battery(congested_timing(net), Some(net), EngineKind::Threaded);
+}
+
+#[test]
+fn schedule_engine_battery_real_transport() {
+    // same K ∈ {2,4,8} battery, driven by the progress core; TwoTree and
+    // Hier in the mix fall back to workers, exercising mixed execution
+    check_battery(Timing::Real, None, EngineKind::Schedule);
+}
+
+#[test]
+fn schedule_engine_battery_dedicated_virtual() {
+    check_battery(dedicated_virtual(), None, EngineKind::Schedule);
+}
+
+#[test]
+fn schedule_engine_battery_congested_capacity_one() {
+    // compiled ops ride the core's sealed reservation order while the
+    // fallback workers reserve live — both against one port, capacity 1
+    let net = NetParams::ports(1).edge_capacity(1);
+    check_battery(congested_timing(net), Some(net), EngineKind::Schedule);
+}
+
+#[test]
+fn schedule_engine_clocks_match_threaded_bitwise_on_dedicated_virtual() {
+    // the executor re-derives the exact per-step clock arithmetic of the
+    // blocking implementations, so on a dedicated (contention-free)
+    // virtual model the per-rank elapsed time must agree to the bit —
+    // payload equality alone would not catch a mis-clocked step
+    for k in [3usize, 5] {
+        let base = RunSpec::new(8, 96)
+            .block_elems(16)
+            .seed(0xC10C ^ k as u64)
+            .mapping(MAPPING);
+        let cspec = ConcurrentSpec::new(base, k).algos(MIX.to_vec());
+        let threaded = run_concurrent_i32(&cspec, dedicated_virtual()).unwrap();
+        let sspec = cspec.clone().engine(EngineKind::Schedule);
+        let sched = run_concurrent_i32(&sspec, dedicated_virtual()).unwrap();
+        let pairs = threaded.results.iter().zip(sched.results.iter());
+        for (rank, ((tb, tt), (sb, st))) in pairs.enumerate() {
+            for (i, (a, b)) in tb.iter().zip(sb.iter()).enumerate() {
+                assert_eq!(
+                    a.as_slice().unwrap(),
+                    b.as_slice().unwrap(),
+                    "k={k} rank={rank} op={i}: payloads diverge across engines"
+                );
+            }
+            assert_eq!(
+                tt.to_bits(),
+                st.to_bits(),
+                "k={k} rank={rank}: threaded {tt} µs vs schedule {st} µs"
+            );
+        }
+        assert_eq!(
+            threaded.max_vtime_us.to_bits(),
+            sched.max_vtime_us.to_bits(),
+            "k={k}: world clock diverges across engines"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,170 @@
+//! Progress-core battery: the compiled-schedule engine must (a) sustain
+//! K=256 outstanding operations on a p=8 world without spawning a single
+//! worker thread, and (b) produce bitwise run-to-run-identical virtual
+//! clocks under a congestion-aware model regardless of the per-rank wait
+//! order — the conservative commit order makes the fabric schedule a
+//! pure function of the submitted batch, not of host thread timing.
+//!
+//! This file deliberately holds every test that reads the process-wide
+//! worker gauge: everything here runs engine=Schedule on compiled
+//! algorithms only, so no test in this binary ever spawns a worker and
+//! the gauge assertion cannot race a neighbour test.
+
+use dpdr::buffer::DataBuf;
+use dpdr::collectives::RunSpec;
+use dpdr::comm::{run_world_faulty, Comm, FaultPlan, Timing};
+use dpdr::model::{AlgoKind, ComputeCost, CostModel, LinkCost, NetParams};
+use dpdr::nbc::{
+    reset_worker_peak, run_concurrent_i32, worker_peak, ConcurrentSpec, Engine, EngineKind,
+    NbcConfig,
+};
+use dpdr::ops::SumOp;
+use dpdr::pipeline::Blocks;
+use dpdr::topo::Mapping;
+
+const MAPPING: Mapping = Mapping::Block { ranks_per_node: 4 };
+
+/// Every algorithm here compiles to a per-rank schedule, so the whole
+/// batch runs inside the progress core — no thread-per-op fallback.
+const COMPILED: [AlgoKind; 4] = [
+    AlgoKind::Dpdr,
+    AlgoKind::DpdrSingle,
+    AlgoKind::Ring,
+    AlgoKind::RecursiveDoubling,
+];
+
+fn congested(net: NetParams) -> Timing {
+    Timing::Virtual(
+        CostModel::Congested {
+            intra: LinkCost::new(0.3e-6, 0.08e-9),
+            inter: LinkCost::new(1.0e-6, 0.70e-9),
+            mapping: MAPPING,
+            net,
+        },
+        ComputeCost::new(0.25e-9),
+    )
+}
+
+#[test]
+fn k256_outstanding_ops_spawn_zero_worker_threads() {
+    // the scaling claim of the event-driven core, asserted exactly: 256
+    // concurrent ops per rank on p=8 and the worker gauge never moves
+    reset_worker_peak();
+    let base = RunSpec::new(8, 32)
+        .block_elems(8)
+        .seed(0x256)
+        .mapping(MAPPING);
+    let cspec = ConcurrentSpec::new(base, 256)
+        .algos(COMPILED.to_vec())
+        .engine(EngineKind::Schedule);
+    let report = run_concurrent_i32(&cspec, Timing::Real).unwrap();
+    for (rank, (bufs, _t)) in report.results.iter().enumerate() {
+        assert_eq!(bufs.len(), 256);
+        for (i, buf) in bufs.iter().enumerate() {
+            assert_eq!(
+                buf.as_slice().unwrap(),
+                &cspec.op_expected(i)[..],
+                "rank={rank} op={i}"
+            );
+        }
+    }
+    let totals = report.total_metrics();
+    assert_eq!(totals.ops_in_flight_max, 256);
+    assert!(totals.steps_executed > 0);
+    assert_eq!(
+        worker_peak(),
+        0,
+        "a fully compiled batch must never touch the thread-per-op path"
+    );
+}
+
+const P: usize = 8;
+const K: usize = 8;
+const M: usize = 96;
+
+/// One congested schedule-engine world under `plan`, waiting each rank's
+/// ops in the permutation `i = (rank + j * stride) % K` (any odd stride
+/// is coprime with K=8, so each op is redeemed exactly once). Returns
+/// (per-rank payload vectors, per-rank elapsed µs, world clock,
+/// (retransmits, fault_events)).
+#[allow(clippy::type_complexity)]
+fn run_rotated(stride: usize, plan: FaultPlan) -> (Vec<Vec<Vec<i32>>>, Vec<f64>, f64, (u64, u64)) {
+    assert_eq!(stride % 2, 1, "stride must be coprime with K=8");
+    let net = NetParams::ports(1).edge_capacity(2);
+    let report = run_world_faulty::<i32, _, _>(P, congested(net), plan, move |comm| {
+        let rank = comm.rank();
+        let blocks = Blocks::by_count(M, 6);
+        let cfg = NbcConfig {
+            engine: EngineKind::Schedule,
+            mapping: MAPPING,
+            ..NbcConfig::default()
+        };
+        comm.barrier()?;
+        comm.reset_time();
+        let mut eng = Engine::new(comm, SumOp, cfg);
+        let mut reqs: Vec<Option<_>> = Vec::with_capacity(K);
+        for i in 0..K {
+            let b = rank as i32 + (i as i32) * 100;
+            let x = DataBuf::real((0..M).map(|j| b + j as i32).collect());
+            let algo = COMPILED[i % COMPILED.len()];
+            reqs.push(Some(eng.iallreduce(algo, x, &blocks)?));
+        }
+        let mut out: Vec<Option<Vec<i32>>> = (0..K).map(|_| None).collect();
+        for j in 0..K {
+            let i = (rank + j * stride) % K;
+            let req = reqs[i].take().expect("each op redeemed once");
+            out[i] = Some(eng.wait(req)?.into_vec()?);
+        }
+        drop(eng);
+        let elapsed = comm.time_us();
+        let pay: Vec<Vec<i32>> = out.into_iter().map(|o| o.expect("all waited")).collect();
+        Ok((pay, elapsed))
+    })
+    .unwrap();
+    let totals = report.total_metrics();
+    let faults = (totals.retransmits, totals.fault_events);
+    let (pay, t): (Vec<_>, Vec<_>) = report.results.into_iter().unzip();
+    (pay, t, report.max_vtime_us, faults)
+}
+
+fn drop_stall_plan() -> FaultPlan {
+    FaultPlan::seeded(9)
+        .transient_drop(0.15, 12, 5.0)
+        .stall(3, 40.0)
+}
+
+#[test]
+fn congested_clocks_are_deterministic_under_rotated_wait_orders() {
+    // conservative commit order: the virtual fabric schedule depends only
+    // on the submitted batch, so (1) a rerun with the same wait order and
+    // (2) a rerun with a *different* per-rank wait order both reproduce
+    // every clock bit-for-bit — with seeded drop/stall faults in play
+    let (pay_a, t_a, vt_a, f_a) = run_rotated(1, drop_stall_plan());
+    let (pay_b, t_b, vt_b, f_b) = run_rotated(1, drop_stall_plan());
+    let (pay_c, t_c, vt_c, f_c) = run_rotated(5, drop_stall_plan());
+    // payload sanity against the closed-form oracle
+    let rank_sum: i32 = (0..P as i32).sum();
+    for (rank, ops) in pay_a.iter().enumerate() {
+        for (i, y) in ops.iter().enumerate() {
+            let b = rank_sum + P as i32 * (i as i32) * 100;
+            let want: Vec<i32> = (0..M).map(|j| b + P as i32 * j as i32).collect();
+            assert_eq!(y, &want, "rank={rank} op={i}");
+        }
+    }
+    // run-to-run: bitwise identical clocks, identical fault accounting
+    assert_eq!(pay_a, pay_b, "payloads nondeterministic");
+    assert_eq!(vt_a.to_bits(), vt_b.to_bits(), "clock nondeterministic");
+    for (rank, (a, b)) in t_a.iter().zip(t_b.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "rank {rank} nondeterministic");
+    }
+    assert_eq!(f_a, f_b, "(retransmits, fault_events) nondeterministic");
+    // wait-order independence: rotating every rank's redemption order
+    // must not move a single clock bit
+    assert_eq!(pay_a, pay_c, "payloads depend on wait order");
+    assert_eq!(vt_a.to_bits(), vt_c.to_bits(), "wait order moved clock");
+    for (rank, (a, c)) in t_a.iter().zip(t_c.iter()).enumerate() {
+        assert_eq!(a.to_bits(), c.to_bits(), "rank {rank} clock moved");
+    }
+    assert_eq!(f_a, f_c, "fault accounting depends on wait order");
+    assert_eq!(worker_peak(), 0, "no workers for compiled batches");
+}

@@ -11,7 +11,7 @@ use dpdr::buffer::DataBuf;
 use dpdr::comm::{run_world, run_world_faulty, Comm, FaultPlan, Timing};
 use dpdr::error::Error;
 use dpdr::model::AlgoKind;
-use dpdr::nbc::{run_soak, Engine, NbcConfig, SoakSpec};
+use dpdr::nbc::{run_soak, Engine, EngineKind, NbcConfig, SoakSpec};
 use dpdr::ops::SumOp;
 use dpdr::pipeline::Blocks;
 
@@ -23,10 +23,19 @@ const OPS: usize = 4;
 /// every rank's payloads (flattened in rank-major op order) and the final
 /// virtual clock.
 fn run_plan(plan: FaultPlan) -> (Vec<Vec<i32>>, f64) {
+    run_plan_engine(plan, EngineKind::Threaded)
+}
+
+/// [`run_plan`] on an explicit execution engine.
+fn run_plan_engine(plan: FaultPlan, engine: EngineKind) -> (Vec<Vec<i32>>, f64) {
     let report = run_world_faulty::<i32, _, _>(P, Timing::hydra(), plan, move |comm| {
         let rank = comm.rank() as i32;
         let blocks = Blocks::by_count(M, 4);
-        let mut eng = Engine::new(comm, SumOp, NbcConfig::default());
+        let cfg = NbcConfig {
+            engine,
+            ..NbcConfig::default()
+        };
+        let mut eng = Engine::new(comm, SumOp, cfg);
         let mut reqs = Vec::new();
         for i in 0..OPS as i32 {
             let x = DataBuf::real((0..M).map(|j| rank + i * 10 + j as i32).collect());
@@ -76,6 +85,62 @@ fn fault_matrix_payloads_match_fault_free_and_are_deterministic() {
     // the whole matrix (13 worlds) finishing promptly is itself the
     // zero-hang assertion
     assert!(start.elapsed() < Duration::from_secs(60));
+}
+
+#[test]
+fn schedule_engine_fault_matrix_matches_threaded_bitwise() {
+    // the acceptance bar for the progress core: across the whole fault
+    // matrix the compiled-schedule engine reproduces the thread-per-op
+    // engine exactly — payloads AND the virtual clock, to the bit. The
+    // executor re-derives every charge/arrival/retransmit stamp, so any
+    // mis-modelled fault path shows up as a clock diff here.
+    let matrix = [
+        ("none", FaultPlan::none()),
+        ("delay", FaultPlan::seeded(5).delay(0.3, 15.0)),
+        ("dup", FaultPlan::seeded(5).duplicate(0.3)),
+        ("reorder", FaultPlan::seeded(5).reorder(0.3)),
+        ("transient-drop", FaultPlan::seeded(5).transient_drop(0.2, 12, 5.0)),
+        ("stall", FaultPlan::seeded(5).stall(3, 40.0)),
+        ("all", FaultPlan::parse("all", 5).unwrap()),
+    ];
+    for (name, plan) in matrix {
+        let (pay_t, vt_t) = run_plan_engine(plan, EngineKind::Threaded);
+        let (pay_s, vt_s) = run_plan_engine(plan, EngineKind::Schedule);
+        assert_eq!(pay_s, pay_t, "{name}: payloads diverge across engines");
+        assert_eq!(
+            vt_s.to_bits(),
+            vt_t.to_bits(),
+            "{name}: clock diverges across engines (threaded {vt_t} µs, schedule {vt_s} µs)"
+        );
+    }
+}
+
+#[test]
+fn schedule_engine_fails_typed_on_exhausted_retransmits() {
+    // same graceful-degradation contract as the blocking path: the rank
+    // whose retries run out surfaces the typed root cause through the
+    // core's failure latch; peers see poison fallout, not a hang
+    let start = Instant::now();
+    let plan = FaultPlan::seeded(3).transient_drop(1.0, 2, 1.0);
+    let result = run_world_faulty::<i32, _, _>(4, Timing::hydra(), plan, move |comm| {
+        let cfg = NbcConfig {
+            engine: EngineKind::Schedule,
+            ..NbcConfig::default()
+        };
+        let mut eng = Engine::new(comm, SumOp, cfg);
+        let r = eng.iallreduce(
+            AlgoKind::Dpdr,
+            DataBuf::real(vec![1i32; 32]),
+            &Blocks::by_count(32, 2),
+        )?;
+        eng.wait(r)?.into_vec()
+    });
+    let err = result.expect_err("an all-drop plan cannot complete");
+    assert!(
+        err.to_string().contains("retransmit"),
+        "want the retries-exhausted root cause, got: {err}"
+    );
+    assert!(start.elapsed() < Duration::from_secs(30));
 }
 
 #[test]
