@@ -123,7 +123,11 @@ impl<E: Elem> Slab<E> {
     /// exclusive handle (the only possible writer).
     pub(crate) unsafe fn read(&self, off: usize, len: usize) -> &[E] {
         debug_assert!(off + len <= self.len);
-        std::slice::from_raw_parts(self.ptr.add(off), len)
+        // SAFETY: `ptr` is the base of a live allocation of `self.len`
+        // initialized elements (from_vec), so `ptr + off .. ptr + off + len`
+        // is in bounds; freedom from concurrent mutation is the caller's
+        // contract above.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
     }
 
     /// Mutably access `[off, off + len)`.
@@ -135,7 +139,10 @@ impl<E: Elem> Slab<E> {
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn write(&self, off: usize, len: usize) -> &mut [E] {
         debug_assert!(off + len <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+        // SAFETY: in-bounds range of a live allocation as in `read`;
+        // exclusivity (no overlapping lease, no second writer) is the
+        // caller's contract above, so handing out `&mut` cannot alias.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), len) }
     }
 
     /// Consume the slab, reclaiming the storage as a `Vec` without copying.
@@ -164,6 +171,7 @@ mod tests {
     fn roundtrip_and_reads() {
         let s = Slab::from_vec(vec![1i32, 2, 3, 4]);
         assert_eq!(s.len(), 4);
+        // SAFETY: `s` is owned by this thread; no writer exists.
         assert_eq!(unsafe { s.read(1, 2) }, &[2, 3]);
         assert_eq!(s.into_vec(), vec![1, 2, 3, 4]);
     }
@@ -199,6 +207,7 @@ mod tests {
         // SAFETY: range [4,8) is checked disjoint from the lease above.
         unsafe { s.write(4, 4) }.copy_from_slice(&[9, 9, 9, 9]);
         s.release(id);
+        // SAFETY: the write above completed and `s` is single-threaded here.
         assert_eq!(unsafe { s.read(0, 8) }, &[0, 0, 0, 0, 9, 9, 9, 9]);
     }
 }

@@ -84,6 +84,22 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of `usize`s (`--caps 1,2,3`); the default is
+    /// used when the flag is absent. Empty items are rejected.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|item| {
+                    item.trim().parse().map_err(|_| {
+                        Error::Cli(format!("flag --{name}: cannot parse '{item}' in '{v}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
     /// Typed mandatory flag.
     pub fn require<T: FromStr>(&self, name: &str) -> Result<T> {
         let v = self
@@ -131,6 +147,17 @@ mod tests {
         assert_eq!(a.get_parsed("other", 3usize, |_| None).unwrap(), 3);
         // parse failure is a CLI error
         assert!(a.get_parsed("mapping", 0usize, |_| Option::<usize>::None).is_err());
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = Args::parse(&argv("verify --caps 1,2, 3"), &[]).unwrap();
+        // note: "1,2," followed by a separate token is two flags' worth of
+        // trouble — keep to one token
+        let a2 = Args::parse(&argv("verify --caps 1,2,3"), &[]).unwrap();
+        assert_eq!(a2.get_usize_list("caps", &[9]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a2.get_usize_list("other", &[4, 5]).unwrap(), vec![4, 5]);
+        assert!(a.get_usize_list("caps", &[]).is_err()); // trailing comma
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! See `examples/` for runnable end-to-end drivers and `benches/` for the
 //! reproductions of the paper's Table 2 / Figure 1.
 
+// Every unsafe operation inside an `unsafe fn` must be wrapped in its own
+// `unsafe {}` block with a SAFETY comment — the fn-level `unsafe` only
+// states the caller's obligations, it does not discharge the body's.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod buffer;
 pub mod cli;
 pub mod collectives;

@@ -12,6 +12,8 @@
 //! dpdr fig1       [--tsv out.tsv]                                         Figure 1 series
 //! dpdr latency    [--hmax 12]                                             §1.2 4h−3 check
 //! dpdr blocksize  --p 288 --m 1000000                                     Pipelining-Lemma sweep
+//! dpdr verify     [--all] [--m 40] [--blocks 1,3,8] [--caps 1,2,3] [--json FILE]
+//!                 static schedule verification + trace checks
 //! dpdr validate   [--pmax 16]                                             correctness battery
 //! dpdr calibrate                                                          thread-transport α/β fit
 //! dpdr sysinfo
@@ -34,7 +36,7 @@ use dpdr::model::{
 };
 use dpdr::pipeline::Blocks;
 
-const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help", "no-fuse"];
+const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help", "no-fuse", "all"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +64,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig1" => cmd_fig1(&args),
         "latency" => cmd_latency(&args),
         "blocksize" => cmd_blocksize(&args),
+        "verify" => cmd_verify(&args),
         "validate" => cmd_validate(&args),
         "calibrate" => cmd_calibrate(&args),
         "sysinfo" => cmd_sysinfo(),
@@ -107,6 +110,13 @@ subcommands:
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
   latency    validate the 4h-3 latency formula over p = 2^h - 2
   blocksize  Pipelining-Lemma sweep: measured vs analytic optimum
+  verify     static schedule verification: prove matching, deadlock-freedom at
+             bounded edge capacities, buffer/lease safety, and reduction-shape
+             determinism for every compiled (algo, p, blocks) point, and
+             trace-check the uncompiled algorithms through the same analysis:
+             [--all]  (p = 2..64 instead of the quick sweep; what CI runs)
+             [--m 40] [--blocks 1,3,8] [--caps 1,2,3] [--oracle-pmax 16]
+             [--json FILE]  (write the ScheduleCert array)
   validate   correctness battery across algorithms/p/m
   calibrate  fit alpha/beta of the real thread transport
   sysinfo    model constants and environment"
@@ -494,6 +504,119 @@ fn cmd_blocksize(args: &Args) -> Result<()> {
         b *= 2;
     }
     Ok(())
+}
+
+/// `dpdr verify`: run the static schedule verifier over the compiled
+/// algorithms (matching, deadlock-freedom at the requested edge-queue
+/// capacities, buffer/lease safety, reduction-shape determinism, and —
+/// up to `--oracle-pmax` — agreement with the blocking oracle's combine
+/// order), then trace-check the uncompiled algorithms through the same
+/// analysis. Exits nonzero if any point has a violation.
+fn cmd_verify(args: &Args) -> Result<()> {
+    use dpdr::schedule::verify::{verify_compiled, verify_traced, ScheduleCert};
+    let all = args.switch("all");
+    let m = args.get("m", 40usize)?;
+    let caps = args.get_usize_list("caps", &[1, 2, 3])?;
+    let block_counts = args.get_usize_list("blocks", &[1, 3, 8])?;
+    let oracle_pmax = args.get("oracle-pmax", 16usize)?;
+    let ps: Vec<usize> = if all {
+        (2..=64).collect()
+    } else {
+        vec![2, 3, 4, 5, 6, 8, 9, 14, 16]
+    };
+    // trace mode spawns a real p-thread world per point, so its sweep is
+    // sparser; 24 and 33 cover past-a-node and non-power-of-two shapes
+    let traced_ps: Vec<usize> = if all {
+        vec![2, 3, 4, 5, 6, 7, 8, 9, 12, 16, 24, 33]
+    } else {
+        vec![2, 3, 4, 5, 7, 8, 12]
+    };
+    let compiled = [
+        AlgoKind::Dpdr,
+        AlgoKind::DpdrSingle,
+        AlgoKind::Ring,
+        AlgoKind::RecursiveDoubling,
+    ];
+    let traced = [
+        AlgoKind::PipeTree,
+        AlgoKind::ReduceBcast,
+        AlgoKind::NativeSwitch,
+        AlgoKind::TwoTree,
+        AlgoKind::Rabenseifner,
+    ];
+    let mut certs: Vec<ScheduleCert> = Vec::new();
+    let mut bad = 0usize;
+    for algo in compiled {
+        let before = certs.len();
+        let mut ok = 0usize;
+        for &p in &ps {
+            for &b in &block_counts {
+                let blocks = Blocks::by_count(m, b);
+                let cert = verify_compiled(algo, p, &blocks, &caps, p <= oracle_pmax)?;
+                report_cert(&cert, &mut bad);
+                if cert.ok() {
+                    ok += 1;
+                }
+                certs.push(cert);
+            }
+        }
+        println!(
+            "{:>10} [compiled]: {ok}/{} points ok (caps {caps:?}, oracle to p={oracle_pmax})",
+            algo.name(),
+            certs.len() - before
+        );
+    }
+    // 300 ShapeElems = 9600 B pushes the count-based switcher onto its
+    // ring branch, so both of its branches get trace-checked
+    let trace_ms: Vec<usize> = if m == 300 { vec![300] } else { vec![m, 300] };
+    for algo in traced {
+        let before = certs.len();
+        let mut ok = 0usize;
+        let mut warns = 0usize;
+        for &p in &traced_ps {
+            for &tm in &trace_ms {
+                let blocks = Blocks::by_count(tm, 4);
+                let cert = verify_traced(algo, p, &blocks, &caps)?;
+                report_cert(&cert, &mut bad);
+                if cert.ok() {
+                    ok += 1;
+                }
+                warns += cert.warnings.len();
+                certs.push(cert);
+            }
+        }
+        println!(
+            "{:>10} [trace]: {ok}/{} points ok, {warns} capacity warnings",
+            algo.name(),
+            certs.len() - before
+        );
+    }
+    if let Some(path) = args.raw("json") {
+        let body: Vec<String> = certs.iter().map(ScheduleCert::to_json).collect();
+        std::fs::write(path, format!("[\n{}\n]\n", body.join(",\n")))?;
+        eprintln!("# wrote {path} ({} certificates)", certs.len());
+    }
+    println!("verify: {} certificates, {bad} with violations", certs.len());
+    if bad > 0 {
+        return Err(Error::Protocol(format!(
+            "{bad} schedule verification points failed"
+        )));
+    }
+    Ok(())
+}
+
+/// Print a failed certificate's violations to stderr.
+fn report_cert(cert: &dpdr::schedule::verify::ScheduleCert, bad: &mut usize) {
+    if cert.ok() {
+        return;
+    }
+    *bad += 1;
+    for v in &cert.violations {
+        eprintln!(
+            "FAIL {} [{}] p={} m={} b={}: {v}",
+            cert.algo, cert.mode, cert.p, cert.m, cert.blocks
+        );
+    }
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {

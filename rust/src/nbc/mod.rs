@@ -270,6 +270,13 @@ pub struct NbcConfig {
     /// Execution engine (see the module docs): thread-per-op workers
     /// (the default) or the compiled-schedule progress core.
     pub engine: EngineKind,
+    /// Statically verify every compiled schedule world before its first
+    /// deposit ([`crate::schedule::verify`]): matching, capacity-1
+    /// deadlock-freedom, lease safety, and reduction shape. Verified
+    /// `(algo, p, blocks)` points are cached process-wide, so the cost
+    /// is one pass per distinct shape. A violation fails the submission
+    /// with [`Error::Protocol`] instead of depositing a broken program.
+    pub verify_schedules: bool,
 }
 
 impl Default for NbcConfig {
@@ -283,6 +290,7 @@ impl Default for NbcConfig {
             max_in_flight: 0,
             deadline_us: None,
             engine: EngineKind::default(),
+            verify_schedules: false,
         }
     }
 }
@@ -629,6 +637,11 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         if self.cfg.engine == EngineKind::Schedule && x.len() == blocks.total() {
             let (rank, size) = (self.comm.rank(), self.comm.size());
             if let Some(sched) = crate::schedule::compile(algo, rank, size, &blocks) {
+                if self.cfg.verify_schedules {
+                    // Same verdict on every rank (pure function of the
+                    // schedules), so failing here is SPMD-symmetric.
+                    crate::schedule::verify::verify_world_cached(algo, size, &blocks)?;
+                }
                 let tag = self.lease_tag()?;
                 let v0 = self.comm.vtime();
                 // true cancellation is a virtual-clock construct; under

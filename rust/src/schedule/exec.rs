@@ -122,6 +122,8 @@ impl VirtQueue {
         if !records_drains(capacity) || index < capacity as u64 {
             return (None, depth);
         }
+        // Infallible: `index >= capacity` here, and can_post (the caller's
+        // contract) required a recorded drain when the queue is full.
         let freed = self.drains.pop_front().expect("can_post checked");
         (Some(freed), self.posted - self.drained)
     }
@@ -633,6 +635,9 @@ fn pop_mail<E: Elem>(
     src: usize,
     dst: usize,
 ) -> Packet<E> {
+    // Infallible: the drive loop only dispatches a recv half after
+    // `runnable` saw `has_mail(src, dst)`, and nothing pops between the
+    // check and this call (single driving thread per engine step).
     mail.get_mut(&(src, dst))
         .and_then(|m| m.fifo.pop_front())
         .expect("runnable recv-half has mail")

@@ -24,6 +24,7 @@
 //! `None` from [`compile`] and falls back to the threaded worker path.
 
 pub mod exec;
+pub mod verify;
 
 use crate::model::AlgoKind;
 use crate::ops::Side;
@@ -472,9 +473,15 @@ impl<E: crate::ops::Elem, C: crate::comm::Comm<E>> crate::comm::Comm<E> for Trac
 /// `m` is the per-rank vector length, `elem_bytes` the wire size of one
 /// element (for γ-charge byte counts).
 ///
-/// Panics if the schedules deadlock — a compiler bug by construction,
-/// since the blocking algorithms they mirror are deadlock-free.
-pub fn expected_events(scheds: &[Schedule], m: usize, elem_bytes: usize) -> Vec<Vec<TraceEvent>> {
+/// Fails with `Error::Protocol` if the schedules deadlock — a compiler
+/// bug by construction, since the blocking algorithms they mirror are
+/// deadlock-free. (The static pass in [`verify`] proves the absence of
+/// such cycles independently of this simulation.)
+pub fn try_expected_events(
+    scheds: &[Schedule],
+    m: usize,
+    elem_bytes: usize,
+) -> crate::error::Result<Vec<Vec<TraceEvent>>> {
     use std::collections::{HashMap, VecDeque};
     let p = scheds.len();
     let mut pc = vec![0usize; p];
@@ -567,10 +574,22 @@ pub fn expected_events(scheds: &[Schedule], m: usize, elem_bytes: usize) -> Vec<
             }
         }
         if all_done {
-            return events;
+            return Ok(events);
         }
-        assert!(progressed, "compiled schedules deadlocked — compiler bug");
+        if !progressed {
+            return Err(crate::error::Error::Protocol(
+                "compiled schedules deadlocked — compiler bug".to_string(),
+            ));
+        }
     }
+}
+
+/// Panicking wrapper of [`try_expected_events`], for test oracles where
+/// a deadlocked compilation should abort loudly.
+pub fn expected_events(scheds: &[Schedule], m: usize, elem_bytes: usize) -> Vec<Vec<TraceEvent>> {
+    // A deadlock here is a compiler bug, not a runtime condition — the
+    // typed variant exists for callers that must not panic.
+    try_expected_events(scheds, m, elem_bytes).expect("schedule simulation deadlocked")
 }
 
 #[cfg(test)]

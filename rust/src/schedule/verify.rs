@@ -1,0 +1,1554 @@
+//! Static verification of compiled collective schedules.
+//!
+//! [`compile`] lowers a collective to per-rank [`Schedule`]s; this module
+//! *proves* properties of the whole world of schedules without executing
+//! them, and emits a [`ScheduleCert`] per `(algo, p, blocks)` point:
+//!
+//! 1. **Communication matching** — every send half has exactly one
+//!    matching receive, FIFO-consistent per `(src, dst)` edge (all steps
+//!    of one operation share the operation's tag, so per-edge FIFO *is*
+//!    per-`(src, dst, tag)` FIFO). Element-count agreement is enforced
+//!    through the receiver's sink bounds in the symbolic simulation.
+//! 2. **Deadlock-freedom** — the cross-rank happens-before graph over
+//!    step half-actions (send half, receive completion) is acyclic. The
+//!    graph is parameterized by the per-edge injection-queue capacity
+//!    `k` of the bounded regime ([`crate::schedule::exec`]'s `VirtQueue`,
+//!    mirroring `CostModel::Congested`): posting the `j`-th send on an
+//!    edge requires the receiver to have completed message `j − k`, so
+//!    proving capacity 1 proves every capacity ≥ 1 (the capacity-(k+1)
+//!    edge is implied by the capacity-k edge plus program order).
+//! 3. **Buffer/lease safety** — the COW-hazard class PR 1 patched by
+//!    hand: a step must not overwrite a range of `y` while a zero-copy
+//!    view of that range ([`Src::Block`], [`Src::CloneY`]) may still be
+//!    in flight. Vector clocks over the unbounded happens-before graph
+//!    prove every overlapping write is ordered after the receiver
+//!    consumed the view ([`Src::OwnedBlock`] and [`Src::Snapshot`] are
+//!    owned payloads and exempt — they exist precisely where a view
+//!    would race). Def-before-use of result blocks falls out of the
+//!    shape check: a sink reading an undefined region would poison the
+//!    rank-interval witness below.
+//! 4. **Reduction-shape determinism** — a symbolic lockstep run over
+//!    [`ShapeElem`] (rank-interval [`Span`] + leaf-coverage mask + a
+//!    non-commutative combine fingerprint) proves every element of every
+//!    rank's result combines each leaf exactly once, in ascending rank
+//!    order for order-preserving algorithms, with the *same* combine
+//!    tree on every rank; [`verify_compiled`] can additionally replay
+//!    the blocking oracle over [`ShapeElem`] and require fingerprint
+//!    equality, pinning the compiled order to the oracle's.
+//!
+//! Uncompiled algorithms are covered post-hoc: [`verify_traced`] runs
+//! the blocking implementation under [`TraceComm`] with [`ShapeElem`]
+//! payloads and feeds the captured [`TraceEvent`] streams through the
+//! same matching and graph checks ([`check_trace`]), plus the shape
+//! check on the real results. Receive sizes are not logged, so trace
+//! matching is count-only, and bounded-capacity results are reported as
+//! *warnings*, not violations: the threaded blocking engine never
+//! schedules against a bounded injection queue (a full queue only
+//! advances the virtual clock), so capacity analysis of a trace is
+//! advisory — it says whether the algorithm *would* be safe if compiled
+//! onto the event-driven core. `Hier` is excluded (it runs on
+//! sub-communicators and a barrier, which traces cannot express), and
+//! fused batches are one compiled dpdr at the fused length plus local
+//! scatter, so dpdr certificates cover them.
+//!
+//! Verification is cheap (milliseconds per point) and pure; the
+//! nonblocking engine can gate compilation on it via
+//! [`verify_world_cached`] (`NbcConfig::verify_schedules`), and the
+//! `dpdr verify` CLI sweeps the full algo × p × blocks matrix.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+use super::{compile, Schedule, Sink, Src, Step, TraceComm, TraceEvent};
+use crate::buffer::DataBuf;
+use crate::comm::{run_world, Comm, Timing};
+use crate::error::{Error, Result};
+use crate::model::AlgoKind;
+use crate::ops::{Elem, ReduceOp, Side, Span};
+use crate::pipeline::Blocks;
+
+// ---------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------
+
+/// Which half of a step an event refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Half {
+    /// The send is posted (logged before the receive is awaited).
+    Send,
+    /// The receive completes and the sink is applied.
+    Recv,
+}
+
+/// One half-action of one rank's program — the nodes of the
+/// happens-before graph and the vocabulary of cycle diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventRef {
+    pub rank: usize,
+    pub step: usize,
+    pub half: Half,
+}
+
+impl fmt::Display for EventRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let h = match self.half {
+            Half::Send => "send",
+            Half::Recv => "recv",
+        };
+        write!(f, "r{}.s{}.{}", self.rank, self.step, h)
+    }
+}
+
+/// A typed verification failure. Every mutation class of the test
+/// battery maps to exactly one of these; [`Violation::kind`] is the
+/// stable name used in `ScheduleCert` JSON.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// The schedule set itself is malformed (rank/size fields, peer out
+    /// of range, or an internal invariant breach).
+    World { detail: String },
+    /// A step addresses its own rank — self-messages are not a thing
+    /// the transport or the progress core support.
+    SelfMessage { rank: usize, step: usize },
+    /// A directed edge posts more sends than the peer receives (or vice
+    /// versa): a dropped receive, a retargeted peer, a tag swap.
+    CountMismatch { src: usize, dst: usize, sends: usize, recvs: usize },
+    /// A payload length is incompatible with the receiver's sink or a
+    /// send range is out of bounds.
+    LengthMismatch { rank: usize, step: usize, detail: String },
+    /// The fused-round stash protocol is broken: `Reduce3At` without a
+    /// stash, a stash overwritten, or a stash never consumed.
+    StashProtocol { rank: usize, step: usize, detail: &'static str },
+    /// The happens-before graph has a cycle at the given edge-queue
+    /// capacity (`0` means unbounded queues — a true protocol deadlock).
+    Deadlock { capacity: usize, cycle: Vec<EventRef> },
+    /// A step overwrites `y[lo..hi]` while a zero-copy view of that
+    /// range, sent at `view_step`, may still be in flight.
+    OverwriteHazard { rank: usize, step: usize, lo: usize, hi: usize, view_step: usize },
+    /// A write sink runs after `ReplaceY`: the working vector is then a
+    /// borrowed view of a peer's buffer, so every write would CoW.
+    NonExclusiveWrite { rank: usize, step: usize },
+    /// A rank's final vector has the wrong length.
+    FinalLength { rank: usize, got: usize, want: usize },
+    /// An element of a rank's result has the wrong reduction shape
+    /// (missing/duplicated leaves or an out-of-rank-order combine).
+    ShapeOrder { rank: usize, elem: usize, detail: String },
+    /// Two ranks built different combine trees for the same element.
+    ShapeDivergence { rank: usize, elem: usize },
+    /// The compiled schedule's combine tree differs from the blocking
+    /// oracle's for this element.
+    OracleDivergence { rank: usize, elem: usize },
+}
+
+impl Violation {
+    /// Stable kind tag (used by the JSON report and the test battery).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::World { .. } => "world",
+            Violation::SelfMessage { .. } => "self-message",
+            Violation::CountMismatch { .. } => "count-mismatch",
+            Violation::LengthMismatch { .. } => "length-mismatch",
+            Violation::StashProtocol { .. } => "stash-protocol",
+            Violation::Deadlock { .. } => "deadlock",
+            Violation::OverwriteHazard { .. } => "overwrite-hazard",
+            Violation::NonExclusiveWrite { .. } => "non-exclusive-write",
+            Violation::FinalLength { .. } => "final-length",
+            Violation::ShapeOrder { .. } => "shape-order",
+            Violation::ShapeDivergence { .. } => "shape-divergence",
+            Violation::OracleDivergence { .. } => "oracle-divergence",
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::World { detail } => {
+                write!(f, "malformed world: {detail}")
+            }
+            Violation::SelfMessage { rank, step } => {
+                write!(f, "rank {rank} step {step}: message addressed to self")
+            }
+            Violation::CountMismatch { src, dst, sends, recvs } => {
+                write!(f, "edge {src}->{dst}: {sends} send(s) vs {recvs} recv(s)")
+            }
+            Violation::LengthMismatch { rank, step, detail } => {
+                write!(f, "rank {rank} step {step}: {detail}")
+            }
+            Violation::StashProtocol { rank, step, detail } => {
+                write!(f, "rank {rank} step {step}: {detail}")
+            }
+            Violation::Deadlock { capacity, cycle } => {
+                if *capacity == 0 {
+                    write!(f, "deadlock under unbounded queues: cycle")?;
+                } else {
+                    write!(f, "deadlock at edge-queue capacity {capacity}: cycle")?;
+                }
+                for (i, e) in cycle.iter().take(12).enumerate() {
+                    let sep = if i == 0 { ' ' } else { '>' };
+                    write!(f, "{sep}{e}")?;
+                }
+                if cycle.len() > 12 {
+                    write!(f, ">… ({} events)", cycle.len())?;
+                }
+                Ok(())
+            }
+            Violation::OverwriteHazard { rank, step, lo, hi, view_step } => {
+                write!(
+                    f,
+                    "rank {rank} step {step}: overwrites y[{lo}..{hi}] while the view sent at \
+                     step {view_step} may still be in flight"
+                )
+            }
+            Violation::NonExclusiveWrite { rank, step } => {
+                write!(f, "rank {rank} step {step}: write after ReplaceY (y is a borrowed view)")
+            }
+            Violation::FinalLength { rank, got, want } => {
+                write!(f, "rank {rank}: final vector length {got}, expected {want}")
+            }
+            Violation::ShapeOrder { rank, elem, detail } => {
+                write!(f, "rank {rank} element {elem}: {detail}")
+            }
+            Violation::ShapeDivergence { rank, elem } => {
+                write!(f, "rank {rank} element {elem}: reduction tree differs from rank 0")
+            }
+            Violation::OracleDivergence { rank, elem } => {
+                write!(
+                    f,
+                    "rank {rank} element {elem}: compiled reduction order differs from the \
+                     blocking oracle"
+                )
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shape witness element
+// ---------------------------------------------------------------------
+
+/// Fingerprint identity (absorbed by [`fp_combine`] on either side).
+const FP_IDENT: u64 = 0x1dea_0000_0000_0001;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Non-commutative, non-associative hash mix: equal fingerprints mean
+/// equal combine *trees* (same leaves, same order, same parenthesization),
+/// up to 2⁻⁶⁴ collisions.
+fn fp_combine(a: u64, b: u64) -> u64 {
+    if a == FP_IDENT {
+        return b;
+    }
+    if b == FP_IDENT {
+        return a;
+    }
+    splitmix64(a ^ b.rotate_left(17))
+}
+
+/// The symbolic element the verifier reduces instead of numbers: a rank
+/// interval ([`Span`] — poisons on out-of-order concatenation), a leaf
+/// coverage bitmask (ranks 0..64), a leaf count, and a combine-tree
+/// fingerprint. Usable both by the static lockstep simulation and by
+/// real blocking runs (it implements [`Elem`], and [`ShapeOp`] is an
+/// ordinary [`ReduceOp`]), which is what lets [`verify_compiled`]
+/// compare the compiled order against the blocking oracle's.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShapeElem {
+    pub span: Span,
+    pub cover: u64,
+    pub count: u32,
+    pub fp: u64,
+}
+
+impl ShapeElem {
+    /// The identity of [`ShapeOp`] (also the buffer fill value).
+    pub const IDENTITY: ShapeElem =
+        ShapeElem { span: Span::IDENT, cover: 0, count: 0, fp: FP_IDENT };
+
+    /// The leaf contributed by `rank`'s input vector.
+    pub fn leaf(rank: usize) -> ShapeElem {
+        ShapeElem {
+            span: Span::rank(rank as u32),
+            cover: if rank < 64 { 1u64 << rank } else { 0 },
+            count: 1,
+            fp: splitmix64(0x5eed ^ ((rank as u64) << 1)),
+        }
+    }
+}
+
+impl Elem for ShapeElem {
+    const BYTES: usize = 32;
+    const DTYPE: &'static str = "shape";
+    fn zero() -> Self {
+        ShapeElem::IDENTITY
+    }
+}
+
+/// The reduction operator over [`ShapeElem`]: span concatenation,
+/// coverage union, leaf count sum, fingerprint mix. Associative only in
+/// the components the checks rely on being associative (span, cover,
+/// count); the fingerprint is deliberately *not* associative — it is a
+/// tree witness, not a value.
+pub struct ShapeOp;
+
+impl ReduceOp<ShapeElem> for ShapeOp {
+    fn identity(&self) -> ShapeElem {
+        ShapeElem::IDENTITY
+    }
+
+    fn combine(&self, a: ShapeElem, b: ShapeElem) -> ShapeElem {
+        ShapeElem {
+            span: a.span.concat(b.span),
+            cover: a.cover | b.cover,
+            count: a.count.wrapping_add(b.count),
+            fp: fp_combine(a.fp, b.fp),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "shape"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Call shapes and the happens-before event graph
+// ---------------------------------------------------------------------
+
+/// The communication silhouette of one step or traced call.
+#[derive(Clone, Copy, Debug)]
+struct CallShape {
+    send_to: Option<usize>,
+    recv_from: Option<usize>,
+}
+
+fn step_shape(s: &Step) -> CallShape {
+    match *s {
+        Step::SendRecv { peer, .. } => CallShape { send_to: Some(peer), recv_from: Some(peer) },
+        Step::SendRecvPair { send_to, recv_from, .. } => {
+            CallShape { send_to: Some(send_to), recv_from: Some(recv_from) }
+        }
+        Step::Send { peer, .. } => CallShape { send_to: Some(peer), recv_from: None },
+        Step::Recv { peer, .. } => CallShape { send_to: None, recv_from: Some(peer) },
+    }
+}
+
+/// What a step sends, if anything.
+fn step_send(s: Step) -> Option<(usize, Src)> {
+    match s {
+        Step::SendRecv { peer, send, .. } => Some((peer, send)),
+        Step::SendRecvPair { send_to, send, .. } => Some((send_to, send)),
+        Step::Send { peer, send } => Some((peer, send)),
+        Step::Recv { .. } => None,
+    }
+}
+
+/// What a step receives, if anything.
+fn step_recv(s: Step) -> Option<(usize, Sink)> {
+    match s {
+        Step::SendRecv { peer, sink, .. } => Some((peer, sink)),
+        Step::SendRecvPair { recv_from, sink, .. } => Some((recv_from, sink)),
+        Step::Recv { peer, sink } => Some((peer, sink)),
+        Step::Send { .. } => None,
+    }
+}
+
+/// Rank/peer sanity: fields consistent, peers in range, no self-messages.
+fn check_world(calls: &[Vec<CallShape>]) -> Vec<Violation> {
+    let p = calls.len();
+    let mut viol = Vec::new();
+    for (r, list) in calls.iter().enumerate() {
+        for (i, c) in list.iter().enumerate() {
+            for peer in [c.send_to, c.recv_from].into_iter().flatten() {
+                if peer == r {
+                    viol.push(Violation::SelfMessage { rank: r, step: i });
+                } else if peer >= p {
+                    viol.push(Violation::World {
+                        detail: format!("rank {r} step {i}: peer {peer} out of range for p={p}"),
+                    });
+                }
+            }
+        }
+    }
+    viol
+}
+
+/// Per-directed-edge send/recv count matching.
+fn check_matching(calls: &[Vec<CallShape>]) -> Vec<Violation> {
+    let mut edges: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
+    for (r, list) in calls.iter().enumerate() {
+        for c in list {
+            if let Some(to) = c.send_to {
+                edges.entry((r, to)).or_insert((0, 0)).0 += 1;
+            }
+            if let Some(from) = c.recv_from {
+                edges.entry((from, r)).or_insert((0, 0)).1 += 1;
+            }
+        }
+    }
+    edges
+        .into_iter()
+        .filter(|&(_, (s, v))| s != v)
+        .map(|((src, dst), (sends, recvs))| Violation::CountMismatch { src, dst, sends, recvs })
+        .collect()
+}
+
+/// The flattened event set: ids, program order, FIFO message pairing.
+struct Events {
+    /// Event metadata by id.
+    info: Vec<EventRef>,
+    /// Event ids per rank, in program order.
+    rank_events: Vec<Vec<usize>>,
+    /// Send event id of `[rank][call]`, if the call sends.
+    send_ev: Vec<Vec<Option<usize>>>,
+    /// Recv event id of `[rank][call]`, if the call receives.
+    recv_ev: Vec<Vec<Option<usize>>>,
+    /// Per directed edge: `(send_event, recv_event)` per message, in
+    /// FIFO order. Only built once counts match.
+    edge_msgs: BTreeMap<(usize, usize), Vec<(usize, usize)>>,
+    /// Total message count.
+    messages: usize,
+}
+
+/// Number events (send half before recv half within a step) and pair
+/// the i-th send on each edge with the i-th receive from that peer.
+/// Requires matching counts (checked by the caller).
+fn build_events(calls: &[Vec<CallShape>]) -> Events {
+    let p = calls.len();
+    let mut info = Vec::new();
+    let mut rank_events = vec![Vec::new(); p];
+    let mut send_ev = vec![Vec::new(); p];
+    let mut recv_ev = vec![Vec::new(); p];
+    let mut edge_sends: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    let mut edge_recvs: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (r, list) in calls.iter().enumerate() {
+        for (i, c) in list.iter().enumerate() {
+            let mut se = None;
+            let mut re = None;
+            if let Some(to) = c.send_to {
+                let id = info.len();
+                info.push(EventRef { rank: r, step: i, half: Half::Send });
+                rank_events[r].push(id);
+                edge_sends.entry((r, to)).or_default().push(id);
+                se = Some(id);
+            }
+            if let Some(from) = c.recv_from {
+                let id = info.len();
+                info.push(EventRef { rank: r, step: i, half: Half::Recv });
+                rank_events[r].push(id);
+                edge_recvs.entry((from, r)).or_default().push(id);
+                re = Some(id);
+            }
+            send_ev[r].push(se);
+            recv_ev[r].push(re);
+        }
+    }
+    let mut edge_msgs = BTreeMap::new();
+    let mut messages = 0;
+    for (edge, sends) in edge_sends {
+        let recvs = edge_recvs.remove(&edge).unwrap_or_default();
+        debug_assert_eq!(sends.len(), recvs.len(), "caller must check matching first");
+        messages += sends.len();
+        edge_msgs.insert(edge, sends.into_iter().zip(recvs).collect());
+    }
+    Events { info, rank_events, send_ev, recv_ev, edge_msgs, messages }
+}
+
+/// Successor/predecessor adjacency of the happens-before graph at the
+/// given edge-queue `capacity` (0 = unbounded). Edges:
+/// program order within a rank; message `send → recv`; and, bounded
+/// regime, `recv(msg j−k) → send(msg j)` per edge — the `VirtQueue`
+/// admission rule of the progress core.
+fn graph_edges(ev: &Events, capacity: usize) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let n = ev.info.len();
+    let mut succs = vec![Vec::new(); n];
+    let mut preds = vec![Vec::new(); n];
+    let mut push = |a: usize, b: usize| {
+        succs[a].push(b);
+        preds[b].push(a);
+    };
+    for list in &ev.rank_events {
+        for w in list.windows(2) {
+            push(w[0], w[1]);
+        }
+    }
+    for msgs in ev.edge_msgs.values() {
+        for &(s, r) in msgs {
+            push(s, r);
+        }
+        if capacity > 0 {
+            for j in capacity..msgs.len() {
+                push(msgs[j - capacity].1, msgs[j].0);
+            }
+        }
+    }
+    (succs, preds)
+}
+
+/// Kahn topological sort: `Ok(order)` or `Err(cycle)` with the cycle's
+/// events in happens-before direction.
+fn topo_sort(
+    succs: &[Vec<usize>],
+    preds: &[Vec<usize>],
+) -> std::result::Result<Vec<usize>, Vec<usize>> {
+    let n = succs.len();
+    let mut indeg: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut queue: VecDeque<usize> = (0..n).filter(|&e| indeg[e] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(e) = queue.pop_front() {
+        order.push(e);
+        for &s in &succs[e] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push_back(s);
+            }
+        }
+    }
+    if order.len() == n {
+        return Ok(order);
+    }
+    // every unprocessed event still has an unprocessed predecessor:
+    // walk predecessors until one repeats, then cut the loop out
+    let start = (0..n).find(|&e| indeg[e] > 0).expect("cycle exists when Kahn is incomplete");
+    let mut seen_at: HashMap<usize, usize> = HashMap::new();
+    let mut path = Vec::new();
+    let mut cur = start;
+    loop {
+        if let Some(&i) = seen_at.get(&cur) {
+            let mut cycle = path.split_off(i);
+            cycle.reverse(); // predecessor walk → happens-before direction
+            return Err(cycle);
+        }
+        seen_at.insert(cur, path.len());
+        path.push(cur);
+        cur = *preds[cur]
+            .iter()
+            .find(|&&q| indeg[q] > 0)
+            .expect("unprocessed event keeps an unprocessed predecessor");
+    }
+}
+
+/// Vector clocks over the unbounded graph, in topological order.
+/// `vc[e][q]` = 1-based index of the latest event of rank `q` that
+/// happens before (or is) `e`; 0 if none.
+fn vector_clocks(ev: &Events, preds: &[Vec<usize>], topo: &[usize]) -> Vec<Vec<u32>> {
+    let p = ev.rank_events.len();
+    let mut pos = vec![0u32; ev.info.len()];
+    for list in &ev.rank_events {
+        for (i, &e) in list.iter().enumerate() {
+            pos[e] = i as u32 + 1;
+        }
+    }
+    let mut vc = vec![Vec::new(); ev.info.len()];
+    for &e in topo {
+        let mut acc = vec![0u32; p];
+        for &pe in &preds[e] {
+            for (a, &b) in acc.iter_mut().zip(&vc[pe]) {
+                *a = (*a).max(b);
+            }
+        }
+        let r = ev.info[e].rank;
+        acc[r] = acc[r].max(pos[e]);
+        vc[e] = acc;
+    }
+    vc
+}
+
+// ---------------------------------------------------------------------
+// Symbolic lockstep simulation (matching lengths, stash protocol, shapes)
+// ---------------------------------------------------------------------
+
+type Mail = HashMap<(usize, usize), VecDeque<Vec<ShapeElem>>>;
+
+struct SimRank {
+    y: Vec<ShapeElem>,
+    stash: Option<Vec<ShapeElem>>,
+    replaced: bool,
+}
+
+fn materialize(
+    y: &[ShapeElem],
+    src: Src,
+    rank: usize,
+    step: usize,
+    viol: &mut Vec<Violation>,
+) -> Vec<ShapeElem> {
+    match src {
+        Src::Void => Vec::new(),
+        Src::Block { lo, hi } | Src::OwnedBlock { lo, hi } => {
+            if lo > hi || hi > y.len() {
+                viol.push(Violation::LengthMismatch {
+                    rank,
+                    step,
+                    detail: format!(
+                        "send range {lo}..{hi} out of bounds for y of length {}",
+                        y.len()
+                    ),
+                });
+                let lo = lo.min(y.len());
+                let hi = hi.clamp(lo, y.len());
+                y[lo..hi].to_vec()
+            } else {
+                y[lo..hi].to_vec()
+            }
+        }
+        Src::Snapshot | Src::CloneY => y.to_vec(),
+    }
+}
+
+fn apply_sink(
+    st: &mut SimRank,
+    sink: Sink,
+    t: Vec<ShapeElem>,
+    rank: usize,
+    step: usize,
+    viol: &mut Vec<Violation>,
+) {
+    let op = ShapeOp;
+    let n = t.len();
+    let bounds_ok = |lo: usize, st: &SimRank, viol: &mut Vec<Violation>| -> bool {
+        if lo + n > st.y.len() {
+            viol.push(Violation::LengthMismatch {
+                rank,
+                step,
+                detail: format!(
+                    "sink of {n} element(s) at offset {lo} overflows y of length {}",
+                    st.y.len()
+                ),
+            });
+            false
+        } else {
+            true
+        }
+    };
+    let writes_y = matches!(
+        sink,
+        Sink::WriteAt { .. }
+            | Sink::ReduceAt { .. }
+            | Sink::Reduce3At { .. }
+            | Sink::ReduceAll { .. }
+    );
+    if st.replaced && writes_y {
+        viol.push(Violation::NonExclusiveWrite { rank, step });
+    }
+    match sink {
+        Sink::Discard => {}
+        Sink::WriteAt { lo } => {
+            if bounds_ok(lo, st, viol) {
+                st.y[lo..lo + n].copy_from_slice(&t);
+            }
+        }
+        Sink::ReduceAt { lo, side } => {
+            if bounds_ok(lo, st, viol) {
+                op.reduce_into(&mut st.y[lo..lo + n], &t, side);
+            }
+        }
+        Sink::StashCharged => {
+            if st.stash.is_some() {
+                viol.push(Violation::StashProtocol {
+                    rank,
+                    step,
+                    detail: "stash overwritten before Reduce3At consumed it",
+                });
+            }
+            st.stash = Some(t);
+        }
+        Sink::Reduce3At { lo } => match st.stash.take() {
+            None => {
+                viol.push(Violation::StashProtocol {
+                    rank,
+                    step,
+                    detail: "Reduce3At with no stashed block",
+                });
+            }
+            Some(t0) => {
+                if t0.len() != n {
+                    viol.push(Violation::LengthMismatch {
+                        rank,
+                        step,
+                        detail: format!(
+                            "fused reduce lengths differ: stash {} vs incoming {n}",
+                            t0.len()
+                        ),
+                    });
+                } else if bounds_ok(lo, st, viol) {
+                    op.reduce_into3(&mut st.y[lo..lo + n], &t0, &t);
+                }
+            }
+        },
+        Sink::ReduceAll { side } => {
+            if n != st.y.len() {
+                viol.push(Violation::LengthMismatch {
+                    rank,
+                    step,
+                    detail: format!(
+                        "ReduceAll of {n} element(s) against y of length {}",
+                        st.y.len()
+                    ),
+                });
+            } else {
+                op.reduce_into(&mut st.y, &t, side);
+            }
+        }
+        Sink::ReplaceY => {
+            st.y = t;
+            st.replaced = true;
+        }
+    }
+}
+
+/// Single-threaded lockstep run of the schedules over [`ShapeElem`],
+/// mirroring `expected_events`' half-step loop. Returns the final
+/// symbolic vectors; length/stash violations are recorded as they
+/// occur. The caller must have proven unbounded acyclicity first, so
+/// the loop cannot stall (a stall is reported defensively anyway).
+fn simulate(scheds: &[Schedule], m: usize, viol: &mut Vec<Violation>) -> Vec<Vec<ShapeElem>> {
+    let p = scheds.len();
+    let mut ranks: Vec<SimRank> = (0..p)
+        .map(|r| SimRank { y: vec![ShapeElem::leaf(r); m], stash: None, replaced: false })
+        .collect();
+    let mut pc = vec![0usize; p];
+    let mut sent = vec![false; p];
+    let mut mail: Mail = HashMap::new();
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..p {
+            let steps = &scheds[r].steps;
+            if pc[r] >= steps.len() {
+                continue;
+            }
+            all_done = false;
+            let step = steps[pc[r]];
+            if !sent[r] {
+                if let Some((to, src)) = step_send(step) {
+                    let payload = materialize(&ranks[r].y, src, r, pc[r], viol);
+                    mail.entry((r, to)).or_default().push_back(payload);
+                }
+                sent[r] = true;
+                progressed = true;
+            }
+            let (from, sink) = match step_recv(step) {
+                Some(x) => x,
+                None => {
+                    pc[r] += 1;
+                    sent[r] = false;
+                    continue;
+                }
+            };
+            if let Some(t) = mail.get_mut(&(from, r)).and_then(|q| q.pop_front()) {
+                apply_sink(&mut ranks[r], sink, t, r, pc[r], viol);
+                pc[r] += 1;
+                sent[r] = false;
+                progressed = true;
+            }
+        }
+        if all_done {
+            break;
+        }
+        if !progressed {
+            viol.push(Violation::World {
+                detail: "internal: lockstep simulation stalled after acyclicity was proven"
+                    .to_string(),
+            });
+            break;
+        }
+    }
+    for (r, st) in ranks.iter().enumerate() {
+        if st.stash.is_some() {
+            viol.push(Violation::StashProtocol {
+                rank: r,
+                step: scheds[r].steps.len(),
+                detail: "stashed block never consumed by Reduce3At",
+            });
+        }
+    }
+    ranks.into_iter().map(|st| st.y).collect()
+}
+
+// ---------------------------------------------------------------------
+// COW-hazard analysis (Pass C)
+// ---------------------------------------------------------------------
+
+/// Wire element count of a source (same rule as `expected_events`).
+fn src_elems(s: Src, m: usize) -> usize {
+    match s {
+        Src::Void => 0,
+        Src::Block { lo, hi } | Src::OwnedBlock { lo, hi } => hi.saturating_sub(lo),
+        Src::Snapshot | Src::CloneY => m,
+    }
+}
+
+/// Half-open write range of a sink receiving `n` elements, if it
+/// mutates `y` in place (`ReplaceY` swaps buffers — the old slab is
+/// released, not written, so it is not a hazard source).
+fn sink_write_range(sink: Sink, n: usize, m: usize) -> Option<(usize, usize)> {
+    match sink {
+        Sink::WriteAt { lo } | Sink::ReduceAt { lo, .. } | Sink::Reduce3At { lo } => {
+            Some((lo, lo + n))
+        }
+        Sink::ReduceAll { .. } => Some((0, m)),
+        Sink::Discard | Sink::StashCharged | Sink::ReplaceY => None,
+    }
+}
+
+/// Prove no rank overwrites a range of `y` while a zero-copy view of it
+/// is still in flight. Views are [`Src::Block`] and [`Src::CloneY`]
+/// sends; a view is consumed at the receiver's recv-completion event —
+/// deferred to the following `Reduce3At` when the sink stashes, never
+/// when the sink is `ReplaceY` (the receiver keeps the view as its
+/// working vector). Every program-order-later overlapping write on the
+/// sender must be ordered after that consumption in the *unbounded*
+/// happens-before graph (bounded capacities only add ordering, so this
+/// is sound for every capacity).
+fn check_hazards(
+    scheds: &[Schedule],
+    m: usize,
+    ev: &Events,
+    preds: &[Vec<usize>],
+    topo: &[usize],
+    viol: &mut Vec<Violation>,
+) {
+    let vc = vector_clocks(ev, preds, topo);
+    let mut pos = vec![0u32; ev.info.len()];
+    for list in &ev.rank_events {
+        for (i, &e) in list.iter().enumerate() {
+            pos[e] = i as u32 + 1;
+        }
+    }
+    // message pairing, both directions
+    let mut send_of_recv: HashMap<usize, usize> = HashMap::new();
+    let mut recv_of_send: HashMap<usize, usize> = HashMap::new();
+    for msgs in ev.edge_msgs.values() {
+        for &(s, r) in msgs {
+            send_of_recv.insert(r, s);
+            recv_of_send.insert(s, r);
+        }
+    }
+    // receiver-side consumption event of the message arriving at recv
+    // event `re` on rank `q`, call `c`
+    let consumption = |q: usize, c: usize, re: usize| -> Option<usize> {
+        let sink = step_recv(scheds[q].steps[c]).map(|(_, sink)| sink);
+        match sink {
+            Some(Sink::ReplaceY) => None,
+            Some(Sink::StashCharged) => {
+                let next = scheds[q].steps[c + 1..].iter().position(|s| {
+                    matches!(step_recv(*s), Some((_, Sink::Reduce3At { .. })))
+                });
+                next.and_then(|off| ev.recv_ev[q][c + 1 + off])
+            }
+            _ => Some(re),
+        }
+    };
+    for (r, sched) in scheds.iter().enumerate() {
+        // in-flight views this rank has sent: (call, lo, hi, consume_ev)
+        let mut leases: Vec<(usize, usize, usize, Option<usize>)> = Vec::new();
+        for (c, step) in sched.steps.iter().enumerate() {
+            if let Some((_, src)) = step_send(*step) {
+                let range = match src {
+                    Src::Block { lo, hi } if hi > lo => Some((lo, hi)),
+                    Src::CloneY if m > 0 => Some((0, m)),
+                    _ => None,
+                };
+                if let Some((lo, hi)) = range {
+                    let se = ev.send_ev[r][c].expect("sending call has a send event");
+                    let re = recv_of_send[&se];
+                    let q = ev.info[re].rank;
+                    let consume = consumption(q, ev.info[re].step, re);
+                    leases.push((c, lo, hi, consume));
+                }
+            }
+            if let Some((_, sink)) = step_recv(*step) {
+                let re = ev.recv_ev[r][c].expect("receiving call has a recv event");
+                let n = send_of_recv
+                    .get(&re)
+                    .map(|&se| {
+                        let s = &scheds[ev.info[se].rank];
+                        step_send(s.steps[ev.info[se].step])
+                            .map(|(_, src)| src_elems(src, m))
+                            .unwrap_or(0)
+                    })
+                    .unwrap_or(0);
+                if let Some((wlo, whi)) = sink_write_range(sink, n, m) {
+                    for &(vc_call, lo, hi, consume) in &leases {
+                        if wlo < hi && lo < whi {
+                            let safe = match consume {
+                                None => false,
+                                Some(ce) => {
+                                    let q = ev.info[ce].rank;
+                                    vc[re][q] >= pos[ce]
+                                }
+                            };
+                            if !safe {
+                                viol.push(Violation::OverwriteHazard {
+                                    rank: r,
+                                    step: c,
+                                    lo: wlo,
+                                    hi: whi,
+                                    view_step: vc_call,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shape checks
+// ---------------------------------------------------------------------
+
+/// Check final [`ShapeElem`] vectors: every element of every rank must
+/// combine each of the `p` leaves exactly once (coverage mask + count),
+/// in ascending rank order when `require_rank_order` (contiguous
+/// [`Span`]), and every rank must have built the *same* combine tree
+/// (fingerprint equality against rank 0). The coverage mask saturates
+/// at 64 ranks; the count and span checks hold for any `p`.
+pub fn check_shapes(
+    finals: &[Vec<ShapeElem>],
+    p: usize,
+    m: usize,
+    require_rank_order: bool,
+) -> Vec<Violation> {
+    let mut viol = Vec::new();
+    let full = match p {
+        0..=63 => (1u64 << p) - 1,
+        64 => u64::MAX,
+        _ => 0,
+    };
+    for (r, y) in finals.iter().enumerate() {
+        if y.len() != m {
+            viol.push(Violation::FinalLength { rank: r, got: y.len(), want: m });
+            continue;
+        }
+        for (i, e) in y.iter().enumerate() {
+            let bad = if e.count as usize != p {
+                Some(format!("element combines {} leaves, expected {p}", e.count))
+            } else if p <= 64 && e.cover != full {
+                Some(format!("leaf coverage mask {:#x}, expected {full:#x}", e.cover))
+            } else if require_rank_order && e.span != Span::of(0, p as u32 - 1) {
+                Some(format!(
+                    "reduction span {:?}, expected the contiguous rank interval [0, {}]",
+                    e.span,
+                    p - 1
+                ))
+            } else {
+                None
+            };
+            if let Some(detail) = bad {
+                viol.push(Violation::ShapeOrder { rank: r, elem: i, detail });
+                break; // one diagnostic per rank is enough
+            }
+        }
+    }
+    for r in 1..finals.len() {
+        if finals[r].len() != finals[0].len() {
+            continue; // already reported as FinalLength
+        }
+        if let Some(i) = (0..finals[0].len()).find(|&i| finals[r][i] != finals[0][i]) {
+            viol.push(Violation::ShapeDivergence { rank: r, elem: i });
+        }
+    }
+    viol
+}
+
+fn compare_to_oracle(finals: &[Vec<ShapeElem>], oracle: &[Vec<ShapeElem>]) -> Vec<Violation> {
+    let mut viol = Vec::new();
+    for (r, (a, b)) in finals.iter().zip(oracle).enumerate() {
+        if a.len() != b.len() {
+            viol.push(Violation::FinalLength { rank: r, got: a.len(), want: b.len() });
+            continue;
+        }
+        if let Some(i) = (0..a.len()).find(|&i| a[i] != b[i]) {
+            viol.push(Violation::OracleDivergence { rank: r, elem: i });
+        }
+    }
+    viol
+}
+
+// ---------------------------------------------------------------------
+// Top-level passes
+// ---------------------------------------------------------------------
+
+/// Knobs of [`verify_schedules`].
+#[derive(Clone, Debug)]
+pub struct VerifyOptions {
+    /// Bounded edge-queue capacities to prove deadlock-free, besides
+    /// the always-checked unbounded graph. Capacity 1 implies every
+    /// larger capacity; 1/2/3 are checked explicitly because they are
+    /// the `CostModel::Congested` presets.
+    pub capacities: Vec<usize>,
+    /// Require ascending rank order (contiguous spans) in the result —
+    /// true for every compiled algorithm except ring, which reduces
+    /// each segment in rotated ring order and is commutative-only.
+    pub require_rank_order: bool,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions { capacities: vec![1, 2, 3], require_rank_order: true }
+    }
+}
+
+/// The result of one verification pass.
+#[derive(Clone, Debug)]
+pub struct VerifyOutcome {
+    /// Hard failures — empty means every checked property is proven.
+    pub violations: Vec<Violation>,
+    /// Advisory findings (trace mode demotes bounded-capacity cycles
+    /// here, since the threaded engine never runs against bounded
+    /// queues); always empty for compiled schedules.
+    pub warnings: Vec<Violation>,
+    /// Capacities whose happens-before graph is acyclic (0 = unbounded).
+    pub capacities_proven: Vec<usize>,
+    /// Total messages exchanged.
+    pub messages: usize,
+    /// Total steps (or traced calls) across ranks.
+    pub steps_total: usize,
+    /// Final symbolic vectors of the lockstep simulation (compiled mode
+    /// only) — the left-hand side of the blocking-oracle comparison.
+    pub finals: Option<Vec<Vec<ShapeElem>>>,
+}
+
+impl VerifyOutcome {
+    fn bail(violations: Vec<Violation>, steps_total: usize) -> VerifyOutcome {
+        VerifyOutcome {
+            violations,
+            warnings: Vec::new(),
+            capacities_proven: Vec::new(),
+            messages: 0,
+            steps_total,
+            finals: None,
+        }
+    }
+
+    /// True when no hard violation was found.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Statically verify a full world of per-rank schedules for a payload
+/// of `m` elements: matching, deadlock-freedom (unbounded plus each
+/// requested capacity), buffer/lease safety, and reduction shape. See
+/// the module docs for what each check proves.
+pub fn verify_schedules(scheds: &[Schedule], m: usize, opts: &VerifyOptions) -> VerifyOutcome {
+    let p = scheds.len();
+    let steps_total = scheds.iter().map(|s| s.steps.len()).sum();
+    if p == 0 {
+        return VerifyOutcome::bail(
+            vec![Violation::World { detail: "empty schedule set".to_string() }],
+            0,
+        );
+    }
+    for (r, s) in scheds.iter().enumerate() {
+        if s.rank != r || s.size != p {
+            return VerifyOutcome::bail(
+                vec![Violation::World {
+                    detail: format!(
+                        "schedule at index {r} claims rank {} of {} in a world of {p}",
+                        s.rank, s.size
+                    ),
+                }],
+                steps_total,
+            );
+        }
+    }
+    let calls: Vec<Vec<CallShape>> =
+        scheds.iter().map(|s| s.steps.iter().map(step_shape).collect()).collect();
+    let world = check_world(&calls);
+    if !world.is_empty() {
+        return VerifyOutcome::bail(world, steps_total);
+    }
+    let matching = check_matching(&calls);
+    if !matching.is_empty() {
+        return VerifyOutcome::bail(matching, steps_total);
+    }
+    let ev = build_events(&calls);
+    let mut viol = Vec::new();
+    let (succ0, pred0) = graph_edges(&ev, 0);
+    let topo0 = match topo_sort(&succ0, &pred0) {
+        Ok(order) => order,
+        Err(cycle) => {
+            let cycle = cycle.into_iter().map(|e| ev.info[e]).collect();
+            let mut out = VerifyOutcome::bail(
+                vec![Violation::Deadlock { capacity: 0, cycle }],
+                steps_total,
+            );
+            out.messages = ev.messages;
+            return out;
+        }
+    };
+    let mut proven = vec![0usize];
+    for &k in &opts.capacities {
+        if k == 0 {
+            continue;
+        }
+        let (succs, preds) = graph_edges(&ev, k);
+        match topo_sort(&succs, &preds) {
+            Ok(_) => proven.push(k),
+            Err(cycle) => {
+                let cycle = cycle.into_iter().map(|e| ev.info[e]).collect();
+                viol.push(Violation::Deadlock { capacity: k, cycle });
+            }
+        }
+    }
+    let finals = simulate(scheds, m, &mut viol);
+    check_hazards(scheds, m, &ev, &pred0, &topo0, &mut viol);
+    viol.extend(check_shapes(&finals, p, m, opts.require_rank_order));
+    VerifyOutcome {
+        violations: viol,
+        warnings: Vec::new(),
+        capacities_proven: proven,
+        messages: ev.messages,
+        steps_total,
+        finals: Some(finals),
+    }
+}
+
+/// Run the matching and happens-before checks over captured per-rank
+/// [`TraceEvent`] streams (receive sizes are not logged, so matching is
+/// count-only; shapes are checked separately on the run's results).
+/// Bounded-capacity cycles are *warnings* here — see the module docs.
+pub fn check_trace(traces: &[Vec<TraceEvent>], capacities: &[usize]) -> VerifyOutcome {
+    let calls: Vec<Vec<CallShape>> = traces
+        .iter()
+        .map(|events| {
+            events
+                .iter()
+                .filter_map(|e| match *e {
+                    TraceEvent::SendRecv { peer, .. } => {
+                        Some(CallShape { send_to: Some(peer), recv_from: Some(peer) })
+                    }
+                    TraceEvent::SendRecvPair { send_to, recv_from, .. } => {
+                        Some(CallShape { send_to: Some(send_to), recv_from: Some(recv_from) })
+                    }
+                    TraceEvent::Send { peer, .. } => {
+                        Some(CallShape { send_to: Some(peer), recv_from: None })
+                    }
+                    TraceEvent::Recv { peer } => {
+                        Some(CallShape { send_to: None, recv_from: Some(peer) })
+                    }
+                    TraceEvent::Charge { .. } => None,
+                })
+                .collect()
+        })
+        .collect();
+    let steps_total = calls.iter().map(Vec::len).sum();
+    let world = check_world(&calls);
+    if !world.is_empty() {
+        return VerifyOutcome::bail(world, steps_total);
+    }
+    let matching = check_matching(&calls);
+    if !matching.is_empty() {
+        return VerifyOutcome::bail(matching, steps_total);
+    }
+    let ev = build_events(&calls);
+    let (succ0, pred0) = graph_edges(&ev, 0);
+    if let Err(cycle) = topo_sort(&succ0, &pred0) {
+        let cycle = cycle.into_iter().map(|e| ev.info[e]).collect();
+        let mut out =
+            VerifyOutcome::bail(vec![Violation::Deadlock { capacity: 0, cycle }], steps_total);
+        out.messages = ev.messages;
+        return out;
+    }
+    let mut proven = vec![0usize];
+    let mut warnings = Vec::new();
+    for &k in capacities {
+        if k == 0 {
+            continue;
+        }
+        let (succs, preds) = graph_edges(&ev, k);
+        match topo_sort(&succs, &preds) {
+            Ok(_) => proven.push(k),
+            Err(cycle) => {
+                let cycle = cycle.into_iter().map(|e| ev.info[e]).collect();
+                warnings.push(Violation::Deadlock { capacity: k, cycle });
+            }
+        }
+    }
+    VerifyOutcome {
+        violations: Vec::new(),
+        warnings,
+        capacities_proven: proven,
+        messages: ev.messages,
+        steps_total,
+        finals: None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Compile every rank of a world, or `Error::Config` if the algorithm
+/// is not statically compiled.
+pub fn compile_world(algo: AlgoKind, p: usize, blocks: &Blocks) -> Result<Vec<Schedule>> {
+    (0..p)
+        .map(|r| {
+            compile(algo, r, p, blocks).ok_or_else(|| {
+                Error::Config(format!("{} does not compile to schedules (p={p})", algo.name()))
+            })
+        })
+        .collect()
+}
+
+/// Verify one compiled `(algo, p, blocks)` point and emit its
+/// certificate. With `with_oracle`, additionally run the *blocking*
+/// implementation over [`ShapeElem`] on a real thread world and require
+/// its combine trees to match the static simulation's exactly — this is
+/// the "matches the blocking oracle's order" half of property 4 and is
+/// only skipped for sweeps where spawning p threads per point would
+/// dominate (the static checks do not need threads).
+pub fn verify_compiled(
+    algo: AlgoKind,
+    p: usize,
+    blocks: &Blocks,
+    capacities: &[usize],
+    with_oracle: bool,
+) -> Result<ScheduleCert> {
+    let scheds = compile_world(algo, p, blocks)?;
+    let opts = VerifyOptions {
+        capacities: capacities.to_vec(),
+        require_rank_order: algo.order_preserving(),
+    };
+    let mut out = verify_schedules(&scheds, blocks.total(), &opts);
+    let mut oracle_checked = false;
+    if with_oracle && out.ok() {
+        if let Some(finals) = &out.finals {
+            let oracle = oracle_shapes(algo, p, blocks)?;
+            let diffs = compare_to_oracle(finals, &oracle);
+            out.violations.extend(diffs);
+            oracle_checked = true;
+        }
+    }
+    Ok(ScheduleCert {
+        algo: algo.name(),
+        mode: "compiled",
+        p,
+        m: blocks.total(),
+        blocks: blocks.count(),
+        steps_total: out.steps_total,
+        messages: out.messages,
+        capacities_proven: out.capacities_proven,
+        oracle_checked,
+        violations: out.violations,
+        warnings: out.warnings,
+    })
+}
+
+/// Final [`ShapeElem`] vectors of the *blocking* implementation on a
+/// real `p`-thread world — the oracle side of the order comparison.
+pub fn oracle_shapes(algo: AlgoKind, p: usize, blocks: &Blocks) -> Result<Vec<Vec<ShapeElem>>> {
+    let blocks = *blocks;
+    let report = run_world::<ShapeElem, _, _>(p, Timing::Real, move |comm| {
+        let x = DataBuf::real(vec![ShapeElem::leaf(comm.rank()); blocks.total()]);
+        let y = crate::collectives::allreduce(algo, comm, x, &ShapeOp, &blocks)?;
+        y.into_vec()
+    })?;
+    Ok(report.results)
+}
+
+/// Whether a traced run of `algo` over `m` [`ShapeElem`]s should
+/// produce contiguous rank spans. The count-based switcher takes the
+/// ring branch above its byte threshold, and the ring reduces segments
+/// in rotated order.
+fn trace_rank_order_expected(algo: AlgoKind, m: usize) -> bool {
+    use crate::collectives::native_switch::{native_branch, NativeBranch};
+    match algo {
+        AlgoKind::NativeSwitch => {
+            native_branch(m * ShapeElem::BYTES) == NativeBranch::RecursiveDoubling
+        }
+        _ => algo.order_preserving(),
+    }
+}
+
+/// Trace-check an uncompiled algorithm: run the blocking implementation
+/// over [`ShapeElem`] under [`TraceComm`] on a real thread world, then
+/// feed the captured call streams through [`check_trace`] and the final
+/// vectors through [`check_shapes`]. See the module docs for what this
+/// does and does not prove compared to compiled-mode verification.
+pub fn verify_traced(
+    algo: AlgoKind,
+    p: usize,
+    blocks: &Blocks,
+    capacities: &[usize],
+) -> Result<ScheduleCert> {
+    let blocks_v = *blocks;
+    let report = run_world::<ShapeElem, _, _>(p, Timing::Real, move |comm| {
+        let x = DataBuf::real(vec![ShapeElem::leaf(comm.rank()); blocks_v.total()]);
+        let mut tc = TraceComm::new(comm);
+        let y = crate::collectives::allreduce(algo, &mut tc, x, &ShapeOp, &blocks_v)?;
+        let events = std::mem::take(&mut tc.events);
+        Ok((events, y.into_vec()?))
+    })?;
+    let (traces, finals): (Vec<Vec<TraceEvent>>, Vec<Vec<ShapeElem>>) =
+        report.results.into_iter().unzip();
+    let m = blocks.total();
+    let mut out = check_trace(&traces, capacities);
+    let require = trace_rank_order_expected(algo, m);
+    out.violations.extend(check_shapes(&finals, p, m, require));
+    Ok(ScheduleCert {
+        algo: algo.name(),
+        mode: "trace",
+        p,
+        m,
+        blocks: blocks.count(),
+        steps_total: out.steps_total,
+        messages: out.messages,
+        capacities_proven: out.capacities_proven,
+        oracle_checked: false,
+        violations: out.violations,
+        warnings: out.warnings,
+    })
+}
+
+type VerifiedKey = (&'static str, usize, usize, usize);
+
+static VERIFIED: OnceLock<Mutex<HashSet<VerifiedKey>>> = OnceLock::new();
+
+/// Verify a compiled world once per `(algo, p, m, blocks)` process-wide
+/// — the gate the nonblocking engine applies when
+/// `NbcConfig::verify_schedules` is set. Capacity 1 is the strongest
+/// bounded check (it implies every capacity ≥ 1), so it is the only one
+/// proven here. Failures are returned as `Error::Protocol` and are
+/// deterministic and SPMD-symmetric: every rank computes the same
+/// verdict from the same schedules. Only successes are cached.
+pub fn verify_world_cached(algo: AlgoKind, size: usize, blocks: &Blocks) -> Result<()> {
+    let key: VerifiedKey = (algo.name(), size, blocks.total(), blocks.count());
+    let cache = VERIFIED.get_or_init(|| Mutex::new(HashSet::new()));
+    if cache.lock().map(|g| g.contains(&key)).unwrap_or(false) {
+        return Ok(());
+    }
+    let scheds = compile_world(algo, size, blocks)?;
+    let opts = VerifyOptions {
+        capacities: vec![1],
+        require_rank_order: algo.order_preserving(),
+    };
+    let out = verify_schedules(&scheds, blocks.total(), &opts);
+    if let Some(v) = out.violations.first() {
+        return Err(Error::Protocol(format!(
+            "schedule verification failed for {} p={size}: {v}",
+            algo.name()
+        )));
+    }
+    if let Ok(mut guard) = cache.lock() {
+        guard.insert(key);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Certificates
+// ---------------------------------------------------------------------
+
+/// The verification certificate of one `(algo, p, blocks)` point —
+/// what `dpdr verify` prints and CI uploads as `SCHEDULE_CERTS.json`.
+#[derive(Clone, Debug)]
+pub struct ScheduleCert {
+    /// Algorithm name.
+    pub algo: &'static str,
+    /// `"compiled"` (static proof over schedules) or `"trace"`
+    /// (post-hoc check over a captured blocking run).
+    pub mode: &'static str,
+    pub p: usize,
+    pub m: usize,
+    /// Pipeline block count of the verified point.
+    pub blocks: usize,
+    /// Steps (compiled) or non-charge calls (trace) across all ranks.
+    pub steps_total: usize,
+    /// Messages exchanged.
+    pub messages: usize,
+    /// Edge-queue capacities proven deadlock-free (0 = unbounded).
+    pub capacities_proven: Vec<usize>,
+    /// Whether the blocking-oracle order comparison ran.
+    pub oracle_checked: bool,
+    /// Hard failures; empty means the point is certified.
+    pub violations: Vec<Violation>,
+    /// Advisory findings (trace mode only).
+    pub warnings: Vec<Violation>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_violations(list: &[Violation]) -> String {
+    let items: Vec<String> = list
+        .iter()
+        .map(|v| {
+            format!(
+                "{{\"kind\":\"{}\",\"detail\":\"{}\"}}",
+                v.kind(),
+                json_escape(&v.to_string())
+            )
+        })
+        .collect();
+    items.join(",")
+}
+
+impl ScheduleCert {
+    /// True when the point is certified (no hard violations).
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Hand-written JSON object (the crate has no serde by design).
+    pub fn to_json(&self) -> String {
+        let caps: Vec<String> = self.capacities_proven.iter().map(usize::to_string).collect();
+        format!(
+            "{{\"algo\":\"{}\",\"mode\":\"{}\",\"p\":{},\"m\":{},\"blocks\":{},\"steps\":{},\
+             \"messages\":{},\"capacities_proven\":[{}],\"oracle_checked\":{},\
+             \"violations\":[{}],\"warnings\":[{}]}}",
+            self.algo,
+            self.mode,
+            self.p,
+            self.m,
+            self.blocks,
+            self.steps_total,
+            self.messages,
+            caps.join(","),
+            self.oracle_checked,
+            json_violations(&self.violations),
+            json_violations(&self.warnings),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world(steps_per_rank: Vec<Vec<Step>>) -> Vec<Schedule> {
+        let size = steps_per_rank.len();
+        steps_per_rank
+            .into_iter()
+            .enumerate()
+            .map(|(rank, steps)| Schedule { rank, size, steps })
+            .collect()
+    }
+
+    #[test]
+    fn shape_combine_tracks_span_cover_count() {
+        let op = ShapeOp;
+        let mut acc = [ShapeElem::leaf(1)];
+        let t = [ShapeElem::leaf(0)];
+        op.reduce_into(&mut acc, &t, Side::Left);
+        assert_eq!(acc[0].span, Span::of(0, 1));
+        assert_eq!(acc[0].cover, 0b11);
+        assert_eq!(acc[0].count, 2);
+        // Out-of-order concatenation poisons the span but keeps the mask.
+        let mut acc = [ShapeElem::leaf(3)];
+        op.reduce_into(&mut acc, &[ShapeElem::leaf(0)], Side::Left);
+        assert_eq!(acc[0].span, Span::POISON);
+        assert_eq!(acc[0].cover, 0b1001);
+    }
+
+    #[test]
+    fn self_message_is_rejected() {
+        let s = world(vec![vec![Step::Send { peer: 0, send: Src::CloneY }]]);
+        let out = verify_schedules(&s, 4, &VerifyOptions::default());
+        assert!(out.violations.iter().any(|v| v.kind() == "self-message"));
+    }
+
+    #[test]
+    fn unbalanced_edge_is_a_count_mismatch() {
+        let s = world(vec![
+            vec![
+                Step::Send { peer: 1, send: Src::CloneY },
+                Step::Send { peer: 1, send: Src::CloneY },
+            ],
+            vec![Step::Recv { peer: 0, sink: Sink::Discard }],
+        ]);
+        let out = verify_schedules(&s, 3, &VerifyOptions::default());
+        assert!(out.violations.iter().any(|v| v.kind() == "count-mismatch"));
+    }
+
+    #[test]
+    fn double_send_head_cycles_at_capacity_one_only() {
+        // Both ranks post two sends before any recv: fine unbounded and at
+        // capacity 2, a cycle at capacity 1 (second send waits on a recv
+        // that is program-ordered after it on both sides).
+        let steps = |peer: usize| {
+            vec![
+                Step::Send { peer, send: Src::CloneY },
+                Step::Send { peer, send: Src::CloneY },
+                Step::Recv { peer, sink: Sink::Discard },
+                Step::Recv { peer, sink: Sink::Discard },
+            ]
+        };
+        let s = world(vec![steps(1), steps(0)]);
+        let opts = VerifyOptions { capacities: vec![1, 2], require_rank_order: false };
+        let out = verify_schedules(&s, 2, &opts);
+        let deadlocks: Vec<usize> = out
+            .violations
+            .iter()
+            .filter_map(|v| match v {
+                Violation::Deadlock { capacity, .. } => Some(*capacity),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(deadlocks, vec![1]);
+        assert!(out.capacities_proven.contains(&0));
+        assert!(out.capacities_proven.contains(&2));
+        assert!(!out.capacities_proven.contains(&1));
+    }
+
+    #[test]
+    fn compiled_dpdr_verifies_clean() {
+        let blocks = Blocks::by_count(8, 2);
+        let scheds = compile_world(AlgoKind::Dpdr, 4, &blocks).expect("dpdr compiles");
+        let out = verify_schedules(&scheds, 8, &VerifyOptions::default());
+        assert!(out.ok(), "violations: {:?}", out.violations);
+        assert_eq!(out.capacities_proven, vec![0, 1, 2, 3]);
+        assert!(out.finals.is_some());
+    }
+
+    #[test]
+    fn ring_needs_relaxed_rank_order() {
+        let blocks = Blocks::by_count(6, 3);
+        let scheds = compile_world(AlgoKind::Ring, 3, &blocks).expect("ring compiles");
+        let strict = verify_schedules(&scheds, 6, &VerifyOptions::default());
+        assert!(strict.violations.iter().any(|v| v.kind() == "shape-order"));
+        let opts = VerifyOptions { require_rank_order: false, ..VerifyOptions::default() };
+        let relaxed = verify_schedules(&scheds, 6, &opts);
+        assert!(relaxed.ok(), "violations: {:?}", relaxed.violations);
+    }
+
+    #[test]
+    fn cert_json_is_wellformed() {
+        let cert = verify_compiled(AlgoKind::Ring, 3, &Blocks::by_count(6, 2), &[1], false)
+            .expect("ring point verifies");
+        assert!(cert.ok());
+        let js = cert.to_json();
+        assert!(js.contains("\"algo\":\"ring\""));
+        assert!(js.contains("\"mode\":\"compiled\""));
+        assert!(js.contains("\"violations\":[]"));
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+    }
+
+    #[test]
+    fn world_cache_accepts_and_remembers() {
+        let blocks = Blocks::by_count(8, 2);
+        verify_world_cached(AlgoKind::DpdrSingle, 4, &blocks).expect("first pass");
+        verify_world_cached(AlgoKind::DpdrSingle, 4, &blocks).expect("cached pass");
+    }
+}

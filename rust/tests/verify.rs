@@ -1,0 +1,313 @@
+//! Mutation battery for the static schedule verifier
+//! ([`dpdr::schedule::verify`]): every corruption class must be rejected
+//! with its typed diagnostic, unmutated compiled schedules over random
+//! `(algo, p, blocks)` must verify clean, and the trace / oracle / nbc
+//! entry points must hold on representative points.
+
+use dpdr::buffer::DataBuf;
+use dpdr::comm::{run_world, Comm, Timing};
+use dpdr::model::AlgoKind;
+use dpdr::nbc::{Engine, EngineKind, NbcConfig};
+use dpdr::ops::{Side, SumOp};
+use dpdr::pipeline::Blocks;
+use dpdr::proptest::forall;
+use dpdr::schedule::verify::{
+    verify_compiled, verify_schedules, verify_traced, VerifyOptions, Violation,
+};
+use dpdr::schedule::{compile, Schedule, Sink, Src, Step};
+
+const COMPILED: [AlgoKind; 4] = [
+    AlgoKind::Dpdr,
+    AlgoKind::DpdrSingle,
+    AlgoKind::Ring,
+    AlgoKind::RecursiveDoubling,
+];
+
+fn compile_all(algo: AlgoKind, p: usize, blocks: &Blocks) -> Vec<Schedule> {
+    (0..p)
+        .map(|r| compile(algo, r, p, blocks).expect("algo compiles"))
+        .collect()
+}
+
+fn has_kind(violations: &[Violation], kind: &str) -> bool {
+    violations.iter().any(|v| v.kind() == kind)
+}
+
+// ---------------------------------------------------------------------
+// Mutation battery: each corruption class → its typed diagnostic
+// ---------------------------------------------------------------------
+
+/// Dropping a receive half (SendRecv → Send) unbalances its edge.
+#[test]
+fn dropped_recv_is_a_count_mismatch() {
+    let blocks = Blocks::by_count(12, 3);
+    let mut w = compile_all(AlgoKind::Dpdr, 6, &blocks);
+    let at = w[0]
+        .steps
+        .iter()
+        .position(|s| matches!(s, Step::SendRecv { .. }))
+        .expect("dpdr rank 0 exchanges");
+    let (peer, send) = match w[0].steps[at] {
+        Step::SendRecv { peer, send, .. } => (peer, send),
+        _ => unreachable!(),
+    };
+    w[0].steps[at] = Step::Send { peer, send };
+    let out = verify_schedules(&w, 12, &VerifyOptions::default());
+    assert!(
+        has_kind(&out.violations, "count-mismatch"),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// Swapping the peers of rank 0's two butterfly exchanges (the
+/// tag-swap/retarget class) keeps matching and deadlock-freedom intact
+/// but combines out of rank order — only the shape witness catches it.
+#[test]
+fn swapped_peers_poison_the_reduction_shape() {
+    let blocks = Blocks::by_count(8, 2);
+    let mut w = compile_all(AlgoKind::RecursiveDoubling, 4, &blocks);
+    let (s0, s1) = (w[0].steps[0], w[0].steps[1]);
+    let (p0, p1) = match (s0, s1) {
+        (Step::SendRecv { peer: a, .. }, Step::SendRecv { peer: b, .. }) => (a, b),
+        _ => panic!("p=4 recursive doubling is a pure butterfly"),
+    };
+    let retarget = |s: Step, peer: usize| match s {
+        Step::SendRecv { send, sink, .. } => Step::SendRecv { peer, send, sink },
+        _ => unreachable!(),
+    };
+    w[0].steps[0] = retarget(s0, p1);
+    w[0].steps[1] = retarget(s1, p0);
+    let out = verify_schedules(&w, 8, &VerifyOptions::default());
+    assert!(
+        has_kind(&out.violations, "shape-order") || has_kind(&out.violations, "shape-divergence"),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// A payload one element short of the receiver's whole-vector sink is a
+/// length violation at the receiving step.
+#[test]
+fn short_payload_into_reduce_all_is_a_length_mismatch() {
+    let m = 6;
+    let w = vec![
+        Schedule {
+            rank: 0,
+            size: 2,
+            steps: vec![Step::Send { peer: 1, send: Src::Block { lo: 0, hi: m - 1 } }],
+        },
+        Schedule {
+            rank: 1,
+            size: 2,
+            steps: vec![Step::Recv { peer: 0, sink: Sink::ReduceAll { side: Side::Left } }],
+        },
+    ];
+    let opts = VerifyOptions { require_rank_order: false, ..VerifyOptions::default() };
+    let out = verify_schedules(&w, m, &opts);
+    assert!(
+        has_kind(&out.violations, "length-mismatch"),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// Shrinking a ring segment send leaves part of that segment missing a
+/// leaf on every downstream rank — a coverage (shape) violation even
+/// with rank order relaxed.
+#[test]
+fn shrunken_ring_segment_breaks_the_cover() {
+    let blocks = Blocks::by_count(8, 4);
+    let mut w = compile_all(AlgoKind::Ring, 4, &blocks);
+    let mut mutated = false;
+    for s in w[0].steps.iter_mut() {
+        if let Step::SendRecvPair { send: Src::Block { lo, hi }, .. } = s {
+            if *hi > *lo {
+                *hi -= 1;
+                mutated = true;
+                break;
+            }
+        }
+    }
+    assert!(mutated, "ring sends zero-copy segment views");
+    let opts = VerifyOptions { require_rank_order: false, ..VerifyOptions::default() };
+    let out = verify_schedules(&w, 8, &opts);
+    assert!(
+        has_kind(&out.violations, "shape-order") || has_kind(&out.violations, "shape-divergence"),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// Swapping a folded rank's forward/receive pair makes both sides wait
+/// on each other — a true protocol deadlock, visible on the unbounded
+/// happens-before graph (capacity 0).
+#[test]
+fn inverted_fold_pair_deadlocks_unbounded() {
+    let blocks = Blocks::by_count(8, 2);
+    let mut w = compile_all(AlgoKind::RecursiveDoubling, 3, &blocks);
+    assert_eq!(w[1].steps.len(), 2, "p=3: rank 1 is folded away and only forwards");
+    w[1].steps.swap(0, 1);
+    let out = verify_schedules(&w, 8, &VerifyOptions::default());
+    assert!(
+        out.violations
+            .iter()
+            .any(|v| matches!(v, Violation::Deadlock { capacity: 0, .. })),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// Downgrading the dual-root exchange's owned block to a zero-copy view
+/// recreates the PR-1 COW hazard: both roots reduce into the range the
+/// view still covers.
+#[test]
+fn unowned_dual_exchange_view_is_an_overwrite_hazard() {
+    let blocks = Blocks::by_count(8, 2);
+    let mut w = compile_all(AlgoKind::Dpdr, 2, &blocks);
+    let mut mutated = false;
+    for s in w[0].steps.iter_mut() {
+        if let Step::SendRecv { send, .. } = s {
+            if let Src::OwnedBlock { lo, hi } = *send {
+                *send = Src::Block { lo, hi };
+                mutated = true;
+                break;
+            }
+        }
+    }
+    assert!(mutated, "dpdr p=2 dual-root exchange sends owned blocks");
+    let out = verify_schedules(&w, 8, &VerifyOptions::default());
+    assert!(
+        out.violations
+            .iter()
+            .any(|v| matches!(v, Violation::OverwriteHazard { rank: 0, .. })),
+        "got {:?}",
+        out.violations
+    );
+}
+
+/// Downgrading a butterfly snapshot to a shared view races the send
+/// against the same step's whole-vector reduce.
+#[test]
+fn unsnapshotted_butterfly_send_is_an_overwrite_hazard() {
+    let blocks = Blocks::by_count(8, 2);
+    let mut w = compile_all(AlgoKind::RecursiveDoubling, 4, &blocks);
+    match &mut w[0].steps[0] {
+        Step::SendRecv { send, .. } if *send == Src::Snapshot => *send = Src::CloneY,
+        other => panic!("expected a snapshot butterfly exchange, got {other:?}"),
+    }
+    let out = verify_schedules(&w, 8, &VerifyOptions::default());
+    assert!(
+        out.violations
+            .iter()
+            .any(|v| matches!(v, Violation::OverwriteHazard { rank: 0, .. })),
+        "got {:?}",
+        out.violations
+    );
+}
+
+// ---------------------------------------------------------------------
+// Positive paths
+// ---------------------------------------------------------------------
+
+/// All compiled schedules over random `(algo, p ∈ [2, 64], blocks)`
+/// verify clean down to edge capacity 1.
+#[test]
+fn compiled_schedules_verify_clean() {
+    forall("compiled-verify-clean", 48, 0xC0FF_EE01, |g| {
+        let p = g.usize_in(2, 64);
+        let m = g.usize_in(1, 96);
+        let b = g.usize_in(1, 12);
+        let algo = *g.choose(&COMPILED);
+        let blocks = Blocks::by_count(m, b);
+        let scheds = (0..p)
+            .map(|r| {
+                compile(algo, r, p, &blocks)
+                    .ok_or_else(|| format!("{} rank {r}/{p} did not compile", algo.name()))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let opts = VerifyOptions {
+            capacities: vec![1, 2, 3],
+            require_rank_order: algo.order_preserving(),
+        };
+        let out = verify_schedules(&scheds, m, &opts);
+        if out.ok() && out.capacities_proven == vec![0, 1, 2, 3] {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} p={p} m={m} b={b}: proven {:?}, violations {:?}",
+                algo.name(),
+                out.capacities_proven,
+                out.violations
+            ))
+        }
+    });
+}
+
+/// The compiled pass agrees with the blocking oracle's combine order.
+#[test]
+fn compiled_matches_blocking_oracle() {
+    for algo in COMPILED {
+        let blocks = Blocks::by_count(24, 3);
+        let cert = verify_compiled(algo, 6, &blocks, &[1, 2, 3], true).expect("point verifies");
+        assert!(cert.ok(), "{}: {:?}", algo.name(), cert.violations);
+        assert!(cert.oracle_checked, "{}: oracle comparison must run", algo.name());
+    }
+}
+
+/// Trace mode certifies the uncompiled algorithms on both switcher
+/// branches (40 ShapeElems → recursive doubling, 300 → ring).
+#[test]
+fn traced_algorithms_verify_clean() {
+    let traced = [
+        AlgoKind::PipeTree,
+        AlgoKind::ReduceBcast,
+        AlgoKind::NativeSwitch,
+        AlgoKind::TwoTree,
+        AlgoKind::Rabenseifner,
+    ];
+    for algo in traced {
+        for m in [40usize, 300] {
+            let blocks = Blocks::by_count(m, 4);
+            let cert = verify_traced(algo, 5, &blocks, &[1]).expect("trace runs");
+            assert!(cert.ok(), "{} m={m}: {:?}", algo.name(), cert.violations);
+            assert_eq!(cert.mode, "trace");
+        }
+    }
+}
+
+/// `NbcConfig::verify_schedules` gates compiled deposits without
+/// disturbing results, and the per-shape cache makes repeats cheap.
+#[test]
+fn nbc_engine_verifies_schedules_on_submission() {
+    const P: usize = 4;
+    const M: usize = 24;
+    let report = run_world::<i32, _, _>(P, Timing::Real, move |comm| {
+        let rank = comm.rank();
+        let cfg = NbcConfig {
+            engine: EngineKind::Schedule,
+            verify_schedules: true,
+            ..NbcConfig::default()
+        };
+        let mut eng = Engine::new(comm, SumOp, cfg);
+        let blocks = Blocks::by_count(M, 3);
+        let mut reqs = Vec::new();
+        for i in 0..4 {
+            let x = DataBuf::real(vec![rank as i32 + i; M]);
+            reqs.push(eng.iallreduce(AlgoKind::Dpdr, x, &blocks)?);
+        }
+        let mut out = Vec::new();
+        for r in reqs {
+            out.push(eng.wait(r)?.into_vec()?);
+        }
+        Ok(out)
+    })
+    .expect("world runs");
+    let base: i32 = (0..P as i32).sum();
+    for bufs in &report.results {
+        for (i, y) in bufs.iter().enumerate() {
+            let want = vec![base + P as i32 * i as i32; M];
+            assert_eq!(y, &want, "op {i}");
+        }
+    }
+}
