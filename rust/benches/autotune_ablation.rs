@@ -1,0 +1,129 @@
+//! **Autotune ablation** — does `--algo auto` actually pick well?
+//!
+//! For each message size on (and one size off) the tuning grid at p = 8,
+//! measure every candidate algorithm through the virtual-clock harness
+//! under the Hydra model (each pipelined candidate at its
+//! Pipelining-Lemma block count), then measure `AlgoKind::Auto` over the
+//! same spec and compare its pick against the per-point best:
+//!
+//! * **small m** — the latency regime, where always-dpdr pays its
+//!   `(4h − 6)α` chain for nothing and the oracle must switch to
+//!   recursive doubling;
+//! * **large m** — the bandwidth regime, where the oracle must switch to
+//!   the non-pipelined circulant reduce-scatter + allgather;
+//! * **off-grid m** — a size between two grid columns, exercising the
+//!   log-space snap of the table lookup.
+//!
+//! Writes `BENCH_autotune.json`; `bench_check` gates
+//! `autotune_headline.small_m_speedup_vs_dpdr` (floor) and
+//! `autotune_headline.auto_vs_best_worst_ratio` (ceiling) against the
+//! committed conservative baselines. The bench itself asserts the
+//! acceptance criteria: auto within 10% + 2 µs of the per-point best
+//! everywhere, and strictly beating always-dpdr at the smallest size.
+//!
+//! Run: `cargo bench --bench autotune_ablation [-- --p 8]`
+
+use dpdr::collectives::RunSpec;
+use dpdr::comm::Timing;
+use dpdr::harness::measure;
+use dpdr::model::{tuner, AlgoKind};
+use dpdr::pipeline::SchedKind;
+
+/// Auto may lose this much to the per-point best before the bench fails:
+/// a relative margin for the regimes where two candidates are near-tied,
+/// plus an absolute term so a µs-scale point cannot fail on rounding.
+const MARGIN_REL: f64 = 1.10;
+const MARGIN_ABS_US: f64 = 2.0;
+
+/// One harness point: virtual Hydra clock, phantom payload, each
+/// candidate at its lemma-optimal partition (1 block when unpipelined).
+fn time_us(algo: AlgoKind, p: usize, m: usize) -> f64 {
+    let spec = RunSpec::new(p, m).phantom(true).sched(SchedKind::Lemma);
+    measure(algo, &spec, Timing::hydra(), 1)
+        .unwrap_or_else(|e| panic!("{} p={p} m={m}: {e}", algo.name()))
+        .time_us
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = dpdr::cli::Args::parse(&argv, &["help", "bench"]).unwrap();
+    let p = args.get("p", 8usize).unwrap();
+
+    // grid columns 64 B .. 4 MiB as element counts, plus 512 elems
+    // (2048 B) squarely between the 1 KiB and 4 KiB columns
+    let m_elems = [16usize, 256, 512, 4096, 65_536, 1_048_576];
+
+    let mut json: Vec<String> = Vec::new();
+    println!("# autotune ablation: p={p}, hydra virtual timing, lemma-scheduled candidates");
+    println!("#m_elems\tbest_algo\tbest_us\tauto_us\tratio\tdpdr_us");
+
+    let mut worst_ratio = 0.0f64;
+    let mut small_m_speedup = 0.0f64;
+    let mut large_m_speedup_vs_rd = 0.0f64;
+    for &m in &m_elems {
+        let mut best: Option<(AlgoKind, f64)> = None;
+        let mut t_dpdr = f64::NAN;
+        let mut t_rd = f64::NAN;
+        for &algo in tuner::CANDIDATES.iter() {
+            let t = time_us(algo, p, m);
+            if algo == AlgoKind::Dpdr {
+                t_dpdr = t;
+            }
+            if algo == AlgoKind::RecursiveDoubling {
+                t_rd = t;
+            }
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((algo, t));
+            }
+        }
+        let (best_algo, best_us) = best.expect("candidate pool is nonempty");
+        let auto_us = time_us(AlgoKind::Auto, p, m);
+        let ratio = auto_us / best_us;
+        worst_ratio = worst_ratio.max(ratio);
+        println!(
+            "{m}\t{}\t{best_us:.2}\t{auto_us:.2}\t{ratio:.3}\t{t_dpdr:.2}",
+            best_algo.name()
+        );
+        json.push(format!(
+            "  \"autotune_p{p}_m{m}\": {{\"best_algo\": \"{}\", \"best_us\": {best_us:.2}, \
+             \"auto_us\": {auto_us:.2}, \"ratio\": {ratio:.4}, \"dpdr_us\": {t_dpdr:.2}}}",
+            best_algo.name()
+        ));
+        // the acceptance criterion: auto within margin of the per-point
+        // best at every size, on-grid and off
+        assert!(
+            auto_us <= best_us * MARGIN_REL + MARGIN_ABS_US,
+            "auto ({auto_us:.2} us) lost to {} ({best_us:.2} us) beyond margin at m={m}",
+            best_algo.name()
+        );
+        if m == m_elems[0] {
+            small_m_speedup = t_dpdr / auto_us;
+        }
+        if m == m_elems[m_elems.len() - 1] {
+            large_m_speedup_vs_rd = t_rd / auto_us;
+        }
+    }
+
+    // the latency-regime win the oracle exists for: at 64 B, always-dpdr
+    // pays its full alpha-chain and auto must beat it outright
+    assert!(
+        small_m_speedup > 1.0,
+        "auto must beat always-dpdr at the smallest size (got {small_m_speedup:.2}x)"
+    );
+
+    json.push(format!(
+        "  \"autotune_headline\": {{\"p\": {p}, \
+         \"small_m_speedup_vs_dpdr\": {small_m_speedup:.3}, \
+         \"auto_vs_best_worst_ratio\": {worst_ratio:.4}, \
+         \"large_m_speedup_vs_rd\": {large_m_speedup_vs_rd:.3}}}"
+    ));
+    println!(
+        "# headline: small-m speedup vs always-dpdr {small_m_speedup:.2}x, \
+         worst auto/best ratio {worst_ratio:.3}, \
+         large-m speedup vs rd {large_m_speedup_vs_rd:.2}x"
+    );
+
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    std::fs::write("BENCH_autotune.json", &body).expect("write BENCH_autotune.json");
+    eprintln!("wrote BENCH_autotune.json");
+}

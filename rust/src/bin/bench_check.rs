@@ -20,6 +20,12 @@
 //!   `cargo bench --bench fusion_overlap`) — the nbc fusion layer's
 //!   coalesced small-message allreduce must keep beating back-to-back
 //!   sequential ops;
+//! * `autotune_headline.small_m_speedup_vs_dpdr` and
+//!   `autotune_headline.auto_vs_best_worst_ratio` (`BENCH_autotune.json`,
+//!   written by `cargo bench --bench autotune_ablation`) — the `auto`
+//!   selection oracle must keep beating always-dpdr at the smallest
+//!   message size and must stay within a bounded ratio of the best fixed
+//!   candidate at every size;
 //! * `progress_headline.schedule_ops_per_sec` and
 //!   `progress_headline.schedule_worker_peak` (`BENCH_progress.json`,
 //!   written by `cargo bench --bench progress_scaling`) — the
@@ -33,7 +39,8 @@
 //!
 //! The committed baselines (`BENCH_baseline.json`,
 //! `BENCH_reduce_baseline.json`, `BENCH_congestion_baseline.json`,
-//! `BENCH_fusion_baseline.json`, `BENCH_progress_baseline.json`) are
+//! `BENCH_fusion_baseline.json`, `BENCH_progress_baseline.json`,
+//! `BENCH_autotune_baseline.json`) are
 //! deliberately conservative floors / generous ceilings recorded to
 //! *arm* the gate on any CI hardware; re-record with `--write-baseline`
 //! on a reference machine to tighten them. A missing baseline or fresh
@@ -145,6 +152,14 @@ fn main() {
         .raw("progress-baseline")
         .unwrap_or("BENCH_progress_baseline.json")
         .to_string();
+    let autotune_fresh_path = args
+        .raw("autotune-fresh")
+        .unwrap_or("BENCH_autotune.json")
+        .to_string();
+    let autotune_base_path = args
+        .raw("autotune-baseline")
+        .unwrap_or("BENCH_autotune_baseline.json")
+        .to_string();
     // tolerance: flag > env > 10% default, so per-machine tightening needs
     // no code change
     let env_tol = std::env::var("DPDR_BENCH_TOLERANCE")
@@ -164,11 +179,16 @@ fn main() {
         &progress_fresh_path,
         "run `cargo bench --bench progress_scaling`",
     );
+    let autotune_fresh = read_report(
+        &autotune_fresh_path,
+        "run `cargo bench --bench autotune_ablation`",
+    );
     if fresh.is_none()
         && reduce_fresh.is_none()
         && congestion_fresh.is_none()
         && fusion_fresh.is_none()
         && progress_fresh.is_none()
+        && autotune_fresh.is_none()
     {
         eprintln!("bench_check: no fresh reports at all — run the benches first");
         std::process::exit(2);
@@ -196,6 +216,10 @@ fn main() {
         if let Some(f) = &progress_fresh {
             std::fs::write(&progress_base_path, f).expect("write progress baseline");
             println!("bench_check: recorded {progress_base_path} from {progress_fresh_path}");
+        }
+        if let Some(f) = &autotune_fresh {
+            std::fs::write(&autotune_base_path, f).expect("write autotune baseline");
+            println!("bench_check: recorded {autotune_base_path} from {autotune_fresh_path}");
         }
         return;
     }
@@ -327,6 +351,41 @@ fn main() {
             }
             Err(_) => println!(
                 "bench_check: no baseline at {fusion_base_path} — fusion gate passes \
+                 (bootstrap)."
+            ),
+        }
+    }
+
+    if let Some(fresh) = &autotune_fresh {
+        match std::fs::read_to_string(&autotune_base_path) {
+            Ok(base) => {
+                armed += 1;
+                // the selection oracle must keep beating always-dpdr at
+                // the smallest message size (the committed baseline is a
+                // conservative floor well below the modelled win) ...
+                gate.check_floor(
+                    "autotune_headline.small_m_speedup_vs_dpdr",
+                    pick(fresh, "autotune_headline", "small_m_speedup_vs_dpdr"),
+                    pick(&base, "autotune_headline", "small_m_speedup_vs_dpdr"),
+                    tol,
+                );
+                // ... and its worst pick must stay within a bounded ratio
+                // of the best fixed candidate at every swept size
+                gate.check_ceiling(
+                    "autotune_headline.auto_vs_best_worst_ratio",
+                    pick(fresh, "autotune_headline", "auto_vs_best_worst_ratio"),
+                    pick(&base, "autotune_headline", "auto_vs_best_worst_ratio"),
+                    tol,
+                    0.05,
+                );
+                if let Some(s) = num_after(fresh, "autotune_headline", "large_m_speedup_vs_rd") {
+                    println!(
+                        "autotune_headline.large_m_speedup_vs_rd: {s:.2}x (informational)"
+                    );
+                }
+            }
+            Err(_) => println!(
+                "bench_check: no baseline at {autotune_base_path} — autotune gate passes \
                  (bootstrap)."
             ),
         }

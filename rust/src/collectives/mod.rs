@@ -9,6 +9,7 @@
 pub mod dpdr;
 pub mod hierarchical;
 pub mod native_switch;
+pub mod nonpipelined;
 pub mod pipetree;
 pub mod rabenseifner;
 pub mod recursive_doubling;
@@ -20,6 +21,7 @@ pub mod twotree;
 pub use dpdr::{allreduce_dpdr, allreduce_dpdr_single};
 pub use hierarchical::allreduce_hier;
 pub use native_switch::allreduce_native_switch;
+pub use nonpipelined::allreduce_nonpipelined;
 pub use pipetree::allreduce_pipetree;
 pub use rabenseifner::allreduce_rabenseifner;
 pub use recursive_doubling::allreduce_recursive_doubling;
@@ -31,9 +33,9 @@ pub use twotree::allreduce_twotree;
 use crate::buffer::DataBuf;
 use crate::comm::{run_world, Comm, ThreadComm, Timing, WorldReport};
 use crate::error::{Error, Result};
-use crate::model::{AlgoKind, NetParams};
+use crate::model::{tuner, AlgoKind, CostModel, NetParams};
 use crate::ops::{Elem, ReduceBackend, ReduceOp, SumOp};
-use crate::pipeline::Blocks;
+use crate::pipeline::{Blocks, SchedKind};
 use crate::topo::Mapping;
 use crate::util::XorShift64;
 
@@ -62,9 +64,23 @@ pub fn allreduce<E: Elem, O: ReduceOp<E>>(
         AlgoKind::RecursiveDoubling => allreduce_recursive_doubling(comm, x, op),
         AlgoKind::Rabenseifner => allreduce_rabenseifner(comm, x, op),
         AlgoKind::Scan => scan_pipelined(comm, x, op, blocks),
+        AlgoKind::NonPipelined => allreduce_nonpipelined(comm, x, op),
         AlgoKind::Hier => Err(Error::Config(
             "hier is node-aware: dispatch it with allreduce_on(algo, comm, …, mapping)".into(),
         )),
+        AlgoKind::Auto => Err(Error::Config(
+            "auto resolves against a run's timing: dispatch it through allreduce_on".into(),
+        )),
+    }
+}
+
+/// The cost model `AlgoKind::Auto` resolves against: the virtual clock's
+/// own model, or the hydra reference machine when running on wall time
+/// (there the pick is a heuristic, not a simulation-faithful choice).
+fn resolution_model(timing: Timing) -> CostModel {
+    match timing {
+        Timing::Virtual(model, _) => model,
+        Timing::Real => CostModel::hydra_uniform(),
     }
 }
 
@@ -79,6 +95,16 @@ pub fn allreduce_on<E: Elem, O: ReduceOp<E>>(
     blocks: &Blocks,
     mapping: Mapping,
 ) -> Result<DataBuf<E>> {
+    let algo = if algo == AlgoKind::Auto {
+        // resolve against the run's own timing — SPMD-deterministic: every
+        // rank sees the same (p, bytes, model) and picks the same algorithm
+        let model = resolution_model(comm.timing());
+        let pick = tuner::auto_pick(comm.size(), x.len() * E::BYTES, &model);
+        comm.metrics_mut().auto_picks += 1;
+        pick
+    } else {
+        algo
+    };
     if algo == AlgoKind::Hier {
         let _site = crate::buffer::pool::cow_site(algo.name());
         return allreduce_hier(comm, x, op, blocks, mapping);
@@ -113,6 +139,10 @@ pub struct RunSpec {
     /// dedicated value leaves the timing exactly as given. Ignored under
     /// real timing.
     pub net: NetParams,
+    /// Block-count schedule for pipelined algorithms: the fixed
+    /// `block_elems` partition (default), the Pipelining-Lemma optimum, or
+    /// the greedy discrete optimum — see [`RunSpec::blocks_for`].
+    pub sched: SchedKind,
 }
 
 impl RunSpec {
@@ -126,7 +156,13 @@ impl RunSpec {
             mapping: Mapping::Block { ranks_per_node: 8 },
             reduce_backend: ReduceBackend::Auto,
             net: NetParams::dedicated(),
+            sched: SchedKind::Fixed,
         }
+    }
+
+    pub fn sched(mut self, sched: SchedKind) -> RunSpec {
+        self.sched = sched;
+        self
     }
 
     pub fn mapping(mut self, mapping: Mapping) -> RunSpec {
@@ -170,6 +206,30 @@ impl RunSpec {
     /// The block partition this spec induces.
     pub fn blocks(&self) -> Result<Blocks> {
         Blocks::by_size(self.m, self.block_elems)
+    }
+
+    /// The block partition for `algo` under this spec's schedule, priced
+    /// against `timing` (pass the *effective* timing). `Fixed` is
+    /// [`RunSpec::blocks`]; `Lemma`/`Greedy` apply `algo`'s step structure
+    /// to the model's inter-node link (real timing prices against the
+    /// hydra reference machine). `Auto` resolves to its concrete pick
+    /// first; non-pipelined algorithms fall back to the fixed partition,
+    /// which they ignore anyway. Element size is the harness's i32.
+    pub fn blocks_for(&self, algo: AlgoKind, timing: Timing) -> Result<Blocks> {
+        let model = resolution_model(timing);
+        let algo = if algo == AlgoKind::Auto {
+            tuner::auto_pick(self.p, self.m * 4, &model)
+        } else {
+            algo
+        };
+        let (_intra, inter) = model.link_levels();
+        match (self.sched, algo.step_structure(self.p)) {
+            (SchedKind::Lemma, Some((a, c))) => Ok(Blocks::lemma_optimal(self.m, 4, a, c, inter)),
+            (SchedKind::Greedy, Some((a, c))) => {
+                Ok(Blocks::greedy_optimal(self.m, 4, a, c, inter))
+            }
+            _ => self.blocks(),
+        }
     }
 
     /// Deterministic input vector of rank `r` (real mode).
@@ -246,7 +306,7 @@ pub fn run_allreduce_i32(
 ) -> Result<WorldReport<DataBuf<i32>>> {
     let spec = *spec;
     let timing = spec.effective_timing(timing);
-    let blocks = spec.blocks()?;
+    let blocks = spec.blocks_for(algo, timing)?;
     run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
         // every rank dispatches its block reductions through the spec's
         // backend (scoped: the rank thread returns to `Auto` afterwards)

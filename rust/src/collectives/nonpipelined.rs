@@ -1,0 +1,187 @@
+//! Optimal *non-pipelined* allreduce: reduce-scatter + allgather over
+//! circulant graphs (Träff 2024, arXiv 2410.14234) — correct for **any**
+//! p, not only powers of two.
+//!
+//! Both phases run `q = ⌈log₂ p⌉` rounds. Round `k` of the allgather is
+//! the classic Bruck dissemination step on the circulant graph with skip
+//! `2^k`: rank `r` receives from `(r + 2^k) mod p` the block of
+//! `s_k = min(2^k, p − 2^k)` segments starting at `r + 2^k`. The
+//! reduce-scatter is that exchange *reversed* (rounds `k = q−1 … 0`,
+//! arrows flipped), so each rank `r` ends up with segment `r` fully
+//! reduced — the same doubling trick recursive halving uses, but with no
+//! power-of-two fold: ragged rank counts pay at most one extra round,
+//! never the `2βm` fold penalty.
+//!
+//! Cost: `2⌈log₂ p⌉·α + 2·((p−1)/p)·βm` for **every** p — the provably
+//! optimal non-pipelined latency at bandwidth-optimal volume. Compare the
+//! ring's `2(p−1)α` at the same βm: in the latency-dominated small-m
+//! regime (where the Pipelining Lemma says *don't* pipeline) this is the
+//! algorithm to beat, which is why the autotuned oracle
+//! (`crate::model::tuner`) picks it for mid-size messages on dedicated
+//! links.
+//!
+//! Segments accumulate in circulant (rotated) order, so like the ring
+//! this is a *commutative-only* algorithm
+//! ([`AlgoKind::order_preserving`](crate::model::AlgoKind) is false).
+
+use crate::buffer::DataBuf;
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ops::{Elem, ReduceOp, Side};
+use crate::pipeline::Blocks;
+
+/// `⌈log₂ p⌉` for `p ≥ 2`.
+fn log2_ceil(p: usize) -> usize {
+    (usize::BITS - (p - 1).leading_zeros()) as usize
+}
+
+/// Absolute element ranges of the `count` consecutive segments starting
+/// at segment `start` (mod `p`): one contiguous piece, or two when the
+/// run wraps past segment `p − 1`. Empty pieces are dropped.
+fn run_pieces(segs: &Blocks, p: usize, start: usize, count: usize) -> Vec<(usize, usize)> {
+    let start = start % p;
+    let mut pieces = Vec::with_capacity(2);
+    if start + count <= p {
+        pieces.push((segs.range(start).0, segs.range(start + count - 1).1));
+    } else {
+        pieces.push((segs.range(start).0, segs.range(p - 1).1));
+        pieces.push((0, segs.range(start + count - p - 1).1));
+    }
+    pieces.retain(|&(lo, hi)| hi > lo);
+    pieces
+}
+
+/// Concatenate the pieces of a (possibly wrapped) segment run into one
+/// send buffer. A single piece is a zero-copy view; a wrapped run copies
+/// (or stays phantom — only the total length travels).
+fn gather_run<E: Elem>(y: &DataBuf<E>, pieces: &[(usize, usize)]) -> Result<DataBuf<E>> {
+    if pieces.len() == 1 {
+        let (lo, hi) = pieces[0];
+        return y.block(lo, hi);
+    }
+    let n: usize = pieces.iter().map(|&(lo, hi)| hi - lo).sum();
+    if y.is_phantom() {
+        return Ok(DataBuf::phantom(n));
+    }
+    let mut out = DataBuf::real_zeroed(n);
+    let mut off = 0;
+    for &(lo, hi) in pieces {
+        out.write_at(off, &y.block(lo, hi)?)?;
+        off += hi - lo;
+    }
+    Ok(out)
+}
+
+/// Non-pipelined circulant-graph allreduce (reduce-scatter + allgather).
+pub fn allreduce_nonpipelined<E: Elem, O: ReduceOp<E>>(
+    comm: &mut impl Comm<E>,
+    x: DataBuf<E>,
+    op: &O,
+) -> Result<DataBuf<E>> {
+    let p = comm.size();
+    let mut y = x;
+    if p == 1 || y.is_empty() {
+        return Ok(y);
+    }
+    let rank = comm.rank();
+    let q = log2_ceil(p);
+    let segs = Blocks::segments(y.len(), p);
+
+    // --- reduce-scatter: reversed dissemination, rounds q−1 … 0. After
+    // round k, rank r's segments {r … r+2^k−1} each hold the partial over
+    // the 2·min(2^k, …) ranks the forward step would have gathered from;
+    // after round 0, segment r is the full reduction. -----------------------
+    for k in (0..q).rev() {
+        let skip = 1usize << k;
+        let s_k = skip.min(p - skip);
+        let send_to = (rank + skip) % p;
+        let recv_from = (rank + p - skip) % p;
+        let send = gather_run(&y, &run_pieces(&segs, p, rank + skip, s_k))?;
+        let got = comm.sendrecv_pair(send_to, send, recv_from)?;
+        // incoming covers circulant predecessors of this rank: left operand
+        let mut off = 0;
+        for (lo, hi) in run_pieces(&segs, p, rank, s_k) {
+            let piece = got.block(off, off + (hi - lo))?;
+            off += hi - lo;
+            comm.charge_compute(piece.bytes());
+            y.reduce_at(lo, &piece, op, Side::Left)?;
+        }
+    }
+
+    // --- allgather: Bruck dissemination, rounds 0 … q−1. Before round k,
+    // rank r owns finished segments {r … r+2^k−1}; it ships the first s_k
+    // of them backwards by 2^k and receives the run ahead of its own. ------
+    for k in 0..q {
+        let skip = 1usize << k;
+        let s_k = skip.min(p - skip);
+        let send_to = (rank + p - skip) % p;
+        let recv_from = (rank + skip) % p;
+        let send = gather_run(&y, &run_pieces(&segs, p, rank, s_k))?;
+        let got = comm.sendrecv_pair(send_to, send, recv_from)?;
+        let mut off = 0;
+        for (lo, hi) in run_pieces(&segs, p, rank + skip, s_k) {
+            let piece = got.block(off, off + (hi - lo))?;
+            off += hi - lo;
+            y.write_at(lo, &piece)?;
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_allreduce_i32, RunSpec};
+    use crate::comm::Timing;
+    use crate::model::AlgoKind;
+
+    #[test]
+    fn correct_various_p() {
+        // non-powers-of-two exercise the wrapped (two-piece) runs
+        for p in [1usize, 2, 3, 4, 5, 6, 7, 8, 11, 12, 16, 17] {
+            let spec = RunSpec::new(p, 37); // m not divisible by p
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::NonPipelined, &spec, Timing::Real).unwrap();
+            for (r, buf) in report.results.into_iter().enumerate() {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn m_smaller_than_p() {
+        // some segments are empty; wrapped runs may drop pieces entirely
+        for (p, m) in [(9usize, 4usize), (13, 5), (6, 1)] {
+            let spec = RunSpec::new(p, m);
+            let expected = spec.expected_sum_i32();
+            let report = run_allreduce_i32(AlgoKind::NonPipelined, &spec, Timing::Real).unwrap();
+            for buf in report.results {
+                assert_eq!(buf.as_slice().unwrap(), &expected[..], "p={p} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_cost_latency_bound() {
+        use crate::model::{ComputeCost, CostModel, LinkCost};
+        // β = 0: T = 2⌈log₂ p⌉·α exactly — p = 10 → 8 rounds
+        let timing = Timing::Virtual(
+            CostModel::Uniform(LinkCost::new(1e-6, 0.0)),
+            ComputeCost::new(0.0),
+        );
+        let spec = RunSpec::new(10, 100).phantom(true);
+        let t = run_allreduce_i32(AlgoKind::NonPipelined, &spec, timing)
+            .unwrap()
+            .max_vtime_us;
+        assert!((t - 8.0).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn run_pieces_wraps_to_two() {
+        let segs = Blocks::segments(12, 4); // 4 segments of 3
+        assert_eq!(run_pieces(&segs, 4, 1, 2), vec![(3, 9)]);
+        assert_eq!(run_pieces(&segs, 4, 3, 2), vec![(9, 12), (0, 3)]);
+        // start reduced mod p
+        assert_eq!(run_pieces(&segs, 4, 5, 1), vec![(3, 6)]);
+    }
+}

@@ -86,6 +86,11 @@ pub struct RankMetrics {
     /// Transmission attempts repeated because the transient-drop fault
     /// mode discarded them (each added backoff to the sender's clock).
     pub retransmits: u64,
+    /// Allreduce dispatches on this rank that went through the autotuned
+    /// selection oracle ([`AlgoKind::Auto`](crate::model::AlgoKind) —
+    /// table-driven or model-predicted alike). 0 when algorithms were
+    /// named explicitly.
+    pub auto_picks: u64,
     /// Nbc epochs closed on this rank (each quiesce that reclaimed the
     /// epoch's tags counts once).
     pub epochs: u64,
@@ -129,6 +134,7 @@ impl RankMetrics {
         self.fused_elems += other.fused_elems;
         self.fault_events += other.fault_events;
         self.retransmits += other.retransmits;
+        self.auto_picks += other.auto_picks;
         self.epochs += other.epochs;
         self.tags_recycled += other.tags_recycled;
         self.steps_executed += other.steps_executed;
@@ -185,6 +191,7 @@ mod tests {
             fused_elems: 100,
             fault_events: 11,
             retransmits: 3,
+            auto_picks: 5,
             epochs: 2,
             tags_recycled: 7,
             steps_executed: 12,
@@ -224,6 +231,7 @@ mod tests {
         assert_eq!(a.fused_elems, 200);
         assert_eq!(a.fault_events, 22);
         assert_eq!(a.retransmits, 6);
+        assert_eq!(a.auto_picks, 10);
         assert_eq!(a.epochs, 4);
         assert_eq!(a.tags_recycled, 14);
         assert_eq!(a.steps_executed, 24);

@@ -67,7 +67,9 @@ pub fn measure_with_metrics(
     // the congestion-aware form
     let timing = spec.effective_timing(timing);
     let rounds = rounds.max(1);
-    let blocks = spec.blocks()?;
+    // schedule-aware partition: Fixed is the spec's block size; Lemma /
+    // Greedy price the algorithm's step structure against the run's model
+    let blocks = spec.blocks_for(algo, timing)?;
     let report = run_world::<i32, _, _>(spec.p, timing, move |comm: &mut ThreadComm<i32>| {
         let _backend = crate::ops::backend::scope(spec.reduce_backend);
         let mut times = Vec::with_capacity(rounds);

@@ -15,6 +15,7 @@
 //! dpdr verify     [--all] [--m 40] [--blocks 1,3,8] [--caps 1,2,3] [--json FILE]
 //!                 static schedule verification + trace checks
 //! dpdr validate   [--pmax 16]                                             correctness battery
+//! dpdr tune       [--check] [--write]                                     autotuning sweep
 //! dpdr calibrate                                                          thread-transport α/β fit
 //! dpdr sysinfo
 //! ```
@@ -36,7 +37,9 @@ use dpdr::model::{
 };
 use dpdr::pipeline::Blocks;
 
-const BOOL_FLAGS: &[&str] = &["phantom", "real-time", "hier", "markdown", "help", "no-fuse", "all"];
+const BOOL_FLAGS: &[&str] = &[
+    "phantom", "real-time", "hier", "markdown", "help", "no-fuse", "all", "check", "write",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -66,6 +69,7 @@ fn run(argv: &[String]) -> Result<()> {
         "blocksize" => cmd_blocksize(&args),
         "verify" => cmd_verify(&args),
         "validate" => cmd_validate(&args),
+        "tune" => cmd_tune(&args),
         "calibrate" => cmd_calibrate(&args),
         "sysinfo" => cmd_sysinfo(),
         other => Err(Error::Cli(format!("unknown subcommand '{other}'"))),
@@ -77,8 +81,11 @@ fn print_help() {
         "dpdr — doubly-pipelined dual-root reduction-to-all (Träff 2021 reproduction)
 
 subcommands:
-  run        one collective: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier|scan}}
+  run        one collective: --algo {{dpdr|dpsingle|pipetree|redbcast|native|twotree|ring|rd|rab|hier|scan|nonpipelined|auto}}
              --p N --m N [--block N] [--phantom] [--real-time] [--hier] [--rounds N]
+             [--schedule fixed|lemma|greedy]  (pipeline partition: the fixed --block size,
+             the Pipelining-Lemma optimum, or the greedy discrete optimum; auto picks the
+             algorithm from the committed tune table or the analytic model)
              [--mapping block:K|rr:N]  (node layout for --algo hier / --hier cost model)
              [--ports-per-node N]      (congestion-aware timing: concurrent inter-node
              transfers per node and direction serialize through N NIC ports; 0 = dedicated)
@@ -118,6 +125,10 @@ subcommands:
              [--m 40] [--blocks 1,3,8] [--caps 1,2,3] [--oracle-pmax 16]
              [--json FILE]  (write the ScheduleCert array)
   validate   correctness battery across algorithms/p/m
+  tune       sweep the autotuning grid through the virtual-clock harness:
+             (default)  print the winners
+             [--check]  exit nonzero if the committed TUNE_table.json drifted
+             [--write]  rewrite TUNE_table.json in place
   calibrate  fit alpha/beta of the real thread transport
   sysinfo    model constants and environment"
     );
@@ -181,9 +192,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         dpdr::ops::ReduceBackend::Auto,
         dpdr::ops::ReduceBackend::parse,
     )?;
+    let sched = args.get_parsed(
+        "schedule",
+        dpdr::pipeline::SchedKind::Fixed,
+        dpdr::pipeline::SchedKind::parse,
+    )?;
     let net = net_of(args)?;
     let spec = RunSpec::new(p, m)
         .block_elems(block)
+        .sched(sched)
         .phantom(args.switch("phantom"))
         .mapping(mapping_of(args)?)
         .reduce_backend(backend)
@@ -222,7 +239,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     if let Timing::Virtual(model, _) = timing {
-        let b = Blocks::by_size(m, block)?.count();
+        // the partition the run actually used (--schedule aware; Auto
+        // resolves through the same oracle the harness consulted)
+        let b = spec.blocks_for(algo, timing)?.count();
         if !model.net_params().is_dedicated() {
             let pred = predicted_time_us_net(algo, p, m * 4, b, &model);
             println!("analytic_us={pred:.2} (congestion-aware: dedicated form vs NIC floor)");
@@ -543,6 +562,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
         AlgoKind::NativeSwitch,
         AlgoKind::TwoTree,
         AlgoKind::Rabenseifner,
+        AlgoKind::NonPipelined,
     ];
     let mut certs: Vec<ScheduleCert> = Vec::new();
     let mut bad = 0usize;
@@ -633,6 +653,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
         AlgoKind::Rabenseifner,
         AlgoKind::Hier,
         AlgoKind::Scan,
+        AlgoKind::NonPipelined,
+        AlgoKind::Auto,
     ];
     let mut checked = 0usize;
     for algo in algos {
@@ -657,6 +679,73 @@ fn cmd_validate(args: &Args) -> Result<()> {
         println!("{:>10}: ok", algo.name());
     }
     println!("validate: {checked} configurations OK");
+    Ok(())
+}
+
+/// `dpdr tune`: sweep the autotuning grid (`tuner::grid_p()` ×
+/// `tuner::GRID_M_BYTES`) through the virtual-clock harness under the
+/// Hydra model and print the winners. `--check` re-derives the table
+/// and exits nonzero if the committed `TUNE_table.json` makes different
+/// decisions (the CI drift gate); `--write` rewrites the file in place.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use dpdr::model::tuner;
+    let fresh = tuner::generate()?;
+    let mut hist: Vec<(&'static str, usize)> = Vec::new();
+    for e in &fresh.entries {
+        match hist.iter_mut().find(|(n, _)| *n == e.algo.name()) {
+            Some((_, c)) => *c += 1,
+            None => hist.push((e.algo.name(), 1)),
+        }
+    }
+    let summary: Vec<String> = hist.iter().map(|(n, c)| format!("{n}={c}")).collect();
+    println!(
+        "tune: {} grid points (version {}), winners: {}",
+        fresh.entries.len(),
+        fresh.version,
+        summary.join(" ")
+    );
+    if args.switch("check") {
+        let committed = tuner::embedded()?;
+        if fresh.same_decisions(&committed) {
+            println!("tune --check: committed TUNE_table.json matches the fresh sweep");
+            return Ok(());
+        }
+        let mut drifted = 0usize;
+        let n = fresh.entries.len().max(committed.entries.len());
+        for i in 0..n {
+            match (fresh.entries.get(i), committed.entries.get(i)) {
+                (Some(f), Some(c)) if f.p == c.p && f.m_bytes == c.m_bytes && f.algo == c.algo => {}
+                (f, c) => {
+                    drifted += 1;
+                    eprintln!("drift at entry {i}: fresh={f:?} committed={c:?}");
+                }
+            }
+        }
+        if drifted == 0 {
+            // decisions agree entry-by-entry, so the header must differ
+            eprintln!(
+                "drift in header: fresh version={} alpha={:e} beta={:e} gamma={:e}, \
+                 committed version={} alpha={:e} beta={:e} gamma={:e}",
+                fresh.version,
+                fresh.alpha,
+                fresh.beta,
+                fresh.gamma,
+                committed.version,
+                committed.alpha,
+                committed.beta,
+                committed.gamma
+            );
+        }
+        return Err(Error::Protocol(
+            "committed TUNE_table.json drifted from the fresh sweep — \
+             run `dpdr tune --write` and commit the result"
+                .into(),
+        ));
+    }
+    if args.switch("write") {
+        std::fs::write("TUNE_table.json", fresh.to_json())?;
+        eprintln!("# wrote TUNE_table.json");
+    }
     Ok(())
 }
 

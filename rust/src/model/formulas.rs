@@ -35,6 +35,15 @@ pub enum AlgoKind {
     /// see `collectives::scan_dp`. Not a reduction-to-all: rank `r` ends
     /// with `x_0 ⊙ … ⊙ x_r`, so oracles are per rank.
     Scan,
+    /// Träff-2024 optimal non-pipelined reduce-scatter + allgather over
+    /// circulant graphs (any p, no power-of-two fold) — see
+    /// `collectives::nonpipelined`.
+    NonPipelined,
+    /// Autotuned: resolve to the predicted-fastest concrete algorithm for
+    /// the run's (p, m, network) at dispatch time, via the decision table
+    /// in `model::tuner` (model-predicted fallback off-table). Dispatch it
+    /// through `allreduce_on` — resolution needs the run's timing.
+    Auto,
 }
 
 impl AlgoKind {
@@ -51,6 +60,8 @@ impl AlgoKind {
             "rab" => AlgoKind::Rabenseifner,
             "hier" => AlgoKind::Hier,
             "scan" => AlgoKind::Scan,
+            "nonpipelined" => AlgoKind::NonPipelined,
+            "auto" => AlgoKind::Auto,
             _ => return None,
         })
     }
@@ -68,6 +79,8 @@ impl AlgoKind {
             AlgoKind::Rabenseifner => "rab",
             AlgoKind::Hier => "hier",
             AlgoKind::Scan => "scan",
+            AlgoKind::NonPipelined => "nonpipelined",
+            AlgoKind::Auto => "auto",
         }
     }
 
@@ -85,6 +98,8 @@ impl AlgoKind {
             AlgoKind::Rabenseifner => "Rabenseifner",
             AlgoKind::Hier => "Hierarchical (node-aware)",
             AlgoKind::Scan => "Prefix scan (pipelined)",
+            AlgoKind::NonPipelined => "Non-pipelined RS+AG (Träff 2024)",
+            AlgoKind::Auto => "Autotuned",
         }
     }
 
@@ -92,10 +107,17 @@ impl AlgoKind {
     /// operators). Ring's reduce-scatter rotates the product, so it is
     /// commutative-only, matching MPI library practice; the hierarchical
     /// allreduce preserves order only under contiguous (Block) node
-    /// layouts, so it is conservatively commutative-only too. The prefix
-    /// scan combines strictly in rank order by construction.
+    /// layouts, so it is conservatively commutative-only too. The circulant
+    /// non-pipelined reduce-scatter also accumulates in rotated order.
+    /// `Auto` may resolve to any candidate, so it is conservatively
+    /// commutative-only (`tuner::auto_pick_ordered` restricts the pool
+    /// when order matters). The prefix scan combines strictly in rank
+    /// order by construction.
     pub fn order_preserving(self) -> bool {
-        !matches!(self, AlgoKind::Ring | AlgoKind::Hier)
+        !matches!(
+            self,
+            AlgoKind::Ring | AlgoKind::Hier | AlgoKind::NonPipelined | AlgoKind::Auto
+        )
     }
 
     /// The `(A, C)` step structure `A + C·b` of the pipelined algorithms
@@ -149,6 +171,16 @@ pub fn predicted_time_us(
             lemma::time_at(a, c, alpha, beta, m, b)
         }
         AlgoKind::ReduceBcast => 2.0 * logp * (alpha + beta * m),
+        AlgoKind::NonPipelined => {
+            return predicted_time_us_nonpipelined(p, m_bytes, link);
+        }
+        AlgoKind::Auto => {
+            // the oracle's model-side prediction: the best candidate's time
+            return super::tuner::CANDIDATES
+                .iter()
+                .map(|&a| predicted_time_us(a, p, m_bytes, b as usize, link))
+                .fold(f64::INFINITY, f64::min);
+        }
         AlgoKind::RecursiveDoubling => logp * (alpha + beta * m),
         AlgoKind::Ring => {
             let pf = p as f64;
@@ -173,6 +205,27 @@ pub fn predicted_time_us(
             return predicted_time_us_hier(p, 8, m_bytes, b as usize, link, link);
         }
     };
+    secs * 1e6
+}
+
+/// Predicted time in **microseconds** for the Träff-2024 optimal
+/// non-pipelined allreduce: `q = ⌈log₂ p⌉` circulant rounds per phase,
+/// bandwidth-optimal volume for **any** p (no power-of-two fold):
+///
+/// ```text
+/// T_np = 2⌈log₂ p⌉·α + 2·((p−1)/p)·β·m
+/// ```
+///
+/// Identical to Rabenseifner's closed form at powers of two, strictly
+/// better where recursive halving would pay the ragged-p fold.
+pub fn predicted_time_us_nonpipelined(p: usize, m_bytes: usize, link: LinkCost) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    let logp = log2_ceil(p) as f64;
+    let secs =
+        2.0 * logp * link.alpha + 2.0 * ((pf - 1.0) / pf) * link.beta * m_bytes as f64;
     secs * 1e6
 }
 
@@ -378,6 +431,8 @@ mod tests {
             AlgoKind::Rabenseifner,
             AlgoKind::Hier,
             AlgoKind::Scan,
+            AlgoKind::NonPipelined,
+            AlgoKind::Auto,
         ] {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
@@ -473,6 +528,23 @@ mod tests {
         assert_eq!(rb_1, rb_0);
         // degenerate world
         assert_eq!(predicted_time_us_net(AlgoKind::Dpdr, 1, m, b, &model(1)), 0.0);
+    }
+
+    #[test]
+    fn nonpipelined_prediction_and_auto_lower_bound() {
+        // closed form at p = 10: q = 4 rounds per phase
+        let t = predicted_time_us(AlgoKind::NonPipelined, 10, 4096, 1, LINK);
+        let expect = (2.0 * 4.0 * LINK.alpha + 2.0 * 0.9 * LINK.beta * 4096.0) * 1e6;
+        assert!((t - expect).abs() < 1e-9, "t={t} expect={expect}");
+        // no ragged-p fold: ≤ ring's latency everywhere, ≥ 0
+        let t_ring = predicted_time_us(AlgoKind::Ring, 10, 4096, 1, LINK);
+        assert!(t > 0.0 && t < t_ring);
+        // Auto's model prediction is the min over candidates — never above
+        // any single candidate, zero on the degenerate world
+        let ta = predicted_time_us(AlgoKind::Auto, 10, 4096, 1, LINK);
+        assert!(ta > 0.0 && ta <= t + 1e-12, "ta={ta} t={t}");
+        assert_eq!(predicted_time_us(AlgoKind::Auto, 1, 4096, 1, LINK), 0.0);
+        assert_eq!(predicted_time_us_nonpipelined(1, 4096, LINK), 0.0);
     }
 
     #[test]

@@ -4,12 +4,14 @@
 
 pub mod formulas;
 pub mod lemma;
+pub mod tuner;
 
 pub use formulas::{
     predicted_fusion_speedup, predicted_time_us, predicted_time_us_fused,
-    predicted_time_us_hier, predicted_time_us_net, AlgoKind,
+    predicted_time_us_hier, predicted_time_us_net, predicted_time_us_nonpipelined, AlgoKind,
 };
 pub use lemma::{optimal_block_count, optimal_time};
+pub use tuner::{auto_pick, auto_pick_ordered, TuneTable};
 
 use crate::topo::{node_of, Mapping};
 

@@ -695,10 +695,14 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
     }
 
     /// Close the current fused batch: concatenate the queued inputs, run
-    /// one pipelined dpdr at the lemma-optimal block count for the fused
-    /// length on a single leased tag, and scatter the result back to the
-    /// per-op requests. A no-op on an empty queue; a queue of one simply
-    /// launches that operation solo (nothing to fuse).
+    /// one allreduce for the fused length on a single leased tag, and
+    /// scatter the result back to the per-op requests. The algorithm is
+    /// chosen by the autotuned oracle over the *order-preserving*
+    /// candidates ([`tuner::auto_pick_ordered`](crate::model::tuner) —
+    /// fused float batches must not be reassociated across ranks), at the
+    /// lemma-optimal block count when the pick is pipelined. A no-op on
+    /// an empty queue; a queue of one simply launches that operation solo
+    /// (nothing to fuse).
     pub fn flush(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
@@ -736,16 +740,24 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             }
             DataBuf::real(v)
         };
-        // the Pipelining-Lemma optimal depth for the *fused* length under
-        // the run's inter-node link (the level the lemma is stated for)
-        let (a, c) = AlgoKind::Dpdr
-            .step_structure(self.comm.size())
-            .expect("dpdr is pipelined");
-        let blocks = Blocks::lemma_optimal(total, E::BYTES, a, c, self.fuse_link());
+        // oracle pick for the *fused* length (order-preserving candidates
+        // only), then the Pipelining-Lemma optimal depth under the run's
+        // inter-node link when the pick is pipelined
+        let model = match self.comm.timing() {
+            Timing::Virtual(model, _) => model,
+            Timing::Real => crate::model::CostModel::hydra_uniform(),
+        };
+        let algo =
+            crate::model::tuner::auto_pick_ordered(self.comm.size(), total * E::BYTES, &model);
+        let blocks = match algo.step_structure(self.comm.size()) {
+            Some((a, c)) => Blocks::lemma_optimal(total, E::BYTES, a, c, self.fuse_link()),
+            None => Blocks::by_count(total, 1),
+        };
         {
             let m = self.comm.metrics_mut();
             m.fused_ops += batch.len() as u64;
             m.fused_elems += total as u64;
+            m.auto_picks += 1;
         }
         let tag = self.lease_tag()?;
         let child = self.comm.fork_tagged(tag);
@@ -757,9 +769,9 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         let handle = spawn_worker(child, tag, backend, move |comm| {
             let wall0 = std::time::Instant::now();
             let v0 = comm.vtime();
-            let out = allreduce_on(AlgoKind::Dpdr, comm, fused, &op, &blocks, mapping);
+            let out = allreduce_on(algo, comm, fused, &op, &blocks, mapping);
             // one batch, one duration: every fused op completes when the
-            // shared dpdr does, so each cell gets the batch's time
+            // shared collective does, so each cell gets the batch's time
             let took = op_duration_us(comm, wall0, v0);
             match out {
                 Ok(y) => {
@@ -773,7 +785,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                 Err(e) => {
                     for cell in &worker_cells {
                         cell.put(
-                            Err(Error::Protocol(format!("fused dpdr failed: {e}"))),
+                            Err(Error::Protocol(format!("fused allreduce failed: {e}"))),
                             took,
                         );
                     }

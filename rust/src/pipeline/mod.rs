@@ -13,6 +13,61 @@ use crate::util::div_ceil;
 /// The paper's compile-time pipeline block size (elements), §2.
 pub const PAPER_BLOCK_ELEMS: usize = 16_000;
 
+/// Which block-count schedule a run uses for the pipelined algorithms
+/// (non-pipelined algorithms ignore it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    /// The spec's fixed block size (the paper's 16000-element default).
+    Fixed,
+    /// Pipelining-Lemma optimal uniform count (§1.2, continuous optimum
+    /// rounded to the better neighbour) — [`Blocks::lemma_optimal`].
+    Lemma,
+    /// Greedy discrete optimum (Lowery–Langou, arXiv 1310.4645): exact
+    /// scan of the integer block counts — [`Blocks::greedy_optimal`].
+    Greedy,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        Some(match s {
+            "fixed" => SchedKind::Fixed,
+            "lemma" => SchedKind::Lemma,
+            "greedy" => SchedKind::Greedy,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::Fixed => "fixed",
+            SchedKind::Lemma => "lemma",
+            SchedKind::Greedy => "greedy",
+        }
+    }
+}
+
+/// Exact discrete pipeline time (seconds) of `b` balanced blocks of an
+/// `m`-element vector under step structure `A + C·b`: the α-chain
+/// `(A + C·b)·α`, plus every byte forwarded on each of the `C` per-block
+/// steps (`C·β·M`) and the *largest* block (`⌈m/b⌉` elements — the one
+/// every fixed step waits for) paid `A` times. The Pipelining Lemma
+/// minimizes the continuous relaxation `(A + C·b)(α + β·M/b)`; this is
+/// the integer objective the greedy schedule scans.
+pub fn predicted_pipeline_time(
+    m: usize,
+    elem_bytes: usize,
+    a_steps: f64,
+    c_steps: f64,
+    link: LinkCost,
+    b: usize,
+) -> f64 {
+    let b = b.clamp(1, m.max(1));
+    let max_block_bytes = (div_ceil(m.max(1), b) * elem_bytes) as f64;
+    let total_bytes = (m * elem_bytes) as f64;
+    (a_steps + c_steps * b as f64) * link.alpha
+        + link.beta * (c_steps * total_bytes + a_steps * max_block_bytes)
+}
+
 /// A balanced partition of an `m`-element vector into `b` blocks.
 ///
 /// Block `k` covers `[k·m/b, (k+1)·m/b)` (integer arithmetic), so sizes
@@ -65,6 +120,41 @@ impl Blocks {
             m.max(1),
         );
         Blocks::by_count(m, b)
+    }
+
+    /// The greedy discrete-optimal block count (Lowery–Langou,
+    /// arXiv 1310.4645): scan the integer counts against the exact
+    /// discrete objective [`predicted_pipeline_time`] instead of rounding
+    /// the Lemma's continuous optimum. The scan always includes the
+    /// Lemma's own pick, so the greedy schedule is never worse under the
+    /// discrete model — and strictly better exactly where rounding `√·`
+    /// or ragged `⌈m/b⌉` block sizes cost the uniform schedule.
+    pub fn greedy_optimal(
+        m: usize,
+        elem_bytes: usize,
+        a_steps: f64,
+        c_steps: f64,
+        link: LinkCost,
+    ) -> Blocks {
+        let m1 = m.max(1);
+        let lemma_b = Blocks::lemma_optimal(m, elem_bytes, a_steps, c_steps, link).count();
+        // small vectors: exhaustive; large: a window around the lemma
+        // optimum (the objective is unimodal up to ⌈m/b⌉ plateaus, and the
+        // discrete optimum stays within a small factor of the continuous
+        // one — the window always contains lemma_b, preserving ≤).
+        let cap = if m1 <= 4096 {
+            m1
+        } else {
+            m1.min(4 * lemma_b + 16)
+        };
+        let mut best = (1usize, f64::INFINITY);
+        for b in 1..=cap {
+            let t = predicted_pipeline_time(m, elem_bytes, a_steps, c_steps, link, b);
+            if t < best.1 {
+                best = (b, t);
+            }
+        }
+        Blocks::by_count(m, best.0)
     }
 
     /// Total element count.
@@ -145,6 +235,46 @@ mod tests {
         assert_eq!(blocks.count(), div_ceil(8_388_608, 16_000));
         assert!(blocks.max_len() <= PAPER_BLOCK_ELEMS);
         assert!(Blocks::by_size(10, 0).is_err());
+    }
+
+    #[test]
+    fn greedy_never_worse_than_lemma_on_grid() {
+        // the scan includes the lemma's own count, so under the discrete
+        // objective greedy ≤ lemma at every grid point
+        let link = LinkCost::new(1e-6, 0.7e-9);
+        for m in [1usize, 7, 100, 1024, 16_000, 1_000_000] {
+            for &(a, c) in &[(6.0f64, 3.0f64), (30.0, 3.0), (44.0, 4.0), (12.0, 2.0)] {
+                let bl = Blocks::lemma_optimal(m, 4, a, c, link).count();
+                let bg = Blocks::greedy_optimal(m, 4, a, c, link).count();
+                let tl = predicted_pipeline_time(m, 4, a, c, link, bl);
+                let tg = predicted_pipeline_time(m, 4, a, c, link, bg);
+                assert!(tg <= tl + 1e-15, "m={m} A={a} C={c}: {tg} > {tl}");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_matches_lemma_at_exact_optimum() {
+        // β chosen so the continuous optimum b* = √(A·β·M / (C·α)) = 16
+        // exactly, and 16 divides m = 1024 — no rounding, no ragged
+        // blocks: the two schedules must agree (count and time).
+        let link = LinkCost::new(1e-6, 1.5625e-8);
+        let (a, c) = (12.0, 3.0);
+        let lemma = Blocks::lemma_optimal(1024, 4, a, c, link);
+        let greedy = Blocks::greedy_optimal(1024, 4, a, c, link);
+        assert_eq!(lemma.count(), 16);
+        assert_eq!(greedy.count(), 16);
+        let tl = predicted_pipeline_time(1024, 4, a, c, link, lemma.count());
+        let tg = predicted_pipeline_time(1024, 4, a, c, link, greedy.count());
+        assert_eq!(tl, tg);
+    }
+
+    #[test]
+    fn schedkind_parse_roundtrip() {
+        for s in [SchedKind::Fixed, SchedKind::Lemma, SchedKind::Greedy] {
+            assert_eq!(SchedKind::parse(s.name()), Some(s));
+        }
+        assert_eq!(SchedKind::parse("nope"), None);
     }
 
     #[test]

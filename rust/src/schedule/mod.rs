@@ -365,7 +365,11 @@ pub enum TraceEvent {
         send_elems: usize,
     },
     Send { peer: usize, send_elems: usize },
-    Recv { peer: usize },
+    /// A blocking receive and the element count it *actually delivered* —
+    /// logged at completion, so trace comparison pins received lengths
+    /// exactly (a sender shipping the wrong block size cannot hide behind
+    /// a peer-only match).
+    Recv { peer: usize, elems: usize },
     Charge { bytes: usize },
 }
 
@@ -441,8 +445,15 @@ impl<E: crate::ops::Elem, C: crate::comm::Comm<E>> crate::comm::Comm<E> for Trac
     }
 
     fn recv(&mut self, peer: usize) -> crate::error::Result<crate::buffer::DataBuf<E>> {
-        self.events.push(TraceEvent::Recv { peer });
-        self.inner.recv(peer)
+        // delegate first: the event records the length actually received
+        // (same log position — a blocking recv admits no interleaving on
+        // this rank between call and return)
+        let got = self.inner.recv(peer)?;
+        self.events.push(TraceEvent::Recv {
+            peer,
+            elems: got.len(),
+        });
+        Ok(got)
     }
 
     fn barrier(&mut self) -> crate::error::Result<()> {
@@ -546,9 +557,9 @@ pub fn try_expected_events(
                         });
                         mail.entry((r, peer)).or_default().push_back(src_elems(send));
                     }
-                    Step::Recv { peer, .. } => {
-                        events[r].push(TraceEvent::Recv { peer });
-                    }
+                    // a Recv logs at completion (with the delivered
+                    // length), mirroring TraceComm
+                    Step::Recv { .. } => {}
                 }
                 half_done[r] = true;
                 progressed = true;
@@ -567,6 +578,12 @@ pub fn try_expected_events(
                 }
             };
             if let Some(n) = mail.get_mut(&(from, r)).and_then(|q| q.pop_front()) {
+                if matches!(step, Step::Recv { .. }) {
+                    events[r].push(TraceEvent::Recv {
+                        peer: from,
+                        elems: n,
+                    });
+                }
                 sink_charge(sink, n, &mut events[r]);
                 pc[r] += 1;
                 half_done[r] = false;
@@ -709,6 +726,7 @@ mod tests {
             AlgoKind::Scan,
             AlgoKind::PipeTree,
             AlgoKind::Rabenseifner,
+            AlgoKind::NonPipelined,
         ] {
             assert!(compile(algo, 0, 4, &blocks).is_none(), "{}", algo.name());
         }

@@ -40,9 +40,13 @@
 //! the blocking implementation under [`TraceComm`] with [`ShapeElem`]
 //! payloads and feeds the captured [`TraceEvent`] streams through the
 //! same matching and graph checks ([`check_trace`]), plus the shape
-//! check on the real results. Receive sizes are not logged, so trace
-//! matching is count-only, and bounded-capacity results are reported as
-//! *warnings*, not violations: the threaded blocking engine never
+//! check on the real results. `Recv` events log the element count they
+//! actually delivered, so trace matching is length-exact on every plain
+//! receive: per-edge channels are FIFO, and after the count check the
+//! k-th receive on an edge must carry the k-th send's logged length
+//! (fused sendrecv receive-halves consume their queue slot unchecked —
+//! their delivered sizes are not logged). Bounded-capacity results are
+//! reported as *warnings*, not violations: the threaded blocking engine never
 //! schedules against a bounded injection queue (a full queue only
 //! advances the virtual clock), so capacity analysis of a trace is
 //! advisory — it says whether the algorithm *would* be safe if compiled
@@ -1113,9 +1117,63 @@ pub fn verify_schedules(scheds: &[Schedule], m: usize, opts: &VerifyOptions) -> 
     }
 }
 
-/// Run the matching and happens-before checks over captured per-rank
-/// [`TraceEvent`] streams (receive sizes are not logged, so matching is
-/// count-only; shapes are checked separately on the run's results).
+/// FIFO received-length check over a trace. Point-to-point channels
+/// deliver in order per directed edge, so once [`check_matching`] has
+/// proven the per-edge counts agree, the k-th receive on edge `(s, d)`
+/// carries the k-th send's payload. Every [`TraceEvent::Recv`] logs the
+/// element count it actually delivered and must match that send's
+/// logged length exactly; `SendRecv` / `SendRecvPair` receive-halves
+/// consume their queue slot without comparing (their delivered sizes
+/// are not logged).
+fn check_trace_lengths(traces: &[Vec<TraceEvent>]) -> Vec<Violation> {
+    let mut sent: HashMap<(usize, usize), VecDeque<usize>> = HashMap::new();
+    for (r, events) in traces.iter().enumerate() {
+        for e in events {
+            match *e {
+                TraceEvent::Send { peer, send_elems }
+                | TraceEvent::SendRecv { peer, send_elems } => {
+                    sent.entry((r, peer)).or_default().push_back(send_elems);
+                }
+                TraceEvent::SendRecvPair { send_to, send_elems, .. } => {
+                    sent.entry((r, send_to)).or_default().push_back(send_elems);
+                }
+                TraceEvent::Recv { .. } | TraceEvent::Charge { .. } => {}
+            }
+        }
+    }
+    let mut viol = Vec::new();
+    for (r, events) in traces.iter().enumerate() {
+        for (i, e) in events.iter().enumerate() {
+            let (from, got) = match *e {
+                TraceEvent::Recv { peer, elems } => (peer, Some(elems)),
+                TraceEvent::SendRecv { peer, .. } => (peer, None),
+                TraceEvent::SendRecvPair { recv_from, .. } => (recv_from, None),
+                TraceEvent::Send { .. } | TraceEvent::Charge { .. } => continue,
+            };
+            // count matching already passed, so the queue cannot run dry
+            let Some(want) = sent.get_mut(&(from, r)).and_then(VecDeque::pop_front) else {
+                continue;
+            };
+            if let Some(got) = got {
+                if got != want {
+                    viol.push(Violation::LengthMismatch {
+                        rank: r,
+                        step: i,
+                        detail: format!(
+                            "recv from {from} delivered {got} elems but the matching send logged {want}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    viol
+}
+
+/// Run the matching, received-length, and happens-before checks over
+/// captured per-rank [`TraceEvent`] streams (`Recv` events carry their
+/// delivered element count, so matching is length-exact on plain
+/// receives; shapes are checked separately on the run's results).
 /// Bounded-capacity cycles are *warnings* here — see the module docs.
 pub fn check_trace(traces: &[Vec<TraceEvent>], capacities: &[usize]) -> VerifyOutcome {
     let calls: Vec<Vec<CallShape>> = traces
@@ -1133,7 +1191,7 @@ pub fn check_trace(traces: &[Vec<TraceEvent>], capacities: &[usize]) -> VerifyOu
                     TraceEvent::Send { peer, .. } => {
                         Some(CallShape { send_to: Some(peer), recv_from: None })
                     }
-                    TraceEvent::Recv { peer } => {
+                    TraceEvent::Recv { peer, .. } => {
                         Some(CallShape { send_to: None, recv_from: Some(peer) })
                     }
                     TraceEvent::Charge { .. } => None,
@@ -1149,6 +1207,10 @@ pub fn check_trace(traces: &[Vec<TraceEvent>], capacities: &[usize]) -> VerifyOu
     let matching = check_matching(&calls);
     if !matching.is_empty() {
         return VerifyOutcome::bail(matching, steps_total);
+    }
+    let lengths = check_trace_lengths(traces);
+    if !lengths.is_empty() {
+        return VerifyOutcome::bail(lengths, steps_total);
     }
     let ev = build_events(&calls);
     let (succ0, pred0) = graph_edges(&ev, 0);
@@ -1550,5 +1612,32 @@ mod tests {
         let blocks = Blocks::by_count(8, 2);
         verify_world_cached(AlgoKind::DpdrSingle, 4, &blocks).expect("first pass");
         verify_world_cached(AlgoKind::DpdrSingle, 4, &blocks).expect("cached pass");
+    }
+
+    #[test]
+    fn traced_nonpipelined_verifies_length_exact() {
+        // Non-power-of-two p with an uneven partition: the circulant
+        // reduce-scatter ships different run lengths every round, so a
+        // count-only match would pass even if a length were wrong.
+        let cert = verify_traced(AlgoKind::NonPipelined, 5, &Blocks::by_count(7, 1), &[1])
+            .expect("trace runs");
+        assert!(cert.ok(), "violations: {:?}", cert.violations);
+    }
+
+    #[test]
+    fn trace_length_mismatch_is_reported() {
+        // One send of 3 elems, the matching recv logs 2 delivered — the
+        // counts agree, so only the FIFO length check can catch it.
+        let bad = vec![
+            vec![TraceEvent::Send { peer: 1, send_elems: 3 }],
+            vec![TraceEvent::Recv { peer: 0, elems: 2 }],
+        ];
+        let out = check_trace(&bad, &[]);
+        assert!(out.violations.iter().any(|v| v.kind() == "length-mismatch"));
+        let good = vec![
+            vec![TraceEvent::Send { peer: 1, send_elems: 3 }],
+            vec![TraceEvent::Recv { peer: 0, elems: 3 }],
+        ];
+        assert!(check_trace(&good, &[]).violations.is_empty());
     }
 }

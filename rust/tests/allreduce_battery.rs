@@ -12,7 +12,7 @@ use dpdr::pipeline::Blocks;
 use dpdr::topo::Mapping;
 use dpdr::util::XorShift64;
 
-const ALL_ALGOS: [AlgoKind; 11] = [
+const ALL_ALGOS: [AlgoKind; 12] = [
     AlgoKind::Dpdr,
     AlgoKind::DpdrSingle,
     AlgoKind::PipeTree,
@@ -24,6 +24,7 @@ const ALL_ALGOS: [AlgoKind; 11] = [
     AlgoKind::Rabenseifner,
     AlgoKind::Hier,
     AlgoKind::Scan,
+    AlgoKind::NonPipelined,
 ];
 
 /// Node layout the battery hands `AlgoKind::Hier` (other algorithms
@@ -52,6 +53,40 @@ fn i32_sum_battery() {
                         "{} p={p} m={m} rank={rank}",
                         algo.name()
                     );
+                }
+            }
+        }
+    }
+}
+
+/// The schedule-aware partitions (`--schedule lemma|greedy`) must not
+/// change results, only block boundaries — run the pipelined algorithms
+/// through both oracles at shapes where the greedy and lemma block
+/// counts genuinely differ from the fixed default.
+#[test]
+fn scheduled_partitions_preserve_results() {
+    use dpdr::pipeline::SchedKind;
+    for sched in [SchedKind::Lemma, SchedKind::Greedy] {
+        for algo in [AlgoKind::Dpdr, AlgoKind::DpdrSingle, AlgoKind::PipeTree] {
+            for p in [2usize, 5, 8, 14] {
+                for m in [1usize, 7, 64, 1000] {
+                    let spec = RunSpec::new(p, m)
+                        .sched(sched)
+                        .seed(p as u64 * 131 + m as u64)
+                        .mapping(BATTERY_MAPPING);
+                    let report = run_allreduce_i32(algo, &spec, Timing::Real).unwrap_or_else(
+                        |e| panic!("{} sched={} p={p} m={m}: {e}", algo.name(), sched.name()),
+                    );
+                    let oracles = spec.expected_i32_per_rank(algo);
+                    for (rank, buf) in report.results.into_iter().enumerate() {
+                        assert_eq!(
+                            buf.into_vec().unwrap(),
+                            oracles[rank],
+                            "{} sched={} p={p} m={m} rank={rank}",
+                            algo.name(),
+                            sched.name()
+                        );
+                    }
                 }
             }
         }
@@ -124,6 +159,7 @@ fn nan_laced_max_min_bitwise_identical_across_algos() {
         AlgoKind::Hier,
         AlgoKind::RecursiveDoubling,
         AlgoKind::TwoTree,
+        AlgoKind::NonPipelined,
     ];
     let (p, m, b) = (8usize, 66usize, 7usize);
     // rank r contributes a NaN at positions where (r*31 + i) % 13 == 0, so

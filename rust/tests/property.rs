@@ -28,6 +28,7 @@ fn random_algo(g: &mut Gen) -> AlgoKind {
         AlgoKind::Rabenseifner,
         AlgoKind::Hier,
         AlgoKind::Scan,
+        AlgoKind::NonPipelined,
     ])
 }
 
@@ -399,6 +400,71 @@ fn prop_blocks_partition_exact() {
         }
         if total != m {
             return Err(format!("partition covers {total} != {m}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_auto_never_much_worse_than_best() {
+    // The selection oracle's contract: at any (p, m) — on the tuning
+    // grid or off it — `auto`'s pick stays within a small margin of the
+    // best candidate at that point (10% relative + 2 µs absolute, room
+    // for the log-space snap near regime crossovers where the contenders
+    // are near-tied anyway).
+    use dpdr::model::tuner;
+    use dpdr::pipeline::SchedKind;
+    forall("auto within margin of best", 20, 0xA070, |g| {
+        let p = g.usize_in(2, 16);
+        let m = g.usize_in(1, 100_000);
+        let spec = RunSpec::new(p, m).phantom(true).sched(SchedKind::Lemma);
+        let t = |algo: AlgoKind| {
+            run_allreduce_i32(algo, &spec, Timing::hydra())
+                .map(|r| r.max_vtime_us)
+                .map_err(|e| format!("{} p={p} m={m}: {e}", algo.name()))
+        };
+        let mut best = f64::INFINITY;
+        for &cand in tuner::CANDIDATES.iter() {
+            best = best.min(t(cand)?);
+        }
+        let auto = t(AlgoKind::Auto)?;
+        if auto > best * 1.10 + 2.0 {
+            return Err(format!(
+                "p={p} m={m}: auto picked a {auto:.2} us algorithm, best candidate is {best:.2} us"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_schedule_never_loses_to_lemma() {
+    // The greedy discrete scan includes the Lemma's own pick, so under
+    // the exact integer objective it can never be worse — and both must
+    // partition the full vector.
+    use dpdr::pipeline::predicted_pipeline_time;
+    forall("greedy <= lemma", 150, 0x93ED, |g| {
+        let m = g.usize_in(1, 5_000);
+        let eb = *g.choose(&[4usize, 8]);
+        let a = g.usize_in(2, 80) as f64;
+        let c = g.usize_in(1, 6) as f64;
+        let alpha = g.usize_in(1, 500) as f64 * 1e-8;
+        let beta = g.usize_in(1, 900) as f64 * 1e-11;
+        let link = LinkCost::new(alpha, beta);
+        let bl = Blocks::lemma_optimal(m, eb, a, c, link);
+        let bg = Blocks::greedy_optimal(m, eb, a, c, link);
+        if bl.total() != m || bg.total() != m {
+            return Err(format!("m={m}: partitions cover {}/{}", bl.total(), bg.total()));
+        }
+        let tl = predicted_pipeline_time(m, eb, a, c, link, bl.count());
+        let tg = predicted_pipeline_time(m, eb, a, c, link, bg.count());
+        if tg > tl * (1.0 + 1e-12) {
+            return Err(format!(
+                "m={m} A={a} C={c} α={alpha:e} β={beta:e}: greedy b={} costs {tg:e} > \
+                 lemma b={} at {tl:e}",
+                bg.count(),
+                bl.count()
+            ));
         }
         Ok(())
     });
