@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Validate dpdr Chrome-trace exports: JSON schema, per-rank tracks,
+and flow-arrow pairing (every receive span must have the matching send
+on its peer, and every ph:"s" flow start must have its ph:"f" finish).
+
+Usage: check_trace.py TRACE.json [TRACE.json ...]
+"""
+import json
+import sys
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents missing or empty")
+    other = doc.get("otherData")
+    if not isinstance(other, dict) or other.get("tool") != "dpdr":
+        fail(path, "otherData missing or not a dpdr trace")
+    for key in ("source", "algo", "p", "timing", "recorded", "dropped"):
+        if key not in other:
+            fail(path, f"otherData lacks '{key}'")
+    p = other["p"]
+
+    spans, sends, recvs, flow_s, flow_f = [], {}, [], set(), set()
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M", "s", "f"):
+            fail(path, f"unexpected phase {ph!r}")
+        if ph == "s":
+            flow_s.add(ev["id"])
+        if ph == "f":
+            flow_f.add(ev["id"])
+        if ph not in ("X", "i"):
+            continue
+        spans.append(ev)
+        if not (0 <= ev.get("tid", -1) < p):
+            fail(path, f"span on tid {ev.get('tid')} outside 0..{p - 1}")
+        if "ts" not in ev:
+            fail(path, "span without ts")
+        args = ev.get("args", {})
+        kind = args.get("kind")
+        if kind is None:
+            fail(path, "span without args.kind")
+        key = (ev["tid"], args.get("peer"), args.get("tag"), args.get("seq"))
+        if kind == "send":
+            sends[key] = sends.get(key, 0) + 1
+        elif kind == "recv":
+            recvs.append(key)
+
+    if not spans:
+        fail(path, "no spans")
+    for tid, peer, tag, seq in recvs:
+        if sends.get((peer, tid, tag, seq), 0) < 1:
+            fail(path, f"recv on rank {tid} from {peer} (tag {tag}, seq {seq}) "
+                       f"has no matching send")
+    if flow_s != flow_f:
+        fail(path, f"unbalanced flow arrows: {len(flow_s)} starts, {len(flow_f)} ends, "
+                   f"diff {sorted(flow_s ^ flow_f)[:5]}")
+    if recvs and not flow_s:
+        fail(path, "receives present but no flow arrows emitted")
+    print(f"ok {path}: {len(spans)} spans, {len(recvs)} recvs matched, "
+          f"{len(flow_s)} flows, dropped={other['dropped']}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    for arg in sys.argv[1:]:
+        check(arg)

@@ -41,7 +41,34 @@ use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::model::NetParams;
+use crate::obs;
 use crate::topo::{node_of, Mapping};
+
+/// Record a [`Stall`](obs::EventKind::Stall) span on `rank`'s timeline:
+/// virtual time lost between `from_s` (when the transfer *wanted* to
+/// start) and `until_s` (when the fabric actually admitted it). `cause`
+/// is one of [`obs::stall_cause`]. No-op unless tracing is enabled and
+/// the interval is non-empty — callers on the hot path pay only the
+/// relaxed [`obs::enabled`] load.
+pub(crate) fn trace_stall(
+    rank: usize,
+    peer: usize,
+    tag: u32,
+    cause: u32,
+    from_s: f64,
+    until_s: f64,
+) {
+    if !obs::enabled() || until_s <= from_s {
+        return;
+    }
+    let ev = obs::Event::new(obs::EventKind::Stall, rank)
+        .peer(peer)
+        .tag(tag)
+        .aux(cause)
+        .span_s(from_s, until_s)
+        .wall(obs::wall_now_ns());
+    obs::record(ev);
+}
 
 /// Recover a fabric lock even if a rank thread panicked while holding it:
 /// timeline and queue updates are all-or-nothing under the guard, and the

@@ -53,6 +53,7 @@ use super::Comm;
 use crate::buffer::DataBuf;
 use crate::error::{Error, Result};
 use crate::model::{ComputeCost, CostModel, NetParams};
+use crate::obs;
 use crate::ops::Elem;
 use crate::topo::Mapping;
 
@@ -502,7 +503,21 @@ pub struct ThreadComm<E: Elem> {
     /// receive, barrier, endpoint drop) so it can never be lost or
     /// deadlock a reply cycle.
     tx_held: Vec<Option<Msg<E>>>,
+    /// Tracing sequence counters (`crate::obs`), allocated lazily on
+    /// the first traced transfer so the disabled path stays
+    /// allocation-free. Independent of the fault-layer `tx_seq` (which
+    /// is 0-sized when faults are inert).
+    obs_seq: Option<Box<ObsSeqs>>,
     metrics: RankMetrics,
+}
+
+/// Per-peer send/recv sequence counters for trace flow linking: the
+/// k-th traced send on a `(rank, tag) → peer` stream pairs with the
+/// k-th traced receive on the peer's endpoint. Counted per endpoint in
+/// program order, so they are deterministic under virtual timing.
+struct ObsSeqs {
+    tx: Vec<u64>,
+    rx: Vec<u64>,
 }
 
 impl<E: Elem> ThreadComm<E> {
@@ -536,6 +551,7 @@ impl<E: Elem> ThreadComm<E> {
             rx_want: vec![0; fp],
             rx_held: (0..fp).map(|_| BTreeMap::new()).collect(),
             tx_held: (0..fp).map(|_| None).collect(),
+            obs_seq: None,
             metrics: RankMetrics {
                 shard_id,
                 ..RankMetrics::default()
@@ -575,6 +591,7 @@ impl<E: Elem> ThreadComm<E> {
             rx_want: vec![0; fp],
             rx_held: (0..fp).map(|_| BTreeMap::new()).collect(),
             tx_held: (0..fp).map(|_| None).collect(),
+            obs_seq: None,
             metrics: RankMetrics {
                 shard_id: self.metrics.shard_id,
                 ..RankMetrics::default()
@@ -715,6 +732,57 @@ impl<E: Elem> ThreadComm<E> {
         Ok(())
     }
 
+    /// Next tracing sequence number for the `(self, peer)` stream in
+    /// the given direction. Only called while tracing is enabled; the
+    /// counters allocate on first use so untraced runs never pay.
+    fn obs_next_seq(&mut self, peer: usize, send: bool) -> u64 {
+        let size = self.size;
+        let seqs = self
+            .obs_seq
+            .get_or_insert_with(|| Box::new(ObsSeqs { tx: vec![0; size], rx: vec![0; size] }));
+        let slot = if send { &mut seqs.tx[peer] } else { &mut seqs.rx[peer] };
+        let v = *slot;
+        *slot += 1;
+        v
+    }
+
+    /// Record the transfer-endpoint events of one completed p2p call:
+    /// `send` = `(bytes, start_s, end_s)` for the outgoing half, `recv`
+    /// likewise for the incoming half (start = the `ready` time).
+    /// Callers guard with [`obs::enabled`]; `w0` is the wall stamp
+    /// captured at op entry.
+    fn obs_p2p(
+        &mut self,
+        send: Option<(usize, usize, f64, f64)>,
+        recv: Option<(usize, usize, f64, f64)>,
+        w0: u64,
+    ) {
+        use obs::{Event, EventKind};
+        let (rank, tag) = (self.rank, self.tag);
+        let w1 = obs::wall_now_ns();
+        if let Some((peer, bytes, t0, t1)) = send {
+            let seq = self.obs_next_seq(peer, true);
+            let ev = Event::new(EventKind::SendStart, rank)
+                .peer(peer)
+                .tag(tag)
+                .seq(seq)
+                .bytes(bytes as u64);
+            obs::record(ev.at_s(t0).wall(w0));
+            obs::record(ev.at_s(t1).wall(w1).with_kind(EventKind::SendEnd));
+        }
+        if let Some((peer, bytes, t0, t1)) = recv {
+            let seq = self.obs_next_seq(peer, false);
+            let ev = Event::new(EventKind::RecvStart, rank)
+                .peer(peer)
+                .tag(tag)
+                .seq(seq)
+                .bytes(bytes as u64);
+            obs::record(ev.at_s(t0).wall(w0));
+            obs::record(ev.at_s(t1).wall(w1).with_kind(EventKind::RecvEnd));
+        }
+        obs::note_vtime_us(self.vtime * 1e6);
+    }
+
     /// Sender-side fabric admission of one outgoing transfer of duration
     /// `dur`: virtual backpressure on the edge's bounded injection queue
     /// (the *simulating* thread wall-blocks until the needed slot's drain
@@ -753,12 +821,14 @@ impl<E: Elem> ThreadComm<E> {
                 // rank's virtual post time
                 self.metrics.queue_full_events += 1;
                 self.metrics.stall_us += (freed - t) * 1e6;
+                super::net::trace_stall(rank, peer, tag, obs::stall_cause::BACKPRESSURE, t, freed);
                 t = freed;
             }
         }
         let start = fabric.reserve_egress(rank, peer, t, dur);
         if start > t {
             self.metrics.stall_us += (start - t) * 1e6;
+            super::net::trace_stall(rank, peer, tag, obs::stall_cause::EGRESS_PORT, t, start);
         }
         Ok(start)
     }
@@ -779,6 +849,8 @@ impl<E: Elem> ThreadComm<E> {
         let start = fabric.reserve_ingress(peer, rank, ready, dur);
         if start > ready {
             self.metrics.stall_us += (start - ready) * 1e6;
+            let cause = obs::stall_cause::INGRESS_PORT;
+            super::net::trace_stall(rank, peer, self.tag, cause, ready, start);
         }
         let done = start + dur;
         let tag = self.tag;
@@ -993,6 +1065,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
 
     fn sendrecv(&mut self, peer: usize, send: DataBuf<E>) -> Result<DataBuf<E>> {
         self.check_peer(peer)?;
+        let obs_w0 = if obs::enabled() { obs::wall_now_ns() } else { 0 };
         let sent_bytes = send.bytes();
         let stamp = match self.timing {
             Timing::Virtual(cost, _) => {
@@ -1003,6 +1076,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
         };
         let stamp = self.post(peer, send, stamp)?;
         let msg = self.take(peer)?;
+        let mut obs_ready = stamp;
         if let Timing::Virtual(cost, _) = self.timing {
             // Telephone model: both directions complete together; the cost
             // is driven by the larger payload, and both endpoints compute
@@ -1012,10 +1086,19 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             let bytes = sent_bytes.max(msg.data.bytes());
             let dur = cost.xfer(self.rank, peer, bytes);
             let ready = stamp.max(msg.vtime);
+            obs_ready = ready;
             self.vtime = self.finish_recv(peer, ready, dur);
         }
         self.metrics.exchanges += 1;
         self.metrics.sendrecvs += 1;
+        if obs::enabled() {
+            let end = self.vtime;
+            self.obs_p2p(
+                Some((peer, sent_bytes, stamp, end)),
+                Some((peer, msg.data.bytes(), obs_ready, end)),
+                obs_w0,
+            );
+        }
         Ok(msg.data)
     }
 
@@ -1030,6 +1113,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
         }
         self.check_peer(send_to)?;
         self.check_peer(recv_from)?;
+        let obs_w0 = if obs::enabled() { obs::wall_now_ns() } else { 0 };
         let sent_bytes = send.bytes();
         let (stamp, out_dur) = match self.timing {
             Timing::Virtual(cost, _) => {
@@ -1040,6 +1124,7 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
         };
         let stamp = self.post(send_to, send, stamp)?;
         let msg = self.take(recv_from)?;
+        let (mut obs_ready, mut obs_in_done) = (stamp, stamp);
         if let Timing::Virtual(cost, _) = self.timing {
             // Full duplex: the outgoing and incoming transfers overlap; the
             // step ends when the longer of the two is done, and the incoming
@@ -1048,15 +1133,24 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             let inc_dur = cost.xfer(self.rank, recv_from, msg.data.bytes());
             let ready = stamp.max(msg.vtime);
             let in_done = self.finish_recv(recv_from, ready, inc_dur);
+            (obs_ready, obs_in_done) = (ready, in_done);
             self.vtime = out_done.max(in_done);
         }
         self.metrics.exchanges += 1;
         self.metrics.sendrecvs += 1;
+        if obs::enabled() {
+            self.obs_p2p(
+                Some((send_to, sent_bytes, stamp, stamp + out_dur)),
+                Some((recv_from, msg.data.bytes(), obs_ready, obs_in_done)),
+                obs_w0,
+            );
+        }
         Ok(msg.data)
     }
 
     fn send(&mut self, peer: usize, data: DataBuf<E>) -> Result<()> {
         self.check_peer(peer)?;
+        let obs_w0 = if obs::enabled() { obs::wall_now_ns() } else { 0 };
         let bytes = data.bytes();
         let (stamp, dur) = match self.timing {
             Timing::Virtual(cost, _) => {
@@ -1071,25 +1165,37 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             self.vtime = stamp + dur;
         }
         self.metrics.exchanges += 1;
+        if obs::enabled() {
+            self.obs_p2p(Some((peer, bytes, stamp, stamp + dur)), None, obs_w0);
+        }
         Ok(())
     }
 
     fn recv(&mut self, peer: usize) -> Result<DataBuf<E>> {
         self.check_peer(peer)?;
+        let obs_w0 = if obs::enabled() { obs::wall_now_ns() } else { 0 };
         let msg = self.take(peer)?;
+        let mut obs_ready = self.vtime;
         if let Timing::Virtual(cost, _) = self.timing {
             // Transfer starts when the sender's transfer left and the
             // receiver is ready — max(t_r, t_s) + α + β·n — possibly
             // pushed later by the ingress port.
             let dur = cost.xfer(self.rank, peer, msg.data.bytes());
             let ready = self.vtime.max(msg.vtime);
+            obs_ready = ready;
             self.vtime = self.finish_recv(peer, ready, dur);
         }
         self.metrics.exchanges += 1;
+        if obs::enabled() {
+            let end = self.vtime;
+            self.obs_p2p(None, Some((peer, msg.data.bytes(), obs_ready, end)), obs_w0);
+        }
         Ok(msg.data)
     }
 
     fn barrier(&mut self) -> Result<()> {
+        let obs_w0 = if obs::enabled() { obs::wall_now_ns() } else { 0 };
+        let obs_v0 = self.vtime;
         self.flush_tx_held();
         // A tagged fork must not share the world barrier's generations
         // with the rank endpoints (or with forks of other tags): it
@@ -1110,12 +1216,30 @@ impl<E: Elem> Comm<E> for ThreadComm<E> {
             self.vtime = max;
         }
         self.metrics.barriers += 1;
+        if obs::enabled() {
+            let ev = obs::Event::new(obs::EventKind::Barrier, self.rank)
+                .tag(self.tag)
+                .span_s(obs_v0, self.vtime)
+                .wall(obs_w0);
+            obs::record(ev);
+            obs::note_vtime_us(self.vtime * 1e6);
+        }
         Ok(())
     }
 
     fn charge_compute(&mut self, bytes: usize) {
         if let Timing::Virtual(_, compute) = self.timing {
-            self.vtime += compute.reduce(bytes);
+            let dur = compute.reduce(bytes);
+            if obs::enabled() && dur > 0.0 {
+                let ev = obs::Event::new(obs::EventKind::Reduce, self.rank)
+                    .tag(self.tag)
+                    .bytes(bytes as u64)
+                    .span_s(self.vtime, self.vtime + dur)
+                    .wall(obs::wall_now_ns());
+                obs::record(ev);
+                obs::note_vtime_us((self.vtime + dur) * 1e6);
+            }
+            self.vtime += dur;
         }
         self.metrics.reduce_bytes += bytes as u64;
     }

@@ -215,6 +215,7 @@ where
                 let _ = crate::buffer::pool::take_cow_log();
                 let _ = crate::ops::backend::take_stats();
                 crate::buffer::pool::bind_shard_pool(Some(pool));
+                crate::obs::bind_rank(rank);
                 let mut comm = ThreadComm::new(rank, p, Arc::clone(&registry), barrier, timing);
                 let result = match f(&mut comm) {
                     Ok(r) => r,

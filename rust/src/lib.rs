@@ -36,6 +36,7 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod nbc;
+pub mod obs;
 pub mod ops;
 pub mod pipeline;
 pub mod proptest;

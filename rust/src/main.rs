@@ -2,12 +2,14 @@
 //!
 //! ```text
 //! dpdr run        --algo dpdr --p 288 --m 1000000 [--block 16000] [--phantom] [--real-time]
-//!                 [--hier] [--mapping block:8]
+//!                 [--hier] [--mapping block:8] [--trace out.json] [--trace-cap 65536]
 //! dpdr concurrent --p 288 --m 1024 --k 8 [--algos dpdr,ring] [--fuse-threshold 1024]
 //!                 [--fuse-max-ops 8]       K outstanding nonblocking allreduces per rank
 //! dpdr soak       --p 8 --ops 100000 [--faults transient-drop,stall] [--seed 7]
 //!                 [--deadline-us N] [--max-in-flight N] [--engine threaded|schedule]
-//!                 serving-mode endurance run
+//!                 [--trace out.json] [--json report.json]   serving-mode endurance run
+//! dpdr critical-path TRACE.json [--json out.json] [--assert-model 0.30]
+//!                 happens-before walk + alpha/beta/gamma/stall attribution of a trace
 //! dpdr table2     [--p 288] [--block 16000] [--rounds 3] [--tsv out.tsv]  reproduce Table 2
 //! dpdr fig1       [--tsv out.tsv]                                         Figure 1 series
 //! dpdr latency    [--hmax 12]                                             §1.2 4h−3 check
@@ -63,6 +65,7 @@ fn run(argv: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "concurrent" => cmd_concurrent(&args),
         "soak" => cmd_soak(&args),
+        "critical-path" => cmd_critical_path(&args),
         "table2" => cmd_table2(&args),
         "fig1" => cmd_fig1(&args),
         "latency" => cmd_latency(&args),
@@ -93,6 +96,11 @@ subcommands:
              per directed edge; posting to a full queue stalls the sender's clock; 0 = unbounded)
              [--reduce-backend auto|scalar|simd|pjrt]  (kernel for the block-wise reduction;
              pjrt needs AOT artifacts — set DPDR_ARTIFACTS — and falls back simd -> scalar)
+             [--trace FILE]     (record one dedicated traced iteration after the timed
+             rounds and write a Chrome-trace JSON — open in Perfetto, or feed to
+             `dpdr critical-path`; virtual-time traces are bitwise run-to-run stable)
+             [--trace-cap N]    (per-rank event ring capacity, default 65536; overflow
+             drops oldest and is counted in the export)
   concurrent K outstanding nonblocking allreduces per rank through the nbc engine:
              --p N --m N [--k 8] [--algos dpdr,ring,...] (rotation over the K ops)
              [--fuse-threshold N]  (ops of <= N elements coalesce into one fused dpdr; 0 = off)
@@ -112,6 +120,16 @@ subcommands:
              [--engine threaded|schedule]  (schedule: compile ops to per-rank step
              programs driven by the shared progress core — no thread per op, true
              deadline cancellation; implies --no-fuse)
+             [--trace FILE]  (record the whole soak into a Chrome-trace JSON)
+             [--trace-cap N] [--json FILE]  (write the SoakReport as JSON)
+  critical-path  walk a recorded trace's happens-before DAG backwards from the
+             last event and attribute the chain to alpha (latency), beta (bandwidth),
+             gamma (reduction), stall (shared-NIC/backpressure), and wait buckets;
+             compares against the paper's closed-form prediction when the trace
+             carries a uniform virtual model:
+             dpdr critical-path TRACE.json [--json FILE]
+             [--assert-model TOL]  (exit nonzero if |measured-predicted|/predicted
+             exceeds TOL; 0.30 matches the documented model tolerance)
   table2     reproduce the paper's Table 2 (4 algorithms x 30 counts)
              [--p 288] [--block 16000] [--rounds 3] [--tsv FILE] [--markdown]
   fig1       Figure 1 series (TSV for log-log plotting) [--tsv FILE]
@@ -258,6 +276,76 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("analytic_us={pred:.2} (paper Sec. 1.2 formula)");
         }
     }
+    if let Some(path) = args.raw("trace") {
+        write_run_trace(path, trace_cap(args)?, algo, &spec, timing)?;
+    }
+    Ok(())
+}
+
+/// `--trace-cap`: per-rank event ring capacity.
+fn trace_cap(args: &Args) -> Result<usize> {
+    args.get("trace-cap", 65_536usize)
+}
+
+/// Self-describing metadata for an exported trace. Carries the resolved
+/// block count and, for uniform virtual runs, the α/β/γ constants the
+/// critical-path analyzer needs to rebuild the model comparison.
+fn trace_meta(
+    algo: Option<AlgoKind>,
+    spec: &RunSpec,
+    timing: Timing,
+    source: &str,
+) -> Result<dpdr::obs::TraceMeta> {
+    let mut meta = dpdr::obs::TraceMeta {
+        algo: algo.map(|a| a.name()).unwrap_or(source).to_string(),
+        p: spec.p,
+        m_elems: spec.m,
+        elem_bytes: 4,
+        blocks: 0,
+        alpha: 0.0,
+        beta: 0.0,
+        gamma: 0.0,
+        virtual_time: matches!(timing, Timing::Virtual(..)),
+        source: source.to_string(),
+    };
+    if let Some(a) = algo {
+        meta.blocks = spec.blocks_for(a, timing)?.count();
+    }
+    if let Timing::Virtual(model, compute) = timing {
+        if let Some(link) = model.as_uniform() {
+            meta.alpha = link.alpha;
+            meta.beta = link.beta;
+        }
+        meta.gamma = compute.gamma;
+    }
+    Ok(meta)
+}
+
+/// One dedicated traced iteration, run *after* the timed rounds so the
+/// recording overhead never pollutes the reported numbers, exported as
+/// Chrome-trace JSON (Perfetto-loadable, `dpdr critical-path`-readable).
+fn write_run_trace(
+    path: &str,
+    cap: usize,
+    algo: AlgoKind,
+    spec: &RunSpec,
+    timing: Timing,
+) -> Result<()> {
+    if !dpdr::obs::start(spec.p, cap) {
+        return Err(Error::Cli("a trace is already recording".into()));
+    }
+    let run = dpdr::collectives::run_allreduce_i32(algo, spec, timing);
+    // stop (and thus disarm) the collector even when the run failed,
+    // then surface the run's error first — it is the interesting one
+    let trace = dpdr::obs::stop(trace_meta(Some(algo), spec, timing, "run")?);
+    run?;
+    let trace = trace.ok_or_else(|| Error::Protocol("trace collector vanished".into()))?;
+    std::fs::write(path, dpdr::obs::export::to_chrome_json(&trace))?;
+    eprintln!(
+        "# wrote {path}: {} events ({} dropped) — Perfetto or `dpdr critical-path {path}`",
+        trace.events.len(),
+        trace.dropped
+    );
     Ok(())
 }
 
@@ -392,7 +480,30 @@ fn cmd_soak(args: &Args) -> Result<()> {
         spec.epoch_ops,
         spec.engine.name()
     );
-    let r = run_soak(&spec)?;
+    let trace_path = args.raw("trace");
+    if trace_path.is_some() && !dpdr::obs::start(p, trace_cap(args)?) {
+        return Err(Error::Cli("a trace is already recording".into()));
+    }
+    let run = run_soak(&spec);
+    if let Some(path) = trace_path {
+        // mixed-size stream: no single (m, blocks), so those stay 0 and
+        // the critical-path analyzer reports measured-only
+        let meta = trace_meta(None, &RunSpec::new(p, 0), spec.timing, "soak")?;
+        // always disarm the collector; only export when the soak passed
+        // (its error, surfaced below, is the interesting one)
+        let trace = dpdr::obs::stop(meta);
+        if run.is_ok() {
+            let trace =
+                trace.ok_or_else(|| Error::Protocol("trace collector vanished".into()))?;
+            std::fs::write(path, dpdr::obs::export::to_chrome_json(&trace))?;
+            eprintln!(
+                "# wrote {path}: {} events ({} dropped)",
+                trace.events.len(),
+                trace.dropped
+            );
+        }
+    }
+    let r = run?;
     println!(
         "soak: completed={}/{} per rank, deadline_misses={} overload_rejections={}",
         r.ops_completed, ops, r.deadline_misses, r.overload_rejections
@@ -406,9 +517,13 @@ fn cmd_soak(args: &Args) -> Result<()> {
         r.retransmits, r.fault_events
     );
     println!(
-        "latency window: p50_us={:.2} p99_us={:.2}; wall_us={:.0} vtime_us={:.2}",
-        r.p50_us, r.p99_us, r.wall_us, r.max_vtime_us
+        "latency window: p50_us={:.2} p90_us={:.2} p99_us={:.2}; wall_us={:.0} vtime_us={:.2}",
+        r.p50_us, r.p90_us, r.p99_us, r.wall_us, r.max_vtime_us
     );
+    if let Some(path) = args.raw("json") {
+        std::fs::write(path, format!("{}\n", r.to_json()))?;
+        eprintln!("# wrote {path}");
+    }
     if r.ops_completed != ops {
         return Err(Error::Protocol(format!(
             "soak lost operations: {}/{ops} completed",
@@ -420,6 +535,64 @@ fn cmd_soak(args: &Args) -> Result<()> {
             "{} registry entries leaked past the final quiesce",
             r.entries_final
         )));
+    }
+    Ok(())
+}
+
+/// `dpdr critical-path TRACE.json`: rebuild the spans and metadata from
+/// an exported Chrome trace, walk the happens-before DAG backwards from
+/// the last event, and print the α/β/γ/stall/wait attribution next to
+/// the paper's closed-form prediction (when the trace carries a uniform
+/// virtual model). `--assert-model TOL` turns the comparison into a
+/// gate: exit nonzero when |measured − predicted| / predicted > TOL —
+/// 0.30 is the documented tolerance the virtual-time tests hold the
+/// analytic formulas to.
+fn cmd_critical_path(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Cli("usage: dpdr critical-path TRACE.json".into()))?;
+    let text = std::fs::read_to_string(path)?;
+    let (meta, spans) = dpdr::obs::export::read_chrome_json(&text)?;
+    let report = dpdr::obs::critical::analyze(&meta, &spans);
+    println!(
+        "critical-path: algo={} p={} source={} spans={} hops={} measured_us={:.2}",
+        report.algo,
+        report.p,
+        if meta.source.is_empty() { "?" } else { meta.source.as_str() },
+        spans.len(),
+        report.hops,
+        report.measured_us
+    );
+    let b = &report.buckets;
+    println!(
+        "attribution: alpha_us={:.2} beta_us={:.2} gamma_us={:.2} stall_us={:.2} \
+         wait_us={:.2} other_us={:.2}",
+        b.alpha_us, b.beta_us, b.gamma_us, b.stall_us, b.wait_us, b.other_us
+    );
+    match (report.predicted_us, report.rel_err) {
+        (Some(pred), Some(err)) => {
+            println!("model: predicted_us={pred:.2} rel_err={:.1}%", err * 100.0)
+        }
+        _ => println!("model: no uniform virtual model in trace (measured-only)"),
+    }
+    if let Some(out) = args.raw("json") {
+        std::fs::write(out, report.to_json())?;
+        eprintln!("# wrote {out}");
+    }
+    let tol = args.get("assert-model", 0.0f64)?;
+    if tol > 0.0 {
+        let err = report.rel_err.ok_or_else(|| {
+            Error::Protocol("--assert-model: trace carries no model to compare against".into())
+        })?;
+        if err > tol {
+            return Err(Error::Protocol(format!(
+                "critical-path drifted from the model: rel_err {:.1}% > {:.1}%",
+                err * 100.0,
+                tol * 100.0
+            )));
+        }
+        println!("assert-model: ok (rel_err within {:.1}%)", tol * 100.0);
     }
     Ok(())
 }

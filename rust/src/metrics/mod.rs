@@ -72,6 +72,32 @@ impl Stats {
     pub fn median(&self) -> f64 {
         self.quantile(0.5)
     }
+
+    /// Exact q-quantile: the sample at sorted index `⌊(n−1)·q⌋`, never an
+    /// interpolated value. Latency reports quote this form so every figure
+    /// is a time that was actually observed (interpolation between two
+    /// iterations has no physical meaning).
+    pub fn quantile_exact(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).floor() as usize;
+        sorted[pos]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile_exact(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile_exact(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile_exact(0.99)
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +127,23 @@ mod tests {
         assert_eq!(s.quantile(0.0), 0.0);
         assert_eq!(s.quantile(1.0), 100.0);
         assert_eq!(s.quantile(0.25), 25.0);
+    }
+
+    #[test]
+    fn exact_percentiles_are_observed_samples() {
+        let mut s = Stats::new();
+        for v in [5.0, 1.0, 9.0, 3.0, 7.0] {
+            s.push(v);
+        }
+        // n=5: ⌊4·0.5⌋=2, ⌊4·0.9⌋=3, ⌊4·0.99⌋=3 over sorted [1,3,5,7,9]
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.p90(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+        // every exact quantile must be a pushed sample, q across the range
+        for q in [0.0, 0.1, 0.33, 0.66, 0.95, 1.0] {
+            assert!([1.0, 3.0, 5.0, 7.0, 9.0].contains(&s.quantile_exact(q)));
+        }
+        assert!(Stats::new().p99().is_nan());
     }
 
     #[test]

@@ -140,6 +140,7 @@ use crate::collectives::allreduce_on;
 use crate::comm::{Comm, RankMetrics, ThreadComm, Timing};
 use crate::error::{Error, Result};
 use crate::model::{AlgoKind, LinkCost};
+use crate::obs;
 use crate::ops::{Elem, ReduceBackend, ReduceOp};
 use crate::pipeline::Blocks;
 use crate::schedule::exec::{Core, Outcome};
@@ -517,6 +518,21 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         m.ops_in_flight_max = m.ops_in_flight_max.max(self.outstanding_max);
     }
 
+    /// Record one op-lifecycle instant (`seq` = op id) at this rank's
+    /// current virtual clock. No-op unless tracing is enabled.
+    fn obs_lifecycle(&self, kind: obs::EventKind, tag: u32, id: u64, bytes: u64) {
+        if !obs::enabled() {
+            return;
+        }
+        let ev = obs::Event::new(kind, self.comm.rank())
+            .tag(tag)
+            .seq(id)
+            .bytes(bytes)
+            .at_s(self.comm.vtime())
+            .wall(obs::wall_now_ns());
+        obs::record(ev);
+    }
+
     /// Submit a nonblocking allreduce of `x` under `algo` (any flat
     /// [`AlgoKind`], or [`AlgoKind::Hier`] over the config's mapping;
     /// [`AlgoKind::Scan`] runs the prefix scan). Returns immediately.
@@ -589,6 +605,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         self.admitted += 1;
         let cell = OpCell::new();
         self.note_submitted();
+        self.obs_lifecycle(obs::EventKind::OpSubmit, 0, id, (x.len() * E::BYTES) as u64);
         if fusable {
             self.pending.push(Pending {
                 id,
@@ -596,6 +613,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                 x,
                 blocks: *blocks,
             });
+            self.obs_lifecycle(obs::EventKind::OpQueue, 0, id, 0);
             if self.pending.len() >= self.cfg.fuse.max_ops {
                 self.flush()?;
             }
@@ -670,10 +688,12 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                     v0,
                     wall0: std::time::Instant::now(),
                 });
+                self.obs_lifecycle(obs::EventKind::OpLaunch, tag, id, 0);
                 return Ok(());
             }
         }
         let tag = self.lease_tag()?;
+        self.obs_lifecycle(obs::EventKind::OpLaunch, tag, id, 0);
         let child = self.comm.fork_tagged(tag);
         let op = self.op.clone();
         let mapping = self.cfg.mapping;
@@ -683,6 +703,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             let v0 = comm.vtime();
             let out = allreduce_on(algo, comm, x, &op, &blocks, mapping);
             let took = op_duration_us(comm, wall0, v0);
+            obs_op_wait(comm.rank(), tag, id, v0, took);
             let ok = out.is_ok();
             cell.put(out, took);
             ok
@@ -766,6 +787,18 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
         let backend = self.cfg.backend;
         let (ids, worker_cells): (Vec<u64>, Vec<Arc<OpCell<E>>>) =
             batch.into_iter().map(|p| (p.id, p.cell)).unzip();
+        let first_id = ids.first().copied().unwrap_or(0);
+        if obs::enabled() {
+            let ev = obs::Event::new(obs::EventKind::OpFuse, self.comm.rank())
+                .tag(tag)
+                .seq(first_id)
+                .bytes((total * E::BYTES) as u64)
+                .aux(ids.len() as u32)
+                .at_s(self.comm.vtime())
+                .wall(obs::wall_now_ns());
+            obs::record(ev);
+        }
+        self.obs_lifecycle(obs::EventKind::OpLaunch, tag, first_id, 0);
         let handle = spawn_worker(child, tag, backend, move |comm| {
             let wall0 = std::time::Instant::now();
             let v0 = comm.vtime();
@@ -773,6 +806,7 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
             // one batch, one duration: every fused op completes when the
             // shared collective does, so each cell gets the batch's time
             let took = op_duration_us(comm, wall0, v0);
+            obs_op_wait(comm.rank(), tag, first_id, v0, took);
             match out {
                 Ok(y) => {
                     // scatter: each request gets its slice of the fused
@@ -968,6 +1002,8 @@ impl<'c, E: Elem, O: ReduceOp<E> + Clone + 'static> Engine<'c, E, O> {
                     Timing::Virtual(..) => (vtime - flight.v0) * 1e6,
                     Timing::Real => wall_us,
                 };
+                let first_id = flight.cells.first().map_or(0, |c| c.0);
+                obs_op_wait(rank, flight.tag, first_id, flight.v0, took_us);
                 if let [(_, cell, _, _)] = flight.cells.as_slice() {
                     cell.put(Ok(y), took_us);
                 } else {
@@ -1066,6 +1102,23 @@ fn op_duration_us<E: Elem>(comm: &ThreadComm<E>, wall0: std::time::Instant, v0: 
     }
 }
 
+/// Record the [`OpWait`](obs::EventKind::OpWait) span of one completed
+/// operation over its virtual lifetime `[v0, v0 + took_us]`. Stamped at
+/// completion, not at the redeeming `wait` call, so traces are invariant
+/// under wait-order permutations.
+fn obs_op_wait(rank: usize, tag: u32, id: u64, v0: f64, took_us: f64) {
+    if !obs::enabled() {
+        return;
+    }
+    let ev = obs::Event::new(obs::EventKind::OpWait, rank)
+        .tag(tag)
+        .seq(id)
+        .at_s(v0)
+        .dur_us(took_us)
+        .wall(obs::wall_now_ns());
+    obs::record(ev);
+}
+
 /// Spawn one worker thread running `body` on the forked endpoint, then
 /// harvesting the endpoint's metrics (plus the worker thread's buffer and
 /// backend thread-locals) and final virtual clock. Errors inside `body`
@@ -1087,6 +1140,7 @@ fn spawn_worker<E: Elem>(
         .stack_size(1 << 20)
         .spawn(move || {
             let _backend = crate::ops::backend::scope(backend);
+            crate::obs::bind_rank(child.rank());
             // fresh thread: reset the thread-local counters so the
             // harvest below covers exactly this operation
             let _ = crate::buffer::pool::take_stats();

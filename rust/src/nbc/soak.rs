@@ -124,14 +124,47 @@ pub struct SoakReport {
     pub retransmits: u64,
     /// Other injected fault events (delays, duplicates, reorder holds).
     pub fault_events: u64,
-    /// Median per-op duration over rank 0's sliding window, in µs.
+    /// Median per-op duration over rank 0's sliding window, in µs
+    /// (exact sample, [`Stats::p50`](crate::metrics::Stats::p50)).
     pub p50_us: f64,
+    /// 90th-percentile per-op duration over rank 0's window, in µs.
+    pub p90_us: f64,
     /// 99th-percentile per-op duration over rank 0's window, in µs.
     pub p99_us: f64,
     /// Wall-clock duration of the whole soak, in µs.
     pub wall_us: f64,
     /// Final virtual clock (0 under real timing), in µs.
     pub max_vtime_us: f64,
+}
+
+impl SoakReport {
+    /// Serialize the report as a single JSON object (`dpdr soak --json`).
+    /// Same hand-rolled style as
+    /// [`ScheduleCert::to_json`](crate::schedule::verify::ScheduleCert::to_json):
+    /// flat keys, no dependencies, floats via `{:.3}` so runs diff cleanly.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"ops_completed\":{},\"deadline_misses\":{},\"overload_rejections\":{},\
+             \"entries_high_water\":{},\"entries_final\":{},\"epochs\":{},\
+             \"tags_recycled\":{},\"retransmits\":{},\"fault_events\":{},\
+             \"p50_us\":{:.3},\"p90_us\":{:.3},\"p99_us\":{:.3},\
+             \"wall_us\":{:.3},\"max_vtime_us\":{:.3}}}",
+            self.ops_completed,
+            self.deadline_misses,
+            self.overload_rejections,
+            self.entries_high_water,
+            self.entries_final,
+            self.epochs,
+            self.tags_recycled,
+            self.retransmits,
+            self.fault_events,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.wall_us,
+            self.max_vtime_us,
+        )
+    }
 }
 
 /// splitmix64 finalizer — the same stateless generator the fault plan
@@ -301,6 +334,7 @@ pub fn run_soak(spec: &SoakSpec) -> Result<SoakReport> {
         retransmits: totals.retransmits,
         fault_events: totals.fault_events,
         p50_us: 0.0,
+        p90_us: 0.0,
         p99_us: 0.0,
         wall_us: report.wall_us,
         max_vtime_us: report.max_vtime_us,
@@ -308,11 +342,14 @@ pub fn run_soak(spec: &SoakSpec) -> Result<SoakReport> {
     for (rank, s) in report.results.iter().enumerate() {
         if rank == 0 {
             out.ops_completed = s.completed;
-            let mut w = s.window.clone();
-            if !w.is_empty() {
-                w.sort_by(|a, b| a.total_cmp(b));
-                out.p50_us = w[(w.len() - 1) / 2];
-                out.p99_us = w[(w.len() - 1) * 99 / 100];
+            if !s.window.is_empty() {
+                let mut lat = crate::metrics::Stats::new();
+                for &v in &s.window {
+                    lat.push(v);
+                }
+                out.p50_us = lat.p50();
+                out.p90_us = lat.p90();
+                out.p99_us = lat.p99();
             }
         }
         out.deadline_misses += s.misses;
@@ -389,7 +426,14 @@ mod tests {
         assert_eq!(r.overload_rejections, 0);
         assert_eq!(r.entries_final, 0, "final quiesce must drain the tables");
         assert!(r.epochs > 0 && r.tags_recycled > 0);
-        assert!(r.p50_us > 0.0 && r.p99_us >= r.p50_us);
+        assert!(r.p50_us > 0.0 && r.p90_us >= r.p50_us && r.p99_us >= r.p90_us);
+        let json = r.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"ops_completed\":300"));
+        assert!(json.contains("\"p90_us\":"));
+        // the exporter's own parser must round-trip the report
+        let v = crate::obs::json::parse(&json).expect("report is valid JSON");
+        assert_eq!(v.get("ops_completed").and_then(|n| n.as_f64()), Some(300.0));
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! Critical-path extraction and α/β/γ/stall attribution over a
+//! recorded trace.
+//!
+//! The happens-before relation of a run is implicit in the spans: on
+//! one rank they are totally ordered by the (virtual) clock, and every
+//! receive depends on the matching send on the peer — the same
+//! `(src, dst, tag, seq)` key the exporter uses for flow arrows. The
+//! analyzer walks this DAG backwards from the globally latest span:
+//! at each receive it asks whether the *local* predecessor or the
+//! *sender's readiness* was the binding constraint, and hops ranks when
+//! it was the sender. The result is the longest dependency chain — the
+//! paper's critical path — with every microsecond on it attributed to
+//! one of the cost-model buckets:
+//!
+//! * `alpha_us` — per-message latency (α per transfer on the path),
+//! * `beta_us` — serialization (β · bytes per transfer),
+//! * `gamma_us` — reduction compute (the γ-charges),
+//! * `stall_us` — congestion: queue backpressure and port contention,
+//!   both inside transfers (residual over α + βm) and in gaps covered
+//!   by recorded `Stall` spans,
+//! * `wait_us` — idle gaps not explained by any recorded cause,
+//! * `other_us` — barriers and spans with no model (real-time runs).
+//!
+//! For uniform virtual-model traces the report also recomputes
+//! `model::predicted_time_us` for the run's `(algo, p, m, blocks)` and
+//! states the relative error — the paper's model-validation loop
+//! (§1.2), per-run instead of per-benchmark. The documented tolerance
+//! is the one the model tests pin: the analytic forms idealize away
+//! tree imbalance and hold within ~30% of the simulation.
+
+use super::export::{Span, SpanKind};
+use super::{Trace, TraceMeta};
+use crate::model::{AlgoKind, LinkCost};
+use std::collections::HashMap;
+
+/// Where the critical path's time went, µs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Buckets {
+    pub alpha_us: f64,
+    pub beta_us: f64,
+    pub gamma_us: f64,
+    pub stall_us: f64,
+    pub wait_us: f64,
+    pub other_us: f64,
+}
+
+impl Buckets {
+    /// Total attributed time.
+    pub fn total_us(&self) -> f64 {
+        self.alpha_us + self.beta_us + self.gamma_us + self.stall_us + self.wait_us + self.other_us
+    }
+}
+
+/// One link of the critical chain, in time order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CritStep {
+    pub rank: usize,
+    pub kind: SpanKind,
+    pub peer: i32,
+    pub tag: u32,
+    pub seq: u64,
+    pub bytes: u64,
+    pub t0_us: f64,
+    pub t1_us: f64,
+}
+
+/// The analyzer's result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CritReport {
+    pub algo: String,
+    pub p: usize,
+    /// End-to-end span of the run (latest end − earliest start), µs.
+    pub measured_us: f64,
+    /// `model::predicted_time_us` for the run's parameters, when the
+    /// trace carries a uniform virtual model.
+    pub predicted_us: Option<f64>,
+    /// |measured − predicted| / predicted.
+    pub rel_err: Option<f64>,
+    pub buckets: Buckets,
+    /// Rank hops along the chain (sender-side constraints).
+    pub hops: usize,
+    pub path: Vec<CritStep>,
+}
+
+impl CritReport {
+    /// Machine-readable form (same hand-rolled JSON idiom as the
+    /// schedule certs).
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| v.map(|x| x.to_string()).unwrap_or_else(|| "null".into());
+        let steps: Vec<String> = self
+            .path
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"rank\":{},\"kind\":\"{}\",\"peer\":{},\"tag\":{},\"seq\":{},\
+                     \"bytes\":{},\"t0_us\":{},\"t1_us\":{}}}",
+                    s.rank,
+                    s.kind.name(),
+                    s.peer,
+                    s.tag,
+                    s.seq,
+                    s.bytes,
+                    s.t0_us,
+                    s.t1_us
+                )
+            })
+            .collect();
+        format!(
+            "{{\n\"algo\":\"{}\",\"p\":{},\"measured_us\":{},\"predicted_us\":{},\
+             \"rel_err\":{},\n\"buckets\":{{\"alpha_us\":{},\"beta_us\":{},\"gamma_us\":{},\
+             \"stall_us\":{},\"wait_us\":{},\"other_us\":{}}},\n\"hops\":{},\"steps\":{},\n\
+             \"path\":[\n{}\n]\n}}\n",
+            self.algo,
+            self.p,
+            self.measured_us,
+            opt(self.predicted_us),
+            opt(self.rel_err),
+            self.buckets.alpha_us,
+            self.buckets.beta_us,
+            self.buckets.gamma_us,
+            self.buckets.stall_us,
+            self.buckets.wait_us,
+            self.buckets.other_us,
+            self.hops,
+            self.path.len(),
+            steps.join(",\n")
+        )
+    }
+}
+
+/// Spans that advance a rank's clock and therefore carry dependencies.
+fn on_path(kind: SpanKind) -> bool {
+    matches!(
+        kind,
+        SpanKind::Send | SpanKind::Recv | SpanKind::Reduce | SpanKind::Barrier
+    )
+}
+
+/// Walk the happens-before DAG of `spans` backwards from the latest
+/// span and attribute the chain. `spans` come from
+/// [`super::export::spans_of`] or [`super::export::read_chrome_json`].
+pub fn analyze(meta: &TraceMeta, spans: &[Span]) -> CritReport {
+    let model_known = meta.virtual_time && (meta.alpha > 0.0 || meta.beta > 0.0);
+    let mut buckets = Buckets::default();
+    // Per-rank clock-ordered indices of path spans and stall spans.
+    let p = spans.iter().map(|s| s.rank + 1).max().unwrap_or(meta.p).max(meta.p);
+    let mut by_rank: Vec<Vec<usize>> = vec![Vec::new(); p];
+    let mut stalls: Vec<Vec<usize>> = vec![Vec::new(); p];
+    let mut send_at: HashMap<(usize, usize, u32, u64), usize> = HashMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        if on_path(s.kind) {
+            by_rank[s.rank].push(i);
+            if s.kind == SpanKind::Send && s.peer >= 0 {
+                send_at.insert((s.rank, s.peer as usize, s.tag, s.seq), i);
+            }
+        } else if s.kind == SpanKind::Stall {
+            stalls[s.rank].push(i);
+        }
+    }
+    // Virtual clocks start at 0 by construction; real-time traces
+    // start wherever the first event landed on the wall clock.
+    let min_t0 = spans.iter().map(|s| s.t0_us).fold(f64::INFINITY, f64::min);
+    let t_start = if meta.virtual_time || !min_t0.is_finite() { 0.0 } else { min_t0 };
+    // Terminal: the latest-ending path span (ties broken toward the
+    // lowest rank, then earliest start — a total, deterministic order).
+    let mut terminal: Option<usize> = None;
+    for &i in by_rank.iter().flatten() {
+        let better = match terminal {
+            None => true,
+            Some(j) => {
+                let (a, b) = (&spans[i], &spans[j]);
+                (a.t1_us, b.rank, b.t0_us.to_bits()) > (b.t1_us, a.rank, a.t0_us.to_bits())
+            }
+        };
+        if better {
+            terminal = Some(i);
+        }
+    }
+    let measured_us = terminal.map(|i| spans[i].t1_us - t_start).unwrap_or(0.0);
+    let eps = 1e-9 + measured_us * 1e-12;
+    // Position of each path span within its rank's clock-ordered list;
+    // predecessor search walks strictly earlier positions, which makes
+    // the backwards walk terminate even through zero-duration spans.
+    let mut pos_of: HashMap<usize, usize> = HashMap::new();
+    for list in &by_rank {
+        for (pos, &i) in list.iter().enumerate() {
+            pos_of.insert(i, pos);
+        }
+    }
+    // Latest path span on `rank` before list position `before` that
+    // ends at or before `tlim`.
+    let latest_before = |rank: usize, tlim: f64, before: usize| -> Option<usize> {
+        by_rank[rank][..before]
+            .iter()
+            .rev()
+            .copied()
+            .find(|&i| spans[i].t1_us <= tlim + eps)
+    };
+    // Attribute an idle gap [from, to] on `rank`: stall where a Stall
+    // span covers it, wait otherwise.
+    let gap_buckets = |buckets: &mut Buckets, rank: usize, from: f64, to: f64| {
+        if to - from <= eps {
+            return;
+        }
+        let mut covered = 0.0;
+        for &i in &stalls[rank] {
+            let s = &spans[i];
+            let lo = s.t0_us.max(from);
+            let hi = s.t1_us.min(to);
+            if hi > lo {
+                covered += hi - lo;
+            }
+        }
+        let gap = to - from;
+        buckets.stall_us += covered.min(gap);
+        buckets.wait_us += (gap - covered).max(0.0);
+    };
+    let mut path_rev: Vec<usize> = Vec::new();
+    let mut hops = 0usize;
+    let mut cur = terminal;
+    let budget = 4 * spans.len() + 16;
+    while let Some(ci) = cur {
+        if path_rev.len() > budget {
+            break;
+        }
+        path_rev.push(ci);
+        let s = &spans[ci];
+        let d = (s.t1_us - s.t0_us).max(0.0);
+        match s.kind {
+            SpanKind::Send | SpanKind::Recv => {
+                if model_known {
+                    let a_us = meta.alpha * 1e6;
+                    let b_us = meta.beta * 1e6 * s.bytes as f64;
+                    let alpha_part = d.min(a_us);
+                    let beta_part = (d - alpha_part).min(b_us);
+                    buckets.alpha_us += alpha_part;
+                    buckets.beta_us += beta_part;
+                    buckets.stall_us += d - alpha_part - beta_part;
+                } else {
+                    buckets.other_us += d;
+                }
+            }
+            SpanKind::Reduce => buckets.gamma_us += d,
+            _ => buckets.other_us += d,
+        }
+        // Choose the binding predecessor.
+        let local = latest_before(s.rank, s.t0_us, pos_of[&ci]);
+        let local_end = local.map(|i| spans[i].t1_us).unwrap_or(f64::NEG_INFINITY);
+        let sender = (s.kind == SpanKind::Recv && s.peer >= 0)
+            .then(|| send_at.get(&(s.peer as usize, s.rank, s.tag, s.seq)).copied())
+            .flatten();
+        cur = match sender {
+            Some(si) if spans[si].t0_us > local_end + eps => {
+                // The sender posted after we were ready: the chain runs
+                // through the peer. Continue before its send; the time
+                // between `local_end` and our start belongs to the
+                // sender's chain, not to this rank.
+                hops += 1;
+                let snd = &spans[si];
+                let prev = latest_before(snd.rank, snd.t0_us, pos_of[&si]);
+                if let Some(pi) = prev {
+                    gap_buckets(&mut buckets, snd.rank, spans[pi].t1_us, snd.t0_us);
+                } else {
+                    gap_buckets(&mut buckets, snd.rank, t_start, snd.t0_us);
+                }
+                prev
+            }
+            _ => {
+                match local {
+                    Some(pi) => gap_buckets(&mut buckets, s.rank, spans[pi].t1_us, s.t0_us),
+                    None => gap_buckets(&mut buckets, s.rank, t_start, s.t0_us),
+                }
+                local
+            }
+        };
+    }
+    path_rev.reverse();
+    let path: Vec<CritStep> = path_rev
+        .iter()
+        .map(|&i| {
+            let s = &spans[i];
+            CritStep {
+                rank: s.rank,
+                kind: s.kind,
+                peer: s.peer,
+                tag: s.tag,
+                seq: s.seq,
+                bytes: s.bytes,
+                t0_us: s.t0_us,
+                t1_us: s.t1_us,
+            }
+        })
+        .collect();
+    let predicted_us = (model_known && meta.blocks > 0 && meta.m_elems > 0)
+        .then(|| {
+            AlgoKind::parse(&meta.algo).map(|algo| {
+                predicted(
+                    algo,
+                    meta.p,
+                    meta.m_elems * meta.elem_bytes,
+                    meta.blocks,
+                    LinkCost::new(meta.alpha, meta.beta),
+                )
+            })
+        })
+        .flatten();
+    let rel_err = predicted_us
+        .filter(|&pr| pr > 0.0)
+        .map(|pr| (measured_us - pr).abs() / pr);
+    CritReport {
+        algo: meta.algo.clone(),
+        p: meta.p,
+        measured_us,
+        predicted_us,
+        rel_err,
+        buckets,
+        hops,
+        path,
+    }
+}
+
+fn predicted(algo: AlgoKind, p: usize, m_bytes: usize, b: usize, link: LinkCost) -> f64 {
+    crate::model::predicted_time_us(algo, p, m_bytes, b, link)
+}
+
+/// Convenience: pair a recorded trace's events and analyze.
+pub fn analyze_trace(trace: &Trace) -> CritReport {
+    let spans = super::export::spans_of(&trace.events);
+    analyze(&trace.meta, &spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, EventKind, Trace};
+
+    fn meta(virtual_time: bool) -> TraceMeta {
+        TraceMeta {
+            algo: "dpdr".into(),
+            p: 2,
+            m_elems: 8,
+            elem_bytes: 4,
+            blocks: 1,
+            alpha: 1e-6,
+            beta: 0.0,
+            gamma: 1e-9,
+            virtual_time,
+            source: "test".into(),
+        }
+    }
+
+    /// rank 0 posts a send at t=0 ([0,1]); rank 1 receives it ([0,1])
+    /// and reduces ([1, 1.5]). The chain is recv → reduce; the send
+    /// half is the same transfer, not a second cost.
+    fn two_rank_trace() -> Trace {
+        let events = vec![
+            Event::new(EventKind::SendStart, 0).peer(1).bytes(32).at_us(0.0),
+            Event::new(EventKind::SendEnd, 0).peer(1).bytes(32).at_us(1.0),
+            Event::new(EventKind::RecvStart, 1).peer(0).bytes(32).at_us(0.0),
+            Event::new(EventKind::RecvEnd, 1).peer(0).bytes(32).at_us(1.0),
+            Event::new(EventKind::Reduce, 1).bytes(32).at_us(1.0).dur_us(0.5),
+        ];
+        Trace {
+            meta: meta(true),
+            events,
+            dropped: 0,
+            recorded: 5,
+        }
+    }
+
+    #[test]
+    fn chain_and_buckets() {
+        let r = analyze_trace(&two_rank_trace());
+        assert_eq!(r.measured_us, 1.5);
+        assert_eq!(r.path.len(), 2);
+        assert_eq!(r.path[0].kind, SpanKind::Recv);
+        assert_eq!(r.path[1].kind, SpanKind::Reduce);
+        // α = 1 µs explains the transfer; γ the reduce; nothing idle.
+        assert!((r.buckets.alpha_us - 1.0).abs() < 1e-9);
+        assert!((r.buckets.gamma_us - 0.5).abs() < 1e-9);
+        assert!(r.buckets.wait_us.abs() < 1e-9);
+        assert!((r.buckets.total_us() - r.measured_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sender_hop_crosses_ranks() {
+        // rank 0 computes [0, 3] then sends [3, 4]; rank 1 was ready at
+        // 0 and receives [3, 4.5] (0.5 µs of port contention inside the
+        // transfer): the chain must hop from the receive to rank 0's
+        // reduce, and the receiver's idle [0, 3] must cost nothing — it
+        // is the sender's chain that explains it.
+        let events = vec![
+            Event::new(EventKind::Reduce, 0).bytes(8).at_us(0.0).dur_us(3.0),
+            Event::new(EventKind::SendStart, 0).peer(1).bytes(8).at_us(3.0),
+            Event::new(EventKind::SendEnd, 0).peer(1).bytes(8).at_us(4.0),
+            Event::new(EventKind::RecvStart, 1).peer(0).bytes(8).at_us(3.0),
+            Event::new(EventKind::RecvEnd, 1).peer(0).bytes(8).at_us(4.5),
+        ];
+        let trace = Trace {
+            meta: meta(true),
+            events,
+            dropped: 0,
+            recorded: 5,
+        };
+        let r = analyze_trace(&trace);
+        assert_eq!(r.hops, 1);
+        assert_eq!(r.path.len(), 2);
+        assert_eq!((r.path[0].rank, r.path[0].kind), (0, SpanKind::Reduce));
+        assert_eq!((r.path[1].rank, r.path[1].kind), (1, SpanKind::Recv));
+        assert!((r.buckets.gamma_us - 3.0).abs() < 1e-9);
+        assert!((r.buckets.alpha_us - 1.0).abs() < 1e-9);
+        assert!((r.buckets.stall_us - 0.5).abs() < 1e-9);
+        assert!(r.buckets.wait_us.abs() < 1e-9);
+        assert!((r.measured_us - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unexplained_gap_becomes_wait() {
+        let events = vec![
+            Event::new(EventKind::Reduce, 0).bytes(8).at_us(2.0).dur_us(1.0),
+        ];
+        let trace = Trace {
+            meta: meta(true),
+            events,
+            dropped: 0,
+            recorded: 1,
+        };
+        let r = analyze_trace(&trace);
+        assert!((r.buckets.wait_us - 2.0).abs() < 1e-9);
+        assert!((r.buckets.gamma_us - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_parses() {
+        let a = analyze_trace(&two_rank_trace()).to_json();
+        let b = analyze_trace(&two_rank_trace()).to_json();
+        assert_eq!(a, b);
+        let v = crate::obs::json::parse(&a).unwrap();
+        assert_eq!(v.num("steps"), Some(2.0));
+        assert!(v.get("buckets").unwrap().num("alpha_us").is_some());
+    }
+
+    #[test]
+    fn real_time_traces_fall_into_other() {
+        let mut t = two_rank_trace();
+        t.meta.virtual_time = false;
+        let r = analyze_trace(&t);
+        assert_eq!(r.predicted_us, None);
+        assert!(r.buckets.alpha_us == 0.0 && r.buckets.other_us > 0.0);
+    }
+}

@@ -1,0 +1,463 @@
+//! Chrome-trace / Perfetto JSON export of a recorded [`Trace`], and the
+//! matching reader used by `dpdr critical-path`.
+//!
+//! The export follows the Trace Event Format (the JSON flavor both
+//! `chrome://tracing` and <https://ui.perfetto.dev> load): one process,
+//! one named track (`tid`) per rank, paired `SendStart`/`SendEnd` and
+//! `RecvStart`/`RecvEnd` events folded into complete (`ph:"X"`) spans,
+//! self-timed spans (reduce, stall, barrier, nbc waits) emitted
+//! directly, lifecycle marks as instants (`ph:"i"`), and every matched
+//! message drawn as a flow arrow (`ph:"s"`/`ph:"f"`) from the send
+//! span's start on the sender track to the recv span's end on the
+//! receiver track.
+//!
+//! Timestamps are µs. Virtual traces use the simulated clock and omit
+//! wall fields entirely, so the bytes are run-to-run deterministic;
+//! real-time traces use the wall clock. `otherData` carries the run
+//! metadata ([`TraceMeta`]) that the critical-path analyzer needs to
+//! rebuild the α-β model comparison.
+
+use super::json::{self, Value};
+use super::{Event, EventKind, Trace, TraceMeta};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// A paired or self-contained interval reconstructed from the event
+/// stream — the unit the exporter and the critical-path walk share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub rank: usize,
+    pub peer: i32,
+    pub tag: u32,
+    pub seq: u64,
+    pub bytes: u64,
+    pub aux: u32,
+    /// Virtual interval, µs (for real-time traces these carry the wall
+    /// interval instead, converted to µs — one uniform time axis).
+    pub t0_us: f64,
+    pub t1_us: f64,
+    /// Wall interval, ns since trace start (0 in loaded traces).
+    pub w0_ns: u64,
+    pub w1_ns: u64,
+}
+
+/// Span flavors after pairing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Send,
+    Recv,
+    Reduce,
+    ReduceKernel,
+    Stall,
+    Barrier,
+    OpSubmit,
+    OpQueue,
+    OpFuse,
+    OpLaunch,
+    OpWait,
+    Step,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Send => "send",
+            SpanKind::Recv => "recv",
+            SpanKind::Reduce => "reduce",
+            SpanKind::ReduceKernel => "reduce_kernel",
+            SpanKind::Stall => "stall",
+            SpanKind::Barrier => "barrier",
+            SpanKind::OpSubmit => "op_submit",
+            SpanKind::OpQueue => "op_queue",
+            SpanKind::OpFuse => "op_fuse",
+            SpanKind::OpLaunch => "op_launch",
+            SpanKind::OpWait => "op_wait",
+            SpanKind::Step => "step",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "send" => SpanKind::Send,
+            "recv" => SpanKind::Recv,
+            "reduce" => SpanKind::Reduce,
+            "reduce_kernel" => SpanKind::ReduceKernel,
+            "stall" => SpanKind::Stall,
+            "barrier" => SpanKind::Barrier,
+            "op_submit" => SpanKind::OpSubmit,
+            "op_queue" => SpanKind::OpQueue,
+            "op_fuse" => SpanKind::OpFuse,
+            "op_launch" => SpanKind::OpLaunch,
+            "op_wait" => SpanKind::OpWait,
+            "step" => SpanKind::Step,
+            _ => return None,
+        })
+    }
+
+    /// Zero-duration marks (exported as `ph:"i"`).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            SpanKind::OpSubmit | SpanKind::OpQueue | SpanKind::OpLaunch | SpanKind::Step
+        )
+    }
+
+    fn category(self) -> &'static str {
+        match self {
+            SpanKind::Send | SpanKind::Recv => "p2p",
+            SpanKind::Reduce | SpanKind::ReduceKernel => "compute",
+            SpanKind::Stall => "stall",
+            SpanKind::Barrier => "sync",
+            SpanKind::Step => "sched",
+            _ => "nbc",
+        }
+    }
+}
+
+/// Fold the sorted event stream into spans: start/end pairs matched by
+/// `(rank, peer, tag, seq)`, everything else taken as-is. Unpaired
+/// endpoints (ring overflow, trace stopped mid-op) become zero-length
+/// spans rather than being dropped.
+pub fn spans_of(events: &[Event]) -> Vec<Span> {
+    let mut open: HashMap<(u8, u32, i32, u32, u64), Event> = HashMap::new();
+    let mut spans = Vec::with_capacity(events.len());
+    let span_from = |kind: SpanKind, ev: &Event, t1_us: f64, w1_ns: u64| Span {
+        kind,
+        rank: ev.rank as usize,
+        peer: ev.peer,
+        tag: ev.tag,
+        seq: ev.seq,
+        bytes: ev.bytes,
+        aux: ev.aux,
+        t0_us: ev.t_us,
+        t1_us,
+        w0_ns: ev.wall_ns,
+        w1_ns,
+    };
+    for ev in events {
+        match ev.kind {
+            EventKind::SendStart | EventKind::RecvStart => {
+                let dir = (ev.kind == EventKind::SendStart) as u8;
+                open.insert((dir, ev.rank, ev.peer, ev.tag, ev.seq), *ev);
+            }
+            EventKind::SendEnd | EventKind::RecvEnd => {
+                let dir = (ev.kind == EventKind::SendEnd) as u8;
+                let kind = if dir == 1 { SpanKind::Send } else { SpanKind::Recv };
+                match open.remove(&(dir, ev.rank, ev.peer, ev.tag, ev.seq)) {
+                    Some(start) => spans.push(span_from(kind, &start, ev.t_us, ev.wall_ns)),
+                    // End without a start (start dropped from the ring):
+                    // keep it as a zero-length span.
+                    None => spans.push(span_from(kind, ev, ev.t_us, ev.wall_ns)),
+                }
+            }
+            other => {
+                let kind = SpanKind::parse(other.name()).expect("span kinds mirror event kinds");
+                spans.push(span_from(kind, ev, ev.t_us + ev.dur_us, ev.wall_ns));
+            }
+        }
+    }
+    // Starts whose end never arrived: keep as zero-length spans.
+    let mut orphans: Vec<Event> = open.into_values().collect();
+    orphans.sort_by_key(Event::sort_key);
+    for ev in orphans {
+        let kind = if ev.kind == EventKind::SendStart { SpanKind::Send } else { SpanKind::Recv };
+        spans.push(span_from(kind, &ev, ev.t_us, ev.wall_ns));
+    }
+    spans.sort_by(|a, b| {
+        (a.rank, a.t0_us.to_bits(), a.t1_us.to_bits(), a.tag, a.peer, a.seq)
+            .cmp(&(b.rank, b.t0_us.to_bits(), b.t1_us.to_bits(), b.tag, b.peer, b.seq))
+    });
+    spans
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize a trace to Chrome trace-event JSON. Deterministic for
+/// virtual-time traces (see module docs).
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let meta = &trace.meta;
+    let spans = spans_of(&trace.events);
+    let virt = meta.virtual_time;
+    // One uniform timestamp axis: the simulated clock for virtual
+    // traces, the wall clock for real ones.
+    let ts_of = |t_us: f64, w_ns: u64| if virt { t_us } else { w_ns as f64 / 1000.0 };
+    let mut ev_json: Vec<String> = Vec::with_capacity(spans.len() + trace.meta.p + 4);
+    ev_json.push(format!(
+        "{{\"ph\":\"M\",\"pid\":0,\"name\":\"process_name\",\"args\":{{\"name\":\"dpdr {} {} p={}\"}}}}",
+        esc(&meta.source),
+        esc(&meta.algo),
+        meta.p
+    ));
+    for r in 0..meta.p {
+        ev_json.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{r},\"name\":\"thread_name\",\"args\":{{\"name\":\"rank {r}\"}}}}"
+        ));
+        ev_json.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{r},\"name\":\"thread_sort_index\",\"args\":{{\"sort_index\":{r}}}}}"
+        ));
+    }
+    // Index recv spans by (src, dst, tag, seq) for the flow arrows.
+    let mut recv_at: HashMap<(i32, usize, u32, u64), &Span> = HashMap::new();
+    for s in &spans {
+        if s.kind == SpanKind::Recv && s.peer >= 0 {
+            recv_at.insert((s.peer, s.rank, s.tag, s.seq), s);
+        }
+    }
+    let mut flows: Vec<String> = Vec::new();
+    for s in &spans {
+        let name = display_name(s);
+        let ts = ts_of(s.t0_us, s.w0_ns);
+        let args = format!(
+            "{{\"kind\":\"{}\",\"peer\":{},\"tag\":{},\"seq\":{},\"bytes\":{},\"aux\":{}}}",
+            s.kind.name(),
+            s.peer,
+            s.tag,
+            s.seq,
+            s.bytes,
+            s.aux
+        );
+        if s.kind.is_instant() {
+            ev_json.push(format!(
+                "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{ts},\"args\":{args}}}",
+                s.kind.category(),
+                s.rank
+            ));
+        } else {
+            let dur = ts_of(s.t1_us, s.w1_ns) - ts;
+            ev_json.push(format!(
+                "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{ts},\"dur\":{dur},\"args\":{args}}}",
+                s.kind.category(),
+                s.rank
+            ));
+        }
+        // Flow arrow: send span start → matching recv span end.
+        if s.kind == SpanKind::Send && s.peer >= 0 {
+            if let Some(rv) = recv_at.get(&(s.rank as i32, s.peer as usize, s.tag, s.seq)) {
+                let id = format!("{}-{}-t{}-{}", s.rank, s.peer, s.tag, s.seq);
+                flows.push(format!(
+                    "{{\"name\":\"msg\",\"cat\":\"p2p\",\"ph\":\"s\",\"id\":\"{id}\",\"pid\":0,\"tid\":{},\"ts\":{ts}}}",
+                    s.rank
+                ));
+                flows.push(format!(
+                    "{{\"name\":\"msg\",\"cat\":\"p2p\",\"ph\":\"f\",\"bp\":\"e\",\"id\":\"{id}\",\"pid\":0,\"tid\":{},\"ts\":{}}}",
+                    rv.rank,
+                    ts_of(rv.t1_us, rv.w1_ns)
+                ));
+            }
+        }
+    }
+    ev_json.extend(flows);
+    let other = format!(
+        "{{\"tool\":\"dpdr\",\"source\":\"{}\",\"algo\":\"{}\",\"p\":{},\"m_elems\":{},\
+         \"elem_bytes\":{},\"blocks\":{},\"alpha_s\":{},\"beta_s_per_b\":{},\"gamma_s_per_b\":{},\
+         \"timing\":\"{}\",\"recorded\":{},\"dropped\":{}}}",
+        esc(&meta.source),
+        esc(&meta.algo),
+        meta.p,
+        meta.m_elems,
+        meta.elem_bytes,
+        meta.blocks,
+        meta.alpha,
+        meta.beta,
+        meta.gamma,
+        if virt { "virtual" } else { "real" },
+        trace.recorded,
+        trace.dropped
+    );
+    format!(
+        "{{\n\"traceEvents\":[\n{}\n],\n\"displayTimeUnit\":\"ms\",\n\"otherData\":{other}\n}}\n",
+        ev_json.join(",\n")
+    )
+}
+
+fn display_name(s: &Span) -> String {
+    match s.kind {
+        SpanKind::Send => format!("send->{}", s.peer),
+        SpanKind::Recv => format!("recv<-{}", s.peer),
+        SpanKind::Reduce => "reduce".into(),
+        SpanKind::ReduceKernel => format!(
+            "kernel:{}",
+            match s.aux {
+                0 => "scalar",
+                1 => "simd",
+                _ => "pjrt",
+            }
+        ),
+        SpanKind::Stall => format!("stall:{}", super::stall_cause::name(s.aux)),
+        SpanKind::Barrier => "barrier".into(),
+        SpanKind::OpSubmit => format!("submit t{}", s.tag),
+        SpanKind::OpQueue => format!("queue t{}", s.tag),
+        SpanKind::OpFuse => format!("fuse x{}", s.aux),
+        SpanKind::OpLaunch => format!("launch t{}", s.tag),
+        SpanKind::OpWait => format!("wait t{}", s.tag),
+        SpanKind::Step => format!("step {}", s.aux),
+    }
+}
+
+/// Load a Chrome-trace JSON file produced by [`to_chrome_json`] back
+/// into `(meta, spans)` for analysis.
+pub fn read_chrome_json(text: &str) -> Result<(TraceMeta, Vec<Span>)> {
+    let root = json::parse(text)?;
+    let other = root
+        .get("otherData")
+        .ok_or_else(|| Error::Protocol("trace: missing otherData".into()))?;
+    let meta = TraceMeta {
+        algo: other.str("algo").unwrap_or("").to_string(),
+        p: other.num("p").unwrap_or(0.0) as usize,
+        m_elems: other.num("m_elems").unwrap_or(0.0) as usize,
+        elem_bytes: other.num("elem_bytes").unwrap_or(0.0) as usize,
+        blocks: other.num("blocks").unwrap_or(0.0) as usize,
+        alpha: other.num("alpha_s").unwrap_or(0.0),
+        beta: other.num("beta_s_per_b").unwrap_or(0.0),
+        gamma: other.num("gamma_s_per_b").unwrap_or(0.0),
+        virtual_time: other.str("timing") == Some("virtual"),
+        source: other.str("source").unwrap_or("").to_string(),
+    };
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Protocol("trace: missing traceEvents".into()))?;
+    let mut spans = Vec::new();
+    for ev in events {
+        let ph = ev.str("ph").unwrap_or("");
+        if ph != "X" && ph != "i" {
+            continue;
+        }
+        let args = match ev.get("args") {
+            Some(a) => a,
+            None => continue,
+        };
+        let kind = match args.str("kind").and_then(SpanKind::parse) {
+            Some(k) => k,
+            None => continue,
+        };
+        let t0 = ev.num("ts").unwrap_or(0.0);
+        let dur = ev.num("dur").unwrap_or(0.0);
+        spans.push(Span {
+            kind,
+            rank: ev.num("tid").unwrap_or(0.0) as usize,
+            peer: args.num("peer").unwrap_or(-1.0) as i32,
+            tag: args.num("tag").unwrap_or(0.0) as u32,
+            seq: args.num("seq").unwrap_or(0.0) as u64,
+            bytes: args.num("bytes").unwrap_or(0.0) as u64,
+            aux: args.num("aux").unwrap_or(0.0) as u32,
+            t0_us: t0,
+            t1_us: t0 + dur,
+            w0_ns: 0,
+            w1_ns: 0,
+        });
+    }
+    Ok((meta, spans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, EventKind, Trace, TraceMeta};
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            algo: "dpdr".into(),
+            p: 2,
+            m_elems: 8,
+            elem_bytes: 4,
+            blocks: 2,
+            alpha: 1e-6,
+            beta: 0.7e-9,
+            gamma: 0.0,
+            virtual_time: true,
+            source: "test".into(),
+        }
+    }
+
+    fn small_trace() -> Trace {
+        // rank 0 sends 32 B to rank 1 at t=0, transfer takes 1 µs on
+        // each side; rank 1 also reduces for 0.5 µs.
+        let events = vec![
+            Event::new(EventKind::SendStart, 0).peer(1).bytes(32).at_us(0.0),
+            Event::new(EventKind::SendEnd, 0).peer(1).bytes(32).at_us(1.0),
+            Event::new(EventKind::RecvStart, 1).peer(0).bytes(32).at_us(0.0),
+            Event::new(EventKind::RecvEnd, 1).peer(0).bytes(32).at_us(1.0),
+            Event::new(EventKind::Reduce, 1).bytes(32).at_us(1.0).dur_us(0.5),
+        ];
+        Trace {
+            meta: meta(),
+            events,
+            dropped: 0,
+            recorded: 5,
+        }
+    }
+
+    #[test]
+    fn pairing_folds_endpoints_into_spans() {
+        let t = small_trace();
+        let spans = spans_of(&t.events);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].kind, SpanKind::Send);
+        assert_eq!((spans[0].t0_us, spans[0].t1_us), (0.0, 1.0));
+        assert_eq!(spans[1].kind, SpanKind::Recv);
+        assert_eq!(spans[2].kind, SpanKind::Reduce);
+        assert_eq!(spans[2].t1_us, 1.5);
+    }
+
+    #[test]
+    fn export_round_trips_through_reader() {
+        let t = small_trace();
+        let text = to_chrome_json(&t);
+        let (m, spans) = read_chrome_json(&text).unwrap();
+        assert_eq!(m, t.meta);
+        assert_eq!(spans.len(), 3);
+        let orig = spans_of(&t.events);
+        for (a, b) in orig.iter().zip(&spans) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.peer, b.peer);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.t0_us.to_bits(), b.t0_us.to_bits());
+            assert_eq!(a.t1_us.to_bits(), b.t1_us.to_bits());
+        }
+    }
+
+    #[test]
+    fn export_has_flow_pair_and_track_names() {
+        let text = to_chrome_json(&small_trace());
+        let root = crate::obs::json::parse(&text).unwrap();
+        let evs = root.get("traceEvents").unwrap().as_arr().unwrap();
+        let n_s = evs.iter().filter(|e| e.str("ph") == Some("s")).count();
+        let n_f = evs.iter().filter(|e| e.str("ph") == Some("f")).count();
+        assert_eq!((n_s, n_f), (1, 1));
+        let names = evs
+            .iter()
+            .filter(|e| e.str("name") == Some("thread_name"))
+            .count();
+        assert_eq!(names, 2);
+        // Flow ids match between the s and f halves.
+        let sid = evs.iter().find(|e| e.str("ph") == Some("s")).unwrap().str("id");
+        let fid = evs.iter().find(|e| e.str("ph") == Some("f")).unwrap().str("id");
+        assert_eq!(sid, fid);
+    }
+
+    #[test]
+    fn unpaired_endpoints_survive_as_zero_spans() {
+        let events = vec![Event::new(EventKind::SendStart, 0).peer(1).bytes(8).at_us(2.0)];
+        let spans = spans_of(&events);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::Send);
+        assert_eq!(spans[0].t0_us, spans[0].t1_us);
+    }
+}

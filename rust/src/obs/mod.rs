@@ -1,0 +1,537 @@
+//! # obs — event-level tracing: per-rank timelines, Perfetto export, and
+//! critical-path attribution against the α-β model.
+//!
+//! An always-compiled, runtime-toggled observability layer. When enabled
+//! (`obs::start`), every rank records typed [`Event`]s — p2p transfer
+//! endpoints (`SendStart`/`SendEnd`, `RecvStart`/`RecvEnd`), reduction
+//! charges (`Reduce`) and kernel invocations (`ReduceKernel`), congestion
+//! stalls (`Stall`), barriers, nbc op-lifecycle marks
+//! (`OpSubmit`/`OpQueue`/`OpFuse`/`OpLaunch`/`OpWait`), and
+//! schedule-engine step retirements (`Step`) — into a bounded per-rank
+//! ring buffer, each stamped with both the virtual clock (µs) and a wall
+//! clock (ns since trace start). Matching send/recv pairs share a
+//! per-`(endpoint, peer)` sequence number, which is what lets the
+//! exporter draw sender→receiver flow arrows and the critical-path
+//! analyzer hop across ranks.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when off.** Every instrumentation hook in the hot
+//!    paths (`comm/thread.rs`, `comm/net.rs`, `schedule/exec.rs`,
+//!    `nbc/mod.rs`, `ops/backend.rs`) is guarded by [`enabled`] — a
+//!    single relaxed atomic load. No allocation, no locking, no time
+//!    query happens on the disabled path, so the alloc-flatness
+//!    property tests hold with the tracing layer compiled in.
+//! 2. **Deterministic under `Timing::Virtual`.** Virtual stamps come
+//!    from the simulated clock, sequence numbers from per-endpoint
+//!    program order, and [`stop`] sorts the stream by a total key that
+//!    excludes wall time; the exporter omits wall fields for virtual
+//!    traces. Two runs of the same spec therefore export bitwise
+//!    identical JSON — traces are diffable artifacts, like the
+//!    schedule certs.
+//! 3. **Bounded memory.** Rings drop their oldest events once full and
+//!    count the drops; [`Trace::dropped`] makes truncation visible
+//!    instead of silent.
+//!
+//! See [`export`] for the Chrome-trace/Perfetto serialization and
+//! [`critical`] for the happens-before walk and α/β/γ/stall
+//! attribution.
+
+pub mod critical;
+pub mod export;
+pub mod json;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// What happened. Transfer endpoints come in start/end pairs matched by
+/// `(rank, peer, tag, seq)`; the remaining kinds are self-contained
+/// spans (nonzero `dur_us`) or instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// Outgoing transfer admitted to the link (post-backpressure).
+    SendStart,
+    /// Outgoing transfer complete (sender side).
+    SendEnd,
+    /// Incoming transfer began (message available and port granted).
+    RecvStart,
+    /// Incoming transfer delivered.
+    RecvEnd,
+    /// Virtual γ-charge for a block reduction (span).
+    Reduce,
+    /// A reduce kernel dispatch in `ops::backend` (stamped at kernel
+    /// completion; `aux` is the backend that ran: 0 scalar, 1 simd,
+    /// 2 pjrt; `bytes` holds the combined element count).
+    ReduceKernel,
+    /// Clock stall (span; `aux` is the cause: 0 edge-queue
+    /// backpressure, 1 egress port contention, 2 ingress port
+    /// contention).
+    Stall,
+    /// Barrier (span from entry to group release).
+    Barrier,
+    /// Nonblocking op submitted to the engine (instant).
+    OpSubmit,
+    /// Op parked in the fusion queue (instant).
+    OpQueue,
+    /// Fusion batch closed (`aux` = ops in the batch; `bytes` = fused
+    /// payload bytes).
+    OpFuse,
+    /// Op (or fused batch) launched onto a worker / the progress core
+    /// (instant).
+    OpLaunch,
+    /// Op waited on and retired (span over the op's virtual lifetime).
+    OpWait,
+    /// Schedule-engine half-step retired (`aux` = program counter).
+    Step,
+}
+
+impl EventKind {
+    /// Stable lowercase name (used in exported JSON `args.kind`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::SendStart => "send_start",
+            EventKind::SendEnd => "send_end",
+            EventKind::RecvStart => "recv_start",
+            EventKind::RecvEnd => "recv_end",
+            EventKind::Reduce => "reduce",
+            EventKind::ReduceKernel => "reduce_kernel",
+            EventKind::Stall => "stall",
+            EventKind::Barrier => "barrier",
+            EventKind::OpSubmit => "op_submit",
+            EventKind::OpQueue => "op_queue",
+            EventKind::OpFuse => "op_fuse",
+            EventKind::OpLaunch => "op_launch",
+            EventKind::OpWait => "op_wait",
+            EventKind::Step => "step",
+        }
+    }
+
+    /// Inverse of [`EventKind::name`].
+    pub fn parse(s: &str) -> Option<EventKind> {
+        Some(match s {
+            "send_start" => EventKind::SendStart,
+            "send_end" => EventKind::SendEnd,
+            "recv_start" => EventKind::RecvStart,
+            "recv_end" => EventKind::RecvEnd,
+            "reduce" => EventKind::Reduce,
+            "reduce_kernel" => EventKind::ReduceKernel,
+            "stall" => EventKind::Stall,
+            "barrier" => EventKind::Barrier,
+            "op_submit" => EventKind::OpSubmit,
+            "op_queue" => EventKind::OpQueue,
+            "op_fuse" => EventKind::OpFuse,
+            "op_launch" => EventKind::OpLaunch,
+            "op_wait" => EventKind::OpWait,
+            "step" => EventKind::Step,
+            _ => return None,
+        })
+    }
+
+    fn order(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Stall causes (the `aux` code of [`EventKind::Stall`]).
+pub mod stall_cause {
+    /// Sender blocked on a full virtual edge queue (backpressure).
+    pub const BACKPRESSURE: u32 = 0;
+    /// Sender serialized behind other transfers on its NIC ports.
+    pub const EGRESS_PORT: u32 = 1;
+    /// Receiver serialized behind other transfers on its NIC ports.
+    pub const INGRESS_PORT: u32 = 2;
+
+    /// Human-readable cause name.
+    pub fn name(aux: u32) -> &'static str {
+        match aux {
+            BACKPRESSURE => "backpressure",
+            EGRESS_PORT => "egress_port",
+            INGRESS_PORT => "ingress_port",
+            _ => "stall",
+        }
+    }
+}
+
+/// One recorded event. 64 bytes; copied into the ring by value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Recording rank.
+    pub rank: u32,
+    /// Peer rank for p2p events, -1 when not applicable.
+    pub peer: i32,
+    /// Communicator tag (0 = the blocking world channel).
+    pub tag: u32,
+    /// Per-`(endpoint, peer, direction)` sequence number linking the
+    /// k-th send on an edge to the k-th receive.
+    pub seq: u64,
+    /// Payload size in bytes (0 when not applicable).
+    pub bytes: u64,
+    /// Virtual-clock stamp, µs (0 under `Timing::Real`).
+    pub t_us: f64,
+    /// Virtual duration for span kinds, µs.
+    pub dur_us: f64,
+    /// Wall-clock stamp, ns since `obs::start` (excluded from virtual
+    /// exports and from the deterministic sort key).
+    pub wall_ns: u64,
+    /// Kind-specific payload (stall cause, backend id, batch size,
+    /// program counter).
+    pub aux: u32,
+}
+
+impl Event {
+    /// A fresh event with every optional field zeroed.
+    pub fn new(kind: EventKind, rank: usize) -> Event {
+        Event {
+            kind,
+            rank: rank as u32,
+            peer: -1,
+            tag: 0,
+            seq: 0,
+            bytes: 0,
+            t_us: 0.0,
+            dur_us: 0.0,
+            wall_ns: 0,
+            aux: 0,
+        }
+    }
+
+    pub fn peer(mut self, peer: usize) -> Event {
+        self.peer = peer as i32;
+        self
+    }
+
+    pub fn tag(mut self, tag: u32) -> Event {
+        self.tag = tag;
+        self
+    }
+
+    pub fn seq(mut self, seq: u64) -> Event {
+        self.seq = seq;
+        self
+    }
+
+    pub fn bytes(mut self, bytes: u64) -> Event {
+        self.bytes = bytes;
+        self
+    }
+
+    /// Virtual stamp in µs from a clock in seconds.
+    pub fn at_s(mut self, t_s: f64) -> Event {
+        self.t_us = t_s * 1e6;
+        self
+    }
+
+    pub fn at_us(mut self, t_us: f64) -> Event {
+        self.t_us = t_us;
+        self
+    }
+
+    /// Virtual duration in µs from a span in seconds.
+    pub fn span_s(mut self, from_s: f64, to_s: f64) -> Event {
+        self.t_us = from_s * 1e6;
+        self.dur_us = (to_s - from_s) * 1e6;
+        self
+    }
+
+    pub fn dur_us(mut self, dur_us: f64) -> Event {
+        self.dur_us = dur_us;
+        self
+    }
+
+    pub fn wall(mut self, wall_ns: u64) -> Event {
+        self.wall_ns = wall_ns;
+        self
+    }
+
+    pub fn aux(mut self, aux: u32) -> Event {
+        self.aux = aux;
+        self
+    }
+
+    /// Rewrite the kind (for deriving an `*End` event from its start).
+    pub fn with_kind(mut self, kind: EventKind) -> Event {
+        self.kind = kind;
+        self
+    }
+
+    /// Total deterministic order: rank, then virtual time, then kind /
+    /// addressing fields. Wall time is deliberately excluded so the
+    /// sorted stream is run-to-run stable under `Timing::Virtual`.
+    fn sort_key(&self) -> (u32, u64, u8, u32, i32, u64, u64, u64) {
+        (
+            self.rank,
+            self.t_us.to_bits(),
+            self.kind.order(),
+            self.tag,
+            self.peer,
+            self.seq,
+            self.bytes,
+            self.dur_us.to_bits(),
+        )
+    }
+}
+
+/// Bounded drop-oldest event ring.
+struct Ring {
+    cap: usize,
+    buf: Vec<Event>,
+    /// Index of the oldest event once the ring has wrapped.
+    start: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            cap: cap.max(1),
+            buf: Vec::new(),
+            start: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.start] = ev;
+            self.start = (self.start + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(mut self) -> (Vec<Event>, u64) {
+        self.buf.rotate_left(self.start);
+        (self.buf, self.dropped)
+    }
+}
+
+/// The active collector: one ring per rank.
+struct Collector {
+    rings: Vec<Mutex<Ring>>,
+    recorded: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Arc<Collector>>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// Rank bound to this thread (for hooks below the comm layer, e.g.
+    /// reduce kernels). -1 = unbound.
+    static BOUND_RANK: Cell<i32> = const { Cell::new(-1) };
+    /// Last virtual clock seen by this thread's comm hooks, µs. Used to
+    /// place events from layers that have no clock of their own.
+    static VTIME_HINT: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Is tracing on? One relaxed atomic load — this is the entire cost of
+/// every instrumentation hook while tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Begin recording into fresh per-rank rings of `cap_per_rank` events.
+/// Returns false (and leaves the running collector untouched) if a
+/// trace is already active.
+pub fn start(p: usize, cap_per_rank: usize) -> bool {
+    let mut sink = SINK.lock().unwrap();
+    if sink.is_some() {
+        return false;
+    }
+    EPOCH.get_or_init(Instant::now);
+    let rings = (0..p).map(|_| Mutex::new(Ring::new(cap_per_rank))).collect();
+    *sink = Some(Arc::new(Collector {
+        rings,
+        recorded: AtomicU64::new(0),
+    }));
+    ENABLED.store(true, Ordering::SeqCst);
+    true
+}
+
+/// Stop recording and return the collected trace (events sorted by the
+/// deterministic key). Returns `None` when no trace was active.
+pub fn stop(meta: TraceMeta) -> Option<Trace> {
+    ENABLED.store(false, Ordering::SeqCst);
+    let collector = SINK.lock().unwrap().take()?;
+    // A racing `record` may still hold a clone for an instant; spin
+    // until we are the sole owner rather than lose the buffers.
+    let mut collector = collector;
+    let collector = loop {
+        match Arc::try_unwrap(collector) {
+            Ok(c) => break c,
+            Err(arc) => {
+                collector = arc;
+                std::thread::yield_now();
+            }
+        }
+    };
+    let recorded = collector.recorded.load(Ordering::SeqCst);
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for ring in collector.rings {
+        let (evs, d) = ring.into_inner().unwrap().drain();
+        events.extend(evs);
+        dropped += d;
+    }
+    events.sort_by_key(Event::sort_key);
+    Some(Trace {
+        meta,
+        events,
+        dropped,
+        recorded,
+    })
+}
+
+/// Append an event to its rank's ring. Cheap no-op when tracing is off;
+/// callers on hot paths should still guard with [`enabled`] so the
+/// event-construction work is skipped too.
+pub fn record(ev: Event) {
+    if !enabled() {
+        return;
+    }
+    let sink = SINK.lock().unwrap().clone();
+    if let Some(c) = sink {
+        if let Some(ring) = c.rings.get(ev.rank as usize) {
+            ring.lock().unwrap().push(ev);
+            c.recorded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Events recorded by the active trace so far (0 when none active).
+pub fn recorded_count() -> u64 {
+    SINK.lock()
+        .unwrap()
+        .as_ref()
+        .map(|c| c.recorded.load(Ordering::Relaxed))
+        .unwrap_or(0)
+}
+
+/// Wall clock in ns since the first trace started (0 before any).
+pub fn wall_now_ns() -> u64 {
+    EPOCH
+        .get()
+        .map(|e| e.elapsed().as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+/// Bind the calling thread to a rank so hooks below the comm layer
+/// (reduce kernels) can attribute their events. Rank threads and nbc
+/// workers call this on spawn when tracing is on.
+pub fn bind_rank(rank: usize) {
+    BOUND_RANK.with(|r| r.set(rank as i32));
+}
+
+/// The rank bound to this thread, if any.
+pub fn bound_rank() -> Option<usize> {
+    let r = BOUND_RANK.with(|r| r.get());
+    (r >= 0).then_some(r as usize)
+}
+
+/// Note the thread's current virtual clock (µs); comm hooks call this
+/// so clock-less layers can place their events nearby.
+pub fn note_vtime_us(t_us: f64) {
+    VTIME_HINT.with(|v| v.set(t_us));
+}
+
+/// Latest virtual clock seen on this thread, µs.
+pub fn vtime_hint_us() -> f64 {
+    VTIME_HINT.with(|v| v.get())
+}
+
+/// Run metadata carried into the export so traces are self-describing
+/// and the critical-path analyzer can rebuild the model comparison.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceMeta {
+    /// Algorithm name (`AlgoKind::name`), or "soak"/"mixed".
+    pub algo: String,
+    pub p: usize,
+    /// Element count of the collective (0 when mixed).
+    pub m_elems: usize,
+    pub elem_bytes: usize,
+    /// Pipeline block count (0 when unknown/mixed).
+    pub blocks: usize,
+    /// Uniform-model α in seconds (0 when not uniform virtual).
+    pub alpha: f64,
+    /// Uniform-model β in s/B.
+    pub beta: f64,
+    /// γ in s/B.
+    pub gamma: f64,
+    /// True when the run used `Timing::Virtual` — wall fields are then
+    /// omitted from the export to keep it deterministic.
+    pub virtual_time: bool,
+    /// Producing subcommand ("run", "soak", ...).
+    pub source: String,
+}
+
+/// A completed recording: sorted events plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<Event>,
+    /// Events lost to ring overflow (oldest-first).
+    pub dropped: u64,
+    /// Total events offered to the rings.
+    pub recorded: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest() {
+        let mut r = Ring::new(3);
+        for i in 0..5u64 {
+            r.push(Event::new(EventKind::Step, 0).seq(i));
+        }
+        let (evs, dropped) = r.drain();
+        assert_eq!(dropped, 2);
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        let kinds = [
+            EventKind::SendStart,
+            EventKind::SendEnd,
+            EventKind::RecvStart,
+            EventKind::RecvEnd,
+            EventKind::Reduce,
+            EventKind::ReduceKernel,
+            EventKind::Stall,
+            EventKind::Barrier,
+            EventKind::OpSubmit,
+            EventKind::OpQueue,
+            EventKind::OpFuse,
+            EventKind::OpLaunch,
+            EventKind::OpWait,
+            EventKind::Step,
+        ];
+        for k in kinds {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sort_key_ignores_wall_time() {
+        let a = Event::new(EventKind::SendStart, 1).at_us(2.0).wall(7);
+        let b = Event::new(EventKind::SendStart, 1).at_us(2.0).wall(99);
+        assert_eq!(a.sort_key(), b.sort_key());
+        let later = Event::new(EventKind::SendStart, 1).at_us(3.0);
+        assert!(later.sort_key() > a.sort_key());
+        let other_rank = Event::new(EventKind::SendStart, 0).at_us(9.0);
+        assert!(other_rank.sort_key() < a.sort_key());
+    }
+
+    // The start/stop lifecycle itself is covered by the world-level
+    // integration tests in `tests/obs_trace.rs`, which serialize access
+    // to the process-global collector.
+}

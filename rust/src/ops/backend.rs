@@ -149,7 +149,34 @@ pub fn take_stats() -> BackendStats {
     STATS.with(|s| s.replace(BackendStats::new()))
 }
 
+/// Record a [`ReduceKernel`](crate::obs::EventKind::ReduceKernel) trace
+/// event for one dispatched kernel: `aux` = the backend that actually
+/// ran, `bytes` = the element count it combined. The virtual stamp is
+/// the worker's last transport clock hint (kernels themselves are
+/// wall-time work; the γ-charge has its own `Reduce` span). Skipped on
+/// threads not bound to a rank.
+fn obs_kernel(which: ReduceBackend, elems: usize) {
+    let Some(rank) = crate::obs::bound_rank() else {
+        return;
+    };
+    let id = match which {
+        ReduceBackend::Scalar => 0,
+        ReduceBackend::Simd => 1,
+        ReduceBackend::Pjrt => 2,
+        ReduceBackend::Auto => 3,
+    };
+    let ev = crate::obs::Event::new(crate::obs::EventKind::ReduceKernel, rank)
+        .bytes(elems as u64)
+        .aux(id)
+        .at_us(crate::obs::vtime_hint_us())
+        .wall(crate::obs::wall_now_ns());
+    crate::obs::record(ev);
+}
+
 fn record(which: ReduceBackend, elems: usize) {
+    if crate::obs::enabled() {
+        obs_kernel(which, elems);
+    }
     STATS.with(|s| {
         let mut v = s.get();
         v.elems_reduced += elems as u64;

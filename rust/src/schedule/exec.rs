@@ -56,6 +56,7 @@ use crate::comm::net::Fabric;
 use crate::comm::thread::ShardedRegistry;
 use crate::comm::{FaultPlan, RankMetrics, Timing};
 use crate::error::Error;
+use crate::obs;
 use crate::ops::{backend, Elem, ReduceBackend, ReduceOp};
 
 /// Condvar poll slice while waiting for peers (mirrors the transport's
@@ -182,6 +183,9 @@ enum Half {
 
 /// One rank's program state for one operation.
 struct Prog<E: Elem> {
+    /// The owning rank (trace attribution; execution is keyed by the
+    /// program's position in [`OpState::progs`]).
+    rank: usize,
     steps: Vec<Step>,
     pc: usize,
     half: Half,
@@ -200,19 +204,92 @@ struct Prog<E: Elem> {
     /// Reorder-hold emulation per destination peer (counting only — the
     /// mailbox stays in send order; see [`Mailbox`]).
     reorder_held: Vec<bool>,
+    /// Per-peer tracing sequence counters, allocated only while tracing
+    /// is enabled (mirrors the transport's lazy counters).
+    obs_seq: Option<Box<ObsSeqs>>,
+}
+
+/// Per-peer send/receive sequence counters for trace flow pairing.
+struct ObsSeqs {
+    tx: Vec<u64>,
+    rx: Vec<u64>,
 }
 
 impl<E: Elem> Prog<E> {
-    fn retire(&mut self) {
+    fn retire(&mut self, tag: u32) {
+        if obs::enabled() {
+            let ev = obs::Event::new(obs::EventKind::Step, self.rank)
+                .tag(tag)
+                .aux(self.pc as u32)
+                .at_s(self.vtime)
+                .wall(obs::wall_now_ns());
+            obs::record(ev);
+        }
         self.pc += 1;
         self.half = Half::Start;
     }
 
     fn charge(&mut self, timing: Timing, bytes: usize) {
         if let Timing::Virtual(_, compute) = timing {
-            self.vtime += compute.reduce(bytes);
+            let dur = compute.reduce(bytes);
+            if obs::enabled() && dur > 0.0 {
+                let ev = obs::Event::new(obs::EventKind::Reduce, self.rank)
+                    .bytes(bytes as u64)
+                    .span_s(self.vtime, self.vtime + dur)
+                    .wall(obs::wall_now_ns());
+                obs::record(ev);
+                obs::note_vtime_us((self.vtime + dur) * 1e6);
+            }
+            self.vtime += dur;
         }
         self.metrics.reduce_bytes += bytes as u64;
+    }
+
+    /// Next tracing sequence number for the `(self, peer)` stream in
+    /// the given direction (only called while tracing is enabled).
+    fn obs_next_seq(&mut self, peer: usize, send: bool) -> u64 {
+        let size = self.tx_seq.len();
+        let seqs = self
+            .obs_seq
+            .get_or_insert_with(|| Box::new(ObsSeqs { tx: vec![0; size], rx: vec![0; size] }));
+        let slot = if send { &mut seqs.tx[peer] } else { &mut seqs.rx[peer] };
+        let v = *slot;
+        *slot += 1;
+        v
+    }
+
+    /// Record the transfer-endpoint events of one completed exchange
+    /// half (mirrors the transport's hook; guarded by the caller).
+    fn obs_p2p(
+        &mut self,
+        tag: u32,
+        send: Option<(usize, usize, f64, f64)>,
+        recv: Option<(usize, usize, f64, f64)>,
+    ) {
+        use obs::{Event, EventKind};
+        let rank = self.rank;
+        let w = obs::wall_now_ns();
+        if let Some((peer, bytes, t0, t1)) = send {
+            let seq = self.obs_next_seq(peer, true);
+            let ev = Event::new(EventKind::SendStart, rank)
+                .peer(peer)
+                .tag(tag)
+                .seq(seq)
+                .bytes(bytes as u64);
+            obs::record(ev.at_s(t0).wall(w));
+            obs::record(ev.at_s(t1).wall(w).with_kind(EventKind::SendEnd));
+        }
+        if let Some((peer, bytes, t0, t1)) = recv {
+            let seq = self.obs_next_seq(peer, false);
+            let ev = Event::new(EventKind::RecvStart, rank)
+                .peer(peer)
+                .tag(tag)
+                .seq(seq)
+                .bytes(bytes as u64);
+            obs::record(ev.at_s(t0).wall(w));
+            obs::record(ev.at_s(t1).wall(w).with_kind(EventKind::RecvEnd));
+        }
+        obs::note_vtime_us(self.vtime * 1e6);
     }
 
     /// Mirrors the transport's `flush_tx_held` at every blocking
@@ -340,15 +417,23 @@ impl<E: Elem, O: ReduceOp<E>> OpState<E, O> {
                     let pkt = pop_mail(mail, peer, r);
                     prog.metrics.fault_events += pkt.dups_before as u64;
                     prog.metrics.bytes_recv += pkt.data.bytes() as u64;
+                    let mut obs_ready = prog.vtime;
                     if let Timing::Virtual(cost, _) = timing {
                         let dur = cost.xfer(r, peer, pkt.data.bytes());
                         let ready = prog.vtime.max(pkt.vtime);
-                        prog.vtime = finish_recv(fabric, queues, &mut prog.metrics, peer, r, ready, dur);
+                        obs_ready = ready;
+                        let m = &mut prog.metrics;
+                        prog.vtime = finish_recv(fabric, queues, m, tag, peer, r, ready, dur);
                     }
                     prog.metrics.exchanges += 1;
                     prog.metrics.steps_executed += 1;
+                    if obs::enabled() {
+                        let bytes = pkt.data.bytes();
+                        let end = prog.vtime;
+                        prog.obs_p2p(tag, None, Some((peer, bytes, obs_ready, end)));
+                    }
                     apply_sink(prog, sink, pkt.data, &*op, backend, timing)?;
-                    prog.retire();
+                    prog.retire(tag);
                 }
                 Step::SendRecv { peer, send, .. }
                 | Step::SendRecvPair { send_to: peer, send, .. }
@@ -359,10 +444,8 @@ impl<E: Elem, O: ReduceOp<E>> OpState<E, O> {
                         Timing::Virtual(cost, _) => {
                             let dur = cost.xfer(r, peer, sent_bytes);
                             let vt = prog.vtime;
-                            (
-                                admit_send(fabric, queues, &mut prog.metrics, vt, r, peer, dur),
-                                dur,
-                            )
+                            let m = &mut prog.metrics;
+                            (admit_send(fabric, queues, m, tag, vt, r, peer, dur), dur)
                         }
                         Timing::Real => (prog.vtime, 0.0),
                     };
@@ -373,7 +456,11 @@ impl<E: Elem, O: ReduceOp<E>> OpState<E, O> {
                             prog.vtime = stamp + out_dur;
                         }
                         prog.metrics.exchanges += 1;
-                        prog.retire();
+                        if obs::enabled() {
+                            let sp = (peer, sent_bytes, stamp, stamp + out_dur);
+                            prog.obs_p2p(tag, Some(sp), None);
+                        }
+                        prog.retire(tag);
                     } else {
                         prog.half = Half::Posted {
                             stamp,
@@ -388,40 +475,54 @@ impl<E: Elem, O: ReduceOp<E>> OpState<E, O> {
                 out_dur,
                 sent_bytes,
             } => {
-                let (from, sink, is_pair) = match step {
-                    Step::SendRecv { peer, sink, .. } => (peer, sink, false),
+                let (from, send_to, sink, is_pair) = match step {
+                    Step::SendRecv { peer, sink, .. } => (peer, peer, sink, false),
                     Step::SendRecvPair {
-                        recv_from, sink, ..
-                    } => (recv_from, sink, true),
+                        send_to,
+                        recv_from,
+                        sink,
+                        ..
+                    } => (recv_from, send_to, sink, true),
                     _ => unreachable!("only exchanges post"),
                 };
                 prog.clear_reorder_held();
                 let pkt = pop_mail(mail, from, r);
                 prog.metrics.fault_events += pkt.dups_before as u64;
                 prog.metrics.bytes_recv += pkt.data.bytes() as u64;
+                let (mut obs_ready, mut obs_in_done) = (prog.vtime, prog.vtime);
                 if let Timing::Virtual(cost, _) = timing {
                     if is_pair {
                         // full duplex: the two transfers overlap
                         let out_done = stamp + out_dur;
                         let inc_dur = cost.xfer(r, from, pkt.data.bytes());
                         let ready = stamp.max(pkt.vtime);
-                        let in_done =
-                            finish_recv(fabric, queues, &mut prog.metrics, from, r, ready, inc_dur);
+                        let m = &mut prog.metrics;
+                        let in_done = finish_recv(fabric, queues, m, tag, from, r, ready, inc_dur);
+                        (obs_ready, obs_in_done) = (ready, in_done);
                         prog.vtime = out_done.max(in_done);
                     } else {
                         // telephone model: both directions complete together
                         let bytes = sent_bytes.max(pkt.data.bytes());
                         let dur = cost.xfer(r, from, bytes);
                         let ready = stamp.max(pkt.vtime);
-                        prog.vtime =
-                            finish_recv(fabric, queues, &mut prog.metrics, from, r, ready, dur);
+                        let m = &mut prog.metrics;
+                        prog.vtime = finish_recv(fabric, queues, m, tag, from, r, ready, dur);
+                        (obs_ready, obs_in_done) = (ready, prog.vtime);
                     }
                 }
                 prog.metrics.exchanges += 1;
                 prog.metrics.sendrecvs += 1;
                 prog.metrics.steps_executed += 1;
+                if obs::enabled() {
+                    // mirror the transport: telephone exchanges complete
+                    // both directions together, pairs overlap
+                    let send_end = if is_pair { stamp + out_dur } else { prog.vtime };
+                    let recv_bytes = pkt.data.bytes();
+                    let sp = (send_to, sent_bytes, stamp, send_end);
+                    prog.obs_p2p(tag, Some(sp), Some((from, recv_bytes, obs_ready, obs_in_done)));
+                }
                 apply_sink(prog, sink, pkt.data, &*op, backend, timing)?;
-                prog.retire();
+                prog.retire(tag);
             }
         }
         if prog.pc == prog.steps.len() {
@@ -487,15 +588,19 @@ fn apply_sink<E: Elem, O: ReduceOp<E> + ?Sized>(
 }
 
 /// Verbatim `ThreadComm::admit_send` over the virtual queue twin.
+#[allow(clippy::too_many_arguments)]
 fn admit_send(
     fabric: &Fabric,
     queues: &mut HashMap<(usize, usize), VirtQueue>,
     metrics: &mut RankMetrics,
+    tag: u32,
     vtime: f64,
     src: usize,
     dst: usize,
     dur: f64,
 ) -> f64 {
+    use crate::comm::net::trace_stall;
+    use obs::stall_cause::{BACKPRESSURE, EGRESS_PORT};
     if !fabric.is_active() {
         return vtime;
     }
@@ -507,21 +612,25 @@ fn admit_send(
         if freed > t {
             metrics.queue_full_events += 1;
             metrics.stall_us += (freed - t) * 1e6;
+            trace_stall(src, dst, tag, BACKPRESSURE, t, freed);
             t = freed;
         }
     }
     let start = fabric.reserve_egress(src, dst, t, dur);
     if start > t {
         metrics.stall_us += (start - t) * 1e6;
+        trace_stall(src, dst, tag, EGRESS_PORT, t, start);
     }
     start
 }
 
 /// Verbatim `ThreadComm::finish_recv`.
+#[allow(clippy::too_many_arguments)]
 fn finish_recv(
     fabric: &Fabric,
     queues: &mut HashMap<(usize, usize), VirtQueue>,
     metrics: &mut RankMetrics,
+    tag: u32,
     src: usize,
     dst: usize,
     ready: f64,
@@ -533,6 +642,8 @@ fn finish_recv(
     let start = fabric.reserve_ingress(src, dst, ready, dur);
     if start > ready {
         metrics.stall_us += (start - ready) * 1e6;
+        let cause = obs::stall_cause::INGRESS_PORT;
+        crate::comm::net::trace_stall(dst, src, tag, cause, ready, start);
     }
     let done = start + dur;
     queues
@@ -721,6 +832,7 @@ impl<E: Elem, O: ReduceOp<E>> Core<E, O> {
         let done_now = sched.steps.is_empty();
         let now = Instant::now();
         entry.progs[rank] = Some(Prog {
+            rank,
             steps: sched.steps,
             pc: 0,
             half: Half::Start,
@@ -733,6 +845,7 @@ impl<E: Elem, O: ReduceOp<E>> Core<E, O> {
             metrics: RankMetrics::default(),
             tx_seq: vec![0; size],
             reorder_held: vec![false; size],
+            obs_seq: None,
         });
         entry.done[rank] = done_now;
         entry.deposited += 1;

@@ -358,11 +358,22 @@ fn rd_steps(rank: usize, p: usize) -> Vec<Step> {
 /// separately by the engine-level bitwise tests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceEvent {
-    SendRecv { peer: usize, send_elems: usize },
+    /// Bidirectional exchange, logged at completion so `recv_elems` is
+    /// the element count the receive half *actually delivered* (exactly
+    /// like [`TraceEvent::Recv`] — no fused call's incoming length can
+    /// hide behind a peer-only match).
+    SendRecv {
+        peer: usize,
+        send_elems: usize,
+        recv_elems: usize,
+    },
+    /// Full-duplex exchange, logged at completion (see
+    /// [`TraceEvent::SendRecv`] for the `recv_elems` contract).
     SendRecvPair {
         send_to: usize,
         recv_from: usize,
         send_elems: usize,
+        recv_elems: usize,
     },
     Send { peer: usize, send_elems: usize },
     /// A blocking receive and the element count it *actually delivered* —
@@ -406,11 +417,16 @@ impl<E: crate::ops::Elem, C: crate::comm::Comm<E>> crate::comm::Comm<E> for Trac
         peer: usize,
         send: crate::buffer::DataBuf<E>,
     ) -> crate::error::Result<crate::buffer::DataBuf<E>> {
+        // delegate first: the event records the delivered length (the
+        // call is blocking, so the log position per rank is unchanged)
+        let send_elems = send.len();
+        let got = self.inner.sendrecv(peer, send)?;
         self.events.push(TraceEvent::SendRecv {
             peer,
-            send_elems: send.len(),
+            send_elems,
+            recv_elems: got.len(),
         });
-        self.inner.sendrecv(peer, send)
+        Ok(got)
     }
 
     fn sendrecv_pair(
@@ -419,21 +435,25 @@ impl<E: crate::ops::Elem, C: crate::comm::Comm<E>> crate::comm::Comm<E> for Trac
         send: crate::buffer::DataBuf<E>,
         recv_from: usize,
     ) -> crate::error::Result<crate::buffer::DataBuf<E>> {
+        let send_elems = send.len();
+        let got = self.inner.sendrecv_pair(send_to, send, recv_from)?;
         // the transport delegates equal partners to sendrecv — log the
         // call the same way the compiler lowers it
         if send_to == recv_from {
             self.events.push(TraceEvent::SendRecv {
                 peer: send_to,
-                send_elems: send.len(),
+                send_elems,
+                recv_elems: got.len(),
             });
         } else {
             self.events.push(TraceEvent::SendRecvPair {
                 send_to,
                 recv_from,
-                send_elems: send.len(),
+                send_elems,
+                recv_elems: got.len(),
             });
         }
-        self.inner.sendrecv_pair(send_to, send, recv_from)
+        Ok(got)
     }
 
     fn send(&mut self, peer: usize, data: crate::buffer::DataBuf<E>) -> crate::error::Result<()> {
@@ -528,26 +548,14 @@ pub fn try_expected_events(
             all_done = false;
             let step = steps[pc[r]];
             if !half_done[r] {
-                // log the call and launch the send half
+                // launch the send half; one-directional sends log here
+                // (exchanges log at completion, when the delivered
+                // length is known — mirroring TraceComm)
                 match step {
                     Step::SendRecv { peer, send, .. } => {
-                        events[r].push(TraceEvent::SendRecv {
-                            peer,
-                            send_elems: src_elems(send),
-                        });
                         mail.entry((r, peer)).or_default().push_back(src_elems(send));
                     }
-                    Step::SendRecvPair {
-                        send_to,
-                        recv_from,
-                        send,
-                        ..
-                    } => {
-                        events[r].push(TraceEvent::SendRecvPair {
-                            send_to,
-                            recv_from,
-                            send_elems: src_elems(send),
-                        });
+                    Step::SendRecvPair { send_to, send, .. } => {
                         mail.entry((r, send_to)).or_default().push_back(src_elems(send));
                     }
                     Step::Send { peer, send } => {
@@ -578,11 +586,34 @@ pub fn try_expected_events(
                 }
             };
             if let Some(n) = mail.get_mut(&(from, r)).and_then(|q| q.pop_front()) {
-                if matches!(step, Step::Recv { .. }) {
-                    events[r].push(TraceEvent::Recv {
-                        peer: from,
-                        elems: n,
-                    });
+                match step {
+                    Step::SendRecv { peer, send, .. } => {
+                        events[r].push(TraceEvent::SendRecv {
+                            peer,
+                            send_elems: src_elems(send),
+                            recv_elems: n,
+                        });
+                    }
+                    Step::SendRecvPair {
+                        send_to,
+                        recv_from,
+                        send,
+                        ..
+                    } => {
+                        events[r].push(TraceEvent::SendRecvPair {
+                            send_to,
+                            recv_from,
+                            send_elems: src_elems(send),
+                            recv_elems: n,
+                        });
+                    }
+                    Step::Recv { .. } => {
+                        events[r].push(TraceEvent::Recv {
+                            peer: from,
+                            elems: n,
+                        });
+                    }
+                    Step::Send { .. } => unreachable!("send halves retire above"),
                 }
                 sink_charge(sink, n, &mut events[r]);
                 pc[r] += 1;

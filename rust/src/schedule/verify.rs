@@ -1120,18 +1120,19 @@ pub fn verify_schedules(scheds: &[Schedule], m: usize, opts: &VerifyOptions) -> 
 /// FIFO received-length check over a trace. Point-to-point channels
 /// deliver in order per directed edge, so once [`check_matching`] has
 /// proven the per-edge counts agree, the k-th receive on edge `(s, d)`
-/// carries the k-th send's payload. Every [`TraceEvent::Recv`] logs the
-/// element count it actually delivered and must match that send's
-/// logged length exactly; `SendRecv` / `SendRecvPair` receive-halves
-/// consume their queue slot without comparing (their delivered sizes
-/// are not logged).
+/// carries the k-th send's payload. Every receive half logs the element
+/// count it actually delivered — [`TraceEvent::Recv`] directly, and the
+/// `SendRecv` / `SendRecvPair` exchange events via their `recv_elems`
+/// field — and each must match the matching send's logged length
+/// exactly, so no call shape can hide a wrong block size behind a
+/// peer-only match.
 fn check_trace_lengths(traces: &[Vec<TraceEvent>]) -> Vec<Violation> {
     let mut sent: HashMap<(usize, usize), VecDeque<usize>> = HashMap::new();
     for (r, events) in traces.iter().enumerate() {
         for e in events {
             match *e {
                 TraceEvent::Send { peer, send_elems }
-                | TraceEvent::SendRecv { peer, send_elems } => {
+                | TraceEvent::SendRecv { peer, send_elems, .. } => {
                     sent.entry((r, peer)).or_default().push_back(send_elems);
                 }
                 TraceEvent::SendRecvPair { send_to, send_elems, .. } => {
@@ -1145,25 +1146,27 @@ fn check_trace_lengths(traces: &[Vec<TraceEvent>]) -> Vec<Violation> {
     for (r, events) in traces.iter().enumerate() {
         for (i, e) in events.iter().enumerate() {
             let (from, got) = match *e {
-                TraceEvent::Recv { peer, elems } => (peer, Some(elems)),
-                TraceEvent::SendRecv { peer, .. } => (peer, None),
-                TraceEvent::SendRecvPair { recv_from, .. } => (recv_from, None),
+                TraceEvent::Recv { peer, elems } => (peer, elems),
+                TraceEvent::SendRecv { peer, recv_elems, .. } => (peer, recv_elems),
+                TraceEvent::SendRecvPair {
+                    recv_from,
+                    recv_elems,
+                    ..
+                } => (recv_from, recv_elems),
                 TraceEvent::Send { .. } | TraceEvent::Charge { .. } => continue,
             };
             // count matching already passed, so the queue cannot run dry
             let Some(want) = sent.get_mut(&(from, r)).and_then(VecDeque::pop_front) else {
                 continue;
             };
-            if let Some(got) = got {
-                if got != want {
-                    viol.push(Violation::LengthMismatch {
-                        rank: r,
-                        step: i,
-                        detail: format!(
-                            "recv from {from} delivered {got} elems but the matching send logged {want}"
-                        ),
-                    });
-                }
+            if got != want {
+                viol.push(Violation::LengthMismatch {
+                    rank: r,
+                    step: i,
+                    detail: format!(
+                        "recv from {from} delivered {got} elems but the matching send logged {want}"
+                    ),
+                });
             }
         }
     }
@@ -1639,5 +1642,44 @@ mod tests {
             vec![TraceEvent::Recv { peer: 0, elems: 3 }],
         ];
         assert!(check_trace(&good, &[]).violations.is_empty());
+    }
+
+    #[test]
+    fn trace_exchange_recv_length_mismatch_is_reported() {
+        // A symmetric exchange whose message counts balance perfectly:
+        // rank 1 ships 3 elems but rank 0's fused receive half logs only
+        // 2 delivered. Only the logged recv_elems can catch that.
+        let bad = vec![
+            vec![TraceEvent::SendRecv { peer: 1, send_elems: 3, recv_elems: 2 }],
+            vec![TraceEvent::SendRecv { peer: 0, send_elems: 3, recv_elems: 3 }],
+        ];
+        let out = check_trace(&bad, &[]);
+        assert!(
+            out.violations.iter().any(|v| v.kind() == "length-mismatch"),
+            "violations: {:?}",
+            out.violations
+        );
+        // Delivered lengths equal to the shipped lengths verify clean,
+        // for both exchange flavors (asymmetric lengths on purpose).
+        let good = vec![
+            vec![TraceEvent::SendRecv { peer: 1, send_elems: 3, recv_elems: 2 }],
+            vec![TraceEvent::SendRecv { peer: 0, send_elems: 2, recv_elems: 3 }],
+        ];
+        assert!(check_trace(&good, &[]).violations.is_empty());
+        let paired = vec![
+            vec![TraceEvent::SendRecvPair {
+                send_to: 1,
+                recv_from: 1,
+                send_elems: 3,
+                recv_elems: 2,
+            }],
+            vec![TraceEvent::SendRecvPair {
+                send_to: 0,
+                recv_from: 0,
+                send_elems: 2,
+                recv_elems: 3,
+            }],
+        ];
+        assert!(check_trace(&paired, &[]).violations.is_empty());
     }
 }

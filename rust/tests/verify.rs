@@ -276,6 +276,25 @@ fn traced_algorithms_verify_clean() {
     }
 }
 
+/// Exchange-heavy algorithms are now length-exact in trace mode too:
+/// every `SendRecv`/`SendRecvPair` logs its delivered element count, so
+/// the FIFO length check covers fused receive-halves (previously they
+/// consumed their slot count-only). Uneven partitions make the shipped
+/// lengths vary step to step, which is exactly what a count-only match
+/// would fail to pin.
+#[test]
+fn traced_exchange_halves_verify_length_exact() {
+    let exchangers = [AlgoKind::Dpdr, AlgoKind::DpdrSingle, AlgoKind::Ring];
+    for algo in exchangers {
+        for (p, m) in [(5usize, 23usize), (6, 40)] {
+            let blocks = Blocks::by_count(m, 3);
+            let cert = verify_traced(algo, p, &blocks, &[1]).expect("trace runs");
+            assert!(cert.ok(), "{} p={p} m={m}: {:?}", algo.name(), cert.violations);
+            assert_eq!(cert.mode, "trace");
+        }
+    }
+}
+
 /// `NbcConfig::verify_schedules` gates compiled deposits without
 /// disturbing results, and the per-shape cache makes repeats cheap.
 #[test]
